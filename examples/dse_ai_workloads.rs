@@ -1,0 +1,85 @@
+//! END-TO-END DRIVER: the paper's headline use case (SS V-E).  Profiles
+//! the seven Table-I AI workloads, sweeps GCRAM bank configurations
+//! through the full compile -> transient-characterize pipeline on the
+//! AOT artifacts, prints the Fig. 10 shmoo plots and the headline
+//! metric (largest passing bank per task), and runs the SS VI
+//! co-optimizer for an L1-cache target.
+use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::runtime::Runtime;
+use opengcram::tech::sg40;
+use opengcram::util::eng;
+use opengcram::{characterize, dse, report, workloads};
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> opengcram::Result<()> {
+    let tech = sg40();
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let t0 = Instant::now();
+
+    println!("== profiling Table-I workloads (GainSight-style) ==");
+    for d in workloads::all_demands(&workloads::H100).iter().take(4) {
+        println!(
+            "  {:24} {:?}: {:>9} MHz, lifetime {}",
+            d.task.name, d.level, report::mhz(d.read_freq_hz), eng(d.lifetime_s, "s")
+        );
+    }
+
+    println!("\n== sweeping bank configs 16x16..128x128 (full pipeline) ==");
+    let mut evals = Vec::new();
+    for cfg in dse::fig10_configs(CellFlavor::GcSiSiNp) {
+        let bank = compile(&tech, &cfg)?;
+        let perf = characterize::characterize(&tech, &rt, &bank)?;
+        println!(
+            "  {:>3}x{:<3} f_op {:>9} MHz  retention {:>10}  area {:>9} um^2",
+            cfg.word_size, cfg.num_words, report::mhz(perf.f_op_hz),
+            eng(perf.retention_s, "s"), report::um2(bank.layout.total_area_um2())
+        );
+        evals.push(dse::Evaluated { config: cfg, perf, area_um2: bank.layout.total_area_um2() });
+    }
+
+    println!("\n== Fig. 10 shmoo (GT520M L1 / H100 L2) ==");
+    for (level, m) in [
+        (workloads::CacheLevel::L1, &workloads::GT520M),
+        (workloads::CacheLevel::L2, &workloads::H100),
+    ] {
+        println!("-- {:?} on {} --", level, m.name);
+        for task in &workloads::TASKS {
+            let d = workloads::profile(task, level, m);
+            let glyphs: String = evals.iter().map(|e| dse::shmoo_verdict(e, &d).glyph()).collect();
+            // headline: largest passing bank (bigger = more density/bw)
+            let best = evals
+                .iter()
+                .rev()
+                .find(|e| dse::shmoo_verdict(e, &d).pass())
+                .map(|e| format!("{}x{}", e.config.word_size, e.config.num_words))
+                .unwrap_or_else(|| "none (multibank)".into());
+            println!("  {:24} [{}] best bank: {}", task.name, glyphs, best);
+        }
+    }
+
+    println!("\n== SS VI co-optimization (L1 target: 300 MHz, 10 us) ==");
+    let weights = dse::CostWeights {
+        w_delay: 1.0,
+        w_area: 0.5,
+        w_power: 0.2,
+        f_min_hz: 3e8,
+        t_retain_min_s: 1e-5,
+    };
+    let (best, nevals) = dse::optimize(CellFlavor::GcSiSiNp, &weights, |cfg| {
+        let bank = compile(&tech, cfg)?;
+        let perf = characterize::characterize(&tech, &rt, bank_ref(&bank))?;
+        Ok(dse::Evaluated { config: cfg.clone(), perf, area_um2: bank.layout.total_area_um2() })
+    })?;
+    println!(
+        "  best: {}x{} write_vt={:?} -> f_op {} MHz, retention {}, {} evals",
+        best.config.word_size, best.config.num_words, best.config.write_vt,
+        report::mhz(best.perf.f_op_hz), eng(best.perf.retention_s, "s"), nevals
+    );
+    println!("\nend-to-end DSE wall time: {:.1} s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn bank_ref(b: &opengcram::compiler::Bank) -> &opengcram::compiler::Bank {
+    b
+}

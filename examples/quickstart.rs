@@ -1,0 +1,35 @@
+//! Quickstart: compile a 32x32 GCRAM bank, characterize it on the AOT
+//! artifacts, export SPICE + GDS.  Run: cargo run --release --example quickstart
+use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::runtime::Runtime;
+use opengcram::tech::sg40;
+use opengcram::util::eng;
+use opengcram::characterize;
+use std::path::Path;
+
+fn main() -> opengcram::Result<()> {
+    let tech = sg40();
+    let cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
+    let bank = compile(&tech, &cfg)?;
+    println!(
+        "compiled 1 Kb GCRAM bank: {} um^2 total, {} um^2 array, {} delay-chain stages",
+        bank.layout.total_area_um2().round(),
+        bank.layout.array_area_um2().round(),
+        bank.delay_chain_stages
+    );
+    std::fs::write("/tmp/gcram_bank.sp", opengcram::netlist::spice::emit(&bank.netlist))?;
+    opengcram::layout::gds::write_file(&bank.library, &tech, "opengcram", Path::new("/tmp/gcram_bank.gds"))?;
+    println!("wrote /tmp/gcram_bank.sp and /tmp/gcram_bank.gds");
+
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    let perf = characterize::characterize(&tech, &rt, &bank)?;
+    println!(
+        "f_op {}  bandwidth {:.1} Gb/s  retention {}  leakage {}  functional {}",
+        eng(perf.f_op_hz, "Hz"),
+        perf.bandwidth_bps / 1e9,
+        eng(perf.retention_s, "s"),
+        eng(perf.leakage_w, "W"),
+        perf.functional
+    );
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO *text* artifacts.
+
+Emit HLO text (NOT .serialize()): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's XLA (xla_extension 0.5.1)
+rejects (`proto.id() <= INT_MAX`).  The text parser reassigns ids, so
+text round-trips cleanly -- see /opt/xla-example/gen_hlo.py.
+
+Also writes artifacts/manifest.json: the single source of truth the Rust
+runtime reads for batch sizes, step counts, node/stimulus/param layouts
+and output arity.  Rust never hard-codes a param column index.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import circuits, model
+
+# Fixed AOT shapes.  B must be a multiple of kernels.gcram_step block.
+BATCH = 256
+IDVG_BATCH = 128
+IDVG_GRID = 64
+T_WRITE = 384
+T_READ = 384
+T_RETENTION = 448
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _transient_specs(template, t_steps):
+    nf, ns, p = template.nf, template.ns, template.npar
+    return (
+        _f32(BATCH, nf),      # v0
+        _f32(BATCH, ns),      # amp
+        _f32(BATCH, p),       # params
+        _f32(BATCH, nf),      # cinv
+        _f32(t_steps, ns),    # wave
+        _f32(t_steps, ns),    # dwave
+        _f32(t_steps),        # dt
+    )
+
+
+def _transient_manifest(template, t_steps, outputs, mode="heun"):
+    return {
+        "batch": BATCH,
+        "steps": t_steps,
+        "integrator": mode,
+        "k_substeps": model.K_SUBSTEPS,
+        "trace_ds": model.TRACE_DS,
+        "big_time": model.BIG_TIME,
+        "free_nodes": template.free_nodes,
+        "stim_nodes": template.stim_nodes,
+        "params": template.pnames,
+        "inputs": ["v0", "amp", "params", "cinv", "wave", "dwave", "dt"],
+        "outputs": outputs,
+    }
+
+
+def build_all():
+    """Return {name: (hlo_text, manifest_entry)} for every artifact."""
+    arts = {}
+
+    # idvg
+    lowered = jax.jit(model.idvg).lower(
+        _f32(IDVG_BATCH, 6), _f32(IDVG_GRID), _f32(IDVG_BATCH, 1))
+    arts["idvg"] = (to_hlo_text(lowered), {
+        "batch": IDVG_BATCH,
+        "grid": IDVG_GRID,
+        "inputs": ["cards", "vg", "vds"],
+        "outputs": ["ids"],
+        "card_cols": ["kp", "vt", "n", "lam", "wl", "sign"],
+    })
+
+    # transients
+    for name, fn, tmpl, t_steps, outs, mode in [
+        ("write", model.write_op, circuits.write_template(), T_WRITE,
+         ["times_ds", "trace_ds", "sn_final", "t_wr", "sn_peak"], "heun"),
+        ("read", model.read_op, circuits.read_template(), T_READ,
+         ["times_ds", "trace_ds", "t_rise", "t_fall", "rbl_final",
+          "sn_final"], "heun"),
+        ("retention", model.retention, circuits.retention_template(),
+         T_RETENTION, ["times_ds", "trace_ds", "t_retain", "sn_final"],
+         "expdecay"),
+    ]:
+        lowered = jax.jit(fn).lower(*_transient_specs(tmpl, t_steps))
+        arts[name] = (to_hlo_text(lowered),
+                      _transient_manifest(tmpl, t_steps, outs, mode))
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    for name, (text, meta) in build_all().items():
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["file"] = f"{name}.hlo.txt"
+        manifest[name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,254 @@
+"""Stamped fixed-topology circuit templates for the GCRAM critical paths.
+
+A *template* is a tiny circuit (<= a handful of nodes) whose topology is
+fixed at trace time and whose element parameters are batched per design
+point.  Node voltages split into NF *free* nodes (integrated by the
+transient engine) and NS *stimulus* nodes (driven waveforms: wordlines,
+rails, data inputs).  Stamps reference nodes by static index into the
+concatenated vector [free | stim], so the generated HLO contains no
+dynamic gathers -- everything is column slicing over (B,) vectors, which
+is exactly the element-wise VPU work the Pallas kernel tiles.
+
+Stamp kinds:
+
+  MOS  (d, g, s, p0)  -- EKV device, 6 param columns at p0 (see device.py)
+  CAPC (src, dst, p0) -- coupling cap from a *stimulus* node: the current
+                         injected into free node `dst` is C * dV(src)/dt,
+                         with the slope supplied by the stimulus input.
+                         1 param column (C in F).
+  RES  (a, b, p0)     -- linear conductance between two nodes.  1 column
+                         (G in S).
+  ISRC (dst, p0)      -- constant current into free node `dst` (signed).
+                         1 column (A).
+
+Templates defined here:
+
+  retention -- storage node decaying through write-transistor subthreshold
+               leakage + read-transistor gate leakage (Fig. 8b/c/e).
+  write     -- write driver inverter -> WBL -> write transistor -> SN,
+               with WWL->SN coupling cap (write delay, stored-'1' level,
+               coupling droop at WWL fall).
+  read      -- read transistor (source on RWL, gate on SN) driving RBL
+               against bitline leakage, with RWL->SN coupling
+               (boost for NP cells, droop for NN cells).  Polarity is
+               entirely in the card sign + stimulus amplitudes, so one
+               template serves Si-Si NP, Si-Si NN and OS-OS flavors.
+
+The param layout of each template is reported by `param_names()` and is
+mirrored by the Rust side via artifacts/manifest.json.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+from . import device
+
+
+@dataclass(frozen=True)
+class Mos:
+    d: int
+    g: int
+    s: int
+    p0: int
+
+
+@dataclass(frozen=True)
+class CapCouple:
+    src: int  # stimulus node index (in concat space)
+    dst: int  # free node index
+    p0: int
+
+
+@dataclass(frozen=True)
+class Res:
+    a: int
+    b: int
+    p0: int
+
+
+@dataclass(frozen=True)
+class Isrc:
+    dst: int
+    p0: int
+
+
+@dataclass
+class Template:
+    """A stamped circuit: topology + naming metadata."""
+
+    name: str
+    free_nodes: List[str]
+    stim_nodes: List[str]
+    stamps: List[object] = field(default_factory=list)
+    pnames: List[str] = field(default_factory=list)
+
+    @property
+    def nf(self) -> int:
+        return len(self.free_nodes)
+
+    @property
+    def ns(self) -> int:
+        return len(self.stim_nodes)
+
+    @property
+    def npar(self) -> int:
+        return len(self.pnames)
+
+    def node(self, name: str) -> int:
+        """Static index in the concatenated [free | stim] vector."""
+        if name in self.free_nodes:
+            return self.free_nodes.index(name)
+        return self.nf + self.stim_nodes.index(name)
+
+    def free(self, name: str) -> int:
+        return self.free_nodes.index(name)
+
+    # -- builders ---------------------------------------------------------
+    def add_mos(self, tag: str, d: str, g: str, s: str):
+        p0 = self.npar
+        for c in ("kp", "vt", "n", "lam", "wl", "sign"):
+            self.pnames.append(f"{tag}.{c}")
+        self.stamps.append(Mos(self.node(d), self.node(g), self.node(s), p0))
+
+    def add_capc(self, tag: str, src: str, dst: str):
+        p0 = self.npar
+        self.pnames.append(f"{tag}.c")
+        self.stamps.append(CapCouple(self.node(src) - self.nf, self.free(dst), p0))
+
+    def add_res(self, tag: str, a: str, b: str):
+        p0 = self.npar
+        self.pnames.append(f"{tag}.g")
+        self.stamps.append(Res(self.node(a), self.node(b), p0))
+
+    def add_isrc(self, tag: str, dst: str):
+        p0 = self.npar
+        self.pnames.append(f"{tag}.i")
+        self.stamps.append(Isrc(self.free(dst), p0))
+
+
+def make_rhs(t: Template):
+    """Return f(v, vs, dvs, params) -> per-free-node current (B, NF).
+
+    v:(B,NF) free node voltages, vs:(B,NS) stimulus voltages,
+    dvs:(B,NS) stimulus slopes (V/s), params:(B,P).
+    Shared verbatim by the Pallas kernel (on block values) and the jnp
+    reference oracle, so there is a single source of truth for the RHS.
+    """
+    nf = t.nf
+    stamps = tuple(t.stamps)
+
+    def rhs(v, vs, dvs, params):
+        vall = jnp.concatenate([v, vs], axis=-1)
+        acc = [jnp.zeros(v.shape[:-1], v.dtype) for _ in range(nf)]
+
+        def col(i):
+            return vall[..., i]
+
+        for st in stamps:
+            if isinstance(st, Mos):
+                card = params[..., st.p0 : st.p0 + device.MOS_CARD_COLS]
+                ids = device.mos_ids_card(col(st.d), col(st.g), col(st.s), card)
+                if st.d < nf:
+                    acc[st.d] = acc[st.d] - ids
+                if st.s < nf:
+                    acc[st.s] = acc[st.s] + ids
+            elif isinstance(st, CapCouple):
+                c = params[..., st.p0]
+                acc[st.dst] = acc[st.dst] + c * dvs[..., st.src]
+            elif isinstance(st, Res):
+                g = params[..., st.p0]
+                i = g * (col(st.a) - col(st.b))
+                if st.a < nf:
+                    acc[st.a] = acc[st.a] - i
+                if st.b < nf:
+                    acc[st.b] = acc[st.b] + i
+            elif isinstance(st, Isrc):
+                acc[st.dst] = acc[st.dst] + params[..., st.p0]
+            else:  # pragma: no cover - template construction guards this
+                raise TypeError(st)
+        return jnp.stack(acc, axis=-1)
+
+    return rhs
+
+
+# --------------------------------------------------------------------------
+# Concrete templates.
+# --------------------------------------------------------------------------
+
+
+def retention_template() -> Template:
+    """SN decay during hold (Fig. 8b/c/e).
+
+    Worst case for stored '1': WWL at its hold level, WBL held at 0 by an
+    idle write driver, so the write transistor's subthreshold current
+    discharges SN; the read transistor's gate leak (a small conductance to
+    a reference) adds to it.  An ISRC stamp models any extra disturb.
+    """
+    t = Template(
+        name="retention",
+        free_nodes=["sn"],
+        # "vth" is a measurement-only pseudo-stimulus: its per-design
+        # amplitude carries the absolute hold threshold for t_retain
+        # (no stamp references it).  amp[vth] == 0 falls back to the
+        # relative 0.5 * v0 threshold.
+        stim_nodes=["wwl", "wbl", "gnd", "vth"],
+    )
+    t.add_mos("mwr", d="sn", g="wwl", s="wbl")
+    t.add_res("gleak", a="sn", b="gnd")
+    t.add_isrc("idist", dst="sn")
+    return t
+
+
+def write_template() -> Template:
+    """Write path: driver inverter -> WBL (RC) -> write tx -> SN.
+
+    The WWL waveform rises, holds, then *falls* inside the window so the
+    recorded final SN includes the WWL->SN coupling droop the paper
+    discusses (SS V-A).  A WWL level shifter is expressed purely through
+    the WWL stimulus amplitude (VDD + boost).
+    """
+    t = Template(
+        name="write",
+        free_nodes=["sn", "wbl"],
+        stim_nodes=["wwl", "dinb", "vdd", "gnd"],
+    )
+    t.add_mos("mwr", d="sn", g="wwl", s="wbl")
+    t.add_mos("mdrvp", d="wbl", g="dinb", s="vdd")  # PMOS card expected
+    t.add_mos("mdrvn", d="wbl", g="dinb", s="gnd")  # NMOS card expected
+    t.add_capc("cwwl_sn", src="wwl", dst="sn")
+    t.add_res("gwbl", a="wbl", b="gnd")  # WBL leakage of unselected cells
+    return t
+
+
+def read_template() -> Template:
+    """Read path: read tx (source on RWL, gate on SN) drives RBL.
+
+    Flavor polarity is data, not code:
+      Si-Si NP : PMOS card, RBL predischarged to 0, RWL 0 -> VDD
+                 (rising edge boosts SN through the coupling cap);
+      Si-Si NN : NMOS card, RBL precharged to VDD, RWL VDD -> 0
+                 (falling edge droops SN);
+      OS-OS NN : NMOS OS card, precharge, active-low RWL.
+    `mrbl_leak` aggregates the off-state leakage of the (rows-1)
+    unselected cells sharing the bitline (w_over_l scaled by rows-1,
+    gate tied to the unselected-SN worst-case stimulus level).
+    """
+    t = Template(
+        name="read",
+        free_nodes=["sn", "rbl"],
+        stim_nodes=["rwl", "rwl_idle", "snu", "gnd"],
+    )
+    t.add_mos("mrd", d="rbl", g="sn", s="rwl")
+    t.add_mos("mrbl_leak", d="rbl", g="snu", s="rwl_idle")
+    t.add_capc("crwl_sn", src="rwl", dst="sn")
+    t.add_res("grbl", a="rbl", b="gnd")
+    return t
+
+
+TEMPLATES = {
+    "retention": retention_template,
+    "write": write_template,
+    "read": read_template,
+}

@@ -1,0 +1,101 @@
+"""Unified smooth MOSFET model shared by the Pallas kernel, the jnp oracle
+and (parameter-for-parameter) the Rust MNA simulator.
+
+The model is an EKV-style interpolation that is continuous and
+differentiable across subthreshold / triode / saturation:
+
+    i_f  = ln(1 + exp((vp - v_s) / (2 phi_t)))^2        (forward)
+    i_r  = ln(1 + exp((vp - v_d) / (2 phi_t)))^2        (reverse)
+    vp   = (v_g - vt) / n                               (pinch-off)
+    I_DS = 2 n kp (W/L) phi_t^2 (i_f - i_r) (1 + lam |v_ds|)
+
+All voltages are source/drain symmetric, so the expression is valid for
+either current direction (i_f - i_r is antisymmetric under d<->s swap).
+PMOS devices are evaluated with all node voltages negated (handled by the
+`sign` parameter), so one expression serves both polarities.
+
+The per-device "card" is the 6-vector used throughout the stack:
+
+    [kp, vt, n, lam, w_over_l, sign]
+
+sign = +1 for NMOS, -1 for PMOS.  Subthreshold swing follows from n:
+SS = n * phi_t * ln(10).  Off-current follows from (vt, n), which is how
+the ultra-low-leakage OS (ITO-like) card reaches < 1e-18 A/um.
+"""
+
+import jax.numpy as jnp
+
+# Thermal voltage at 300 K.  Keep as a module constant so Rust mirrors it.
+PHI_T = 0.02585
+
+# Param-column layout of one MOS card inside a stamped parameter vector.
+MOS_CARD_COLS = 6  # kp, vt, n, lam, w_over_l, sign
+
+
+def softlog1pexp(x):
+    """Numerically-stable ln(1 + exp(x)).
+
+    For large x this is ~x, for very negative x it underflows to exp(x);
+    jnp.logaddexp(0, x) implements exactly that.
+    """
+    return jnp.logaddexp(0.0, x)
+
+
+def mos_ids(vd, vg, vs, kp, vt, n, lam, w_over_l, sign):
+    """Drain current (A) flowing d -> s.  All args broadcastable arrays.
+
+    `sign` folds NMOS/PMOS into one expression: node voltages are
+    reflected for PMOS and the resulting current is reflected back.
+    """
+    vd_, vg_, vs_ = sign * vd, sign * vg, sign * vs
+    vp = (vg_ - vt) / n
+    i_f = softlog1pexp((vp - vs_) / (2.0 * PHI_T)) ** 2
+    i_r = softlog1pexp((vp - vd_) / (2.0 * PHI_T)) ** 2
+    i_spec = 2.0 * n * kp * w_over_l * PHI_T * PHI_T
+    clm = 1.0 + lam * jnp.abs(vd_ - vs_)
+    return sign * i_spec * (i_f - i_r) * clm
+
+
+def mos_ids_card(vd, vg, vs, card):
+    """`card` is (..., 6) laid out per MOS_CARD_COLS."""
+    return mos_ids(
+        vd, vg, vs,
+        card[..., 0], card[..., 1], card[..., 2],
+        card[..., 3], card[..., 4], card[..., 5],
+    )
+
+
+# --- Reference device cards (synthetic generic 40 nm node, `sg40`) -------
+#
+# Calibrated to public 40 nm-class numbers: Ion ~ 600/300 uA/um (N/P) at
+# VDD = 1.1 V, SS ~ 85 mV/dec, Ioff ~ nA/um.  The OS (ITO-like) card has
+# SS ~ 65 mV/dec, low mobility, VT ~ 0.9 V giving Ioff < 1e-18 A/um --
+# matching the paper's "<1e-18 A/um" claim for oxide-semiconductor
+# channels.  `kp` is in A/V^2 for W/L = 1.
+
+SG40_VDD = 1.1
+
+SI_NMOS = dict(kp=320e-6, vt=0.45, n=1.40, lam=0.08, sign=+1.0)
+SI_PMOS = dict(kp=160e-6, vt=0.45, n=1.42, lam=0.10, sign=-1.0)
+# High-VT flavors for retention modulation (Fig. 8c).
+# SI_PMOS_HVT is the NP gain cell's read transistor: vt folds in the
+# body effect of a source-at-VDD device (vt_eff ~ vt + (n-1)*vdd) that
+# the bulk-referenced EKV form does not model explicitly.
+SI_PMOS_HVT = dict(kp=140e-6, vt=0.90, n=1.38, lam=0.08, sign=-1.0)
+SI_NMOS_HVT = dict(kp=280e-6, vt=0.60, n=1.36, lam=0.07, sign=+1.0)
+SI_NMOS_LVT = dict(kp=360e-6, vt=0.32, n=1.45, lam=0.10, sign=+1.0)
+# Oxide-semiconductor (ITO-like) n-type card; no p-type OS exists worth
+# using (paper SS V-A), so OS-OS gain cells are NMOS-NMOS.  vt=0.35 puts
+# the baseline OS-OS retention in the millisecond range (Fig. 8e, the
+# TCAD-calibrated ITO device); the "VT/material engineering" variant
+# below reaches the material's <1e-18 A/um floor and >10 s retention.
+OS_NMOS = dict(kp=12e-6, vt=0.35, n=1.10, lam=0.02, sign=+1.0)
+OS_NMOS_HVT = dict(kp=9e-6, vt=0.95, n=1.08, lam=0.02, sign=+1.0)
+
+
+def card_vec(c, w_over_l):
+    """Pack a card dict + geometry into the 6-column vector."""
+    return jnp.array(
+        [c["kp"], c["vt"], c["n"], c["lam"], w_over_l, c["sign"]],
+        dtype=jnp.float32,
+    )

@@ -1,0 +1,151 @@
+"""L1 Pallas kernel: batched Heun (RK2) transient integration step.
+
+This is the compute hot-spot of the whole stack: every design point in a
+DSE sweep integrates the same stamped circuit template, so the work is a
+(B, NF) element-wise problem batched over thousands of designs.  The
+kernel tiles the batch into VMEM-resident blocks and performs K Heun
+sub-steps per grid step, amortizing HBM<->VMEM traffic K-fold (the
+BlockSpec plays the role the paper's serial per-config HSPICE runs
+played; see DESIGN.md section Hardware-Adaptation).
+
+The circuit RHS is *shared* with the pure-jnp oracle (circuits.make_rhs),
+so kernel and reference cannot drift.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+VMEM footprint / utilization estimates live in DESIGN.md section 9.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import circuits
+
+# Default batch tile.  128 designs/tile keeps the block comfortably in
+# VMEM (see perf notes) while giving the VPU full lanes.
+DEFAULT_BLOCK_B = 128
+
+
+def _step_body(rhs, k_substeps, mode, v_ref, vs_ref, dvs_ref, p_ref,
+               cinv_ref, dt_ref, o_ref):
+    """One grid step: K integration sub-steps on a (BT, NF) tile.
+
+    mode == "heun": explicit RK2.  Used for the short-window write/read
+    transients where L3 picks dt well inside the fastest RC.
+
+    mode == "expdecay": exponential-Euler toward 0 for discharging
+    nodes -- exact for a linear leak, unconditionally stable, monotone.
+    Used for retention, where dt grows geometrically over ~14 decades
+    and explicit RK2 would go unstable once dt >> C/g.
+    """
+    v = v_ref[...]
+    vs = vs_ref[...]
+    dvs = dvs_ref[...]
+    p = p_ref[...]
+    cinv = cinv_ref[...]
+    dt = dt_ref[...]  # (BT, 1) sub-step size
+
+    # cinv == 0 pins a node (rails); the jnp.where guard (rather than
+    # multiply-by-zero) keeps pinned nodes exact even if an unpinned
+    # node produces inf/nan under a pathological parameter set.
+    pinned = cinv == 0.0
+    for _ in range(k_substeps):
+        if mode == "heun":
+            i1 = rhs(v, vs, dvs, p)
+            v1 = jnp.where(pinned, v, v + dt * i1 * cinv)
+            i2 = rhs(v1, vs, dvs, p)
+            v = jnp.where(pinned, v, v + (0.5 * dt) * (i1 + i2) * cinv)
+        else:  # expdecay
+            i1 = rhs(v, vs, dvs, p)
+            dv = dt * i1 * cinv
+            decaying = (dv < 0.0) & (v > 0.0)
+            v_dec = v * jnp.exp(dv / jnp.maximum(v, 1e-6))
+            # below 0 only relaxation *toward* 0 is physical: float32
+            # rounding noise in the rhs, amplified by huge dt, must not
+            # drift a dead node further negative
+            v_chg = jnp.where(v <= 0.0,
+                              jnp.minimum(jnp.maximum(v + dv, v), 0.0),
+                              v + dv)
+            v = jnp.where(pinned, v, jnp.where(decaying, v_dec, v_chg))
+    o_ref[...] = v
+
+
+def make_step(template: circuits.Template, k_substeps: int = 4,
+              block_b: int = DEFAULT_BLOCK_B, mode: str = "heun"):
+    """Build the batched step function for one template.
+
+    Returns step(v, vs, dvs, params, cinv, dt) -> v' where
+      v     : (B, NF)  free-node voltages
+      vs    : (B, NS)  stimulus voltages (held constant over the K substeps)
+      dvs   : (B, NS)  stimulus slopes (V/s) for coupling-cap stamps
+      params: (B, P)   stamped element parameters
+      cinv  : (B, NF)  1/C per free node (0 pins a node)
+      dt    : (B, 1)   sub-step size in seconds
+    B must be a multiple of block_b (the AOT wrapper pads).
+    """
+    assert mode in ("heun", "expdecay"), mode
+    rhs = circuits.make_rhs(template)
+    nf, ns, npar = template.nf, template.ns, template.npar
+    kern = functools.partial(_step_body, rhs, k_substeps, mode)
+
+    def step(v, vs, dvs, params, cinv, dt):
+        b = v.shape[0]
+        assert b % block_b == 0, (b, block_b)
+        grid = (b // block_b,)
+
+        def bspec(width):
+            return pl.BlockSpec((block_b, width), lambda i: (i, 0))
+
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[bspec(nf), bspec(ns), bspec(ns), bspec(npar),
+                      bspec(nf), bspec(1)],
+            out_specs=bspec(nf),
+            out_shape=jax.ShapeDtypeStruct((b, nf), jnp.float32),
+            interpret=True,
+        )(v, vs, dvs, params, cinv, dt)
+
+    return step
+
+
+def make_idvg(n_vg: int, block_b: int = DEFAULT_BLOCK_B):
+    """Batched Id-Vg surface kernel: (B, 6) cards x (n_vg,) gate grid.
+
+    Used by the `idvg` artifact (Fig. 8a/d) and by the Rust/Python device
+    model parity test.  vd/vs are per-design scalars so the same artifact
+    sweeps both linear (|VDS| small) and saturation regimes.
+    """
+    from .. import device
+
+    def kern(card_ref, vg_ref, vds_ref, o_ref):
+        card = card_ref[...]  # (BT, 6)
+        vg = vg_ref[...]      # (1, n_vg) broadcast row
+        vds = vds_ref[...]    # (BT, 1)
+        o_ref[...] = device.mos_ids(
+            vds, vg, 0.0,
+            card[:, 0:1], card[:, 1:2], card[:, 2:3],
+            card[:, 3:4], card[:, 4:5], card[:, 5:6],
+        )
+
+    def idvg(cards, vg, vds):
+        b = cards.shape[0]
+        assert b % block_b == 0, (b, block_b)
+        grid = (b // block_b,)
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, 6), lambda i: (i, 0)),
+                pl.BlockSpec((1, n_vg), lambda i: (0, 0)),
+                pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_b, n_vg), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, n_vg), jnp.float32),
+            interpret=True,
+        )(cards, vg.reshape(1, n_vg), vds)
+
+    return idvg

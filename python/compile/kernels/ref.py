@@ -1,0 +1,70 @@
+"""Pure-jnp correctness oracle for the Pallas transient kernel.
+
+Same RHS (circuits.make_rhs), same Heun update, no pallas_call -- this is
+the CORE correctness signal: python/tests/test_kernel.py sweeps shapes
+and parameters with hypothesis and asserts allclose between this and
+kernels.gcram_step.make_step.
+"""
+
+import jax.numpy as jnp
+
+from .. import circuits, device
+
+
+def make_step_ref(template: circuits.Template, k_substeps: int = 4,
+                  mode: str = "heun"):
+    """Reference step(v, vs, dvs, params, cinv, dt) -> v' (same contract
+    as gcram_step.make_step, without batch-tiling restrictions)."""
+    assert mode in ("heun", "expdecay"), mode
+    rhs = circuits.make_rhs(template)
+
+    def step(v, vs, dvs, params, cinv, dt):
+        pinned = cinv == 0.0
+        for _ in range(k_substeps):
+            if mode == "heun":
+                i1 = rhs(v, vs, dvs, params)
+                v1 = jnp.where(pinned, v, v + dt * i1 * cinv)
+                i2 = rhs(v1, vs, dvs, params)
+                v = jnp.where(pinned, v,
+                              v + (0.5 * dt) * (i1 + i2) * cinv)
+            else:  # expdecay (see gcram_step._step_body)
+                i1 = rhs(v, vs, dvs, params)
+                dv = dt * i1 * cinv
+                decaying = (dv < 0.0) & (v > 0.0)
+                v_dec = v * jnp.exp(dv / jnp.maximum(v, 1e-6))
+                v_chg = jnp.where(v <= 0.0,
+                                  jnp.minimum(jnp.maximum(v + dv, v), 0.0),
+                                  v + dv)
+                v = jnp.where(pinned, v,
+                              jnp.where(decaying, v_dec, v_chg))
+        return v
+
+    return step
+
+
+def idvg_ref(cards, vg, vds):
+    """Reference Id-Vg surface: cards (B,6), vg (G,), vds (B,1) -> (B,G)."""
+    return device.mos_ids(
+        vds, vg[None, :], 0.0,
+        cards[:, 0:1], cards[:, 1:2], cards[:, 2:3],
+        cards[:, 3:4], cards[:, 4:5], cards[:, 5:6],
+    )
+
+
+def simulate_ref(template, v0, amp, params, cinv, wave, dwave, dt,
+                 k_substeps: int = 4):
+    """Plain-python time loop used by model tests (slow, trustworthy).
+
+    wave/dwave: (T, NS) normalized stimulus and slope; amp: (B, NS).
+    dt: (T,) sub-step sizes (each scan step advances K * dt[t]).
+    Returns trace (T, B, NF).
+    """
+    step = make_step_ref(template, k_substeps)
+    out = []
+    v = v0
+    for t in range(wave.shape[0]):
+        vs = wave[t][None, :] * amp
+        dvs = dwave[t][None, :] * amp
+        v = step(v, vs, dvs, params, cinv, jnp.full((v.shape[0], 1), dt[t]))
+        out.append(v)
+    return jnp.stack(out, axis=0)

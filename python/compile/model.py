@@ -1,0 +1,171 @@
+"""L2: batched transient-simulation graphs for the GCRAM critical paths.
+
+Each public function here is one AOT artifact entry point: a jax.jit-able
+function over fixed shapes (batch B, time steps T) that scans the L1
+Pallas step kernel over a stimulus schedule and computes the measurements
+the Rust characterizer consumes (threshold-crossing times, final levels,
+downsampled waveforms for the figures).
+
+Contract with the Rust side (mirrored in artifacts/manifest.json):
+
+  inputs (all f32):
+    v0     (B, NF)   initial free-node voltages
+    amp    (B, NS)   per-design stimulus amplitudes
+    params (B, P)    stamped element parameters (see circuits param names)
+    cinv   (B, NF)   1/C per free node (0 pins a node to v0)
+    wave   (T, NS)   normalized stimulus waveform (unit amplitude)
+    dwave  (T, NS)   normalized stimulus slope (1/s)
+    dt     (T,)      per-step sub-step size; each step advances K*dt[t]
+
+  outputs: tuple, see each entry point's docstring.
+
+Stimulus timing lives in runtime *inputs*, so the Rust coordinator can
+retarget pulse widths / edges / levels without recompiling the artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import circuits
+from .kernels import gcram_step
+
+K_SUBSTEPS = 4
+TRACE_DS = 4  # trace downsample factor for waveform outputs
+
+BIG_TIME = 1e12  # "never crossed" sentinel, seconds
+
+
+def _scan_transient(template, v0, amp, params, cinv, wave, dwave, dt,
+                    block_b=gcram_step.DEFAULT_BLOCK_B, mode="heun"):
+    """Run the full transient; returns (times (T,), trace (T, B, NF)).
+
+    times[t] is the simulated time at the END of scan step t (each scan
+    step advances K_SUBSTEPS * dt[t]).
+    """
+    step = gcram_step.make_step(template, K_SUBSTEPS, block_b, mode)
+    b = v0.shape[0]
+
+    def body(v, xs):
+        w, dw, dt_t = xs
+        vs = w[None, :] * amp
+        dvs = dw[None, :] * amp
+        v = step(v, vs, dvs, params, cinv, jnp.full((b, 1), dt_t))
+        return v, v
+
+    _, trace = jax.lax.scan(body, v0, (wave, dwave, dt))
+    times = jnp.cumsum(dt * K_SUBSTEPS)
+    return times, trace
+
+
+def _cross_time(times, sig, thresh, rising: bool):
+    """First threshold crossing with linear interpolation.
+
+    times (T,), sig (T, B), thresh (B,) or scalar -> (B,) seconds,
+    BIG_TIME if never crossed.
+    """
+    above = sig >= thresh if rising else sig <= thresh
+    idx = jnp.argmax(above, axis=0)  # first True along T
+    ever = jnp.any(above, axis=0)
+    idx0 = jnp.maximum(idx - 1, 0)
+    t1 = times[idx]
+    t0 = times[idx0]
+    b = jnp.arange(sig.shape[1])
+    v1 = sig[idx, b]
+    v0 = sig[idx0, b]
+    th = jnp.broadcast_to(thresh, v0.shape)
+    frac = jnp.where(jnp.abs(v1 - v0) > 1e-12, (th - v0) / (v1 - v0), 1.0)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    t = t0 + frac * (t1 - t0)
+    t = jnp.where(idx == 0, jnp.where(above[0], 0.0, t), t)
+    return jnp.where(ever, t, BIG_TIME)
+
+
+def _ds(x):
+    return x[::TRACE_DS]
+
+
+# --------------------------------------------------------------------------
+# Artifact entry points
+# --------------------------------------------------------------------------
+
+
+def idvg(cards, vg, vds):
+    """Fig. 8a/d: Id-Vg surfaces.  cards (B,6), vg (G,), vds (B,1).
+
+    Returns (ids (B, G),) -- drain current in A at the card's W/L.
+    """
+    fn = gcram_step.make_idvg(vg.shape[0])
+    return (fn(cards, vg, vds),)
+
+
+def write_op(v0, amp, params, cinv, wave, dwave, dt):
+    """Write transient (write driver -> WBL -> write tx -> SN).
+
+    Returns:
+      times_ds   (T/DS,)      downsampled time axis
+      trace_ds   (T/DS,B,NF)  downsampled waveforms [sn, wbl]
+      sn_final   (B,)         SN after the full window (incl. WWL-fall
+                              coupling droop) -- the stored level
+      t_wr       (B,)         write completion time (90% of peak for a
+                              rising write, 10%-of-initial for a falling)
+      sn_peak    (B,)         max SN during the window
+    """
+    t = circuits.write_template()
+    times, trace = _scan_transient(t, v0, amp, params, cinv, wave, dwave, dt)
+    sn = trace[:, :, t.free("sn")]
+    sn0 = v0[:, t.free("sn")]
+    sn_peak = jnp.max(sn, axis=0)
+    t_rise = _cross_time(times, sn, 0.9 * sn_peak, rising=True)
+    t_fall = _cross_time(times, sn, 0.1 * jnp.maximum(sn0, 1e-3), rising=False)
+    falling = sn_peak <= sn0 + 0.05
+    t_wr = jnp.where(falling, t_fall, t_rise)
+    return (_ds(times), _ds(trace), trace[-1, :, t.free("sn")], t_wr, sn_peak)
+
+
+def read_op(v0, amp, params, cinv, wave, dwave, dt):
+    """Read transient (read tx drives RBL against bitline leakage).
+
+    vref for the crossing measurements is 0.5 * max(amp[rwl],
+    amp[rwl_idle]) per design, which equals VDD/2 for every flavor
+    (predischarge flavors swing RWL to VDD; precharge flavors idle the
+    RWL rail at VDD).  The Rust side adds sense-amp offset margins.
+
+    Returns:
+      times_ds (T/DS,), trace_ds (T/DS,B,NF) with nodes [sn, rbl]
+      t_rise   (B,)  RBL crossing vref upward   (charging read)
+      t_fall   (B,)  RBL crossing vref downward (discharging read)
+      rbl_final(B,)  RBL at window end
+      sn_final (B,)  SN at window end (shows RWL coupling boost/droop)
+    """
+    t = circuits.read_template()
+    times, trace = _scan_transient(t, v0, amp, params, cinv, wave, dwave, dt)
+    rbl = trace[:, :, t.free("rbl")]
+    vdd_eff = jnp.maximum(amp[:, t.node("rwl") - t.nf],
+                          amp[:, t.node("rwl_idle") - t.nf])
+    vref = 0.5 * vdd_eff
+    t_rise = _cross_time(times, rbl, vref, rising=True)
+    t_fall = _cross_time(times, rbl, vref, rising=False)
+    return (
+        _ds(times), _ds(trace), t_rise, t_fall,
+        trace[-1, :, t.free("rbl")], trace[-1, :, t.free("sn")],
+    )
+
+
+def retention(v0, amp, params, cinv, wave, dwave, dt):
+    """Hold-state decay on a log time grid (Fig. 8b/c/e).
+
+    dt grows geometrically (set by the Rust side), covering ~1 ns..10^4 s
+    in T steps.  Returns:
+      times_ds (T/DS,), trace_ds (T/DS,B,NF) with node [sn]
+      t_retain (B,)  time SN decays below the hold threshold
+                     (0.5 * initial SN); BIG_TIME if it never does
+      sn_final (B,)
+    """
+    t = circuits.retention_template()
+    times, trace = _scan_transient(t, v0, amp, params, cinv, wave, dwave, dt,
+                                   mode="expdecay")
+    sn = trace[:, :, t.free("sn")]
+    vth_abs = amp[:, t.node("vth") - t.nf]
+    vhold = jnp.where(vth_abs > 0.0, vth_abs, 0.5 * v0[:, t.free("sn")])
+    t_ret = _cross_time(times, sn, vhold, rising=False)
+    return (_ds(times), _ds(trace), t_ret, trace[-1, :, t.free("sn")])

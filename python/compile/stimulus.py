@@ -1,0 +1,66 @@
+"""Stimulus-schedule builders (python mirror of rust/src/runtime/stimulus.rs).
+
+Artifacts take the stimulus as runtime inputs -- a normalized waveform
+(T, NS) + per-design amplitudes -- so these builders exist on both sides
+of the language boundary.  The python copies are used by the model tests
+and by aot example-input generation; the Rust copies feed the PJRT
+executions.  Keep the two in sync (test_model.py asserts the semantics).
+"""
+
+import numpy as np
+
+
+def uniform_dt(t_steps: int, dt: float) -> np.ndarray:
+    return np.full(t_steps, dt, np.float32)
+
+
+def log_dt(t_steps: int, dt0: float, growth: float) -> np.ndarray:
+    """Geometrically growing sub-step sizes for retention sweeps."""
+    return (dt0 * growth ** np.arange(t_steps)).astype(np.float32)
+
+
+def times_from_dt(dt: np.ndarray, k_substeps: int) -> np.ndarray:
+    """Simulated time at the END of each scan step (model.py contract)."""
+    return np.cumsum(dt * k_substeps).astype(np.float32)
+
+
+def constant(wave: np.ndarray, ch: int, level: float = 1.0) -> None:
+    wave[:, ch] = level
+
+
+def pulse(wave: np.ndarray, dwave: np.ndarray, times: np.ndarray, ch: int,
+          t_rise: float, t_fall: float, tr: float) -> None:
+    """Unit pulse: 0 -> 1 at t_rise (linear ramp tr), 1 -> 0 at t_fall.
+
+    t_fall beyond the window end leaves the channel high.  Slopes are
+    exact derivatives of the piecewise-linear waveform (the coupling-cap
+    stamps integrate C * slope, so slope consistency matters more than
+    waveform smoothness).
+    """
+    for i, t in enumerate(times):
+        if t < t_rise:
+            v, s = 0.0, 0.0
+        elif t < t_rise + tr:
+            v, s = (t - t_rise) / tr, 1.0 / tr
+        elif t < t_fall:
+            v, s = 1.0, 0.0
+        elif t < t_fall + tr:
+            v, s = 1.0 - (t - t_fall) / tr, -1.0 / tr
+        else:
+            v, s = 0.0, 0.0
+        wave[i, ch] = v
+        dwave[i, ch] = s
+
+
+def fall(wave: np.ndarray, dwave: np.ndarray, times: np.ndarray, ch: int,
+         t_fall: float, tr: float) -> None:
+    """Unit level that falls to 0 at t_fall (active-low wordlines)."""
+    for i, t in enumerate(times):
+        if t < t_fall:
+            v, s = 1.0, 0.0
+        elif t < t_fall + tr:
+            v, s = 1.0 - (t - t_fall) / tr, -1.0 / tr
+        else:
+            v, s = 0.0, 0.0
+        wave[i, ch] = v
+        dwave[i, ch] = s

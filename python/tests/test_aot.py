@@ -1,0 +1,58 @@
+"""AOT smoke tests: lowering produces loadable HLO text and a manifest
+consistent with the circuit templates."""
+
+import json
+
+import pytest
+
+from compile import aot, circuits
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    return aot.build_all()
+
+
+def test_all_artifacts_present(artifacts):
+    assert set(artifacts) == {"idvg", "write", "read", "retention"}
+
+
+@pytest.mark.parametrize("name", ["idvg", "write", "read", "retention"])
+def test_hlo_text_shape(artifacts, name):
+    text, _ = artifacts[name]
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # interpret-mode pallas must lower to plain HLO: no custom-calls that
+    # the CPU PJRT client cannot execute
+    assert "custom-call" not in text or "mosaic" not in text.lower()
+
+
+@pytest.mark.parametrize(
+    "name,template",
+    [("write", circuits.write_template()),
+     ("read", circuits.read_template()),
+     ("retention", circuits.retention_template())],
+)
+def test_manifest_matches_template(artifacts, name, template):
+    _, meta = artifacts[name]
+    assert meta["free_nodes"] == template.free_nodes
+    assert meta["stim_nodes"] == template.stim_nodes
+    assert meta["params"] == template.pnames
+    assert meta["batch"] % 128 == 0
+    assert meta["k_substeps"] >= 1
+
+
+def test_manifest_is_json_serializable(artifacts):
+    manifest = {k: dict(v[1], file=f"{k}.hlo.txt")
+                for k, v in artifacts.items()}
+    s = json.dumps(manifest)
+    assert json.loads(s) == manifest
+
+
+def test_param_count_in_hlo_signature(artifacts):
+    """The entry computation must take exactly the 7 transient inputs."""
+    text, meta = artifacts["write"]
+    header = text.splitlines()[0]  # HloModule ... entry_computation_layout=...
+    sig = header.split("entry_computation_layout=")[1]
+    args = sig.split("->")[0]
+    assert args.count("f32[") == len(meta["inputs"])

@@ -1,0 +1,91 @@
+"""Device-model property tests: the EKV expression itself."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import device
+
+VDD = device.SG40_VDD
+
+
+def ids(vd, vg, vs, card, wl=2.0):
+    c = device.card_vec(card, wl)
+    return float(device.mos_ids_card(
+        jnp.float32(vd), jnp.float32(vg), jnp.float32(vs), c))
+
+
+def test_nmos_on_current_magnitude():
+    # Ion at VGS=VDS=VDD for W/L=1: tens-of-uA class for this EKV card
+    # (absolute calibration is not the target -- Ion/Ioff ratios are)
+    i = ids(VDD, VDD, 0.0, device.SI_NMOS, wl=1.0)
+    assert 2e-5 < i < 2e-3, i
+
+
+def test_nmos_off_current_magnitude():
+    # Ioff at VGS=0, VDS=VDD: nA-class for Si
+    i = ids(VDD, 0.0, 0.0, device.SI_NMOS, wl=1.0)
+    assert 1e-13 < i < 1e-9, i
+
+
+def test_os_off_current_below_1e15():
+    # OS HVT card: the paper's <1e-18 A/um class device
+    i = ids(VDD, 0.0, 0.0, device.OS_NMOS_HVT, wl=1.0)
+    assert i < 1e-18, i
+
+
+def test_pmos_mirror_of_nmos():
+    # A PMOS with the same card magnitudes must mirror the NMOS exactly
+    n = dict(device.SI_NMOS)
+    p = dict(n, sign=-1.0)
+    i_n = ids(1.0, 0.8, 0.0, n)
+    i_p = ids(-1.0, -0.8, 0.0, p)
+    assert np.isclose(i_n, -i_p, rtol=1e-6)
+
+
+@given(
+    vg=st.floats(0.0, 1.2),
+    vd=st.floats(0.0, 1.2),
+    vs=st.floats(0.0, 1.2),
+)
+@settings(max_examples=60, deadline=None)
+def test_ds_antisymmetry(vg, vd, vs):
+    """Swapping drain and source must negate the current (lam=0)."""
+    card = dict(device.SI_NMOS, lam=0.0)
+    i1 = ids(vd, vg, vs, card)
+    i2 = ids(vs, vg, vd, card)
+    assert np.isclose(i1, -i2, rtol=1e-5, atol=1e-18), (i1, i2)
+
+
+@given(vg=st.floats(0.0, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_monotonic_in_vg(vg):
+    card = device.SI_NMOS
+    i1 = ids(VDD, vg, 0.0, card)
+    i2 = ids(VDD, vg + 0.05, 0.0, card)
+    assert i2 > i1
+
+
+@pytest.mark.parametrize("card", [device.SI_NMOS, device.OS_NMOS])
+def test_subthreshold_slope(card):
+    """SS extracted from the model must equal n * phi_t * ln(10)."""
+    vt = card["vt"]
+    v1, v2 = vt - 0.30, vt - 0.20  # deep subthreshold decade
+    i1 = ids(VDD, v1, 0.0, card)
+    i2 = ids(VDD, v2, 0.0, card)
+    ss = (v2 - v1) / np.log10(i2 / i1)  # V/decade
+    expect = card["n"] * device.PHI_T * np.log(10.0)
+    assert np.isclose(ss, expect, rtol=0.05), (ss, expect)
+
+
+def test_zero_vds_zero_current():
+    assert abs(ids(0.5, 0.9, 0.5, device.SI_NMOS)) < 1e-12
+
+
+def test_saturation_flat_vs_triode():
+    """dI/dVds in saturation should be << dI/dVds in triode."""
+    card = dict(device.SI_NMOS, lam=0.0)
+    g_tri = (ids(0.10, VDD, 0.0, card) - ids(0.05, VDD, 0.0, card)) / 0.05
+    g_sat = (ids(1.10, VDD, 0.0, card) - ids(1.05, VDD, 0.0, card)) / 0.05
+    assert g_sat < 0.05 * g_tri

@@ -1,0 +1,170 @@
+"""Pallas kernel vs pure-jnp oracle: the CORE correctness signal.
+
+hypothesis sweeps batch sizes, block sizes, substep counts and random
+(physically-plausible) parameter vectors for every template; the kernel
+must match the oracle to float32 tolerance because both run the SAME rhs
+-- any mismatch is a tiling/indexing bug in the Pallas code.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import circuits, device
+from compile.kernels import gcram_step, ref
+
+TEMPLATES = {name: f() for name, f in circuits.TEMPLATES.items()}
+
+
+def rand_params(rng, t: circuits.Template, b: int) -> np.ndarray:
+    """Physically-plausible random parameter matrix for a template."""
+    p = np.zeros((b, t.npar), np.float32)
+    cards = [device.SI_NMOS, device.SI_PMOS, device.OS_NMOS,
+             device.SI_NMOS_HVT]
+    for name in t.pnames:
+        j = t.pnames.index(name)
+        if name.endswith(".kp"):
+            c = cards[rng.integers(len(cards))]
+            wl = rng.uniform(0.5, 8.0)
+            for k, key in enumerate(("kp", "vt", "n", "lam")):
+                p[:, j + k] = c[key] * rng.uniform(0.8, 1.2, b)
+            p[:, j + 4] = wl
+            p[:, j + 5] = c["sign"]
+        elif name.endswith(".c"):
+            p[:, j] = rng.uniform(0.05, 0.5, b) * 1e-15
+        elif name.endswith(".g"):
+            p[:, j] = rng.uniform(0.0, 2.0, b) * 1e-9
+        elif name.endswith(".i"):
+            p[:, j] = rng.uniform(-1.0, 1.0, b) * 1e-9
+    return p
+
+
+def rand_state(rng, t: circuits.Template, b: int):
+    v = rng.uniform(0.0, 1.2, (b, t.nf)).astype(np.float32)
+    vs = rng.uniform(0.0, 1.5, (b, t.ns)).astype(np.float32)
+    dvs = rng.uniform(-1e10, 1e10, (b, t.ns)).astype(np.float32)
+    cinv = rng.uniform(1 / 50e-15, 1 / 0.5e-15, (b, t.nf)).astype(np.float32)
+    # dt scaled to the fastest RC in the random range so random parameter
+    # sets stay numerically stable (explicit RK2)
+    dt = np.full((b, 1), rng.uniform(0.02e-12, 0.2e-12), np.float32)
+    return v, vs, dvs, cinv, dt
+
+
+@pytest.mark.parametrize("mode", ["heun", "expdecay"])
+@pytest.mark.parametrize("tname", sorted(TEMPLATES))
+@given(seed=st.integers(0, 2**31 - 1),
+       bmult=st.integers(1, 3),
+       block=st.sampled_from([32, 64, 128]),
+       k=st.sampled_from([1, 2, 4]))
+@settings(max_examples=10, deadline=None)
+def test_step_matches_ref(tname, mode, seed, bmult, block, k):
+    t = TEMPLATES[tname]
+    rng = np.random.default_rng(seed)
+    b = block * bmult
+    v, vs, dvs, cinv, dt = rand_state(rng, t, b)
+    p = rand_params(rng, t, b)
+
+    got = gcram_step.make_step(t, k, block, mode)(v, vs, dvs, p, cinv, dt)
+    want = ref.make_step_ref(t, k, mode)(v, vs, dvs, p, cinv, dt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_expdecay_matches_heun_for_small_dt():
+    """Both integrators solve the same ODE: with dt << C/g they agree."""
+    t = TEMPLATES["retention"]
+    rng = np.random.default_rng(11)
+    b = 128
+    v, vs, dvs, cinv, _ = rand_state(rng, t, b)
+    vs[:] = 0.0
+    dvs[:] = 0.0
+    p = rand_params(rng, t, b)
+    dt = np.full((b, 1), 1e-15, np.float32)
+    heun = gcram_step.make_step(t, 4, 64, "heun")(v, vs, dvs, p, cinv, dt)
+    expd = gcram_step.make_step(t, 4, 64, "expdecay")(v, vs, dvs, p, cinv, dt)
+    np.testing.assert_allclose(np.asarray(heun), np.asarray(expd),
+                               rtol=1e-4, atol=1e-7)
+
+
+def test_expdecay_stable_and_monotone_at_huge_dt():
+    """expdecay must neither oscillate nor go negative when dt >> C/g."""
+    t = TEMPLATES["retention"]
+    rng = np.random.default_rng(5)
+    b = 128
+    v, vs, dvs, cinv, _ = rand_state(rng, t, b)
+    v = np.abs(v).astype(np.float32)
+    vs[:] = 0.0
+    dvs[:] = 0.0
+    p = rand_params(rng, t, b)
+    p[:, TEMPLATES["retention"].pnames.index("idist.i")] = 0.0
+    step = gcram_step.make_step(t, 4, 64, "expdecay")
+    cur = v
+    for dt_s in (1e-9, 1e-6, 1e-3, 1.0, 100.0):
+        dt = np.full((b, 1), dt_s, np.float32)
+        nxt = np.asarray(step(cur, vs, dvs, p, cinv, dt))
+        assert np.all(nxt <= cur + 1e-7), dt_s
+        assert np.all(nxt >= -1e-6), dt_s
+        assert np.all(np.isfinite(nxt)), dt_s
+        cur = nxt
+
+
+@pytest.mark.parametrize("tname", sorted(TEMPLATES))
+def test_multi_step_trajectory_matches_ref(tname):
+    """Longer trajectories (stimulus sweeping, varying dt) stay aligned."""
+    t = TEMPLATES[tname]
+    rng = np.random.default_rng(7)
+    b, steps = 128, 24
+    v, vs, dvs, cinv, _ = rand_state(rng, t, b)
+    p = rand_params(rng, t, b)
+    kstep = gcram_step.make_step(t, 4, 64)
+    rstep = ref.make_step_ref(t, 4)
+    vk = vr = jnp.asarray(v)
+    for i in range(steps):
+        dt = np.full((b, 1), (0.05 + 0.02 * i) * 1e-12, np.float32)
+        vs_i = vs * (0.5 + 0.5 * np.sin(i / 3.0))
+        vk = kstep(vk, vs_i, dvs, p, cinv, dt)
+        vr = rstep(vr, vs_i, dvs, p, cinv, dt)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr),
+                               rtol=5e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), g=st.sampled_from([16, 64, 96]))
+@settings(max_examples=10, deadline=None)
+def test_idvg_matches_ref(seed, g):
+    rng = np.random.default_rng(seed)
+    b = 128
+    cards = np.zeros((b, 6), np.float32)
+    for i, c in enumerate((device.SI_NMOS, device.SI_PMOS, device.OS_NMOS)):
+        sl = slice(i * b // 3, (i + 1) * b // 3)
+        cards[sl] = [c["kp"], c["vt"], c["n"], c["lam"], 2.0, c["sign"]]
+    cards[-1] = cards[0]
+    vg = np.linspace(-1.2, 1.2, g).astype(np.float32)
+    vds = rng.uniform(-1.1, 1.1, (b, 1)).astype(np.float32)
+    got = gcram_step.make_idvg(g)(cards, vg, vds)
+    want = ref.idvg_ref(cards, vg, vds)
+    # broadcast/fusion order differs between blocked and unblocked
+    # evaluation; 2e-4 relative is float32 round-off, not a logic bug
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=1e-18)
+
+
+def test_pinned_node_stays_pinned():
+    """cinv = 0 must freeze a node exactly (how rails are modeled)."""
+    t = TEMPLATES["write"]
+    rng = np.random.default_rng(3)
+    b = 128
+    v, vs, dvs, cinv, dt = rand_state(rng, t, b)
+    cinv[:, 0] = 0.0
+    p = rand_params(rng, t, b)
+    out = gcram_step.make_step(t, 4, 64)(v, vs, dvs, p, cinv, dt)
+    np.testing.assert_array_equal(np.asarray(out)[:, 0], v[:, 0])
+
+
+def test_bad_batch_multiple_rejected():
+    t = TEMPLATES["retention"]
+    rng = np.random.default_rng(0)
+    v, vs, dvs, cinv, dt = rand_state(rng, t, 96)
+    p = rand_params(rng, t, 96)
+    with pytest.raises(AssertionError):
+        gcram_step.make_step(t, 1, 128)(v, vs, dvs, p, cinv, dt)

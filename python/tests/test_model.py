@@ -1,0 +1,266 @@
+"""Behavioral tests of the L2 transient graphs: does the physics of each
+artifact entry point reproduce the effects the paper builds on?
+
+ - write: SN-'1' saturates near VWWL - VT; WWLLS raises it; WWL-fall
+   coupling droops it (paper SS V-A / V-C).
+ - read: stored-'0' and stored-'1' crossings separate in time; RWL edge
+   boosts SN for the NP flavor and droops it for the NN flavor.
+ - retention: Si ~ us, OS ~ ms, OS-HVT > 10 s (Fig. 8b/c/e); higher
+   write-VT monotonically lengthens retention (Fig. 8c).
+"""
+
+import numpy as np
+import pytest
+
+from compile import circuits, device, model, stimulus
+
+VDD = device.SG40_VDD
+B = 128
+
+
+def card_row(c, wl):
+    return np.array([c["kp"], c["vt"], c["n"], c["lam"], wl, c["sign"]],
+                    np.float32)
+
+
+def set_card(p, t, tag, c, wl):
+    j = t.pnames.index(f"{tag}.kp")
+    p[:, j:j + 6] = card_row(c, wl)
+
+
+def run_write(wwl_boost=0.0, vt_shift=0.0, t_steps=192, csn=1.2e-15):
+    t = circuits.write_template()
+    p = np.zeros((B, t.npar), np.float32)
+    wr = dict(device.SI_NMOS)
+    wr["vt"] += vt_shift
+    set_card(p, t, "mwr", wr, 2.0)
+    set_card(p, t, "mdrvp", device.SI_PMOS, 8.0)
+    set_card(p, t, "mdrvn", device.SI_NMOS, 4.0)
+    p[:, t.pnames.index("cwwl_sn.c")] = 0.15e-15
+    p[:, t.pnames.index("gwbl.g")] = 1e-9
+    cinv = np.tile([1 / csn, 1 / 20e-15], (B, 1)).astype(np.float32)
+    v0 = np.zeros((B, 2), np.float32)
+    amp = np.tile([VDD + wwl_boost, 0.0, VDD, 0.0], (B, 1)).astype(np.float32)
+    dt = stimulus.uniform_dt(t_steps, 5e-12)
+    times = stimulus.times_from_dt(dt, model.K_SUBSTEPS)
+    wave = np.zeros((t_steps, 4), np.float32)
+    dwave = np.zeros((t_steps, 4), np.float32)
+    stimulus.pulse(wave, dwave, times, 0, 0.2e-9, 0.75 * times[-1], 0.1e-9)
+    stimulus.constant(wave, 2)
+    out = model.write_op(v0, amp, p, cinv, wave, dwave, dt)
+    return [np.asarray(o) for o in out]
+
+
+class TestWrite:
+    def test_stored_one_near_vdd_minus_vt(self):
+        _, _, sn_final, t_wr, sn_peak = run_write()
+        target = VDD - device.SI_NMOS["vt"]
+        assert target - 0.15 < sn_peak[0] < target + 0.05
+        assert t_wr[0] < 2e-9
+
+    def test_wwlls_boost_raises_stored_one(self):
+        _, _, _, _, peak_nom = run_write(0.0)
+        _, _, _, _, peak_ls = run_write(0.4)
+        assert peak_ls[0] > peak_nom[0] + 0.2
+
+    def test_coupling_droop_at_wwl_fall(self):
+        _, _, sn_final, _, sn_peak = run_write()
+        droop = sn_peak[0] - sn_final[0]
+        # Cc/(Cc+Csn) * VDD = 0.15/1.35 * 1.1 ~ 0.12 V
+        assert 0.05 < droop < 0.2, droop
+
+    def test_larger_csn_reduces_droop(self):
+        _, _, f1, _, p1 = run_write(csn=1.2e-15)
+        _, _, f2, _, p2 = run_write(csn=3.0e-15)
+        assert (p2[0] - f2[0]) < (p1[0] - f1[0])
+
+    def test_higher_write_vt_slows_write(self):
+        _, _, _, t_nom, _ = run_write(vt_shift=0.0)
+        _, _, _, t_hvt, _ = run_write(vt_shift=0.15)
+        assert t_hvt[0] > t_nom[0]
+
+    def test_write_zero_settles_low(self):
+        t = circuits.write_template()
+        p = np.zeros((B, t.npar), np.float32)
+        set_card(p, t, "mwr", device.SI_NMOS, 2.0)
+        set_card(p, t, "mdrvp", device.SI_PMOS, 8.0)
+        set_card(p, t, "mdrvn", device.SI_NMOS, 4.0)
+        p[:, t.pnames.index("cwwl_sn.c")] = 0.15e-15
+        cinv = np.tile([1 / 1.2e-15, 1 / 20e-15], (B, 1)).astype(np.float32)
+        v0 = np.tile([0.6, 0.0], (B, 1)).astype(np.float32)  # SN was '1'
+        amp = np.tile([VDD, VDD, VDD, 0.0], (B, 1)).astype(np.float32)
+        dt = stimulus.uniform_dt(192, 5e-12)
+        times = stimulus.times_from_dt(dt, model.K_SUBSTEPS)
+        wave = np.zeros((192, 4), np.float32)
+        dwave = np.zeros((192, 4), np.float32)
+        stimulus.pulse(wave, dwave, times, 0, 0.2e-9, 0.75 * times[-1], 0.1e-9)
+        stimulus.constant(wave, 1)  # dinb high -> drive WBL low -> write 0
+        stimulus.constant(wave, 2)
+        out = model.write_op(v0, amp, p, cinv, wave, dwave, dt)
+        sn_final = np.asarray(out[2])
+        assert sn_final[0] < 0.1
+
+
+def run_read(sn_level, flavor="np", t_steps=192, rows=256, crbl=40e-15):
+    t = circuits.read_template()
+    p = np.zeros((B, t.npar), np.float32)
+    if flavor == "np":
+        rd_card, snu = device.SI_PMOS, 0.55
+    elif flavor == "nn":
+        rd_card, snu = device.SI_NMOS, 0.0
+    else:  # os
+        rd_card, snu = device.OS_NMOS, 0.0
+    set_card(p, t, "mrd", rd_card, 2.0)
+    set_card(p, t, "mrbl_leak", rd_card, 2.0 * (rows - 1))
+    p[:, t.pnames.index("crwl_sn.c")] = 0.10e-15
+    p[:, t.pnames.index("grbl.g")] = 1e-9
+    cinv = np.tile([1 / 1.2e-15, 1 / crbl], (B, 1)).astype(np.float32)
+    dt = stimulus.uniform_dt(t_steps, 6e-12)
+    times = stimulus.times_from_dt(dt, model.K_SUBSTEPS)
+    wave = np.zeros((t_steps, 4), np.float32)
+    dwave = np.zeros((t_steps, 4), np.float32)
+    v0 = np.zeros((B, 2), np.float32)
+    v0[:, 0] = sn_level
+    if flavor == "np":
+        # predischarge: RBL starts 0; RWL swings 0 -> VDD
+        amp = np.tile([VDD, 0.0, snu, 0.0], (B, 1)).astype(np.float32)
+        stimulus.pulse(wave, dwave, times, 0, 0.2e-9, 10.0, 0.1e-9)
+        stimulus.constant(wave, 2)
+    else:
+        # precharge: RBL starts VDD; RWL idles VDD, falls to 0
+        amp = np.tile([VDD, VDD, snu if snu else 0.0, 0.0], (B, 1))
+        amp = amp.astype(np.float32)
+        stimulus.fall(wave, dwave, times, 0, 0.2e-9, 0.1e-9)
+        stimulus.constant(wave, 1)
+        v0[:, 1] = VDD
+    out = model.read_op(v0, amp, p, cinv, wave, dwave, dt)
+    return [np.asarray(o) for o in out]
+
+
+class TestRead:
+    def test_np_read_zero_charges_rbl(self):
+        _, _, t_rise, _, rbl_f, _ = run_read(0.05, "np")
+        assert t_rise[0] < 2e-9
+        assert rbl_f[0] > 0.5 * VDD
+
+    def test_np_read_discrimination_window(self):
+        _, _, t0, _, _, _ = run_read(0.05, "np")
+        _, _, t1, _, _, _ = run_read(0.65, "np")
+        assert t1[0] > 1.5 * t0[0]  # '1' crossing much later than '0'
+
+    def test_np_wwlls_widens_window(self):
+        _, _, t_nom, _, _, _ = run_read(0.65, "np")
+        _, _, t_ls, _, _, _ = run_read(0.95, "np")
+        assert t_ls[0] > t_nom[0]
+
+    def test_np_rwl_boosts_sn(self):
+        _, _, _, _, _, sn_f = run_read(0.60, "np")
+        assert sn_f[0] > 0.60 + 0.03  # rising RWL couples SN upward
+
+    def test_nn_read_one_discharges_rbl(self):
+        # NN: active-low RWL, precharged RBL; stored '1' turns the read
+        # tx on once RWL falls and discharges RBL. VGS ~ 0.6 V is only
+        # moderate inversion, so give the window ~9 ns.
+        _, _, _, t_fall, rbl_f, _ = run_read(0.65, "nn", t_steps=384)
+        assert t_fall[0] < 8e-9
+        assert rbl_f[0] < 0.5 * VDD
+
+    def test_nn_rwl_droops_sn(self):
+        _, _, _, _, _, sn_f = run_read(0.60, "nn")
+        assert sn_f[0] < 0.60 - 0.03  # falling RWL couples SN downward
+
+    def test_bigger_rbl_cap_slows_read(self):
+        _, _, ta, _, _, _ = run_read(0.05, "np", crbl=20e-15)
+        _, _, tb, _, _, _ = run_read(0.05, "np", crbl=80e-15)
+        assert tb[0] > 1.5 * ta[0]
+
+
+def run_retention(card, wl=2.0, gleak=1e-16, v0sn=0.6, t_steps=448):
+    t = circuits.retention_template()
+    p = np.zeros((B, t.npar), np.float32)
+    set_card(p, t, "mwr", card, wl)
+    p[:, t.pnames.index("gleak.g")] = gleak
+    cinv = np.full((B, 1), 1 / 1.2e-15, np.float32)
+    v0 = np.full((B, 1), v0sn, np.float32)
+    amp = np.zeros((B, 4), np.float32)
+    dt = stimulus.log_dt(t_steps, 1e-12, 1.082)
+    wave = np.zeros((t_steps, 4), np.float32)
+    dwave = np.zeros((t_steps, 4), np.float32)
+    out = model.retention(v0, amp, p, cinv, wave, dwave, dt)
+    return [np.asarray(o) for o in out]
+
+
+class TestRetention:
+    def test_si_retention_microseconds(self):
+        _, _, t_ret, _ = run_retention(device.SI_NMOS)
+        assert 1e-6 < t_ret[0] < 1e-3, t_ret[0]
+
+    def test_os_retention_milliseconds(self):
+        _, _, t_ret, _ = run_retention(device.OS_NMOS)
+        assert 1e-3 < t_ret[0] < 1.0, t_ret[0]
+
+    def test_os_hvt_retention_beyond_10s(self):
+        _, _, t_ret, _ = run_retention(device.OS_NMOS_HVT, gleak=1e-17)
+        assert t_ret[0] > 10.0, t_ret[0]
+
+    def test_vt_monotonically_lengthens_retention(self):
+        ts = []
+        for dvt in (0.0, 0.1, 0.2, 0.3):
+            c = dict(device.SI_NMOS)
+            c["vt"] += dvt
+            _, _, t_ret, _ = run_retention(c)
+            ts.append(t_ret[0])
+        assert all(b > a for a, b in zip(ts, ts[1:])), ts
+
+    def test_decay_is_monotone(self):
+        _, trace, _, _ = run_retention(device.SI_NMOS)
+        sn = trace[:, 0, 0]
+        assert np.all(np.diff(sn) <= 1e-6)
+
+    def test_absolute_threshold_channel(self):
+        """amp[vth] > 0 switches t_retain to an absolute threshold."""
+        t = circuits.retention_template()
+        p = np.zeros((B, t.npar), np.float32)
+        set_card(p, t, "mwr", device.SI_NMOS, 2.0)
+        p[:, t.pnames.index("gleak.g")] = 1e-16
+        cinv = np.full((B, 1), 1 / 1.2e-15, np.float32)
+        v0 = np.full((B, 1), 0.6, np.float32)
+        amp = np.zeros((B, 4), np.float32)
+        amp[:, t.node("vth") - t.nf] = 0.45  # higher bar than 0.5*v0=0.3
+        dt = stimulus.log_dt(448, 1e-12, 1.082)
+        zeros = np.zeros((448, 4), np.float32)
+        out = model.retention(v0, amp, p, cinv, zeros, zeros, dt)
+        t_abs = np.asarray(out[2])[0]
+        amp[:, t.node("vth") - t.nf] = 0.0
+        out2 = model.retention(v0, amp, p, cinv, zeros, zeros, dt)
+        t_rel = np.asarray(out2[2])[0]
+        assert t_abs < t_rel  # 0.45 V is crossed before 0.30 V
+
+    def test_never_crossing_reports_big_time(self):
+        # wl tiny + no gate leak + HVT OS -> does not decay in the window
+        _, _, t_ret, _ = run_retention(device.OS_NMOS_HVT, wl=0.1, gleak=0.0,
+                                       t_steps=128)
+        assert t_ret[0] >= 0.99 * model.BIG_TIME  # float32 of the sentinel
+
+
+class TestCrossTime:
+    def test_interpolated_crossing(self):
+        import jax.numpy as jnp
+        times = jnp.asarray(np.array([1.0, 2.0, 3.0, 4.0], np.float32))
+        sig = jnp.asarray(np.array([[0.0], [0.2], [0.6], [1.0]], np.float32))
+        t = model._cross_time(times, sig, 0.4, rising=True)
+        assert np.isclose(float(t[0]), 2.5, atol=1e-5)
+
+    def test_initially_above_is_zero(self):
+        import jax.numpy as jnp
+        times = jnp.asarray(np.array([1.0, 2.0], np.float32))
+        sig = jnp.asarray(np.array([[0.9], [1.0]], np.float32))
+        t = model._cross_time(times, sig, 0.5, rising=True)
+        assert float(t[0]) == 0.0
+
+    def test_never_crossing(self):
+        import jax.numpy as jnp
+        times = jnp.asarray(np.array([1.0, 2.0], np.float32))
+        sig = jnp.asarray(np.array([[0.1], [0.2]], np.float32))
+        t = model._cross_time(times, sig, 0.5, rising=True)
+        assert float(t[0]) >= 0.99 * model.BIG_TIME  # float32 rounding

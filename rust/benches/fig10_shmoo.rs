@@ -1,0 +1,40 @@
+//! Fig. 10 regenerator: shmoo of GCRAM bank configs against the
+//! Table-I demands, plus end-to-end DSE throughput.
+use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::runtime::Runtime;
+use opengcram::tech::sg40;
+use opengcram::util::bench;
+use opengcram::{characterize, dse, workloads};
+use std::path::Path;
+
+fn main() {
+    let tech = sg40();
+    let rt = Runtime::load(Path::new("artifacts")).expect("make artifacts");
+    let evals: Vec<dse::Evaluated> = dse::fig10_configs(CellFlavor::GcSiSiNp)
+        .into_iter()
+        .map(|cfg| {
+            let bank = compile(&tech, &cfg).unwrap();
+            let perf = characterize::characterize(&tech, &rt, &bank).unwrap();
+            dse::Evaluated { config: cfg, perf, area_um2: bank.layout.total_area_um2() }
+        })
+        .collect();
+    println!("machine,level,task,c16,c32,c64,c96,c128");
+    for (level, m) in [
+        (workloads::CacheLevel::L1, &workloads::GT520M),
+        (workloads::CacheLevel::L2, &workloads::H100),
+    ] {
+        for task in &workloads::TASKS {
+            let d = workloads::profile(task, level, m);
+            let glyphs: Vec<String> = evals
+                .iter()
+                .map(|e| dse::shmoo_verdict(e, &d).glyph().to_string())
+                .collect();
+            println!("{},{:?},{},{}", m.name, level, task.name, glyphs.join(","));
+        }
+    }
+    bench::run("dse_full_pipeline_one_config", 3.0, || {
+        let cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
+        let bank = compile(&tech, &cfg).unwrap();
+        characterize::characterize(&tech, &rt, &bank).unwrap()
+    });
+}

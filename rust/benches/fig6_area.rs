@@ -1,0 +1,36 @@
+//! Fig. 6 regenerator + timing: bank/array areas across sizes with
+//! extrapolation to the crossover (paper: GCRAM bank < SRAM > 256 Kb).
+use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::tech::sg40;
+use opengcram::util::bench;
+
+fn main() {
+    let tech = sg40();
+    println!("bits,sram_um2,gc_um2,gc_wwlls_um2,os_um2,gc_array_um2,sram_array_um2,gc_eff,ratio");
+    for (w, n) in [(32usize, 32usize), (64, 64), (128, 128), (256, 256), (512, 512)] {
+        let sram = compile(&tech, &Config::new(w, n, CellFlavor::Sram6t)).unwrap();
+        let gc = compile(&tech, &Config::new(w, n, CellFlavor::GcSiSiNp)).unwrap();
+        let mut cl = Config::new(w, n, CellFlavor::GcSiSiNp);
+        cl.wwlls = true;
+        let gcls = compile(&tech, &cl).unwrap();
+        let os = compile(&tech, &Config::new(w, n, CellFlavor::GcOsOs)).unwrap();
+        println!(
+            "{},{:.0},{:.0},{:.0},{:.0},{:.0},{:.0},{:.3},{:.3}",
+            w * n,
+            sram.layout.total_area_um2(),
+            gc.layout.total_area_um2(),
+            gcls.layout.total_area_um2(),
+            os.layout.total_area_um2(),
+            gc.layout.array_area_um2(),
+            sram.layout.array_area_um2(),
+            gc.layout.array_efficiency(),
+            gc.layout.total_area_um2() / sram.layout.total_area_um2()
+        );
+    }
+    bench::run("compile_1kb_gc_bank", 1.0, || {
+        compile(&tech, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap()
+    });
+    bench::run("compile_16kb_gc_bank", 1.5, || {
+        compile(&tech, &Config::new(128, 128, CellFlavor::GcSiSiNp)).unwrap()
+    });
+}

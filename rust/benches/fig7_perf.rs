@@ -1,0 +1,51 @@
+//! Fig. 7 regenerator: operating frequency, effective bandwidth and
+//! leakage across sizes/flavors (transient-backed characterization).
+use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::runtime::Runtime;
+use opengcram::tech::sg40;
+use opengcram::util::bench;
+use opengcram::characterize;
+use std::path::Path;
+
+fn main() {
+    let tech = sg40();
+    let rt = Runtime::load(Path::new("artifacts")).expect("make artifacts");
+    println!("config,flavor,f_op_mhz,bw_gbps,leak_nw,stages");
+    for (w, n, label) in [
+        (16usize, 16usize, "256b_1to1"),
+        (32, 32, "1kb_1to1"),
+        (64, 64, "4kb_1to1"),
+        (128, 32, "4kb_4to1"),
+        (128, 128, "16kb_1to1"),
+    ] {
+        for (fl, name) in [
+            (CellFlavor::Sram6t, "sram"),
+            (CellFlavor::GcSiSiNp, "gc"),
+        ] {
+            let bank = compile(&tech, &Config::new(w, n, fl)).unwrap();
+            let p = characterize::characterize(&tech, &rt, &bank).unwrap();
+            println!(
+                "{label},{name},{:.1},{:.2},{:.2},{}",
+                p.f_op_hz / 1e6,
+                p.bandwidth_bps / 1e9,
+                p.leakage_w * 1e9,
+                bank.delay_chain_stages
+            );
+        }
+        let mut cfg = Config::new(w, n, CellFlavor::GcSiSiNp);
+        cfg.wwlls = true;
+        let bank = compile(&tech, &cfg).unwrap();
+        let p = characterize::characterize(&tech, &rt, &bank).unwrap();
+        println!(
+            "{label},gc_wwlls,{:.1},{:.2},{:.2},{}",
+            p.f_op_hz / 1e6,
+            p.bandwidth_bps / 1e9,
+            p.leakage_w * 1e9,
+            bank.delay_chain_stages
+        );
+    }
+    let bank = compile(&tech, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap();
+    bench::run("characterize_1kb_transient", 2.0, || {
+        characterize::characterize(&tech, &rt, &bank).unwrap()
+    });
+}

@@ -1,0 +1,58 @@
+//! Fig. 8 regenerator: Id-Vg + retention modulation, and throughput of
+//! the batched retention artifact (design points per second).
+use opengcram::runtime::{engines, Runtime};
+use opengcram::tech::sg40;
+use opengcram::util::bench;
+use std::path::Path;
+
+fn main() {
+    let tech = sg40();
+    let rt = Runtime::load(Path::new("artifacts")).expect("make artifacts");
+    println!("vt,si_retention_s");
+    let pts: Vec<_> = (0..12)
+        .map(|i| engines::RetentionPoint {
+            write_card: tech.card("si_nmos").with_vt(0.35 + 0.03 * i as f64),
+            write_wl: 2.5,
+            c_sn: 1.2e-15,
+            g_gate_leak: 1e-16,
+            i_disturb: 0.0,
+            v0: 0.6,
+            vth: 0.3,
+        })
+        .collect();
+    let res = engines::retention(&rt, &pts).unwrap();
+    for (i, r) in res.iter().enumerate() {
+        println!("{:.2},{:.4e}", 0.35 + 0.03 * i as f64, r.t_retain);
+    }
+    println!("material,retention_s");
+    for (card, gl) in [("os_nmos", 1e-17), ("os_nmos_hvt", 1e-17)] {
+        let r = engines::retention(
+            &rt,
+            &[engines::RetentionPoint {
+                write_card: *tech.card(card),
+                write_wl: 1.2,
+                c_sn: 1.2e-15,
+                g_gate_leak: gl,
+                i_disturb: 0.0,
+                v0: 0.6,
+                vth: 0.3,
+            }],
+        )
+        .unwrap();
+        println!("{card},{:.4e}", r[0].t_retain);
+    }
+    // throughput: a full 256-point batch through the retention artifact
+    let full: Vec<_> = (0..256)
+        .map(|i| engines::RetentionPoint {
+            write_card: tech.card("si_nmos").with_vt(0.35 + 0.001 * i as f64),
+            write_wl: 2.5,
+            c_sn: 1.2e-15,
+            g_gate_leak: 1e-16,
+            i_disturb: 0.0,
+            v0: 0.6,
+            vth: 0.3,
+        })
+        .collect();
+    let s = bench::run("retention_batch_256", 3.0, || engines::retention(&rt, &full).unwrap());
+    println!("design_points_per_sec,{:.0}", 256.0 / s.median_s);
+}

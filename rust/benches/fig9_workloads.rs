@@ -1,0 +1,16 @@
+//! Fig. 9 / Table I regenerator: workload cache demands per machine.
+use opengcram::util::bench;
+use opengcram::workloads::{all_demands, GT520M, H100};
+
+fn main() {
+    println!("machine,task,level,read_freq_mhz,lifetime_s");
+    for m in [&H100, &GT520M] {
+        for d in all_demands(m) {
+            println!(
+                "{},{},{:?},{:.1},{:.3e}",
+                m.name, d.task.name, d.level, d.read_freq_hz / 1e6, d.lifetime_s
+            );
+        }
+    }
+    bench::run("profile_all_workloads", 0.5, || all_demands(&H100));
+}

@@ -1,0 +1,69 @@
+//! Performance pass (EXPERIMENTS.md SS Perf): hot-path throughput of
+//! every layer the request path touches — L3 compiler/DRC/extraction,
+//! the PJRT execution path per artifact, and the native sim baseline.
+use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::layout::{cells, Library};
+use opengcram::runtime::{engines, Runtime};
+use opengcram::tech::sg40;
+use opengcram::util::bench;
+use opengcram::sim;
+use std::path::Path;
+
+fn main() {
+    let tech = sg40();
+    let rt = Runtime::load(Path::new("artifacts")).expect("make artifacts");
+
+    // L3: compiler + geometry engines
+    let s = bench::run("l3_compile_1kb_bank", 1.5, || {
+        compile(&tech, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap()
+    });
+    println!("banks_per_sec,{:.1}", 1.0 / s.median_s);
+    let bank = compile(&tech, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap();
+    let rects = bank.library.flatten("bitcell_array").unwrap();
+    let s = bench::run("l3_drc_1kb_array", 2.0, || opengcram::drc::check(&tech, &rects));
+    println!("drc_rects_per_sec,{:.0}", rects.len() as f64 / s.median_s);
+    let lc = cells::gc2t_sisi(&tech, false);
+    let mut lib = Library::default();
+    lib.add(lc.layout.clone());
+    let (cr, cp) = lib.flatten_with_pins("gc2t_sisi").unwrap();
+    bench::run("l3_lvs_extract_bitcell", 1.0, || {
+        opengcram::lvs::extract(&tech, &cr, &cp, "gc2t_sisi").unwrap()
+    });
+
+    // L1/L2 via PJRT: batched artifact executions (per-design cost)
+    let ret_pts: Vec<_> = (0..256)
+        .map(|i| engines::RetentionPoint {
+            write_card: tech.card("si_nmos").with_vt(0.35 + 0.001 * i as f64),
+            write_wl: 2.5,
+            c_sn: 1.2e-15,
+            g_gate_leak: 1e-16,
+            i_disturb: 0.0,
+            v0: 0.6,
+            vth: 0.3,
+        })
+        .collect();
+    let s = bench::run("xla_retention_batch256", 3.0, || engines::retention(&rt, &ret_pts).unwrap());
+    println!("retention_points_per_sec,{:.0}", 256.0 / s.median_s);
+    let one = vec![ret_pts[0].clone()];
+    let s1 = bench::run("xla_retention_batch1_padded", 3.0, || engines::retention(&rt, &one).unwrap());
+    println!("batch_amortization,{:.1}x", s1.median_s * 256.0 / s.median_s);
+
+    // native rust sim baseline (single design, same template)
+    let t = sim::retention_template();
+    let mut p = vec![0.0; t.npar];
+    let si = tech.card("si_nmos");
+    p[0..6].copy_from_slice(&[si.kp, si.vt, si.n, si.lam, 2.5, 1.0]);
+    p[6] = 1e-16;
+    let steps = 448;
+    let mut dt = Vec::new();
+    let mut d = 1e-12;
+    for _ in 0..steps {
+        dt.push(d);
+        d *= 1.082;
+    }
+    let wave = vec![vec![0.0; 4]; steps];
+    let s = bench::run("native_sim_retention_single", 2.0, || {
+        sim::transient(&t, sim::Integrator::ExpDecay, 4, &[0.6], &[0.0; 4], &p, &[1.0 / 1.2e-15], &wave, &wave, &dt)
+    });
+    println!("native_points_per_sec,{:.0}", 1.0 / s.median_s);
+}

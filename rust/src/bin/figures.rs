@@ -1,0 +1,198 @@
+//! Regenerate every table/figure of the paper's evaluation in one run
+//! (EXPERIMENTS.md is produced from this output).
+//!
+//!   cargo run --release --bin figures
+
+use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::layout::{cells, Library};
+use opengcram::runtime::{engines, Runtime};
+use opengcram::tech::{sg40, LayerRole};
+use opengcram::util::eng;
+use opengcram::{characterize, dse, report, workloads};
+use std::path::Path;
+
+fn main() -> opengcram::Result<()> {
+    let tech = sg40();
+    let rt = Runtime::load(Path::new("artifacts"))?;
+
+    // ---- Fig. 3: cell areas ------------------------------------------------
+    println!("== Fig. 3: bitcell areas (logic rules) ==");
+    let b = tech.layer(LayerRole::Boundary);
+    let area = |lc: &cells::LeafCell| {
+        let r = lc.layout.boundary(b).unwrap();
+        r.w() as f64 * r.h() as f64 * 1e-6
+    };
+    let a_sram = area(&cells::sram6t(&tech));
+    let a_sisi = area(&cells::gc2t_sisi(&tech, false));
+    let a_osos = area(&cells::gc2t_osos(&tech));
+    let mut t3 = report::Table::new(&["cell", "um^2", "vs 6T (paper)"]);
+    t3.row(&["6T SRAM".into(), format!("{a_sram:.3}"), "100 % (100 %)".into()]);
+    t3.row(&["2T Si-Si".into(), format!("{a_sisi:.3}"), format!("{:.0} % (69 %)", 100.0 * a_sisi / a_sram)]);
+    t3.row(&["2T OS-OS".into(), format!("{a_osos:.3}"), format!("{:.0} % (11 %)", 100.0 * a_osos / a_sram)]);
+    println!("{}", t3.render());
+
+    // ---- Fig. 6: bank/array area vs size -----------------------------------
+    println!("== Fig. 6: area comparison (1/4/16 Kb + extrapolation) ==");
+    let mut t6 = report::Table::new(&[
+        "bits", "sram bank", "gc bank", "gc+wwlls", "os bank", "gc array", "sram array", "gc eff %", "gc/sram",
+    ]);
+    let sizes: [(usize, usize); 5] = [(32, 32), (64, 64), (128, 128), (256, 256), (512, 512)];
+    for (w, n) in sizes {
+        let bits = w * n;
+        let sram = compile(&tech, &Config::new(w, n, CellFlavor::Sram6t))?;
+        let gc = compile(&tech, &Config::new(w, n, CellFlavor::GcSiSiNp))?;
+        let mut cfg_ls = Config::new(w, n, CellFlavor::GcSiSiNp);
+        cfg_ls.wwlls = true;
+        let gcls = compile(&tech, &cfg_ls)?;
+        let os = compile(&tech, &Config::new(w, n, CellFlavor::GcOsOs))?;
+        t6.row(&[
+            format!("{} Kb", bits / 1024),
+            report::um2(sram.layout.total_area_um2()),
+            report::um2(gc.layout.total_area_um2()),
+            report::um2(gcls.layout.total_area_um2()),
+            report::um2(os.layout.total_area_um2()),
+            report::um2(gc.layout.array_area_um2()),
+            report::um2(sram.layout.array_area_um2()),
+            format!("{:.1}", 100.0 * gc.layout.array_efficiency()),
+            format!("{:.3}", gc.layout.total_area_um2() / sram.layout.total_area_um2()),
+        ]);
+    }
+    println!("{}", t6.render());
+
+    // ---- Fig. 7: frequency / bandwidth / leakage ----------------------------
+    println!("== Fig. 7: frequency, bandwidth, leakage (transient-backed) ==");
+    let mut t7 = report::Table::new(&[
+        "config", "flavor", "f_op MHz", "bw Gb/s", "leak nW", "stages",
+    ]);
+    for (w, n, label) in [
+        (16usize, 16usize, "256 b 1:1"),
+        (32, 32, "1 Kb 1:1"),
+        (64, 64, "4 Kb 1:1"),
+        (128, 32, "4 Kb 4:1"),
+        (128, 128, "16 Kb 1:1"),
+    ] {
+        for flavor in [CellFlavor::Sram6t, CellFlavor::GcSiSiNp] {
+            let bank = compile(&tech, &Config::new(w, n, flavor))?;
+            let perf = characterize::characterize(&tech, &rt, &bank)?;
+            t7.row(&[
+                label.into(),
+                format!("{flavor:?}"),
+                report::mhz(perf.f_op_hz),
+                format!("{:.1}", perf.bandwidth_bps / 1e9),
+                format!("{:.1}", perf.leakage_w * 1e9),
+                format!("{}", bank.delay_chain_stages),
+            ]);
+        }
+        // WWLLS variant
+        let mut cfg = Config::new(w, n, CellFlavor::GcSiSiNp);
+        cfg.wwlls = true;
+        let bank = compile(&tech, &cfg)?;
+        let perf = characterize::characterize(&tech, &rt, &bank)?;
+        t7.row(&[
+            label.into(),
+            "GcSiSiNp+LS".into(),
+            report::mhz(perf.f_op_hz),
+            format!("{:.1}", perf.bandwidth_bps / 1e9),
+            format!("{:.1}", perf.leakage_w * 1e9),
+            format!("{}", bank.delay_chain_stages),
+        ]);
+    }
+    println!("{}", t7.render());
+
+    // ---- Fig. 8: Id-Vg + retention -----------------------------------------
+    println!("== Fig. 8: device curves and retention ==");
+    let cards = [
+        ("si_nmos", 2.0),
+        ("si_pmos", 2.0),
+        ("os_nmos", 1.5),
+        ("os_nmos_hvt", 1.5),
+    ];
+    let card_list: Vec<_> = cards.iter().map(|(n, wl)| (*tech.card(n), *wl)).collect();
+    let (vg, ids) = engines::idvg(&rt, &card_list, -0.2, 1.2, 1.1)?;
+    for ((name, _), row) in cards.iter().zip(&ids) {
+        let at = |x: f64| {
+            let i = vg.iter().position(|&v| v >= x).unwrap_or(vg.len() - 1);
+            row[i].abs()
+        };
+        println!("  {name:12} |I(0V)| = {:>12}  |I(1.1V)| = {:>12}", eng(at(0.0), "A"), eng(at(1.1), "A"));
+    }
+    let mk_ret = |card: &str, vt: Option<f64>| engines::RetentionPoint {
+        write_card: vt.map(|v| tech.card(card).with_vt(v)).unwrap_or(*tech.card(card)),
+        write_wl: 2.5,
+        c_sn: 1.2e-15,
+        g_gate_leak: if card.starts_with("os") { 1e-17 } else { 1e-16 },
+        i_disturb: 0.0,
+        v0: 0.6,
+        vth: 0.3,
+    };
+    let pts = vec![
+        mk_ret("si_nmos", None),
+        mk_ret("si_nmos", Some(0.55)),
+        mk_ret("si_nmos", Some(0.65)),
+        mk_ret("os_nmos", None),
+        mk_ret("os_nmos_hvt", None),
+    ];
+    let rets = engines::retention(&rt, &pts)?;
+    let labels = ["Si-Si (vt .45)", "Si-Si vt .55", "Si-Si vt .65", "OS-OS", "OS-OS HVT"];
+    for (l, r) in labels.iter().zip(&rets) {
+        println!("  retention {l:16} = {}", eng(r.t_retain, "s"));
+    }
+
+    // ---- Fig. 9: workload demands -------------------------------------------
+    println!("\n== Fig. 9 / Table I: cache demands ==");
+    for m in [&workloads::H100, &workloads::GT520M] {
+        let mut t9 = report::Table::new(&["task", "L1 MHz", "L1 life", "L2 MHz", "L2 life"]);
+        for task in &workloads::TASKS {
+            let l1 = workloads::profile(task, workloads::CacheLevel::L1, m);
+            let l2 = workloads::profile(task, workloads::CacheLevel::L2, m);
+            t9.row(&[
+                task.name.into(),
+                report::mhz(l1.read_freq_hz),
+                eng(l1.lifetime_s, "s"),
+                report::mhz(l2.read_freq_hz),
+                eng(l2.lifetime_s, "s"),
+            ]);
+        }
+        println!("-- {} --\n{}", m.name, t9.render());
+    }
+
+    // ---- Fig. 10: shmoo -------------------------------------------------------
+    println!("== Fig. 10: shmoo (GCRAM bank configs vs tasks) ==");
+    let evals: Vec<dse::Evaluated> = dse::fig10_configs(CellFlavor::GcSiSiNp)
+        .into_iter()
+        .map(|cfg| {
+            let bank = compile(&tech, &cfg)?;
+            let perf = characterize::characterize(&tech, &rt, &bank)?;
+            Ok(dse::Evaluated { config: cfg, perf, area_um2: bank.layout.total_area_um2() })
+        })
+        .collect::<opengcram::Result<_>>()?;
+    for (level, machine) in [
+        (workloads::CacheLevel::L1, &workloads::GT520M),
+        (workloads::CacheLevel::L2, &workloads::H100),
+    ] {
+        let mut t10 = report::Table::new(&["task", "16x16", "32x32", "64x64", "96x96", "128x128"]);
+        for task in &workloads::TASKS {
+            let d = workloads::profile(task, level, machine);
+            let mut row = vec![task.name.to_string()];
+            for e in &evals {
+                row.push(dse::shmoo_verdict(e, &d).glyph().to_string());
+            }
+            t10.row(&row);
+        }
+        println!("-- {:?} on {} --\n{}", level, machine.name, t10.render());
+    }
+    println!("P=pass f=frequency r=retention x=margin");
+
+    // ---- bank LVS/DRC status (Fig. 5 claim) ----------------------------------
+    println!("\n== Fig. 5: DRC/LVS status of a generated 32x32 bank array ==");
+    let bank = compile(&tech, &Config::new(32, 32, CellFlavor::GcSiSiNp))?;
+    let rects = bank.library.flatten("bitcell_array")?;
+    let drc = opengcram::drc::check(&tech, &rects);
+    println!("  array DRC: {} ({} rects)", if drc.clean() { "CLEAN" } else { "VIOLATIONS" }, drc.rects_checked);
+    let mut lib2 = Library::default();
+    let lc = cells::gc2t_sisi(&tech, false);
+    lib2.add(lc.layout.clone());
+    let lvs = opengcram::lvs::check(&tech, &lib2, "gc2t_sisi", &lc.circuit)?;
+    println!("  bitcell LVS: {}", if lvs.matched { "CLEAN" } else { "MISMATCH" });
+    Ok(())
+}

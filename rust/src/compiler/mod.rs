@@ -1,0 +1,577 @@
+//! The GCRAM bank compiler — the paper's primary contribution.
+//!
+//! From a user [`Config`] (word size, number of words, cell flavor,
+//! peripheral options) it generates, exactly like OpenGCRAM:
+//! * the full hierarchical SPICE netlist of the bank (bitcell array +
+//!   Fig. 4 periphery: port address/data blocks, data DFFs, control
+//!   logic with the replica delay chain, optional WWL level shifter and
+//!   reference generator),
+//! * the bank layout (array tiling, periphery placement, power rings)
+//!   ready for GDS export, and
+//! * the geometric/electrical summary the characterizer consumes
+//!   (bitline/wordline parasitics from real wire geometry).
+
+use crate::layout::{bank, cells, Library};
+use crate::netlist::{Circuit, Netlist};
+use crate::tech::{LayerRole, Tech};
+use crate::util::{ceil_div, ceil_log2, next_pow2};
+
+/// Bit-cell flavor (Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellFlavor {
+    /// 6T SRAM, single port (the comparison baseline).
+    Sram6t,
+    /// 2T Si-Si gain cell, NMOS write / PMOS read (compiler default).
+    GcSiSiNp,
+    /// 2T Si-Si gain cell, NMOS-NMOS (legacy active-low RWL).
+    GcSiSiNn,
+    /// 2T OS-OS gain cell in the BEOL.
+    GcOsOs,
+}
+
+impl CellFlavor {
+    pub fn is_gc(&self) -> bool {
+        !matches!(self, CellFlavor::Sram6t)
+    }
+    pub fn cell_name(&self) -> &'static str {
+        match self {
+            CellFlavor::Sram6t => "sram6t",
+            CellFlavor::GcSiSiNp => "gc2t_sisi",
+            CellFlavor::GcSiSiNn => "gc2t_sisi_nn",
+            CellFlavor::GcOsOs => "gc2t_osos",
+        }
+    }
+    /// Predischarge (NP) vs precharge (NN / OS / SRAM) read port.
+    pub fn pull_up_read(&self) -> bool {
+        matches!(self, CellFlavor::GcSiSiNp)
+    }
+}
+
+/// User configuration (the OpenRAM-style knobs).
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub word_size: usize,
+    pub num_words: usize,
+    pub flavor: CellFlavor,
+    /// Add the WWL level shifter (boosted write wordline).
+    pub wwlls: bool,
+    /// Override the column-mux factor (None = policy).
+    pub mux_factor: Option<usize>,
+    /// Write-transistor VT override (retention modulation, Fig. 8c).
+    pub write_vt: Option<f64>,
+}
+
+impl Config {
+    pub fn new(word_size: usize, num_words: usize, flavor: CellFlavor) -> Config {
+        Config { word_size, num_words, flavor, wwlls: false, mux_factor: None, write_vt: None }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.word_size * self.num_words
+    }
+
+    /// Column-mux policy: force the array toward a square organization
+    /// (paper §V-C): m = 2^round(log2(sqrt(words/word))), min 1.
+    pub fn mux_factor(&self) -> usize {
+        if let Some(m) = self.mux_factor {
+            return m.max(1);
+        }
+        if self.num_words <= self.word_size {
+            return 1;
+        }
+        let ratio = (self.num_words as f64 / self.word_size as f64).sqrt();
+        next_pow2(ratio.round() as usize).clamp(1, 16)
+    }
+
+    pub fn cols(&self) -> usize {
+        self.word_size * self.mux_factor()
+    }
+
+    pub fn rows(&self) -> usize {
+        ceil_div(self.num_words, self.mux_factor())
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.word_size >= 1, "word_size must be >= 1");
+        anyhow::ensure!(self.num_words >= 2, "num_words must be >= 2");
+        anyhow::ensure!(
+            self.num_words % self.mux_factor() == 0,
+            "num_words {} not divisible by mux factor {}",
+            self.num_words,
+            self.mux_factor()
+        );
+        anyhow::ensure!(self.bits() <= 1 << 22, "bank too large (> 4 Mb)");
+        if self.wwlls {
+            anyhow::ensure!(self.flavor.is_gc(), "WWLLS only applies to gain cells");
+        }
+        Ok(())
+    }
+}
+
+/// Compiled bank: netlist + layout + geometry summary.
+pub struct Bank {
+    pub config: Config,
+    pub netlist: Netlist,
+    pub library: Library,
+    pub layout: bank::BankLayout,
+    pub parasitics: Parasitics,
+    /// Replica delay-chain stages in the read control (Fig. 7a step).
+    pub delay_chain_stages: usize,
+}
+
+/// Extracted electrical summary used by the characterizer.
+#[derive(Debug, Clone, Copy)]
+pub struct Parasitics {
+    /// Storage node capacitance (F).
+    pub c_sn: f64,
+    /// Write/read bitline capacitance (F), from real wire geometry.
+    pub c_wbl: f64,
+    pub c_rbl: f64,
+    /// Wordline RC (s) for the analytical WL delay.
+    pub r_wl: f64,
+    pub c_wl: f64,
+    /// WWL->SN and RWL->SN coupling caps (F).
+    pub c_wwl_sn: f64,
+    pub c_rwl_sn: f64,
+}
+
+/// Compile a bank.
+pub fn compile(tech: &Tech, cfg: &Config) -> crate::Result<Bank> {
+    cfg.validate()?;
+    let rows = cfg.rows();
+    let cols = cfg.cols();
+
+    let mut lib = Library::default();
+    // leaf cells
+    let bitcell = match cfg.flavor {
+        CellFlavor::Sram6t => cells::sram6t(tech),
+        CellFlavor::GcSiSiNp => cells::gc2t_sisi(tech, false),
+        CellFlavor::GcSiSiNn => cells::gc2t_sisi(tech, true),
+        CellFlavor::GcOsOs => cells::gc2t_osos(tech),
+    };
+    let leaf_list = vec![
+        bitcell.clone(),
+        cells::inverter(tech, 1.0),
+        cells::inverter(tech, 2.0),
+        cells::nand2(tech),
+        cells::sense_amp(tech),
+        cells::write_driver(tech),
+        cells::precharge(tech),
+        cells::predischarge(tech),
+        cells::column_mux(tech),
+        cells::level_shifter(tech),
+        cells::tgate(tech),
+    ];
+    for lc in &leaf_list {
+        lib.add(lc.layout.clone());
+    }
+    let dff = crate::layout::compose::dff(&mut lib, tech)?;
+
+    // ---- netlist ---------------------------------------------------------
+    let mut nl = Netlist::default();
+    for lc in &leaf_list {
+        nl.add(lc.circuit.clone());
+    }
+    nl.add(dff.circuit.clone());
+    nl.add(array_circuit(cfg, &bitcell.circuit));
+    nl.add(port_address_circuit(cfg, "write_port_address", rows));
+    if cfg.flavor.is_gc() {
+        nl.add(port_address_circuit(cfg, "read_port_address", rows));
+    }
+    nl.add(write_port_data_circuit(cfg));
+    nl.add(read_port_data_circuit(cfg));
+    nl.add(control_circuit("ctrl_write"));
+    nl.add(control_circuit("ctrl_read"));
+    nl.add(bank_circuit(cfg));
+    nl.top = "bank".into();
+
+    // ---- layout ----------------------------------------------------------
+    let b = tech.layer(LayerRole::Boundary);
+    let cell_bb = bitcell
+        .layout
+        .boundary(b)
+        .ok_or_else(|| anyhow::anyhow!("bitcell lacks boundary"))?;
+    let info = bank::tile_array(&mut lib, tech, "bitcell_array", cfg.flavor.cell_name(), rows, cols, 16, 400)?;
+
+    // periphery block footprints.  Data blocks pitch-match the ~1 um
+    // bitcell columns, so the DFF (2.6 um wide) + write driver + sense
+    // amp + mux + control fold into multiple standard-cell rows per
+    // column: ~24 um of write-port stack and ~18 um of read-port stack
+    // per port.  This is what makes the dual-port GCRAM bank LARGER
+    // than single-port SRAM at small sizes (Fig. 6a) until the array
+    // amortizes it (Fig. 6c crossover beyond 256 Kb).
+    let dec_stages = ceil_log2(rows) as i64;
+    let addr_w = 12_000 + dec_stages * 560;
+    let (wpa_w, rpa_w) = if cfg.flavor.is_gc() {
+        (addr_w + if cfg.wwlls { 1100 } else { 0 }, addr_w)
+    } else {
+        (addr_w, 0)
+    };
+    let (wpd_h, rpd_h) = if cfg.flavor.is_gc() { (24_000, 18_000) } else { (24_000, 0) };
+    let sizes = bank::PeripherySizes {
+        wpa: (wpa_w, info.h),
+        rpa: (rpa_w, info.h),
+        wpd: (info.w, wpd_h),
+        rpd: (info.w, rpd_h),
+        ctrl: (wpa_w, wpd_h),
+    };
+    let ring = bank::RingSpec { rails: if cfg.wwlls { 3 } else { 2 }, ..Default::default() };
+    let layout = bank::assemble_bank(
+        &mut lib,
+        tech,
+        "bank",
+        "bitcell_array",
+        info,
+        &bank::BankBlocks::default(),
+        sizes,
+        ring,
+        cfg.flavor == CellFlavor::GcOsOs,
+    )?;
+
+    // ---- parasitics from real geometry ------------------------------------
+    let m2 = tech.wire(LayerRole::Metal2);
+    let m3 = tech.wire(LayerRole::Metal3);
+    let m2w = tech.rules.layer(LayerRole::Metal2).min_width_nm as f64;
+    let bl_len = info.h as f64;
+    let wl_len = info.w as f64;
+    // wire cap + one junction/gate load per attached cell
+    let c_bl_wire = bl_len * m2w * m2.c_area + 2.0 * bl_len * m2.c_fringe;
+    let c_junction = tech.c_junction_unit * 2.0;
+    let rows_f = rows as f64;
+    let cols_f = cols as f64;
+    let c_gate = tech.c_gate_unit * 2.0;
+    let parasitics = Parasitics {
+        c_sn: 1.2e-15,
+        c_wbl: c_bl_wire + rows_f * c_junction,
+        c_rbl: c_bl_wire + rows_f * c_junction,
+        r_wl: wl_len / (cell_bb.h() as f64) * 0.0 + m3.r_sq * wl_len / 60.0,
+        c_wl: wl_len * 60.0 * m3.c_area + 2.0 * wl_len * m3.c_fringe + cols_f * c_gate,
+        c_wwl_sn: 0.10e-15, // dummy-WL/GND merge optimization (paper §V-A)
+        c_rwl_sn: 0.10e-15,
+    };
+
+    // replica delay chain: stages quantize the read timing window
+    // (tau_stage from the x2 inverter); count covers the BL time
+    // constant estimate with one guard stage
+    let tau_stage = 25e-12;
+    let t_bl_est = parasitics.c_rbl * 0.55 / 20e-6; // coarse I/C slew
+    let delay_chain_stages = (t_bl_est / tau_stage).ceil() as usize + 2;
+
+    Ok(Bank { config: cfg.clone(), netlist: nl, library: lib, layout, parasitics, delay_chain_stages })
+}
+
+fn array_circuit(cfg: &Config, bitcell: &Circuit) -> Circuit {
+    let rows = cfg.rows();
+    let cols = cfg.cols();
+    let mut c = Circuit::new("bitcell_array", &[]);
+    let gc = cfg.flavor.is_gc();
+    let mut ports: Vec<String> = Vec::new();
+    for r in 0..rows {
+        if gc {
+            ports.push(format!("wwl{r}"));
+            ports.push(format!("rwl{r}"));
+        } else {
+            ports.push(format!("wl{r}"));
+        }
+    }
+    for col in 0..cols {
+        if gc {
+            ports.push(format!("wbl{col}"));
+            ports.push(format!("rbl{col}"));
+        } else {
+            ports.push(format!("bl{col}"));
+            ports.push(format!("blb{col}"));
+        }
+    }
+    ports.push("vdd".into());
+    ports.push("gnd".into());
+    c.ports = ports;
+    for r in 0..rows {
+        for col in 0..cols {
+            let pins: Vec<String> = if gc {
+                // bitcell ports: wbl, wwl, rbl, rwl [, gnd]
+                let mut p = vec![
+                    format!("wbl{col}"),
+                    format!("wwl{r}"),
+                    format!("rbl{col}"),
+                    format!("rwl{r}"),
+                ];
+                if bitcell.ports.len() == 5 {
+                    p.push("gnd".into());
+                }
+                p
+            } else {
+                // sram ports: bl, blb, wl, vdd, gnd
+                vec![
+                    format!("bl{col}"),
+                    format!("blb{col}"),
+                    format!("wl{r}"),
+                    "vdd".into(),
+                    "gnd".into(),
+                ]
+            };
+            c.inst_owned(format!("x{r}_{col}"), &bitcell.name, pins);
+        }
+    }
+    c
+}
+
+fn port_address_circuit(cfg: &Config, name: &str, rows: usize) -> Circuit {
+    // decoder tree (nand2 + inv per row) + wl drivers (+ level shifter)
+    let mut c = Circuit::new(name, &["vdd", "gnd"]);
+    let abits = ceil_log2(rows).max(1) as usize;
+    for i in 0..abits {
+        c.ports.push(format!("a{i}"));
+    }
+    for r in 0..rows {
+        c.ports.push(format!("wl{r}"));
+    }
+    c.ports.push("en".into());
+    for r in 0..rows {
+        c.inst(
+            format!("xdec{r}"),
+            "nand2",
+            &[&format!("a{}", r % abits), "en", &format!("dec{r}"), "vdd", "gnd"],
+        );
+        if cfg.wwlls && name.starts_with("write") {
+            c.inst(
+                format!("xls{r}"),
+                "level_shifter",
+                &[&format!("dec{r}"), &format!("dec{r}"), &format!("wl{r}"), "vpp", "gnd"],
+            );
+        } else {
+            c.inst(
+                format!("xdrv{r}"),
+                "inv_x2",
+                &[&format!("dec{r}"), &format!("wl{r}"), "vdd", "gnd"],
+            );
+        }
+    }
+    c
+}
+
+fn write_port_data_circuit(cfg: &Config) -> Circuit {
+    let mut c = Circuit::new("write_port_data", &["clk", "en", "vdd", "gnd"]);
+    for i in 0..cfg.word_size {
+        c.ports.push(format!("din{i}"));
+        c.ports.push(format!("wbl{i}"));
+    }
+    for i in 0..cfg.word_size {
+        c.inst(
+            format!("xdff{i}"),
+            "dff",
+            &[&format!("din{i}"), "clk", &format!("d{i}"), "vdd", "gnd"],
+        );
+        c.inst(
+            format!("xinv{i}"),
+            "inv_x1",
+            &[&format!("d{i}"), &format!("db{i}"), "vdd", "gnd"],
+        );
+        c.inst(
+            format!("xwd{i}"),
+            "write_driver",
+            &[&format!("db{i}"), "en", &format!("wbl{i}"), "vdd", "gnd"],
+        );
+    }
+    c
+}
+
+fn read_port_data_circuit(cfg: &Config) -> Circuit {
+    let mut c = Circuit::new("read_port_data", &["en", "vref", "vdd", "gnd"]);
+    let mux = cfg.mux_factor();
+    for i in 0..cfg.word_size {
+        c.ports.push(format!("rbl{i}"));
+        c.ports.push(format!("dout{i}"));
+    }
+    let pre_cell = if cfg.flavor.pull_up_read() { "predischarge" } else { "precharge" };
+    for i in 0..cfg.word_size {
+        c.inst(
+            format!("xpre{i}"),
+            pre_cell,
+            &["en", &format!("rbl{i}"), "vdd", "gnd"],
+        );
+        if mux > 1 {
+            c.inst(
+                format!("xmux{i}"),
+                "column_mux",
+                &["en", &format!("rbl{i}"), &format!("mbl{i}"), "vdd", "gnd"],
+            );
+            c.inst(
+                format!("xsa{i}"),
+                "sense_amp",
+                &[&format!("mbl{i}"), "vref", "en", &format!("dout{i}"), "vdd", "gnd"],
+            );
+        } else {
+            c.inst(
+                format!("xsa{i}"),
+                "sense_amp",
+                &[&format!("rbl{i}"), "vref", "en", &format!("dout{i}"), "vdd", "gnd"],
+            );
+        }
+    }
+    c
+}
+
+fn control_circuit(name: &str) -> Circuit {
+    // clock buffer + replica delay chain of 6 inverters (netlist view;
+    // the stage count used for timing is computed per-bank)
+    let mut c = Circuit::new(name, &["clk", "en", "sae", "vdd", "gnd"]);
+    c.inst("xbuf", "inv_x2", &["clk", "clkb", "vdd", "gnd"]);
+    c.inst("xen", "inv_x2", &["clkb", "en", "vdd", "gnd"]);
+    let mut prev = "en".to_string();
+    for i in 0..6 {
+        let next = if i == 5 { "sae".to_string() } else { format!("dly{i}") };
+        c.inst(format!("xd{i}"), "inv_x1", &[&prev, &next, "vdd", "gnd"]);
+        prev = next;
+    }
+    c
+}
+
+fn bank_circuit(cfg: &Config) -> Circuit {
+    let mut c = Circuit::new("bank", &["clk", "vdd", "gnd"]);
+    let gc = cfg.flavor.is_gc();
+    let rows = cfg.rows();
+    let cols = cfg.cols();
+    let abits = ceil_log2(rows).max(1) as usize;
+    for i in 0..abits {
+        c.ports.push(format!("addr{i}"));
+    }
+    for i in 0..cfg.word_size {
+        c.ports.push(format!("din{i}"));
+        c.ports.push(format!("dout{i}"));
+    }
+    // array
+    let mut pins: Vec<String> = Vec::new();
+    for r in 0..rows {
+        if gc {
+            pins.push(format!("wwl{r}"));
+            pins.push(format!("rwl{r}"));
+        } else {
+            pins.push(format!("wl{r}"));
+        }
+    }
+    for col in 0..cols {
+        if gc {
+            pins.push(format!("wbl{col}"));
+            pins.push(format!("rbl{col}"));
+        } else {
+            pins.push(format!("bl{col}"));
+            pins.push(format!("blb{col}"));
+        }
+    }
+    pins.push("vdd".into());
+    pins.push("gnd".into());
+    c.inst_owned("xarr", "bitcell_array", pins);
+    // address ports
+    let mut wpa_pins: Vec<String> = vec!["vdd".into(), "gnd".into()];
+    for i in 0..abits {
+        wpa_pins.push(format!("addr{i}"));
+    }
+    for r in 0..rows {
+        wpa_pins.push(if gc { format!("wwl{r}") } else { format!("wl{r}") });
+    }
+    wpa_pins.push("wen".into());
+    c.inst_owned("xwpa", "write_port_address", wpa_pins);
+    if gc {
+        let mut rpa_pins: Vec<String> = vec!["vdd".into(), "gnd".into()];
+        for i in 0..abits {
+            rpa_pins.push(format!("addr{i}"));
+        }
+        for r in 0..rows {
+            rpa_pins.push(format!("rwl{r}"));
+        }
+        rpa_pins.push("ren".into());
+        c.inst_owned("xrpa", "read_port_address", rpa_pins);
+    }
+    // data ports
+    let mut wpd_pins: Vec<String> = vec!["clk".into(), "wen".into(), "vdd".into(), "gnd".into()];
+    for i in 0..cfg.word_size {
+        wpd_pins.push(format!("din{i}"));
+        wpd_pins.push(if gc { format!("wbl{i}") } else { format!("bl{i}") });
+    }
+    c.inst_owned("xwpd", "write_port_data", wpd_pins);
+    let mut rpd_pins: Vec<String> = vec!["ren".into(), "vref".into(), "vdd".into(), "gnd".into()];
+    for i in 0..cfg.word_size {
+        rpd_pins.push(if gc { format!("rbl{i}") } else { format!("blb{i}") });
+        rpd_pins.push(format!("dout{i}"));
+    }
+    c.inst_owned("xrpd", "read_port_data", rpd_pins);
+    // control
+    c.inst("xcw", "ctrl_write", &["clk", "wen", "wsae", "vdd", "gnd"]);
+    c.inst("xcr", "ctrl_read", &["clk", "ren", "vref", "vdd", "gnd"]);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::sg40;
+
+    #[test]
+    fn config_policy() {
+        // square config: no mux
+        let c = Config::new(32, 32, CellFlavor::GcSiSiNp);
+        assert_eq!(c.mux_factor(), 1);
+        assert_eq!((c.rows(), c.cols()), (32, 32));
+        // tall config: mux folds words into columns
+        let c = Config::new(8, 512, CellFlavor::GcSiSiNp);
+        assert!(c.mux_factor() >= 4);
+        assert_eq!(c.rows() * c.cols(), c.bits());
+        // invalid configs rejected
+        assert!(Config::new(0, 32, CellFlavor::Sram6t).validate().is_err());
+        let mut bad = Config::new(32, 32, CellFlavor::Sram6t);
+        bad.wwlls = true;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn compile_small_gc_bank() {
+        let t = sg40();
+        let cfg = Config::new(16, 16, CellFlavor::GcSiSiNp);
+        let bank = compile(&t, &cfg).unwrap();
+        // netlist is complete and flattenable
+        let flat = bank.netlist.flatten().unwrap();
+        // 256 cells x 2T plus periphery
+        assert!(flat.mos_count() > 512, "{}", flat.mos_count());
+        // layout summary sane
+        assert!(bank.layout.total_area_um2() > bank.layout.array_area_um2());
+        assert!(bank.parasitics.c_rbl > 1e-15);
+        assert!(bank.delay_chain_stages >= 2);
+    }
+
+    #[test]
+    fn sram_bank_netlist_flattens() {
+        let t = sg40();
+        let cfg = Config::new(16, 16, CellFlavor::Sram6t);
+        let bank = compile(&t, &cfg).unwrap();
+        let flat = bank.netlist.flatten().unwrap();
+        assert!(flat.mos_count() > 256 * 6);
+    }
+
+    #[test]
+    fn wwlls_adds_ring_area() {
+        let t = sg40();
+        let base = compile(&t, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap();
+        let mut cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
+        cfg.wwlls = true;
+        let ls = compile(&t, &cfg).unwrap();
+        assert!(ls.layout.total_area_um2() > base.layout.total_area_um2());
+    }
+
+    #[test]
+    fn os_bank_is_smaller_than_sram_bank() {
+        // Fig. 6(a): OS-OS banks < SRAM banks (BEOL array over periphery)
+        let t = sg40();
+        let os = compile(&t, &Config::new(32, 32, CellFlavor::GcOsOs)).unwrap();
+        let sr = compile(&t, &Config::new(32, 32, CellFlavor::Sram6t)).unwrap();
+        assert!(os.layout.total_area_um2() < sr.layout.total_area_um2());
+    }
+
+    #[test]
+    fn bitline_cap_grows_with_rows() {
+        let t = sg40();
+        let small = compile(&t, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap();
+        let tall = compile(&t, &Config::new(32, 128, CellFlavor::GcSiSiNp)).unwrap();
+        assert!(tall.parasitics.c_rbl > small.parasitics.c_rbl);
+    }
+}

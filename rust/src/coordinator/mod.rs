@@ -1,0 +1,190 @@
+//! DSE job coordinator: batches design-point jobs onto the (single)
+//! PJRT runtime.
+//!
+//! The paper's contribution is the compiler, so L3 coordination is the
+//! "thin driver" case: a bounded job queue feeding one executor thread
+//! that assembles batches up to the artifact batch size.  The batching
+//! logic is generic over the executor so its invariants (no job lost,
+//! results map back to submitters in order, batches never exceed the
+//! cap) are property-tested with a mock.
+
+use std::sync::mpsc;
+use std::thread;
+
+/// A batch executor: runs a slice of jobs, returns one result per job
+/// in order.  The PJRT-backed implementation wraps runtime::engines.
+pub trait BatchExec<J, R>: Send {
+    fn run(&mut self, jobs: &[J]) -> crate::Result<Vec<R>>;
+    fn max_batch(&self) -> usize;
+}
+
+enum Msg<J, R> {
+    Job(J, mpsc::Sender<crate::Result<R>>),
+    Flush,
+    Stop,
+}
+
+/// Handle for submitting jobs.
+pub struct Coordinator<J, R> {
+    tx: mpsc::Sender<Msg<J, R>>,
+    worker: Option<thread::JoinHandle<()>>,
+}
+
+impl<J: Send + 'static, R: Send + 'static> Coordinator<J, R> {
+    /// Spawn the worker owning the executor.
+    pub fn spawn<E: BatchExec<J, R> + 'static>(mut exec: E) -> Coordinator<J, R> {
+        let (tx, rx) = mpsc::channel::<Msg<J, R>>();
+        let worker = thread::spawn(move || {
+            let cap = exec.max_batch().max(1);
+            let mut jobs: Vec<J> = Vec::new();
+            let mut replies: Vec<mpsc::Sender<crate::Result<R>>> = Vec::new();
+            let flush = |jobs: &mut Vec<J>, replies: &mut Vec<mpsc::Sender<crate::Result<R>>>, exec: &mut E| {
+                if jobs.is_empty() {
+                    return;
+                }
+                match exec.run(jobs) {
+                    Ok(results) => {
+                        for (r, tx) in results.into_iter().zip(replies.drain(..)) {
+                            let _ = tx.send(Ok(r));
+                        }
+                    }
+                    Err(e) => {
+                        for tx in replies.drain(..) {
+                            let _ = tx.send(Err(anyhow::anyhow!("batch failed: {e}")));
+                        }
+                    }
+                }
+                jobs.clear();
+            };
+            loop {
+                match rx.recv() {
+                    Ok(Msg::Job(j, reply)) => {
+                        jobs.push(j);
+                        replies.push(reply);
+                        if jobs.len() >= cap {
+                            flush(&mut jobs, &mut replies, &mut exec);
+                        }
+                    }
+                    Ok(Msg::Flush) => flush(&mut jobs, &mut replies, &mut exec),
+                    Ok(Msg::Stop) | Err(_) => {
+                        flush(&mut jobs, &mut replies, &mut exec);
+                        break;
+                    }
+                }
+            }
+        });
+        Coordinator { tx, worker: Some(worker) }
+    }
+
+    /// Submit a job; returns a receiver for its result.
+    pub fn submit(&self, job: J) -> mpsc::Receiver<crate::Result<R>> {
+        let (rtx, rrx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Job(job, rtx));
+        rrx
+    }
+
+    /// Force the pending partial batch to execute.
+    pub fn flush(&self) {
+        let _ = self.tx.send(Msg::Flush);
+    }
+
+    /// Submit many jobs and wait for all results (flushes).
+    pub fn run_all(&self, jobs: Vec<J>) -> crate::Result<Vec<R>> {
+        let rxs: Vec<_> = jobs.into_iter().map(|j| self.submit(j)).collect();
+        self.flush();
+        rxs.into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("worker died"))?)
+            .collect()
+    }
+}
+
+impl<J, R> Drop for Coordinator<J, R> {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{check, Rng};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// Mock executor: result = job * 10; records batch sizes.
+    struct Mock {
+        cap: usize,
+        batches: Arc<AtomicUsize>,
+        max_seen: Arc<AtomicUsize>,
+    }
+
+    impl BatchExec<u64, u64> for Mock {
+        fn run(&mut self, jobs: &[u64]) -> crate::Result<Vec<u64>> {
+            self.batches.fetch_add(1, Ordering::SeqCst);
+            self.max_seen.fetch_max(jobs.len(), Ordering::SeqCst);
+            Ok(jobs.iter().map(|j| j * 10).collect())
+        }
+        fn max_batch(&self) -> usize {
+            self.cap
+        }
+    }
+
+    #[test]
+    fn all_jobs_get_their_own_result() {
+        // property: result routing is a bijection for random job counts
+        check("bijection", 20, |rng: &mut Rng| {
+            let n = 1 + rng.below(200);
+            let cap = 1 + rng.below(64);
+            let batches = Arc::new(AtomicUsize::new(0));
+            let max_seen = Arc::new(AtomicUsize::new(0));
+            let c = Coordinator::spawn(Mock { cap, batches: batches.clone(), max_seen: max_seen.clone() });
+            let jobs: Vec<u64> = (0..n as u64).collect();
+            let results = c.run_all(jobs).unwrap();
+            assert_eq!(results.len(), n);
+            for (i, r) in results.iter().enumerate() {
+                assert_eq!(*r, i as u64 * 10);
+            }
+            assert!(max_seen.load(Ordering::SeqCst) <= cap);
+        });
+    }
+
+    #[test]
+    fn partial_batches_flush() {
+        let batches = Arc::new(AtomicUsize::new(0));
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        let c = Coordinator::spawn(Mock { cap: 100, batches: batches.clone(), max_seen });
+        let results = c.run_all((0..5u64).collect()).unwrap();
+        assert_eq!(results, vec![0, 10, 20, 30, 40]);
+        assert_eq!(batches.load(Ordering::SeqCst), 1);
+    }
+
+    struct FailingMock;
+    impl BatchExec<u64, u64> for FailingMock {
+        fn run(&mut self, _jobs: &[u64]) -> crate::Result<Vec<u64>> {
+            anyhow::bail!("injected failure")
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+    }
+
+    #[test]
+    fn executor_failure_propagates_to_every_submitter() {
+        let c = Coordinator::spawn(FailingMock);
+        let r = c.run_all(vec![1, 2, 3]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn drop_flushes_and_joins() {
+        let batches = Arc::new(AtomicUsize::new(0));
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        let c = Coordinator::spawn(Mock { cap: 10, batches: batches.clone(), max_seen });
+        let rx = c.submit(7);
+        drop(c);
+        assert_eq!(rx.recv().unwrap().unwrap(), 70);
+    }
+}

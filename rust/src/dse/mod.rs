@@ -1,0 +1,228 @@
+//! Design-space exploration (paper §V-E): configuration sweeps, shmoo
+//! evaluation against workload demands (Fig. 10), Pareto fronts, and
+//! the future-work gradient-descent co-optimizer (§VI).
+
+use crate::characterize::BankPerf;
+use crate::compiler::{CellFlavor, Config};
+use crate::workloads::Demand;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct Evaluated {
+    pub config: Config,
+    pub perf: BankPerf,
+    pub area_um2: f64,
+}
+
+/// Shmoo verdict for (config, demand).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Pass,
+    /// Too slow for the demanded read frequency.
+    FailFreq,
+    /// Retention shorter than the demanded lifetime.
+    FailRetention,
+    /// Electrically non-functional (no sense margin).
+    FailMargin,
+}
+
+impl Verdict {
+    pub fn pass(&self) -> bool {
+        *self == Verdict::Pass
+    }
+    pub fn glyph(&self) -> char {
+        match self {
+            Verdict::Pass => 'P',
+            Verdict::FailFreq => 'f',
+            Verdict::FailRetention => 'r',
+            Verdict::FailMargin => 'x',
+        }
+    }
+}
+
+/// Evaluate one (design, demand) pair — the Fig. 10 cell.
+pub fn shmoo_verdict(e: &Evaluated, d: &Demand) -> Verdict {
+    if !e.perf.functional {
+        Verdict::FailMargin
+    } else if e.perf.f_op_hz < d.read_freq_hz {
+        Verdict::FailFreq
+    } else if e.perf.retention_s < d.lifetime_s {
+        Verdict::FailRetention
+    } else {
+        Verdict::Pass
+    }
+}
+
+/// The Fig. 10 configuration axis: square banks 16x16 .. 128x128.
+pub fn fig10_configs(flavor: CellFlavor) -> Vec<Config> {
+    [16usize, 32, 64, 96, 128]
+        .iter()
+        .map(|&n| Config::new(n, n, flavor))
+        .collect()
+}
+
+/// Pareto front (maximize f_op, maximize retention, minimize area).
+pub fn pareto(points: &[Evaluated]) -> Vec<usize> {
+    let dominates = |a: &Evaluated, b: &Evaluated| {
+        let ge = a.perf.f_op_hz >= b.perf.f_op_hz
+            && a.perf.retention_s >= b.perf.retention_s
+            && a.area_um2 <= b.area_um2;
+        let gt = a.perf.f_op_hz > b.perf.f_op_hz
+            || a.perf.retention_s > b.perf.retention_s
+            || a.area_um2 < b.area_um2;
+        ge && gt
+    };
+    (0..points.len())
+        .filter(|&i| !points.iter().enumerate().any(|(j, p)| j != i && dominates(p, &points[i])))
+        .collect()
+}
+
+/// Co-optimization target (paper §VI: "area-delay-power co-optimization
+/// ... leveraging machine learning algorithms (e.g., gradient descent)").
+#[derive(Debug, Clone, Copy)]
+pub struct CostWeights {
+    pub w_delay: f64,
+    pub w_area: f64,
+    pub w_power: f64,
+    /// Hard frequency floor (Hz); configs below it get +inf cost.
+    pub f_min_hz: f64,
+    /// Hard lifetime floor (s).
+    pub t_retain_min_s: f64,
+}
+
+pub fn cost(w: &CostWeights, e: &Evaluated) -> f64 {
+    if e.perf.f_op_hz < w.f_min_hz || e.perf.retention_s < w.t_retain_min_s || !e.perf.functional {
+        return f64::INFINITY;
+    }
+    w.w_delay / e.perf.f_op_hz * 1e9 + w.w_area * e.area_um2 / 1e4 + w.w_power * e.perf.leakage_w * 1e6
+}
+
+/// Coordinate-descent co-optimizer over (size exponent, write VT).
+/// `eval` maps a Config to an Evaluated (the caller decides whether
+/// that's analytical or transient-backed).
+pub fn optimize<F>(
+    flavor: CellFlavor,
+    weights: &CostWeights,
+    mut eval: F,
+) -> crate::Result<(Evaluated, usize)>
+where
+    F: FnMut(&Config) -> crate::Result<Evaluated>,
+{
+    let sizes = [16usize, 32, 64, 96, 128];
+    let vts: Vec<Option<f64>> = vec![None, Some(0.38), Some(0.45), Some(0.52), Some(0.60)];
+    let mut si = 1usize;
+    let mut vi = 0usize;
+    let mk = |si: usize, vi: usize| {
+        let mut c = Config::new(sizes[si], sizes[si], flavor);
+        c.write_vt = vts[vi];
+        c
+    };
+    let mut best = eval(&mk(si, vi))?;
+    let mut best_cost = cost(weights, &best);
+    let mut evals = 1usize;
+    // coordinate descent until no single-step move improves
+    loop {
+        let mut improved = false;
+        let moves: Vec<(usize, usize)> = [
+            (si.wrapping_sub(1), vi),
+            (si + 1, vi),
+            (si, vi.wrapping_sub(1)),
+            (si, vi + 1),
+        ]
+        .into_iter()
+        .filter(|&(a, b)| a < sizes.len() && b < vts.len())
+        .collect();
+        for (a, b) in moves {
+            let e = eval(&mk(a, b))?;
+            evals += 1;
+            let c = cost(weights, &e);
+            if c < best_cost {
+                best_cost = c;
+                best = e;
+                si = a;
+                vi = b;
+                improved = true;
+                break;
+            }
+        }
+        if !improved || evals > 40 {
+            break;
+        }
+    }
+    anyhow::ensure!(best_cost.is_finite(), "no feasible configuration found");
+    Ok((best, evals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::characterize::BankPerf;
+
+    fn fake(f: f64, ret: f64, area: f64) -> Evaluated {
+        Evaluated {
+            config: Config::new(32, 32, CellFlavor::GcSiSiNp),
+            perf: BankPerf {
+                f_read_hz: f,
+                f_write_hz: f,
+                f_op_hz: f,
+                bandwidth_bps: 64.0 * f,
+                retention_s: ret,
+                leakage_w: 1e-6,
+                e_read_j: 1e-12,
+                t_decoder_s: 1e-10,
+                t_cell_read_s: 1e-10,
+                stored_one_v: 0.6,
+                functional: true,
+            },
+            area_um2: area,
+        }
+    }
+
+    #[test]
+    fn verdict_logic() {
+        use crate::workloads::{profile, CacheLevel, H100, TASKS};
+        let d = profile(&TASKS[0], CacheLevel::L1, &H100);
+        let fast = fake(d.read_freq_hz * 2.0, 1.0, 1e4);
+        let slow = fake(d.read_freq_hz * 0.5, 1.0, 1e4);
+        let leaky = fake(d.read_freq_hz * 2.0, d.lifetime_s * 0.5, 1e4);
+        assert_eq!(shmoo_verdict(&fast, &d), Verdict::Pass);
+        assert_eq!(shmoo_verdict(&slow, &d), Verdict::FailFreq);
+        assert_eq!(shmoo_verdict(&leaky, &d), Verdict::FailRetention);
+    }
+
+    #[test]
+    fn pareto_removes_dominated() {
+        let pts = vec![
+            fake(1e9, 1e-3, 1e4),
+            fake(0.5e9, 0.5e-3, 2e4), // dominated by the first
+            fake(2e9, 1e-4, 3e4),     // faster but leakier/larger
+        ];
+        let front = pareto(&pts);
+        assert!(front.contains(&0));
+        assert!(!front.contains(&1));
+        assert!(front.contains(&2));
+    }
+
+    #[test]
+    fn optimizer_converges_on_synthetic_landscape() {
+        // cost favors mid-size and higher VT: check it walks there
+        let w = CostWeights { w_delay: 1.0, w_area: 1.0, w_power: 1.0, f_min_hz: 0.0, t_retain_min_s: 0.0 };
+        let (best, evals) = optimize(CellFlavor::GcSiSiNp, &w, |cfg| {
+            let n = cfg.word_size as f64;
+            let vt = cfg.write_vt.unwrap_or(0.45);
+            // synthetic bowl around n=64, vt=0.52
+            let f = 1e9 / (1.0 + ((n - 64.0) / 64.0).powi(2) + (vt - 0.52).abs());
+            Ok(fake(f, 1e-3, n * n))
+        })
+        .unwrap();
+        assert!(evals >= 3);
+        assert!(best.config.word_size >= 32);
+    }
+
+    #[test]
+    fn fig10_axis_is_five_square_configs() {
+        let cfgs = fig10_configs(CellFlavor::GcSiSiNp);
+        assert_eq!(cfgs.len(), 5);
+        assert!(cfgs.iter().all(|c| c.word_size == c.num_words));
+    }
+}

@@ -1,0 +1,336 @@
+//! Bank floorplanning: bitcell-array tiling, periphery placement around
+//! the array (Fig. 4's architecture: Write_Port_Address left,
+//! Read_Port_Address right, Write_Port_Data bottom, Read_Port_Data top)
+//! and power rings (Fig. 5).
+
+use super::{Cell, Library, Orient, Rect};
+use crate::tech::{LayerRole, Tech};
+
+/// Tile `cell` into a rows x cols array cell named `name`.
+/// A horizontal power-strap row (full-width metal1) is inserted every
+/// `strap_every` rows; this is the "power rail area" whose amortization
+/// drives the Fig. 6(b/c) array-efficiency trend.
+pub fn tile_array(
+    lib: &mut Library,
+    tech: &Tech,
+    name: &str,
+    cell: &str,
+    rows: usize,
+    cols: usize,
+    strap_every: usize,
+    strap_h: i64,
+) -> crate::Result<ArrayInfo> {
+    let b = tech.layer(LayerRole::Boundary);
+    let m1 = tech.layer(LayerRole::Metal1);
+    let bc = lib.get(cell)?;
+    let bbox = bc
+        .boundary(b)
+        .ok_or_else(|| anyhow::anyhow!("bitcell '{cell}' lacks a boundary rect"))?;
+    let (cw, ch) = (bbox.w(), bbox.h());
+
+    let mut arr = Cell::new(name);
+    let mut y = 0i64;
+    let mut straps = 0usize;
+    // fixed edge straps top and bottom + one every `strap_every` rows:
+    // the fixed part is what amortizes away as the array grows
+    // (Fig. 6(b/c) array-efficiency mechanism)
+    if strap_every > 0 {
+        arr.add(Rect::new(m1, 0, 0, cols as i64 * cw, strap_h));
+        y += strap_h;
+        straps += 1;
+    }
+    for r in 0..rows {
+        if strap_every > 0 && r > 0 && r % strap_every == 0 {
+            arr.add(Rect::new(m1, 0, y, cols as i64 * cw, y + strap_h));
+            y += strap_h;
+            straps += 1;
+        }
+        for c in 0..cols {
+            arr.place(format!("b{r}_{c}"), cell, c as i64 * cw, y, Orient::R0);
+        }
+        y += ch;
+    }
+    if strap_every > 0 {
+        arr.add(Rect::new(m1, 0, y, cols as i64 * cw, y + strap_h));
+        y += strap_h;
+        straps += 1;
+    }
+    let (aw, ah) = (cols as i64 * cw, y);
+    arr.add(Rect::new(b, 0, 0, aw, ah));
+    lib.add(arr);
+    Ok(ArrayInfo { w: aw, h: ah, cell_w: cw, cell_h: ch, straps })
+}
+
+/// Array tiling result.
+#[derive(Debug, Clone, Copy)]
+pub struct ArrayInfo {
+    pub w: i64,
+    pub h: i64,
+    pub cell_w: i64,
+    pub cell_h: i64,
+    pub straps: usize,
+}
+
+/// Tile a periphery cell `n` times in a row (horizontal) or column.
+pub fn tile_row(
+    lib: &mut Library,
+    tech: &Tech,
+    name: &str,
+    cell: &str,
+    n: usize,
+    horizontal: bool,
+) -> crate::Result<(i64, i64)> {
+    let b = tech.layer(LayerRole::Boundary);
+    let bc = lib.get(cell)?;
+    let bbox = bc
+        .boundary(b)
+        .ok_or_else(|| anyhow::anyhow!("cell '{cell}' lacks a boundary rect"))?;
+    let (cw, ch) = (bbox.w(), bbox.h());
+    let mut row = Cell::new(name);
+    for i in 0..n {
+        let (dx, dy) = if horizontal { (i as i64 * cw, 0) } else { (0, i as i64 * ch) };
+        row.place(format!("u{i}"), cell, dx, dy, Orient::R0);
+    }
+    let (w, h) = if horizontal {
+        (n as i64 * cw, ch)
+    } else {
+        (cw, n as i64 * ch)
+    };
+    row.add(Rect::new(b, 0, 0, w, h));
+    lib.add(row);
+    Ok((w, h))
+}
+
+/// Sizes of the five periphery blocks placed around the array.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PeripherySizes {
+    /// Write_Port_Address (left of array): w, h
+    pub wpa: (i64, i64),
+    /// Read_Port_Address (right of array)
+    pub rpa: (i64, i64),
+    /// Write_Port_Data (below array, includes data DFFs)
+    pub wpd: (i64, i64),
+    /// Read_Port_Data (above array)
+    pub rpd: (i64, i64),
+    /// Control logic (corner blocks, one per port)
+    pub ctrl: (i64, i64),
+}
+
+/// Power-ring parameters (Fig. 5: the bank is enclosed by VDD/GND
+/// rings; a WWL level shifter adds a second boosted-rail ring and that
+/// is the WWLLS area penalty of Fig. 6(a)).
+#[derive(Debug, Clone, Copy)]
+pub struct RingSpec {
+    pub width: i64,
+    pub gap: i64,
+    /// Number of ring pairs (2 = VDD+GND; 3 adds VPP for WWLLS).
+    pub rails: usize,
+}
+
+impl Default for RingSpec {
+    fn default() -> RingSpec {
+        RingSpec { width: 1_000, gap: 500, rails: 2 }
+    }
+}
+
+/// Assembled bank summary (geometry in nm).
+#[derive(Debug, Clone, Copy)]
+pub struct BankLayout {
+    pub total_w: i64,
+    pub total_h: i64,
+    pub array_w: i64,
+    pub array_h: i64,
+    /// Periphery + ring area in nm^2 (total - array).
+    pub periphery_nm2: i64,
+}
+
+impl BankLayout {
+    pub fn total_area_um2(&self) -> f64 {
+        self.total_w as f64 * self.total_h as f64 * 1e-6
+    }
+
+    pub fn array_area_um2(&self) -> f64 {
+        self.array_w as f64 * self.array_h as f64 * 1e-6
+    }
+
+    /// Fig. 6(c) array efficiency: array area / bank area.
+    pub fn array_efficiency(&self) -> f64 {
+        self.array_area_um2() / self.total_area_um2()
+    }
+}
+
+/// Place the array and periphery blocks per Fig. 4, draw `rings`, and
+/// produce the top bank cell.  The periphery block cells must already
+/// be in the library under the given names.
+#[allow(clippy::too_many_arguments)]
+pub fn assemble_bank(
+    lib: &mut Library,
+    tech: &Tech,
+    name: &str,
+    array: &str,
+    array_info: ArrayInfo,
+    blocks: &BankBlocks,
+    sizes: PeripherySizes,
+    ring: RingSpec,
+    os_array_over_periphery: bool,
+) -> crate::Result<BankLayout> {
+    let b = tech.layer(LayerRole::Boundary);
+    let m3 = tech.layer(LayerRole::Metal3);
+    let margin = 400i64; // placement margin between blocks (DRC headroom)
+
+    let mut bank = Cell::new(name);
+    // core origin: after left block + margin
+    let core_x = sizes.wpa.0 + margin;
+    let core_y = sizes.wpd.1 + margin;
+    // the OS-OS array is BEOL and monolithically stacked: it consumes
+    // no extra silicon footprint beyond max(array, periphery row widths)
+    bank.place("array", array, core_x, core_y, Orient::R0);
+    if let Some(wpa) = &blocks.wpa {
+        bank.place("wpa", wpa, 0, core_y, Orient::R0);
+    }
+    if let Some(rpa) = &blocks.rpa {
+        bank.place("rpa", rpa, core_x + array_info.w + margin, core_y, Orient::R0);
+    }
+    if let Some(wpd) = &blocks.wpd {
+        bank.place("wpd", wpd, core_x, 0, Orient::R0);
+    }
+    if let Some(rpd) = &blocks.rpd {
+        bank.place("rpd", rpd, core_x, core_y + array_info.h + margin, Orient::R0);
+    }
+    if let Some(ctrl) = &blocks.ctrl {
+        bank.place("ctrl_w", ctrl, 0, 0, Orient::R0);
+        bank.place("ctrl_r", ctrl, core_x + array_info.w + margin, core_y + array_info.h + margin, Orient::R0);
+    }
+
+    // silicon extent of the core
+    let (eff_aw, eff_ah) = if os_array_over_periphery {
+        // BEOL array over FEOL periphery: silicon core spans only the
+        // periphery blocks; the array still bounds routing, so take the
+        // max of array width and the data blocks, but no FEOL height
+        (array_info.w, array_info.h / 4)
+    } else {
+        (array_info.w, array_info.h)
+    };
+    let core_w = sizes.wpa.0 + margin + eff_aw.max(sizes.wpd.0).max(sizes.rpd.0) + margin + sizes.rpa.0;
+    let core_h = sizes.wpd.1 + margin + eff_ah + margin + sizes.rpd.1;
+
+    // power rings around the core
+    let ring_total = ring.rails as i64 * (ring.width + ring.gap);
+    let (w, h) = (core_w + 2 * ring_total, core_h + 2 * ring_total);
+    for i in 0..ring.rails {
+        let inset = i as i64 * (ring.width + ring.gap);
+        let (x0, y0, x1, y1) = (inset, inset, w - inset, h - inset);
+        bank.add(Rect::new(m3, x0, y0, x1, y0 + ring.width)); // bottom
+        bank.add(Rect::new(m3, x0, y1 - ring.width, x1, y1)); // top
+        bank.add(Rect::new(m3, x0, y0, x0 + ring.width, y1)); // left
+        bank.add(Rect::new(m3, x1 - ring.width, y0, x1, y1)); // right
+    }
+    bank.add(Rect::new(b, 0, 0, w, h));
+    lib.add(bank);
+
+    let array_nm2 = array_info.w as i64 * array_info.h;
+    let silicon_array_nm2 = if os_array_over_periphery { 0 } else { array_nm2 };
+    Ok(BankLayout {
+        total_w: w,
+        total_h: h,
+        array_w: array_info.w,
+        array_h: array_info.h,
+        periphery_nm2: w * h - silicon_array_nm2,
+    })
+}
+
+/// Names of the periphery block cells (None = port absent, e.g. the
+/// single-port SRAM bank shares one address block).
+#[derive(Debug, Clone, Default)]
+pub struct BankBlocks {
+    pub wpa: Option<String>,
+    pub rpa: Option<String>,
+    pub wpd: Option<String>,
+    pub rpd: Option<String>,
+    pub ctrl: Option<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::cells;
+    use crate::tech::sg40;
+
+    #[test]
+    fn array_dims_scale_with_rows_cols() {
+        let t = sg40();
+        let mut lib = Library::default();
+        lib.add(cells::gc2t_sisi(&t, false).layout);
+        let a = tile_array(&mut lib, &t, "arr8", "gc2t_sisi", 8, 8, 16, 400).unwrap();
+        let b = tile_array(&mut lib, &t, "arr16", "gc2t_sisi", 16, 8, 16, 400).unwrap();
+        assert_eq!(a.w, b.w);
+        assert_eq!(b.h - a.h, 8 * a.cell_h); // 8 extra rows, same straps
+        assert_eq!(a.straps, 2);
+    }
+
+    #[test]
+    fn straps_are_inserted_and_grow_height() {
+        let t = sg40();
+        let mut lib = Library::default();
+        lib.add(cells::gc2t_sisi(&t, false).layout);
+        let no = tile_array(&mut lib, &t, "a_nostrap", "gc2t_sisi", 32, 4, 0, 400).unwrap();
+        let ws = tile_array(&mut lib, &t, "a_strap", "gc2t_sisi", 32, 4, 16, 400).unwrap();
+        assert_eq!(ws.straps, 3);
+        assert_eq!(ws.h, no.h + 3 * 400);
+    }
+
+    #[test]
+    fn strap_fraction_shrinks_with_size() {
+        // Fig. 6(b/c) mechanism: power-rail overhead amortizes
+        let t = sg40();
+        let mut lib = Library::default();
+        lib.add(cells::gc2t_sisi(&t, false).layout);
+        let small = tile_array(&mut lib, &t, "s", "gc2t_sisi", 32, 32, 16, 400).unwrap();
+        let large = tile_array(&mut lib, &t, "l", "gc2t_sisi", 128, 32, 16, 400).unwrap();
+        let frac = |a: &ArrayInfo| a.straps as f64 * 400.0 / a.h as f64;
+        assert!(frac(&large) <= frac(&small) * 1.05);
+    }
+
+    #[test]
+    fn bank_assembly_has_rings_and_bigger_bbox() {
+        let t = sg40();
+        let mut lib = Library::default();
+        lib.add(cells::gc2t_sisi(&t, false).layout);
+        let info = tile_array(&mut lib, &t, "arr", "gc2t_sisi", 16, 16, 16, 400).unwrap();
+        let sizes = PeripherySizes {
+            wpa: (3000, info.h),
+            rpa: (3000, info.h),
+            wpd: (info.w, 2000),
+            rpd: (info.w, 2000),
+            ctrl: (3000, 2000),
+        };
+        let lay = assemble_bank(
+            &mut lib,
+            &t,
+            "bank",
+            "arr",
+            info,
+            &BankBlocks::default(),
+            sizes,
+            RingSpec::default(),
+            false,
+        )
+        .unwrap();
+        assert!(lay.total_w > info.w && lay.total_h > info.h);
+        assert!(lay.array_efficiency() < 1.0 && lay.array_efficiency() > 0.1);
+        // third rail grows the bank (WWLLS penalty)
+        let lay3 = assemble_bank(
+            &mut lib,
+            &t,
+            "bank3",
+            "arr",
+            info,
+            &BankBlocks::default(),
+            sizes,
+            RingSpec { rails: 3, ..Default::default() },
+            false,
+        )
+        .unwrap();
+        assert!(lay3.total_w > lay.total_w);
+    }
+}

@@ -1,0 +1,863 @@
+//! Leaf-cell generators: bitcells and peripheral circuit cells.
+//!
+//! Every generator produces a [`LeafCell`]: a layout [`Cell`] and the
+//! matching schematic [`Circuit`] built from the *same* placement loop.
+//! LVS therefore passes by construction, but is still independently
+//! verified by the real extractor ([`crate::lvs`]) and the cells are
+//! DRC-verified against the full `sg40` deck in the tests.
+//!
+//! Drawing conventions (the extractor's device-recognition contract):
+//! * Si transistors: horizontal active strip crossed by one vertical
+//!   poly gate; stacked CMOS pairs with a common input share ONE poly
+//!   column (standard-cell style); gate pads are poly+contact+metal1 in
+//!   the mid zone between device rows.
+//! * OS transistors: horizontal oschannel strip crossed by a vertical
+//!   osgate; S/D and gate connections are `via2` cuts to metal2 (the OS
+//!   device plane sits between M2 and M3, so plain M2 may route *under*
+//!   a channel without connecting).
+//! * intra-cell nets: vertical metal1 from terminal stubs to horizontal
+//!   metal2 tracks (via1 at the junction); power rails are horizontal
+//!   metal1 at the cell's top/bottom edges.
+//! * bitcells: bitlines are full-height metal2 columns at the cell
+//!   edges; wordlines are full-width metal3 rows — both connect across
+//!   the array by abutment.
+
+use super::{Cell, Pin, Rect};
+use crate::netlist::Circuit;
+use crate::tech::{LayerRole, Tech};
+
+/// Layout + schematic pair for one library cell.
+#[derive(Debug, Clone)]
+pub struct LeafCell {
+    pub layout: Cell,
+    pub circuit: Circuit,
+}
+
+/// Geometry constants derived from the rule deck.
+#[derive(Debug, Clone, Copy)]
+pub struct Geom {
+    pub gate_l: i64,
+    pub cont: i64,
+    pub cont_enc_active: i64,
+    pub cont_enc_m1: i64,
+    pub gate_to_cont: i64,
+    pub gate_ext: i64,
+    pub m1_w: i64,
+    pub m2_w: i64,
+    pub rail_w: i64,
+    /// Full transistor footprint width.
+    pub dev_w: i64,
+    /// X pitch between adjacent transistors.
+    pub dev_pitch: i64,
+}
+
+impl Geom {
+    pub fn of(tech: &Tech) -> Geom {
+        let r = &tech.rules;
+        let gate_l = r.layer(LayerRole::Poly).min_width_nm;
+        let cont = r.layer(LayerRole::Contact).min_width_nm;
+        let cont_enc_active = enc(tech, LayerRole::Active, LayerRole::Contact);
+        let cont_enc_m1 = enc(tech, LayerRole::Metal1, LayerRole::Contact);
+        let gate_to_cont = r
+            .cross_spacings
+            .iter()
+            .find(|s| {
+                (s.a == LayerRole::Poly && s.b == LayerRole::Contact)
+                    || (s.b == LayerRole::Poly && s.a == LayerRole::Contact)
+            })
+            .map(|s| s.space_nm.max(50))
+            .unwrap_or(50);
+        let m1_w = r.layer(LayerRole::Metal1).min_width_nm;
+        let m2_w = r.layer(LayerRole::Metal2).min_width_nm;
+        let dev_w = 2 * cont_enc_active + 2 * cont + 2 * gate_to_cont + gate_l;
+        Geom {
+            gate_l,
+            cont,
+            cont_enc_active,
+            cont_enc_m1,
+            gate_to_cont,
+            gate_ext: 30,
+            m1_w,
+            m2_w,
+            rail_w: 60,
+            dev_w,
+            dev_pitch: dev_w + r.layer(LayerRole::Active).min_space_nm,
+        }
+    }
+}
+
+fn enc(tech: &Tech, outer: LayerRole, inner: LayerRole) -> i64 {
+    tech.rules
+        .enclosures
+        .iter()
+        .find(|e| e.outer == outer && e.inner == inner)
+        .map(|e| e.margin_nm)
+        .unwrap_or(0)
+}
+
+/// Terminal stub: center of the metal1 landing of a terminal.
+#[derive(Debug, Clone, Copy)]
+pub struct Stub {
+    pub x: i64,
+    pub y: i64,
+}
+
+/// Transistor terminal stubs after drawing.
+#[derive(Debug, Clone, Copy)]
+pub struct MosStubs {
+    pub s: Stub,
+    pub g: Stub,
+    pub d: Stub,
+    pub w_nm: i64,
+}
+
+const PAD: i64 = 80; // poly/m1 gate pad side
+
+/// Draw the S/D half of a Si transistor (active, contacts, m1 stubs,
+/// implants, well).  The gate poly is drawn by the caller so pairs can
+/// share one column.
+fn draw_sd(cell: &mut Cell, tech: &Tech, g: &Geom, x: i64, y: i64, w_nm: i64, pmos: bool) -> (Stub, Stub) {
+    draw_sd_off(cell, tech, g, x, y, w_nm, pmos, 0, 0)
+}
+
+/// draw_sd with per-terminal vertical contact offsets (bitcells slide
+/// contacts along the strip, e.g. so a source pad can merge with an
+/// abutting power rail while the drain stays clear of it).
+#[allow(clippy::too_many_arguments)]
+fn draw_sd_off(
+    cell: &mut Cell,
+    tech: &Tech,
+    g: &Geom,
+    x: i64,
+    y: i64,
+    w_nm: i64,
+    pmos: bool,
+    s_dy: i64,
+    d_dy: i64,
+) -> (Stub, Stub) {
+    let active = tech.layer(LayerRole::Active);
+    let contact = tech.layer(LayerRole::Contact);
+    let m1 = tech.layer(LayerRole::Metal1);
+    cell.add(Rect::new(active, x, y, x + g.dev_w, y + w_nm));
+    let cy = y + w_nm / 2 - g.cont / 2;
+    let sx = x + g.cont_enc_active;
+    let dx = x + g.dev_w - g.cont_enc_active - g.cont;
+    for (cx, cy) in [(sx, cy + s_dy), (dx, cy + d_dy)] {
+        cell.add(Rect::new(contact, cx, cy, cx + g.cont, cy + g.cont));
+        cell.add(Rect::new(
+            m1,
+            cx - g.cont_enc_m1,
+            cy - g.cont_enc_m1,
+            cx + g.cont + g.cont_enc_m1,
+            cy + g.cont + g.cont_enc_m1,
+        ));
+    }
+    let cy_s = cy + s_dy;
+    let cy_d = cy + d_dy;
+    let impl_layer = if pmos { tech.layer(LayerRole::Pimplant) } else { tech.layer(LayerRole::Nimplant) };
+    cell.add(Rect::new(impl_layer, x - 20, y - 20, x + g.dev_w + 20, y + w_nm + 20));
+    if pmos {
+        let nw = tech.layer(LayerRole::Nwell);
+        cell.add(Rect::new(nw, x - 100, y - 100, x + g.dev_w + 100, y + w_nm + 100));
+    }
+    (
+        Stub { x: sx + g.cont / 2, y: cy_s + g.cont / 2 },
+        Stub { x: dx + g.cont / 2, y: cy_d + g.cont / 2 },
+    )
+}
+
+/// Poly gate pad (poly + contact + m1) centered at (px, py).
+fn gate_pad(cell: &mut Cell, tech: &Tech, g: &Geom, px: i64, py: i64) -> Stub {
+    let poly = tech.layer(LayerRole::Poly);
+    let contact = tech.layer(LayerRole::Contact);
+    let m1 = tech.layer(LayerRole::Metal1);
+    cell.add(Rect::new(poly, px - PAD / 2, py - PAD / 2, px + PAD / 2, py + PAD / 2));
+    cell.add(Rect::new(contact, px - g.cont / 2, py - g.cont / 2, px + g.cont / 2, py + g.cont / 2));
+    cell.add(Rect::new(m1, px - PAD / 2, py - PAD / 2, px + PAD / 2, py + PAD / 2));
+    Stub { x: px, y: py }
+}
+
+/// Gate placement for [`draw_mos`]: pad center y and x offset from the
+/// gate column center.
+#[derive(Debug, Clone, Copy)]
+pub struct GateAt {
+    pub pad_y: i64,
+    pub pad_dx: i64,
+}
+
+/// Draw a single Si transistor with its own poly column reaching a gate
+/// pad at `gate.pad_y` (above or below the channel).
+#[allow(clippy::too_many_arguments)]
+pub fn draw_mos(
+    cell: &mut Cell,
+    tech: &Tech,
+    g: &Geom,
+    x: i64,
+    y: i64,
+    w_nm: i64,
+    pmos: bool,
+    gate: GateAt,
+) -> MosStubs {
+    let poly = tech.layer(LayerRole::Poly);
+    let (s, d) = draw_sd(cell, tech, g, x, y, w_nm, pmos);
+    let gx0 = x + g.cont_enc_active + g.cont + g.gate_to_cont;
+    let gxc = gx0 + g.gate_l / 2;
+    // poly column spans channel (+ext) through to the pad
+    let lo = (y - g.gate_ext).min(gate.pad_y);
+    let hi = (y + w_nm + g.gate_ext).max(gate.pad_y);
+    cell.add(Rect::new(poly, gx0, lo, gx0 + g.gate_l, hi));
+    // jog to the pad if offset
+    if gate.pad_dx != 0 {
+        let px = gxc + gate.pad_dx;
+        let (jx0, jx1) = if gate.pad_dx < 0 { (px, gxc + g.gate_l / 2) } else { (gx0, px) };
+        cell.add(Rect::new(poly, jx0, gate.pad_y - g.gate_l / 2, jx1, gate.pad_y + g.gate_l / 2));
+    }
+    let gstub = gate_pad(cell, tech, g, gxc + gate.pad_dx, gate.pad_y);
+    MosStubs { s, g: gstub, d, w_nm }
+}
+
+/// Draw a stacked CMOS pair sharing one poly column (common input).
+/// Returns (nmos stubs, pmos stubs); both `.g` point at the shared pad.
+#[allow(clippy::too_many_arguments)]
+pub fn draw_pair(
+    cell: &mut Cell,
+    tech: &Tech,
+    g: &Geom,
+    x: i64,
+    y_n: i64,
+    w_n: i64,
+    y_p: i64,
+    w_p: i64,
+    pad_y: i64,
+    pad_dx: i64,
+) -> (MosStubs, MosStubs) {
+    draw_pair_off(cell, tech, g, x, y_n, w_n, y_p, w_p, pad_y, pad_dx, 0, 0)
+}
+
+/// [`draw_pair`] with pmos S/D contact offsets (see draw_sd_off).
+#[allow(clippy::too_many_arguments)]
+pub fn draw_pair_off(
+    cell: &mut Cell,
+    tech: &Tech,
+    g: &Geom,
+    x: i64,
+    y_n: i64,
+    w_n: i64,
+    y_p: i64,
+    w_p: i64,
+    pad_y: i64,
+    pad_dx: i64,
+    p_s_dy: i64,
+    p_d_dy: i64,
+) -> (MosStubs, MosStubs) {
+    let poly = tech.layer(LayerRole::Poly);
+    let (sn, dn) = draw_sd(cell, tech, g, x, y_n, w_n, false);
+    let (sp, dp) = draw_sd_off(cell, tech, g, x, y_p, w_p, true, p_s_dy, p_d_dy);
+    let gx0 = x + g.cont_enc_active + g.cont + g.gate_to_cont;
+    let gxc = gx0 + g.gate_l / 2;
+    cell.add(Rect::new(poly, gx0, y_n - g.gate_ext, gx0 + g.gate_l, y_p + w_p + g.gate_ext));
+    if pad_dx != 0 {
+        let px = gxc + pad_dx;
+        let (jx0, jx1) = if pad_dx < 0 { (px, gxc + g.gate_l / 2) } else { (gx0, px) };
+        cell.add(Rect::new(poly, jx0, pad_y - g.gate_l / 2, jx1, pad_y + g.gate_l / 2));
+    }
+    let gstub = gate_pad(cell, tech, g, gxc + pad_dx, pad_y);
+    (
+        MosStubs { s: sn, g: gstub, d: dn, w_nm: w_n },
+        MosStubs { s: sp, g: gstub, d: dp, w_nm: w_p },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Routing helpers
+// ---------------------------------------------------------------------------
+
+/// Vertical metal1 wire from (x, y_a) to (x, y_b).
+fn vwire(cell: &mut Cell, tech: &Tech, x: i64, y_a: i64, y_b: i64) {
+    let m1 = tech.layer(LayerRole::Metal1);
+    let w = tech.rules.layer(LayerRole::Metal1).min_width_nm;
+    let (lo, hi) = if y_a <= y_b { (y_a, y_b) } else { (y_b, y_a) };
+    cell.add(Rect::new(m1, x - w / 2, lo - w / 2, x + w / 2, hi + w / 2));
+}
+
+/// via1 with m1/m2 landing pads at (x, y).
+fn via1_at(cell: &mut Cell, tech: &Tech, x: i64, y: i64) {
+    let v1 = tech.layer(LayerRole::Via1);
+    let m1 = tech.layer(LayerRole::Metal1);
+    let m2 = tech.layer(LayerRole::Metal2);
+    let vw = tech.rules.layer(LayerRole::Via1).min_width_nm;
+    cell.add(Rect::new(v1, x - vw / 2, y - vw / 2, x + vw / 2, y + vw / 2));
+    cell.add(Rect::new(m1, x - vw / 2 - 10, y - vw / 2 - 10, x + vw / 2 + 10, y + vw / 2 + 10));
+    cell.add(Rect::new(m2, x - vw / 2 - 10, y - vw / 2 - 10, x + vw / 2 + 10, y + vw / 2 + 10));
+}
+
+/// Tie terminal stubs together on a horizontal metal2 track at `y`.
+fn net_track(cell: &mut Cell, tech: &Tech, g: &Geom, y: i64, stubs: &[Stub]) {
+    let m2 = tech.layer(LayerRole::Metal2);
+    let mut xs: Vec<i64> = Vec::new();
+    for s in stubs {
+        vwire(cell, tech, s.x, s.y, y);
+        via1_at(cell, tech, s.x, y);
+        xs.push(s.x);
+    }
+    let (lo, hi) = (*xs.iter().min().unwrap(), *xs.iter().max().unwrap());
+    cell.add(Rect::new(m2, lo - 40, y - g.m2_w / 2, hi + 40, y + g.m2_w / 2));
+}
+
+/// Connect a terminal stub to a full-height metal2 bitline at `blx`
+/// with a horizontal m1 jog + via1.
+fn bitline_tap(cell: &mut Cell, tech: &Tech, g: &Geom, blx: i64, stub: Stub) {
+    let m1 = tech.layer(LayerRole::Metal1);
+    let y = stub.y;
+    let (lo, hi) = if stub.x <= blx { (stub.x, blx) } else { (blx, stub.x) };
+    cell.add(Rect::new(m1, lo - g.m1_w / 2, y - g.m1_w / 2, hi + g.m1_w / 2, y + g.m1_w / 2));
+    via1_at(cell, tech, blx, y);
+}
+
+/// Wordline drop: connect a gate-pad/terminal stub up to a metal3 strap
+/// (m1 -> via1 -> m2 stub -> via2 -> m3).
+fn wl_m3_drop(cell: &mut Cell, tech: &Tech, strap: Rect, stub: Stub) {
+    let m2 = tech.layer(LayerRole::Metal2);
+    let v2 = tech.layer(LayerRole::Via2);
+    let yc = (strap.y0 + strap.y1) / 2;
+    vwire(cell, tech, stub.x, stub.y, yc);
+    via1_at(cell, tech, stub.x, yc);
+    cell.add(Rect::new(m2, stub.x - 40, yc - 40, stub.x + 40, yc + 40));
+    let vw = tech.rules.layer(LayerRole::Via2).min_width_nm;
+    cell.add(Rect::new(v2, stub.x - vw / 2, yc - vw / 2, stub.x + vw / 2, yc + vw / 2));
+}
+
+// ---------------------------------------------------------------------------
+// Bitcells
+// ---------------------------------------------------------------------------
+
+/// 6T SRAM bitcell (logic design rules, Fig. 2(c)/3(c)).
+/// Boundary 1520 x 660 nm -> 1.003 um^2.  Ports: bl, blb, wl, vdd, gnd.
+pub fn sram6t(tech: &Tech) -> LeafCell {
+    let g = Geom::of(tech);
+    let mut cell = Cell::new("sram6t");
+    let mut ckt = Circuit::new("sram6t", &["bl", "blb", "wl", "vdd", "gnd"]);
+    let (bw, bh) = (1520i64, 660i64);
+    let m2 = tech.layer(LayerRole::Metal2);
+    let m1 = tech.layer(LayerRole::Metal1);
+    let m3 = tech.layer(LayerRole::Metal3);
+
+    let (yn, wn) = (160i64, 120i64); // nmos row
+    let (yp, wp) = (490i64, 140i64); // pmos row
+    let (q_y, qb_y) = (340i64, 430i64);
+    let wl_strap = Rect::new(m3, 0, 480, bw, 540);
+
+    // rails
+    cell.pin("gnd", Rect::new(m1, 0, 0, bw, g.rail_w));
+    cell.pin("vdd", Rect::new(m1, 0, bh - g.rail_w, bw, bh));
+    // bitlines at the edges
+    cell.pin("bl", Rect::new(m2, 40, 0, 40 + g.m2_w, bh));
+    cell.pin("blb", Rect::new(m2, bw - 40 - g.m2_w, 0, bw - 40, bh));
+
+    // access transistors (single, gate pad toward the cell edge)
+    let axl = draw_mos(&mut cell, tech, &g, 40, yn, wn, false, GateAt { pad_y: 340, pad_dx: 0 });
+    let axr = draw_mos(&mut cell, tech, &g, 1180, yn, wn, false, GateAt { pad_y: 340, pad_dx: 0 });
+    // cross-coupled pairs share poly columns; each pair's pad sits ON
+    // the track of the net it receives (left pair <- qb, right <- q).
+    // pmos sources slide UP so their pads merge with the vdd rail;
+    // drains slide DOWN to stay clear of it.
+    let (pdl, pul) = draw_pair_off(&mut cell, tech, &g, 420, yn, wn, yp, wp, qb_y, 0, 20, -20);
+    let (pdr, pur) = draw_pair_off(&mut cell, tech, &g, 800, yn, wn, yp, wp, q_y, 0, 20, -20);
+
+    let wl = wn as f64 / g.gate_l as f64;
+    let wlp = wp as f64 / g.gate_l as f64;
+    ckt.mos("axl", "q", "wl", "bl", "gnd", "si_nmos", wl);
+    ckt.mos("pdl", "q", "qb", "gnd", "gnd", "si_nmos", wl);
+    ckt.mos("pul", "q", "qb", "vdd", "vdd", "si_pmos", wlp);
+    ckt.mos("pdr", "qb", "q", "gnd", "gnd", "si_nmos", wl);
+    ckt.mos("pur", "qb", "q", "vdd", "vdd", "si_pmos", wlp);
+    ckt.mos("axr", "qb", "wl", "blb", "gnd", "si_nmos", wl);
+
+    // q: axl.d, pdl.d, pul.d and the right pair's gate pad
+    net_track(&mut cell, tech, &g, q_y, &[axl.d, pdl.d, pul.d, pdr.g]);
+    // qb: axr.s, pdr.d, pur.d and the left pair's gate pad
+    net_track(&mut cell, tech, &g, qb_y, &[axr.s, pdr.d, pur.d, pdl.g]);
+    // bitline taps
+    bitline_tap(&mut cell, tech, &g, 40 + g.m2_w / 2, axl.s);
+    bitline_tap(&mut cell, tech, &g, bw - 40 - g.m2_w / 2, axr.d);
+    // rails
+    vwire(&mut cell, tech, pdl.s.x, pdl.s.y, g.rail_w / 2);
+    vwire(&mut cell, tech, pdr.s.x, pdr.s.y, g.rail_w / 2);
+    vwire(&mut cell, tech, pul.s.x, pul.s.y, bh - g.rail_w / 2);
+    vwire(&mut cell, tech, pur.s.x, pur.s.y, bh - g.rail_w / 2);
+    // wordline on m3 with drops to both access gates
+    cell.pin("wl", wl_strap);
+    wl_m3_drop(&mut cell, tech, wl_strap, axl.g);
+    wl_m3_drop(&mut cell, tech, wl_strap, axr.g);
+
+    let b = tech.layer(LayerRole::Boundary);
+    cell.add(Rect::new(b, 0, 0, bw, bh));
+    LeafCell { layout: cell, circuit: ckt }
+}
+
+/// 2T Si-Si gain cell (Fig. 2(a)): NMOS write + PMOS read (default NP
+/// flavor) or NMOS read (`nn_flavor`, the legacy active-low-RWL cell).
+/// Boundary 1050 x 660 -> 69 % of the 6T cell.
+/// Ports: wbl, wwl, rbl, rwl, gnd.
+pub fn gc2t_sisi(tech: &Tech, nn_flavor: bool) -> LeafCell {
+    let g = Geom::of(tech);
+    let name = if nn_flavor { "gc2t_sisi_nn" } else { "gc2t_sisi" };
+    let mut cell = Cell::new(name);
+    let mut ckt = Circuit::new(name, &["wbl", "wwl", "rbl", "rwl", "gnd"]);
+    let (bw, bh) = (1050i64, 660i64);
+    let m1 = tech.layer(LayerRole::Metal1);
+    let m2 = tech.layer(LayerRole::Metal2);
+    let m3 = tech.layer(LayerRole::Metal3);
+
+    let (yr, w_wr, w_rd) = (120i64, 100i64, 140i64);
+    cell.pin("gnd", Rect::new(m1, 0, 0, bw, g.rail_w));
+    cell.pin("wbl", Rect::new(m2, 20, 0, 20 + g.m2_w, bh));
+    cell.pin("rbl", Rect::new(m2, bw - 80, 0, bw - 20, bh));
+
+    let mw = draw_mos(&mut cell, tech, &g, 60, yr, w_wr, false, GateAt { pad_y: 340, pad_dx: -60 });
+    let mr = draw_mos(&mut cell, tech, &g, 560, yr, w_rd, !nn_flavor, GateAt { pad_y: 340, pad_dx: 0 });
+    let rd_card = if nn_flavor { "si_nmos" } else { "si_pmos" };
+    ckt.mos("mw", "sn", "wwl", "wbl", "gnd", "si_nmos", w_wr as f64 / g.gate_l as f64);
+    ckt.mos("mr", "rbl", "sn", "rwl", "gnd", rd_card, w_rd as f64 / g.gate_l as f64);
+
+    // storage node: mw.d up to a track tying into mr's gate pad
+    net_track(&mut cell, tech, &g, 340, &[mw.d, mr.g]);
+    // bitline taps
+    bitline_tap(&mut cell, tech, &g, 20 + g.m2_w / 2, mw.s);
+    bitline_tap(&mut cell, tech, &g, bw - 50, mr.d);
+    // wordlines on m3
+    let wwl_strap = Rect::new(m3, 0, 440, bw, 500);
+    let rwl_strap = Rect::new(m3, 0, 560, bw, 620);
+    cell.pin("wwl", wwl_strap);
+    cell.pin("rwl", rwl_strap);
+    wl_m3_drop(&mut cell, tech, wwl_strap, mw.g);
+    // rwl drives the read tx SOURCE (2T gain cell: selection by source)
+    wl_m3_drop(&mut cell, tech, rwl_strap, mr.s);
+
+    let b = tech.layer(LayerRole::Boundary);
+    cell.add(Rect::new(b, 0, 0, bw, bh));
+    LeafCell { layout: cell, circuit: ckt }
+}
+
+/// 2T OS-OS gain cell (Fig. 2(b)): both transistors in the BEOL between
+/// M2 and M3; no FEOL silicon area (3D-stackable, paper §V-A/B).
+/// Boundary 430 x 264 -> ~11 % of the 6T cell footprint.
+/// Ports: wbl, wwl, rbl, rwl.
+pub fn gc2t_osos(tech: &Tech) -> LeafCell {
+    let mut cell = Cell::new("gc2t_osos");
+    let mut ckt = Circuit::new("gc2t_osos", &["wbl", "wwl", "rbl", "rwl"]);
+    let (bw, bh) = (430i64, 264i64);
+    let ch = tech.layer(LayerRole::OsChannel);
+    let gate = tech.layer(LayerRole::OsGate);
+    let m2 = tech.layer(LayerRole::Metal2);
+    let m3 = tech.layer(LayerRole::Metal3);
+    let v2 = tech.layer(LayerRole::Via2);
+
+    let l = 50i64;
+    ckt.mos("mw", "sn", "wwl", "wbl", "wbl", "os_nmos", 50.0 / l as f64);
+    ckt.mos("mr", "rbl", "sn", "rwl", "rwl", "os_nmos", 50.0 / l as f64);
+
+    // write tx: channel row y 170..220, gate column x 200..250
+    cell.add(Rect::new(ch, 110, 170, 340, 220));
+    cell.add(Rect::new(gate, 200, 145, 250, 245));
+    // read tx: channel row y 40..90 (shifted right), gate x 260..310
+    cell.add(Rect::new(ch, 170, 40, 400, 90));
+    cell.add(Rect::new(gate, 260, 15, 310, 115));
+
+    // wbl: m2 column + jumper + via2 cut onto the write source region
+    // (all array-internal via2 cuts stay below y=204 so the full-width
+    // wwl m3 strap never shorts to them)
+    cell.pin("wbl", Rect::new(m2, 0, 0, 60, bh));
+    cell.add(Rect::new(m2, 0, 152, 165, 212)); // jumper + S pad
+    cell.add(Rect::new(v2, 115, 172, 155, 202));
+    // rbl: m2 column; read drain pad touches it directly
+    cell.pin("rbl", Rect::new(m2, 370, 0, bw, bh));
+    cell.add(Rect::new(m2, 345, 30, 405, 95)); // D pad (touches column)
+    cell.add(Rect::new(v2, 355, 42, 395, 72)); // below the rwl strap
+    // sn: write drain pad -> leg down -> read gate pad (via2 cuts)
+    cell.add(Rect::new(m2, 280, 152, 340, 212)); // mw.d pad
+    cell.add(Rect::new(v2, 290, 172, 330, 202));
+    cell.add(Rect::new(m2, 265, 0, 325, 212)); // leg (under channels: no cut, no connect)
+    cell.add(Rect::new(gate, 255, 0, 335, 40)); // osgate pad (clear of channel y>=40)
+    cell.add(Rect::new(v2, 275, 10, 315, 40)); // gate cut (inside the leg)
+    // wwl: write-gate pad -> m2 stub -> via2 -> m3 strap (top-left)
+    let wwl_strap = Rect::new(m3, 0, 204, bw, bh);
+    cell.pin("wwl", wwl_strap);
+    cell.add(Rect::new(gate, 185, 221, 255, bh)); // clear of the channel (y<=220)
+    cell.add(Rect::new(m2, 185, 155, 245, bh));
+    cell.add(Rect::new(v2, 195, 222, 235, 252)); // strictly above the channel (y>220)
+    // rwl: m3 strap between the rows (clear of the sn gate cuts) + a
+    // read-source pad with separate m3-drop and channel-contact cuts
+    let rwl_strap = Rect::new(m3, 0, 75, bw, 135);
+    cell.pin("rwl", rwl_strap);
+    cell.add(Rect::new(m2, 80, 0, 230, 132)); // mr.s pad + drop
+    cell.add(Rect::new(v2, 90, 85, 130, 115)); // m3 -> m2
+    cell.add(Rect::new(v2, 180, 45, 220, 75)); // m2 -> channel (S)
+
+    let b = tech.layer(LayerRole::Boundary);
+    cell.add(Rect::new(b, 0, 0, bw, bh));
+    LeafCell { layout: cell, circuit: ckt }
+}
+
+// ---------------------------------------------------------------------------
+// Periphery leaf cells (standard-cell style)
+// ---------------------------------------------------------------------------
+
+const YN: i64 = 150; // nmos row y
+const YP: i64 = 550; // pmos row y
+const T1: i64 = 380; // m2 net track 1
+const T2: i64 = 480; // m2 net track 2
+const T0: i64 = 280; // low m2 track (within the nmos row band)
+const PAD_N: i64 = 430; // gate pad y for nmos-only columns
+const PAD_P: i64 = 480; // gate pad y for pmos-only columns (mid zone)
+const PAD_PH: i64 = 780; // gate pad y above the pmos row
+const PAD_SH: i64 = 430; // shared-column pad y
+
+/// Standard-cell frame: gnd rail bottom, vdd rail top.
+struct Std {
+    cell: Cell,
+    ckt: Circuit,
+    g: Geom,
+    bw: i64,
+    bh: i64,
+}
+
+impl Std {
+    fn new(tech: &Tech, name: &str, ports: &[&str], bw: i64) -> Std {
+        let g = Geom::of(tech);
+        let bh = 900;
+        let m1 = tech.layer(LayerRole::Metal1);
+        let mut cell = Cell::new(name);
+        cell.pin("gnd", Rect::new(m1, 0, 0, bw, g.rail_w));
+        cell.pin("vdd", Rect::new(m1, 0, bh - g.rail_w, bw, bh));
+        Std { cell, ckt: Circuit::new(name, ports), g, bw, bh }
+    }
+
+    fn pin_at(&mut self, name: &str, tech: &Tech, s: Stub) {
+        let m1 = tech.layer(LayerRole::Metal1);
+        self.cell.pins.push(Pin {
+            name: name.into(),
+            rect: Rect::new(m1, s.x - PAD / 2, s.y - PAD / 2, s.x + PAD / 2, s.y + PAD / 2),
+        });
+    }
+
+    fn track_pin(&mut self, name: &str, _tech: &Tech, y: i64, x: i64) {
+        let m2 = _tech.layer(LayerRole::Metal2);
+        self.cell.pins.push(Pin {
+            name: name.into(),
+            rect: Rect::new(m2, x - 40, y - self.g.m2_w / 2, x + 40, y + self.g.m2_w / 2),
+        });
+    }
+
+    fn rail(&mut self, tech: &Tech, s: Stub, top: bool) {
+        let y = if top { self.bh - self.g.rail_w / 2 } else { self.g.rail_w / 2 };
+        vwire(&mut self.cell, tech, s.x, s.y, y);
+    }
+
+    fn finish(mut self, tech: &Tech) -> LeafCell {
+        let b = tech.layer(LayerRole::Boundary);
+        self.cell.add(Rect::new(b, 0, 0, self.bw, self.bh));
+        LeafCell { layout: self.cell, circuit: self.ckt }
+    }
+}
+
+/// Inverter with drive strength `drive` (geometry capped at the row
+/// height; electrical W/L always scales with the drive).
+pub fn inverter(tech: &Tech, drive: f64) -> LeafCell {
+    let name = format!("inv_x{}", drive as i64);
+    let mut s = Std::new(tech, &name, &["a", "y", "vdd", "gnd"], 560);
+    let g = s.g;
+    // geometry (and therefore the netlist W/L -- they must agree for
+    // LVS) caps at the row height; larger drives would use fingers
+    let wn = (110.0 * drive).min(220.0) as i64;
+    let wp = (180.0 * drive).min(300.0) as i64;
+    let wl_n = wn as f64 / g.gate_l as f64;
+    let wl_p = wp as f64 / g.gate_l as f64;
+    let (mn, mp) = draw_pair(&mut s.cell, tech, &g, 120, YN, wn, YP, wp, PAD_SH, 0);
+    s.ckt.mos("mn", "y", "a", "gnd", "gnd", "si_nmos", wl_n);
+    s.ckt.mos("mp", "y", "a", "vdd", "vdd", "si_pmos", wl_p);
+    net_track(&mut s.cell, tech, &g, T1, &[mn.d, mp.d]);
+    s.pin_at("a", tech, mn.g);
+    s.track_pin("y", tech, T1, mn.d.x);
+    s.rail(tech, mn.s, false);
+    s.rail(tech, mp.s, true);
+    s.finish(tech)
+}
+
+/// 2-input NAND.
+pub fn nand2(tech: &Tech) -> LeafCell {
+    let mut s = Std::new(tech, "nand2", &["a", "b", "y", "vdd", "gnd"], 1000);
+    let g = s.g;
+    let (wn, wp) = (160i64, 180i64);
+    let (mna, mpa) = draw_pair(&mut s.cell, tech, &g, 120, YN, wn, YP, wp, PAD_SH, 0);
+    let (mnb, mpb) = draw_pair(&mut s.cell, tech, &g, 520, YN, wn, YP, wp, PAD_SH, 0);
+    let wl = wn as f64 / g.gate_l as f64;
+    let wlp = wp as f64 / g.gate_l as f64;
+    s.ckt.mos("mna", "y", "a", "mid", "gnd", "si_nmos", wl);
+    s.ckt.mos("mnb", "mid", "b", "gnd", "gnd", "si_nmos", wl);
+    s.ckt.mos("mpa", "y", "a", "vdd", "vdd", "si_pmos", wlp);
+    s.ckt.mos("mpb", "y", "b", "vdd", "vdd", "si_pmos", wlp);
+    net_track(&mut s.cell, tech, &g, T1, &[mna.d, mpa.d, mpb.d]); // y
+    net_track(&mut s.cell, tech, &g, T0, &[mna.s, mnb.d]); // mid
+    s.pin_at("a", tech, mna.g);
+    s.pin_at("b", tech, mnb.g);
+    s.track_pin("y", tech, T1, mpb.d.x);
+    s.rail(tech, mnb.s, false);
+    s.rail(tech, mpa.s, true);
+    s.rail(tech, mpb.s, true);
+    s.finish(tech)
+}
+
+/// Single-ended sense amplifier (diff pair vs VREF; paper §V-A).
+pub fn sense_amp(tech: &Tech) -> LeafCell {
+    let mut s = Std::new(tech, "sense_amp", &["rbl", "vref", "sae", "out", "vdd", "gnd"], 1500);
+    let g = s.g;
+    let w = 160i64;
+    let wl = w as f64 / g.gate_l as f64;
+    let min1 = draw_mos(&mut s.cell, tech, &g, 100, YN, w, false, GateAt { pad_y: PAD_N, pad_dx: 0 });
+    let min2 = draw_mos(&mut s.cell, tech, &g, 500, YN, w, false, GateAt { pad_y: PAD_N, pad_dx: 0 });
+    let mtail = draw_mos(&mut s.cell, tech, &g, 900, YN, w, false, GateAt { pad_y: PAD_N, pad_dx: 0 });
+    // pmos loads staggered so their pads clear the nmos pads in x
+    let mld1 = draw_mos(&mut s.cell, tech, &g, 250, YP, w, true, GateAt { pad_y: PAD_P, pad_dx: 0 });
+    let mld2 = draw_mos(&mut s.cell, tech, &g, 700, YP, w, true, GateAt { pad_y: PAD_P, pad_dx: 0 });
+    s.ckt.mos("min1", "outb", "rbl", "tail", "gnd", "si_nmos", wl);
+    s.ckt.mos("min2", "out", "vref", "tail", "gnd", "si_nmos", wl);
+    s.ckt.mos("mtail", "tail", "sae", "gnd", "gnd", "si_nmos", wl);
+    s.ckt.mos("mld1", "outb", "outb", "vdd", "vdd", "si_pmos", wl);
+    s.ckt.mos("mld2", "out", "outb", "vdd", "vdd", "si_pmos", wl);
+    net_track(&mut s.cell, tech, &g, T1, &[min1.d, mld1.d, mld1.g, mld2.g]); // outb
+    net_track(&mut s.cell, tech, &g, T2, &[min2.d, mld2.d]); // out
+    net_track(&mut s.cell, tech, &g, T0, &[min1.s, min2.s, mtail.d]); // tail
+    s.pin_at("rbl", tech, min1.g);
+    s.pin_at("vref", tech, min2.g);
+    s.pin_at("sae", tech, mtail.g);
+    s.track_pin("out", tech, T2, mld2.d.x);
+    s.rail(tech, mtail.s, false);
+    s.rail(tech, mld1.s, true);
+    s.rail(tech, mld2.s, true);
+    s.finish(tech)
+}
+
+/// Single-ended write driver (BLb half removed; paper §V-A).
+pub fn write_driver(tech: &Tech) -> LeafCell {
+    let mut s = Std::new(tech, "write_driver", &["din_b", "en", "wbl", "vdd", "gnd"], 1000);
+    let g = s.g;
+    let (wn, wp) = (220i64, 300i64);
+    let (mn, mp) = draw_pair(&mut s.cell, tech, &g, 120, YN, wn, YP, wp, PAD_SH, 0);
+    let men = draw_mos(&mut s.cell, tech, &g, 520, YN, wn, false, GateAt { pad_y: PAD_N, pad_dx: 60 });
+    s.ckt.mos("mp", "wbl", "din_b", "vdd", "vdd", "si_pmos", wp as f64 / g.gate_l as f64);
+    s.ckt.mos("mn", "wbl", "din_b", "nst", "gnd", "si_nmos", wn as f64 / g.gate_l as f64);
+    s.ckt.mos("men", "nst", "en", "gnd", "gnd", "si_nmos", wn as f64 / g.gate_l as f64);
+    net_track(&mut s.cell, tech, &g, T1, &[mn.d, mp.d]); // wbl
+    net_track(&mut s.cell, tech, &g, T0, &[mn.s, men.d]); // nst
+    s.pin_at("din_b", tech, mn.g);
+    s.pin_at("en", tech, men.g);
+    s.track_pin("wbl", tech, T1, mn.d.x);
+    s.rail(tech, men.s, false);
+    s.rail(tech, mp.s, true);
+    s.finish(tech)
+}
+
+/// RBL precharge (PMOS, active-low en_b): SRAM and OS-OS read ports.
+pub fn precharge(tech: &Tech) -> LeafCell {
+    let mut s = Std::new(tech, "precharge", &["en_b", "bl", "vdd", "gnd"], 560);
+    let g = s.g;
+    let wp = 240;
+    let mp = draw_mos(&mut s.cell, tech, &g, 120, YP, wp, true, GateAt { pad_y: PAD_P, pad_dx: 0 });
+    s.ckt.mos("mp", "bl", "en_b", "vdd", "vdd", "si_pmos", wp as f64 / g.gate_l as f64);
+    net_track(&mut s.cell, tech, &g, T1, &[mp.d]);
+    s.pin_at("en_b", tech, mp.g);
+    s.track_pin("bl", tech, T1, mp.d.x);
+    s.rail(tech, mp.s, true);
+    s.finish(tech)
+}
+
+/// RBL predischarge (NMOS, active-high en): the new module the paper
+/// adds for the Si-Si GCRAM read port (§V-A).
+pub fn predischarge(tech: &Tech) -> LeafCell {
+    let mut s = Std::new(tech, "predischarge", &["en", "bl", "vdd", "gnd"], 560);
+    let g = s.g;
+    let wn = 240;
+    let mn = draw_mos(&mut s.cell, tech, &g, 120, YN, wn, false, GateAt { pad_y: PAD_N, pad_dx: 0 });
+    s.ckt.mos("mn", "bl", "en", "gnd", "gnd", "si_nmos", wn as f64 / g.gate_l as f64);
+    net_track(&mut s.cell, tech, &g, T2, &[mn.d]);
+    s.pin_at("en", tech, mn.g);
+    s.track_pin("bl", tech, T2, mn.d.x);
+    s.rail(tech, mn.s, false);
+    s.finish(tech)
+}
+
+/// WWL level shifter (cross-coupled PMOS on the boosted vpp rail;
+/// Fig. 7(a) green points / Fig. 8(c)).
+pub fn level_shifter(tech: &Tech) -> LeafCell {
+    let mut s = Std::new(tech, "level_shifter", &["in", "in_b", "out", "vpp", "gnd"], 1100);
+    let g = s.g;
+    let w = 160i64;
+    let wl = w as f64 / g.gate_l as f64;
+    let mn1 = draw_mos(&mut s.cell, tech, &g, 120, YN, w, false, GateAt { pad_y: PAD_N, pad_dx: -60 });
+    let mn2 = draw_mos(&mut s.cell, tech, &g, 520, YN, w, false, GateAt { pad_y: PAD_N, pad_dx: -60 });
+    let mp1 = draw_mos(&mut s.cell, tech, &g, 250, YP, w, true, GateAt { pad_y: PAD_P, pad_dx: 0 });
+    let mp2 = draw_mos(&mut s.cell, tech, &g, 720, YP, w, true, GateAt { pad_y: PAD_P, pad_dx: 0 });
+    s.ckt.mos("mn1", "outb", "in", "gnd", "gnd", "si_nmos", wl);
+    s.ckt.mos("mn2", "out", "in_b", "gnd", "gnd", "si_nmos", wl);
+    s.ckt.mos("mp1", "outb", "out", "vpp", "vpp", "si_pmos", wl);
+    s.ckt.mos("mp2", "out", "outb", "vpp", "vpp", "si_pmos", wl);
+    net_track(&mut s.cell, tech, &g, T1, &[mn1.d, mp1.d, mp2.g]); // outb
+    net_track(&mut s.cell, tech, &g, T2, &[mn2.d, mp2.d, mp1.g]); // out
+    s.pin_at("in", tech, mn1.g);
+    s.pin_at("in_b", tech, mn2.g);
+    s.track_pin("out", tech, T2, mp2.d.x);
+    s.rail(tech, mn1.s, false);
+    s.rail(tech, mn2.s, false);
+    s.rail(tech, mp1.s, true);
+    s.rail(tech, mp2.s, true);
+    for p in &mut s.cell.pins {
+        if p.name == "vdd" {
+            p.name = "vpp".into(); // boosted rail
+        }
+    }
+    s.finish(tech)
+}
+
+/// Column-mux pass gate.
+pub fn column_mux(tech: &Tech) -> LeafCell {
+    let mut s = Std::new(tech, "column_mux", &["sel", "bl_in", "bl_out", "vdd", "gnd"], 560);
+    let g = s.g;
+    let wn = 220;
+    let mn = draw_mos(&mut s.cell, tech, &g, 120, YN, wn, false, GateAt { pad_y: PAD_N, pad_dx: 0 });
+    s.ckt.mos("mn", "bl_out", "sel", "bl_in", "gnd", "si_nmos", wn as f64 / g.gate_l as f64);
+    net_track(&mut s.cell, tech, &g, T2, &[mn.d]);
+    net_track(&mut s.cell, tech, &g, T0, &[mn.s]);
+    s.pin_at("sel", tech, mn.g);
+    s.track_pin("bl_out", tech, T2, mn.d.x);
+    s.track_pin("bl_in", tech, T0, mn.s.x);
+    s.finish(tech)
+}
+
+/// Transmission gate (nmos + pmos pass pair) — building block of the
+/// composed Data_DFF (see [`super::compose`]).
+pub fn tgate(tech: &Tech) -> LeafCell {
+    let mut s = Std::new(tech, "tgate", &["a", "b", "cn", "cp", "vdd", "gnd"], 800);
+    let g = s.g;
+    let (wn, wp) = (120i64, 180i64);
+    let mn = draw_mos(&mut s.cell, tech, &g, 120, YN, wn, false, GateAt { pad_y: PAD_N, pad_dx: 0 });
+    let mp = draw_mos(&mut s.cell, tech, &g, 420, YP, wp, true, GateAt { pad_y: PAD_PH, pad_dx: 0 });
+    s.ckt.mos("mn", "b", "cn", "a", "gnd", "si_nmos", wn as f64 / g.gate_l as f64);
+    s.ckt.mos("mp", "b", "cp", "a", "vdd", "si_pmos", wp as f64 / g.gate_l as f64);
+    net_track(&mut s.cell, tech, &g, T0, &[mn.s, mp.s]); // a
+    net_track(&mut s.cell, tech, &g, T2, &[mn.d, mp.d]); // b
+    s.pin_at("cn", tech, mn.g);
+    s.pin_at("cp", tech, mp.g);
+    s.track_pin("a", tech, T0, mn.s.x);
+    s.track_pin("b", tech, T2, mn.d.x);
+    s.finish(tech)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::sg40;
+
+    fn area_um2(lc: &LeafCell, tech: &Tech) -> f64 {
+        let b = tech.layer(LayerRole::Boundary);
+        let r = lc.layout.boundary(b).expect("boundary");
+        (r.w() as f64 * r.h() as f64) * 1e-6
+    }
+
+    #[test]
+    fn fig3_cell_area_ratios() {
+        let t = sg40();
+        let sram = area_um2(&sram6t(&t), &t);
+        let sisi = area_um2(&gc2t_sisi(&t, false), &t);
+        let osos = area_um2(&gc2t_osos(&t), &t);
+        let r_sisi = sisi / sram;
+        let r_osos = osos / sram;
+        // paper Fig. 3: 69 % and 11 %
+        assert!((r_sisi - 0.69).abs() < 0.03, "Si-Si ratio {r_sisi}");
+        assert!((r_osos - 0.11).abs() < 0.02, "OS-OS ratio {r_osos}");
+    }
+
+    #[test]
+    fn bitcells_have_edge_bitlines_for_abutment() {
+        let t = sg40();
+        let b = t.layer(LayerRole::Boundary);
+        for lc in [gc2t_sisi(&t, false), sram6t(&t), gc2t_osos(&t)] {
+            let bnd = lc.layout.boundary(b).unwrap();
+            for pin in &lc.layout.pins {
+                if pin.name.contains("bl") {
+                    assert_eq!(pin.rect.y0, 0, "{} {} bitline to cell bottom", lc.layout.name, pin.name);
+                    assert_eq!(pin.rect.y1, bnd.y1, "{} {} bitline to cell top", lc.layout.name, pin.name);
+                }
+                if pin.name.ends_with("wl") {
+                    assert_eq!(pin.rect.x0, 0, "{} {} wordline to left edge", lc.layout.name, pin.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn device_counts_match_schematics() {
+        let t = sg40();
+        assert_eq!(sram6t(&t).circuit.mos_count(), 6);
+        assert_eq!(gc2t_sisi(&t, false).circuit.mos_count(), 2);
+        assert_eq!(gc2t_osos(&t).circuit.mos_count(), 2);
+        assert_eq!(sense_amp(&t).circuit.mos_count(), 5);
+        assert_eq!(nand2(&t).circuit.mos_count(), 4);
+        assert_eq!(level_shifter(&t).circuit.mos_count(), 4);
+        assert_eq!(tgate(&t).circuit.mos_count(), 2);
+    }
+
+    #[test]
+    fn os_cell_uses_no_feol_layers() {
+        let t = sg40();
+        let lc = gc2t_osos(&t);
+        let feol: Vec<usize> = [LayerRole::Active, LayerRole::Poly, LayerRole::Nwell]
+            .iter()
+            .map(|r| t.layer(*r))
+            .collect();
+        for r in &lc.layout.rects {
+            assert!(!feol.contains(&r.layer), "OS cell must be BEOL-only: {r:?}");
+        }
+    }
+
+    #[test]
+    fn inverter_scales_with_drive() {
+        let t = sg40();
+        let x1 = inverter(&t, 1.0);
+        let x2 = inverter(&t, 2.0);
+        let wl = |lc: &LeafCell| match &lc.circuit.devices[0] {
+            crate::netlist::Device::Mos { w_over_l, .. } => *w_over_l,
+            _ => panic!(),
+        };
+        assert!(wl(&x2) > 1.8 * wl(&x1));
+    }
+
+    #[test]
+    fn all_cells_have_boundaries_and_port_pins() {
+        let t = sg40();
+        let b = t.layer(LayerRole::Boundary);
+        for lc in [
+            sram6t(&t),
+            gc2t_sisi(&t, false),
+            gc2t_sisi(&t, true),
+            gc2t_osos(&t),
+            inverter(&t, 1.0),
+            nand2(&t),
+            sense_amp(&t),
+            write_driver(&t),
+            precharge(&t),
+            predischarge(&t),
+            level_shifter(&t),
+            column_mux(&t),
+            tgate(&t),
+        ] {
+            assert!(lc.layout.boundary(b).is_some(), "{}", lc.layout.name);
+            assert!(!lc.layout.pins.is_empty(), "{}", lc.layout.name);
+            for port in &lc.circuit.ports {
+                // bitcell 'gnd' bulk and similar rails always have pins
+                let has = lc.layout.pins.iter().any(|p| &p.name == port);
+                assert!(has, "{} missing pin {port}", lc.layout.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Hierarchical cell composition: place leaf cells in a row, bridge
+//! their power rails, and route nets between their pins on metal3
+//! tracks above the row (m2 risers + via stacks at each pin).
+//!
+//! This is the OpenRAM-style "module assembly" layer: the Data_DFF, the
+//! decoder stages and the port blocks are all compositions of the DRC-
+//! clean leaf cells from [`super::cells`], with inter-cell routing kept
+//! on m3 where it cannot collide with leaf-internal m1/m2.
+
+use super::cells::LeafCell;
+use super::{Cell, Library, Orient, Pin, Rect};
+use crate::netlist::Circuit;
+use crate::tech::{LayerRole, Tech};
+
+/// A pin reference: (instance index, pin name).
+pub type PinRef = (usize, &'static str);
+
+/// Description of one composed module.
+pub struct ComposeSpec<'a> {
+    pub name: &'a str,
+    /// (instance name, cell name) placed left-to-right.
+    pub insts: Vec<(String, String)>,
+    /// Gap between adjacent instances (nm).
+    pub gap: i64,
+    /// Routed nets: (net name, pins).  Each net gets one m3 track.
+    pub nets: Vec<(String, Vec<PinRef>)>,
+    /// Exported ports: (port name, which pin provides the shape); the
+    /// port may also name a routed net (the m3 track becomes the pin).
+    pub exports: Vec<(String, PinRef)>,
+}
+
+/// First m3 routing track sits this far above the tallest subcell.
+const TRACK_START: i64 = 60;
+const TRACK_PITCH: i64 = 100;
+const TRACK_H: i64 = 60;
+
+/// Compose a module.  The subcells must already be in `lib`.  Returns
+/// the top cell (with instances) — the caller supplies the matching
+/// hierarchical [`Circuit`] (instance order must match `spec.insts`).
+pub fn compose(lib: &mut Library, tech: &Tech, spec: &ComposeSpec) -> crate::Result<Rect> {
+    let b = tech.layer(LayerRole::Boundary);
+    let m1 = tech.layer(LayerRole::Metal1);
+    let m2 = tech.layer(LayerRole::Metal2);
+    let m3 = tech.layer(LayerRole::Metal3);
+    let v2 = tech.layer(LayerRole::Via2);
+    let v2w = tech.rules.layer(LayerRole::Via2).min_width_nm;
+
+    let mut top = Cell::new(spec.name);
+    // place instances left to right
+    let mut x = 0i64;
+    let mut max_h = 0i64;
+    let mut offsets: Vec<i64> = Vec::new();
+    for (iname, cname) in &spec.insts {
+        let c = lib.get(cname)?;
+        let bb = c
+            .boundary(b)
+            .ok_or_else(|| anyhow::anyhow!("cell {cname} lacks boundary"))?;
+        offsets.push(x);
+        top.place(iname.clone(), cname, x, 0, Orient::R0);
+        x += bb.w() + spec.gap;
+        max_h = max_h.max(bb.h());
+    }
+    let total_w = x - spec.gap;
+
+    // bridge rails across the gaps (subcell rails are at y 0..60 and
+    // max_h-60..max_h by the Std convention)
+    top.pin("gnd", Rect::new(m1, 0, 0, total_w, 60));
+    top.pin("vdd", Rect::new(m1, 0, max_h - 60, total_w, max_h));
+
+    // resolve a pin's translated rect
+    let pin_rect = |lib: &Library, idx: usize, pin: &str| -> crate::Result<Rect> {
+        let (_, cname) = &spec.insts[idx];
+        let c = lib.get(cname)?;
+        let p = c
+            .pins
+            .iter()
+            .find(|p| p.name == pin)
+            .ok_or_else(|| anyhow::anyhow!("cell {cname} has no pin '{pin}'"))?;
+        Ok(p.rect.translated(offsets[idx], 0))
+    };
+
+    // route nets on m3 tracks
+    let mut net_tracks: Vec<(String, Rect)> = Vec::new();
+    for (ni, (net, pins)) in spec.nets.iter().enumerate() {
+        let ty = max_h + TRACK_START + ni as i64 * TRACK_PITCH;
+        let mut lo = i64::MAX;
+        let mut hi = i64::MIN;
+        for (idx, pin) in pins {
+            let pr = pin_rect(lib, *idx, pin)?;
+            let px = (pr.x0 + pr.x1) / 2;
+            lo = lo.min(px);
+            hi = hi.max(px);
+            // riser: m2 vertical from the pin up to the track
+            let py = (pr.y0 + pr.y1) / 2;
+            if pr.layer == m1 {
+                // via1 + m2 pad on the pin first
+                let v1 = tech.layer(LayerRole::Via1);
+                let v1w = tech.rules.layer(LayerRole::Via1).min_width_nm;
+                top.add(Rect::new(v1, px - v1w / 2, py - v1w / 2, px + v1w / 2, py + v1w / 2));
+                top.add(Rect::new(m2, px - 40, py - 40, px + 40, py + 40));
+            }
+            top.add(Rect::new(m2, px - 30, py.min(ty), px + 30, ty + TRACK_H - 5));
+            // via2 into the track (centered, 10 nm margins all around)
+            let vy0 = ty + (TRACK_H - v2w) / 2;
+            top.add(Rect::new(v2, px - v2w / 2, vy0, px + v2w / 2, vy0 + v2w));
+        }
+        let track = Rect::new(m3, lo - 40, ty, hi + 40, ty + TRACK_H);
+        top.add(track);
+        net_tracks.push((net.clone(), track));
+    }
+
+    // exports
+    for (port, (idx, pin)) in &spec.exports {
+        if let Some((_, track)) = net_tracks.iter().find(|(n, _)| n == port) {
+            top.pins.push(Pin { name: port.clone(), rect: *track });
+        } else {
+            let pr = pin_rect(lib, *idx, pin)?;
+            top.pins.push(Pin { name: port.clone(), rect: pr });
+        }
+    }
+
+    let total_h = max_h + TRACK_START + spec.nets.len() as i64 * TRACK_PITCH + 40;
+    let bnd = Rect::new(b, 0, 0, total_w, total_h);
+    top.add(bnd);
+    lib.add(top);
+    Ok(bnd)
+}
+
+/// The Data_DFF of Fig. 4 as a composition (10T dynamic DFF): inv,
+/// tgate, inv, tgate,
+/// inv with clk/clkb distribution on m3.  Inserts all needed subcells
+/// into `lib` and returns the hierarchical schematic.
+pub fn dff(lib: &mut Library, tech: &Tech) -> crate::Result<LeafCell> {
+    use super::cells;
+    for leaf in [cells::inverter(tech, 1.0), cells::tgate(tech)] {
+        lib.add(leaf.layout);
+    }
+    let spec = ComposeSpec {
+        name: "dff",
+        insts: vec![
+            ("x_ck".into(), "inv_x1".into()),
+            ("x_tg1".into(), "tgate".into()),
+            ("x_mi".into(), "inv_x1".into()),
+            ("x_tg2".into(), "tgate".into()),
+            ("x_q".into(), "inv_x1".into()),
+        ],
+        gap: 400, // keeps adjacent subcells' nwells beyond min spacing
+        nets: vec![
+            ("clk".into(), vec![(0, "a"), (1, "cp"), (3, "cn")]),
+            ("clkb".into(), vec![(0, "y"), (1, "cn"), (3, "cp")]),
+            ("m".into(), vec![(1, "b"), (2, "a")]),
+            ("mb".into(), vec![(2, "y"), (3, "a")]),
+            ("sl".into(), vec![(3, "b"), (4, "a")]),
+            ("d".into(), vec![(1, "a")]),
+            ("q".into(), vec![(4, "y")]),
+        ],
+        exports: vec![
+            ("d".into(), (1, "a")),
+            ("clk".into(), (0, "a")),
+            ("q".into(), (4, "y")),
+        ],
+    };
+    compose(lib, tech, &spec)?;
+
+    let mut ckt = Circuit::new("dff", &["d", "clk", "q", "vdd", "gnd"]);
+    ckt.inst("x_ck", "inv_x1", &["clk", "clkb", "vdd", "gnd"]);
+    ckt.inst("x_tg1", "tgate", &["d", "m", "clkb", "clk", "vdd", "gnd"]);
+    ckt.inst("x_mi", "inv_x1", &["m", "mb", "vdd", "gnd"]);
+    ckt.inst("x_tg2", "tgate", &["mb", "sl", "clk", "clkb", "vdd", "gnd"]);
+    ckt.inst("x_q", "inv_x1", &["sl", "q", "vdd", "gnd"]);
+
+    let layout = lib.get("dff")?.clone();
+    Ok(LeafCell { layout, circuit: ckt })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::sg40;
+
+    #[test]
+    fn dff_composes_and_flattens() {
+        let t = sg40();
+        let mut lib = Library::default();
+        let d = dff(&mut lib, &t).unwrap();
+        assert_eq!(d.layout.insts.len(), 5);
+        let rects = lib.flatten("dff").unwrap();
+        assert!(rects.len() > 100);
+        // hierarchical circuit flattens to 10 transistors (dynamic DFF)
+        let mut nl = crate::netlist::Netlist::default();
+        let cells_needed = [
+            crate::layout::cells::inverter(&t, 1.0).circuit,
+            crate::layout::cells::tgate(&t).circuit,
+        ];
+        for c in cells_needed {
+            nl.add(c);
+        }
+        nl.add(d.circuit.clone());
+        nl.top = "dff".into();
+        assert_eq!(nl.flatten().unwrap().mos_count(), 10);
+    }
+
+    #[test]
+    fn compose_rejects_unknown_pin() {
+        let t = sg40();
+        let mut lib = Library::default();
+        lib.add(crate::layout::cells::inverter(&t, 1.0).layout);
+        let spec = ComposeSpec {
+            name: "bad",
+            insts: vec![("x0".into(), "inv_x1".into())],
+            gap: 100,
+            nets: vec![("n".into(), vec![(0, "nope")])],
+            exports: vec![],
+        };
+        assert!(compose(&mut lib, &t, &spec).is_err());
+    }
+
+    #[test]
+    fn composed_dff_is_drc_clean() {
+        let t = sg40();
+        let mut lib = Library::default();
+        dff(&mut lib, &t).unwrap();
+        let rects = lib.flatten("dff").unwrap();
+        let rep = crate::drc::check(&t, &rects);
+        assert!(
+            rep.clean(),
+            "{} violations; first: {}",
+            rep.violations.len(),
+            rep.violations[0]
+        );
+    }
+}

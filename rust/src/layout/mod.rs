@@ -1,0 +1,336 @@
+//! Layout geometry kernel: integer-nm Manhattan rectangles, hierarchical
+//! cells with oriented instances, bounding boxes, flattening — plus the
+//! cell generators ([`cells`]), the bank floorplanner ([`bank`]) and the
+//! GDSII writer ([`gds`]).
+//!
+//! Conventions (relied on by the extractor in [`crate::lvs`]):
+//! * transistors are drawn with **horizontal active strips crossed by
+//!   vertical gates** (poly or osgate);
+//! * all geometry is on a 5 nm grid;
+//! * every cell carries a `Boundary` rect defining its abutment box.
+
+pub mod bank;
+pub mod cells;
+pub mod compose;
+pub mod gds;
+
+use std::collections::BTreeMap;
+
+/// Axis-aligned rectangle on a layer (coordinates in nm, x0<x1, y0<y1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rect {
+    pub layer: usize,
+    pub x0: i64,
+    pub y0: i64,
+    pub x1: i64,
+    pub y1: i64,
+}
+
+impl Rect {
+    pub fn new(layer: usize, x0: i64, y0: i64, x1: i64, y1: i64) -> Rect {
+        debug_assert!(x0 <= x1 && y0 <= y1, "degenerate rect");
+        Rect { layer, x0, y0, x1, y1 }
+    }
+
+    pub fn w(&self) -> i64 {
+        self.x1 - self.x0
+    }
+
+    pub fn h(&self) -> i64 {
+        self.y1 - self.y0
+    }
+
+    pub fn area_nm2(&self) -> i64 {
+        self.w() * self.h()
+    }
+
+    /// Closed-interval overlap test on the same layer (abutting rects
+    /// with a shared edge count as connected).
+    pub fn touches(&self, o: &Rect) -> bool {
+        self.layer == o.layer
+            && self.x0 <= o.x1
+            && o.x0 <= self.x1
+            && self.y0 <= o.y1
+            && o.y0 <= self.y1
+    }
+
+    /// Strict interior intersection across any layers.
+    pub fn overlaps(&self, o: &Rect) -> bool {
+        self.x0 < o.x1 && o.x0 < self.x1 && self.y0 < o.y1 && o.y0 < self.y1
+    }
+
+    pub fn intersection(&self, o: &Rect) -> Option<Rect> {
+        let x0 = self.x0.max(o.x0);
+        let y0 = self.y0.max(o.y0);
+        let x1 = self.x1.min(o.x1);
+        let y1 = self.y1.min(o.y1);
+        if x0 < x1 && y0 < y1 {
+            Some(Rect { layer: self.layer, x0, y0, x1, y1 })
+        } else {
+            None
+        }
+    }
+
+    /// Does `self` contain `o` with at least `margin` on every side?
+    pub fn encloses(&self, o: &Rect, margin: i64) -> bool {
+        self.x0 + margin <= o.x0
+            && self.y0 + margin <= o.y0
+            && self.x1 - margin >= o.x1
+            && self.y1 - margin >= o.y1
+    }
+
+    pub fn translated(&self, dx: i64, dy: i64) -> Rect {
+        Rect { layer: self.layer, x0: self.x0 + dx, y0: self.y0 + dy, x1: self.x1 + dx, y1: self.y1 + dy }
+    }
+
+    pub fn union_bbox(&self, o: &Rect) -> Rect {
+        Rect {
+            layer: self.layer,
+            x0: self.x0.min(o.x0),
+            y0: self.y0.min(o.y0),
+            x1: self.x1.max(o.x1),
+            y1: self.y1.max(o.y1),
+        }
+    }
+}
+
+/// Placement orientation (the subset memory tiling needs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Orient {
+    #[default]
+    R0,
+    /// Mirror about the x-axis (flip y) — row tiling of bitcells.
+    Mx,
+    /// Mirror about the y-axis (flip x).
+    My,
+    R180,
+}
+
+impl Orient {
+    /// Apply to a rect, then translate by (dx, dy).
+    pub fn apply(&self, r: &Rect, dx: i64, dy: i64) -> Rect {
+        let (x0, y0, x1, y1) = match self {
+            Orient::R0 => (r.x0, r.y0, r.x1, r.y1),
+            Orient::Mx => (r.x0, -r.y1, r.x1, -r.y0),
+            Orient::My => (-r.x1, r.y0, -r.x0, r.y1),
+            Orient::R180 => (-r.x1, -r.y1, -r.x0, -r.y0),
+        };
+        Rect { layer: r.layer, x0: x0 + dx, y0: y0 + dy, x1: x1 + dx, y1: y1 + dy }
+    }
+}
+
+/// Named pin shape (net label attached to a rect).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pin {
+    pub name: String,
+    pub rect: Rect,
+}
+
+/// Placed child cell.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub name: String,
+    pub cell: String,
+    pub dx: i64,
+    pub dy: i64,
+    pub orient: Orient,
+}
+
+/// A layout cell.
+#[derive(Debug, Clone, Default)]
+pub struct Cell {
+    pub name: String,
+    pub rects: Vec<Rect>,
+    pub pins: Vec<Pin>,
+    pub insts: Vec<Instance>,
+}
+
+impl Cell {
+    pub fn new(name: impl Into<String>) -> Cell {
+        Cell { name: name.into(), ..Default::default() }
+    }
+
+    pub fn add(&mut self, r: Rect) {
+        self.rects.push(r);
+    }
+
+    pub fn pin(&mut self, name: impl Into<String>, r: Rect) {
+        let name = name.into();
+        self.rects.push(r);
+        self.pins.push(Pin { name, rect: r });
+    }
+
+    pub fn place(&mut self, name: impl Into<String>, cell: &str, dx: i64, dy: i64, orient: Orient) {
+        self.insts.push(Instance { name: name.into(), cell: cell.into(), dx, dy, orient });
+    }
+
+    /// Geometric bbox over local rects only (no instances).
+    pub fn local_bbox(&self) -> Option<Rect> {
+        let mut it = self.rects.iter();
+        let first = *it.next()?;
+        Some(it.fold(first, |a, b| a.union_bbox(b)))
+    }
+
+    /// Boundary rect if drawn, for abutment-pitch math.
+    pub fn boundary(&self, boundary_layer: usize) -> Option<Rect> {
+        self.rects.iter().copied().find(|r| r.layer == boundary_layer)
+    }
+}
+
+/// A cell library (shared flat namespace, like one GDS file).
+#[derive(Debug, Clone, Default)]
+pub struct Library {
+    pub cells: BTreeMap<String, Cell>,
+}
+
+impl Library {
+    pub fn add(&mut self, c: Cell) {
+        self.cells.insert(c.name.clone(), c);
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&Cell> {
+        self.cells
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("layout cell '{name}' not found"))
+    }
+
+    /// Flatten a cell to a rect soup (pins lost; DRC input).
+    pub fn flatten(&self, name: &str) -> crate::Result<Vec<Rect>> {
+        let mut out = Vec::new();
+        self.flatten_into(name, 0, 0, Orient::R0, &mut out, 0)?;
+        Ok(out)
+    }
+
+    fn flatten_into(
+        &self,
+        name: &str,
+        dx: i64,
+        dy: i64,
+        orient: Orient,
+        out: &mut Vec<Rect>,
+        depth: usize,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(depth <= 32, "layout hierarchy too deep (cycle?)");
+        let c = self.get(name)?;
+        for r in &c.rects {
+            out.push(orient.apply(r, dx, dy));
+        }
+        for i in &c.insts {
+            // compose: child placed in parent frame, then parent's
+            // transform applied.  For the Orient subset, composing is
+            // applying parent's orient to the child's local offset and
+            // multiplying orients.
+            let (cdx, cdy) = match orient {
+                Orient::R0 => (i.dx, i.dy),
+                Orient::Mx => (i.dx, -i.dy),
+                Orient::My => (-i.dx, i.dy),
+                Orient::R180 => (-i.dx, -i.dy),
+            };
+            let comp = compose(orient, i.orient);
+            self.flatten_into(&i.cell, dx + cdx, dy + cdy, comp, out, depth + 1)?;
+        }
+        Ok(())
+    }
+
+    /// Flatten with pin propagation from the top cell only.
+    pub fn flatten_with_pins(&self, name: &str) -> crate::Result<(Vec<Rect>, Vec<Pin>)> {
+        let rects = self.flatten(name)?;
+        let pins = self.get(name)?.pins.clone();
+        Ok((rects, pins))
+    }
+
+    /// bbox of the flattened cell.
+    pub fn bbox(&self, name: &str) -> crate::Result<Rect> {
+        let rects = self.flatten(name)?;
+        let mut it = rects.iter();
+        let first = *it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("cell '{name}' is empty"))?;
+        Ok(it.fold(first, |a, b| a.union_bbox(b)))
+    }
+}
+
+fn compose(outer: Orient, inner: Orient) -> Orient {
+    use Orient::*;
+    match (outer, inner) {
+        (R0, x) => x,
+        (x, R0) => x,
+        (Mx, Mx) | (My, My) | (R180, R180) => R0,
+        (Mx, My) | (My, Mx) => R180,
+        (Mx, R180) | (R180, Mx) => My,
+        (My, R180) | (R180, My) => Mx,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_basics() {
+        let a = Rect::new(0, 0, 0, 100, 50);
+        assert_eq!(a.area_nm2(), 5000);
+        let b = Rect::new(0, 100, 0, 200, 50); // abuts a
+        assert!(a.touches(&b));
+        assert!(!a.overlaps(&b)); // zero-width intersection
+        let c = Rect::new(0, 50, 10, 120, 40);
+        assert_eq!(a.intersection(&c).unwrap(), Rect::new(0, 50, 10, 100, 40));
+        assert!(a.encloses(&Rect::new(0, 10, 10, 90, 40), 10));
+        assert!(!a.encloses(&Rect::new(0, 5, 10, 90, 40), 10));
+    }
+
+    #[test]
+    fn orientation_transforms() {
+        let r = Rect::new(1, 10, 20, 30, 40);
+        assert_eq!(Orient::Mx.apply(&r, 0, 0), Rect::new(1, 10, -40, 30, -20));
+        assert_eq!(Orient::My.apply(&r, 0, 0), Rect::new(1, -30, 20, -10, 40));
+        assert_eq!(Orient::R180.apply(&r, 0, 0), Rect::new(1, -30, -40, -10, -20));
+        // transform + translate
+        assert_eq!(Orient::Mx.apply(&r, 5, 100), Rect::new(1, 15, 60, 35, 80));
+    }
+
+    #[test]
+    fn orient_composition_is_group() {
+        use Orient::*;
+        // Mx . Mx = identity on a test rect through the library path
+        let mut lib = Library::default();
+        let mut leaf = Cell::new("leaf");
+        leaf.add(Rect::new(0, 0, 0, 10, 20));
+        lib.add(leaf);
+        let mut mid = Cell::new("mid");
+        mid.place("l", "leaf", 0, 0, Mx);
+        lib.add(mid);
+        let mut top = Cell::new("top");
+        top.place("m", "mid", 0, 0, Mx);
+        lib.add(top);
+        let rects = lib.flatten("top").unwrap();
+        assert_eq!(rects, vec![Rect::new(0, 0, 0, 10, 20)]);
+    }
+
+    #[test]
+    fn flatten_tiles_rows() {
+        let mut lib = Library::default();
+        let mut cell = Cell::new("bit");
+        cell.add(Rect::new(2, 0, 0, 100, 60));
+        lib.add(cell);
+        let mut arr = Cell::new("arr");
+        for r in 0..4 {
+            for c in 0..4 {
+                let orient = if r % 2 == 0 { Orient::R0 } else { Orient::Mx };
+                let dy = if r % 2 == 0 { r * 60 } else { r * 60 + 60 };
+                arr.place(format!("b{r}_{c}"), "bit", c * 100, dy, orient);
+            }
+        }
+        lib.add(arr);
+        let rects = lib.flatten("arr").unwrap();
+        assert_eq!(rects.len(), 16);
+        let bbox = lib.bbox("arr").unwrap();
+        assert_eq!((bbox.w(), bbox.h()), (400, 240));
+    }
+
+    #[test]
+    fn missing_cell_is_error() {
+        let lib = Library::default();
+        assert!(lib.flatten("nope").is_err());
+    }
+}

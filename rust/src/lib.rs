@@ -1,0 +1,48 @@
+//! # OpenGCRAM-RS
+//!
+//! Reproduction of *"OpenGCRAM: An Open-Source Gain Cell Compiler Enabling
+//! Design-Space Exploration for AI Workloads"* as a three-layer
+//! rust + JAX/Pallas stack.
+//!
+//! The crate is the L3 layer: the memory **compiler** itself (technology
+//! files, netlist and layout generation, GDSII export, DRC, LVS), the
+//! **characterizer** (analytical logical-effort models plus transient
+//! characterization via AOT-compiled XLA artifacts executed through
+//! PJRT), and the **design-space explorer** driven by an AI-workload
+//! profiler.  Python/JAX runs only at build time (`make artifacts`);
+//! every request served by this crate executes pre-compiled HLO.
+//!
+//! Module map (see DESIGN.md §3 for the full inventory):
+//!
+//! * [`tech`] — process design kits: layers, design rules, device cards.
+//! * [`netlist`] — SPICE IR, emitter and parser.
+//! * [`layout`] — geometry kernel, cell generators, bank floorplan, GDS.
+//! * [`drc`] — design-rule checker.
+//! * [`lvs`] — layout-vs-schematic (extraction + graph compare).
+//! * [`sim`] — native MNA transient simulator (HSPICE stand-in).
+//! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — batched DSE job execution over the runtime.
+//! * [`compiler`] — the GCRAM bank compiler (the paper's contribution).
+//! * [`characterize`] — area/delay/power/retention characterization.
+//! * [`workloads`] — GainSight-like AI workload profiler (Table I).
+//! * [`dse`] — sweeps, shmoo plots, Pareto fronts, co-optimization.
+//! * [`report`] — table/CSV renderers for the paper's figures.
+//! * [`util`] — JSON parsing, PRNG, timing (offline-registry stand-ins).
+
+pub mod characterize;
+pub mod compiler;
+pub mod coordinator;
+pub mod drc;
+pub mod dse;
+pub mod layout;
+pub mod lvs;
+pub mod netlist;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tech;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result type (anyhow is in the offline registry closure).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,600 @@
+//! Layout-vs-schematic: device/connectivity extraction from flattened
+//! geometry, plus a graph-isomorphism-style netlist comparison.
+//!
+//! Extraction follows the drawing conventions of [`crate::layout::cells`]:
+//! * a transistor is a vertical gate stripe (poly / osgate) crossing a
+//!   horizontal conductor strip (active / oschannel); the strip is split
+//!   at each crossing into source/drain segments;
+//! * contacts connect {active|poly} <-> metal1; via1 connects m1 <-> m2;
+//!   via2 connects any of {m2, m3, oschannel, osgate} it overlaps;
+//! * device polarity comes from nwell coverage (Si) or the device
+//!   layers themselves (OS);
+//! * net names come from the top cell's pin shapes.
+
+use crate::layout::{Pin, Rect};
+use crate::netlist::{Circuit, Device};
+use crate::tech::{LayerRole, Tech};
+use std::collections::{BTreeMap, HashMap};
+
+/// An extracted transistor before net naming.
+#[derive(Debug, Clone)]
+struct RawMos {
+    s_node: usize,
+    g_node: usize,
+    d_node: usize,
+    card: &'static str,
+    w_over_l: f64,
+}
+
+/// Extraction result.
+#[derive(Debug)]
+pub struct Extracted {
+    pub circuit: Circuit,
+    pub net_count: usize,
+}
+
+/// Union-find.
+struct Uf(Vec<usize>);
+
+impl Uf {
+    fn new(n: usize) -> Uf {
+        Uf((0..n).collect())
+    }
+    fn find(&mut self, i: usize) -> usize {
+        let mut i = i;
+        while self.0[i] != i {
+            self.0[i] = self.0[self.0[i]];
+            i = self.0[i];
+        }
+        i
+    }
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.0[ra] = rb;
+        }
+    }
+}
+
+/// Extract a circuit from flattened rects + top-level pins.
+pub fn extract(tech: &Tech, rects: &[Rect], pins: &[Pin], name: &str) -> crate::Result<Extracted> {
+    let l = |r: LayerRole| tech.layer(r);
+    let poly = l(LayerRole::Poly);
+    let active = l(LayerRole::Active);
+    let m1 = l(LayerRole::Metal1);
+    let m2 = l(LayerRole::Metal2);
+    let m3 = l(LayerRole::Metal3);
+    let contact = l(LayerRole::Contact);
+    let via1 = l(LayerRole::Via1);
+    let os_ch = tech.has_role(LayerRole::OsChannel).then(|| l(LayerRole::OsChannel));
+    let os_gate = tech.has_role(LayerRole::OsGate).then(|| l(LayerRole::OsGate));
+    let via2 = tech.has_role(LayerRole::Via2).then(|| l(LayerRole::Via2));
+    let nwell = tech.has_role(LayerRole::Nwell).then(|| l(LayerRole::Nwell));
+
+    // --- split device strips at gate crossings -------------------------
+    let mut pieces: Vec<Rect> = Vec::new();
+    let mut devices: Vec<(Rect, Rect, bool)> = Vec::new(); // (strip, gate, is_os)
+
+    let gates_for = |strip: &Rect, gate_layer: usize| -> Vec<Rect> {
+        let mut g: Vec<Rect> = rects
+            .iter()
+            .filter(|r| r.layer == gate_layer && r.overlaps(strip) && r.h() > strip.h())
+            .copied()
+            .collect();
+        g.sort_by_key(|r| r.x0);
+        g
+    };
+
+    for r in rects {
+        if r.layer == active || Some(r.layer) == os_ch {
+            let gate_layer = if r.layer == active { poly } else { os_gate.unwrap() };
+            let gates = gates_for(r, gate_layer);
+            if gates.is_empty() {
+                pieces.push(*r);
+                continue;
+            }
+            let mut x = r.x0;
+            for gt in &gates {
+                if gt.x0 > x {
+                    pieces.push(Rect::new(r.layer, x, r.y0, gt.x0, r.y1));
+                }
+                devices.push((*r, *gt, r.layer != active));
+                x = gt.x1;
+            }
+            if x < r.x1 {
+                pieces.push(Rect::new(r.layer, x, r.y0, r.x1, r.y1));
+            }
+        } else {
+            pieces.push(*r);
+        }
+    }
+
+    // --- connectivity over pieces ---------------------------------------
+    let conductors: Vec<usize> = {
+        let mut v = vec![active, poly, m1, m2, m3];
+        if let Some(c) = os_ch {
+            v.push(c);
+        }
+        if let Some(g) = os_gate {
+            v.push(g);
+        }
+        v
+    };
+    let idx: Vec<usize> = pieces
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| conductors.contains(&r.layer))
+        .map(|(i, _)| i)
+        .collect();
+    let mut uf = Uf::new(pieces.len());
+    // same-layer touching (x-sorted sweep to bound pair checks)
+    let mut order = idx.clone();
+    order.sort_by_key(|&i| pieces[i].x0);
+    for (oi, &i) in order.iter().enumerate() {
+        for &j in order.iter().skip(oi + 1) {
+            if pieces[j].x0 > pieces[i].x1 {
+                break;
+            }
+            if pieces[i].layer == pieces[j].layer && pieces[i].touches(&pieces[j]) {
+                uf.union(i, j);
+            }
+        }
+    }
+    // cut layers
+    for r in rects {
+        let connected: Vec<usize> = if r.layer == contact {
+            vec![active, poly, m1]
+        } else if r.layer == via1 {
+            vec![m1, m2]
+        } else if Some(r.layer) == via2 {
+            let mut v = vec![m2, m3];
+            if let Some(c) = os_ch {
+                v.push(c);
+            }
+            if let Some(g) = os_gate {
+                v.push(g);
+            }
+            v
+        } else {
+            continue;
+        };
+        let mut touched: Vec<usize> = Vec::new();
+        for &i in &idx {
+            if connected.contains(&pieces[i].layer) && pieces[i].overlaps(r) {
+                touched.push(i);
+            }
+        }
+        for w in touched.windows(2) {
+            uf.union(w[0], w[1]);
+        }
+    }
+
+    // --- name nets from pins --------------------------------------------
+    let mut net_names: HashMap<usize, String> = HashMap::new();
+    for pin in pins {
+        for &i in &idx {
+            if pieces[i].layer == pin.rect.layer && pieces[i].touches(&pin.rect) {
+                let root = uf.find(i);
+                net_names.entry(root).or_insert_with(|| pin.name.clone());
+            }
+        }
+    }
+    let mut anon = 0usize;
+    let mut name_of = |root: usize, names: &mut HashMap<usize, String>| -> String {
+        if let Some(n) = names.get(&root) {
+            n.clone()
+        } else {
+            anon += 1;
+            let n = format!("n{anon}");
+            names.insert(root, n.clone());
+            n
+        }
+    };
+
+    // --- assemble devices --------------------------------------------------
+    let mut raw: Vec<RawMos> = Vec::new();
+    for (strip, gate, is_os) in &devices {
+        // nearest same-strip S/D piece left/right of the gate
+        let side = |left: bool| -> Option<usize> {
+            let mut best: Option<(i64, usize)> = None;
+            for &i in &idx {
+                let p = &pieces[i];
+                if p.layer != strip.layer || p.y0 != strip.y0 || p.y1 != strip.y1 {
+                    continue;
+                }
+                if p.x0 < strip.x0 || p.x1 > strip.x1 {
+                    continue;
+                }
+                let d = if left {
+                    if p.x1 > gate.x0 {
+                        continue;
+                    }
+                    gate.x0 - p.x1
+                } else {
+                    if p.x0 < gate.x1 {
+                        continue;
+                    }
+                    p.x0 - gate.x1
+                };
+                if best.map(|(bd, _)| d < bd).unwrap_or(true) {
+                    best = Some((d, i));
+                }
+            }
+            best.map(|(_, i)| i)
+        };
+        let (Some(s_i), Some(d_i)) = (side(true), side(false)) else {
+            anyhow::bail!("device at ({}, {}) lacks S/D pieces", gate.x0, strip.y0);
+        };
+        let g_i = idx
+            .iter()
+            .copied()
+            .find(|&i| pieces[i].layer == gate.layer && pieces[i].touches(gate))
+            .ok_or_else(|| anyhow::anyhow!("gate stripe not in conductor set"))?;
+        let card: &'static str = if *is_os {
+            "os_nmos"
+        } else {
+            let in_nwell = nwell
+                .map(|nw| rects.iter().any(|r| r.layer == nw && r.overlaps(strip)))
+                .unwrap_or(false);
+            if in_nwell {
+                "si_pmos"
+            } else {
+                "si_nmos"
+            }
+        };
+        let w = strip.h().min(gate.h()) as f64;
+        let len = gate.w() as f64;
+        raw.push(RawMos {
+            s_node: uf.find(s_i),
+            g_node: uf.find(g_i),
+            d_node: uf.find(d_i),
+            card,
+            w_over_l: w / len,
+        });
+    }
+
+    // --- build circuit -------------------------------------------------------
+    let mut c = Circuit::new(name, &[]);
+    c.ports = pins.iter().map(|p| p.name.clone()).collect::<Vec<_>>();
+    c.ports.dedup();
+    for (k, m) in raw.iter().enumerate() {
+        let s = name_of(m.s_node, &mut net_names);
+        let g = name_of(m.g_node, &mut net_names);
+        let d = name_of(m.d_node, &mut net_names);
+        c.mos(format!("m{k}"), &d, &g, &s, "gnd", m.card, m.w_over_l);
+    }
+    let roots: std::collections::BTreeSet<usize> = idx.iter().map(|&i| uf.find(i)).collect();
+    Ok(Extracted { circuit: c, net_count: roots.len() })
+}
+
+// ---------------------------------------------------------------------------
+// Comparison
+// ---------------------------------------------------------------------------
+
+/// LVS comparison report.
+#[derive(Debug)]
+pub struct CompareReport {
+    pub matched: bool,
+    pub detail: String,
+}
+
+/// Compare two *flat* circuits by iterative neighborhood refinement.
+/// Bulk terminals and exact internal net names are ignored; S/D are
+/// symmetric; W/L must agree within the 5 % bucket.
+pub fn compare(a: &Circuit, b: &Circuit) -> CompareReport {
+    let sig_a = signature(a);
+    let sig_b = signature(b);
+    if sig_a == sig_b {
+        CompareReport { matched: true, detail: "clean".into() }
+    } else {
+        let only_a: Vec<&String> = sig_a.keys().filter(|k| !sig_b.contains_key(*k)).collect();
+        let only_b: Vec<&String> = sig_b.keys().filter(|k| !sig_a.contains_key(*k)).collect();
+        CompareReport {
+            matched: false,
+            detail: format!(
+                "{} vs {} devices; unmatched classes layout={only_a:?} schematic={only_b:?}",
+                a.mos_count(),
+                b.mos_count()
+            ),
+        }
+    }
+}
+
+/// Canonical multiset of device signatures after color refinement.
+fn signature(c: &Circuit) -> BTreeMap<String, usize> {
+    let mut nets: BTreeMap<String, u64> = BTreeMap::new();
+    let mut mos: Vec<(&str, &str, &str, &str, f64)> = Vec::new();
+    for d in &c.devices {
+        if let Device::Mos { d, g, s, card, w_over_l, .. } = d {
+            for n in [d, g, s] {
+                nets.entry(n.clone()).or_insert(1);
+            }
+            mos.push((d, g, s, card, *w_over_l));
+        }
+    }
+    // port nets seed with their name so ports must correspond by name
+    for p in &c.ports {
+        if let Some(v) = nets.get_mut(p) {
+            *v = hash_str(p);
+        }
+    }
+    for _ in 0..8 {
+        let mut next: BTreeMap<String, u64> = BTreeMap::new();
+        for (net, col) in &nets {
+            let mut inc: Vec<u64> = Vec::new();
+            for (d, g, s, card, wl) in &mos {
+                let dev_col = device_color(&nets, d, g, s, card, *wl);
+                if d == net || s == net {
+                    inc.push(dev_col.wrapping_mul(3));
+                }
+                if g == net {
+                    inc.push(dev_col.wrapping_mul(7));
+                }
+            }
+            inc.sort_unstable();
+            let mut h = *col;
+            for v in inc {
+                h = h.wrapping_mul(0x100000001b3).wrapping_add(v);
+            }
+            next.insert(net.clone(), h);
+        }
+        nets = next;
+    }
+    let mut out: BTreeMap<String, usize> = BTreeMap::new();
+    for (d, g, s, card, wl) in &mos {
+        let col = device_color(&nets, d, g, s, card, *wl);
+        *out.entry(format!("{card}:{col:x}")).or_insert(0) += 1;
+    }
+    out
+}
+
+fn device_color(nets: &BTreeMap<String, u64>, d: &str, g: &str, s: &str, card: &str, wl: f64) -> u64 {
+    let mut sd = [nets[d], nets[s]];
+    sd.sort_unstable();
+    let wl_bucket = (wl * 20.0).round() as u64;
+    hash_str(card)
+        .wrapping_mul(31)
+        .wrapping_add(sd[0])
+        .wrapping_mul(31)
+        .wrapping_add(sd[1])
+        .wrapping_mul(31)
+        .wrapping_add(nets[g])
+        .wrapping_mul(31)
+        .wrapping_add(wl_bucket)
+}
+
+fn hash_str(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Full LVS: flatten layout, extract, compare against the schematic.
+pub fn check(
+    tech: &Tech,
+    lib: &crate::layout::Library,
+    cell: &str,
+    schematic: &Circuit,
+) -> crate::Result<CompareReport> {
+    let (rects, pins) = lib.flatten_with_pins(cell)?;
+    let ext = extract(tech, &rects, &pins, cell)?;
+    Ok(compare(&ext.circuit, schematic))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{cells, Library};
+    use crate::tech::sg40;
+
+    fn lvs_leaf(lc: cells::LeafCell) -> CompareReport {
+        let t = sg40();
+        let mut lib = Library::default();
+        let name = lc.layout.name.clone();
+        lib.add(lc.layout);
+        check(&t, &lib, &name, &lc.circuit).unwrap()
+    }
+
+    #[test]
+    fn bitcells_extract_clean() {
+        let t = sg40();
+        for lc in [
+            cells::gc2t_sisi(&t, false),
+            cells::gc2t_sisi(&t, true),
+            cells::sram6t(&t),
+            cells::gc2t_osos(&t),
+        ] {
+            let name = lc.layout.name.clone();
+            let rep = lvs_leaf(lc);
+            assert!(rep.matched, "{name}: {}", rep.detail);
+        }
+    }
+
+    #[test]
+    fn periphery_extracts_clean() {
+        let t = sg40();
+        for lc in [
+            cells::inverter(&t, 1.0),
+            cells::inverter(&t, 2.0),
+            cells::nand2(&t),
+            cells::sense_amp(&t),
+            cells::write_driver(&t),
+            cells::precharge(&t),
+            cells::predischarge(&t),
+            cells::level_shifter(&t),
+            cells::column_mux(&t),
+            cells::tgate(&t),
+        ] {
+            let name = lc.layout.name.clone();
+            let rep = lvs_leaf(lc);
+            assert!(rep.matched, "{name}: {}", rep.detail);
+        }
+    }
+
+    #[test]
+    fn composed_dff_extracts_clean() {
+        let t = sg40();
+        let mut lib = Library::default();
+        let d = crate::layout::compose::dff(&mut lib, &t).unwrap();
+        let mut nl = crate::netlist::Netlist::default();
+        nl.add(cells::inverter(&t, 1.0).circuit);
+        nl.add(cells::tgate(&t).circuit);
+        nl.add(d.circuit.clone());
+        nl.top = "dff".into();
+        let flat = nl.flatten().unwrap();
+        let rep = check(&t, &lib, "dff", &flat).unwrap();
+        assert!(rep.matched, "{}", rep.detail);
+    }
+
+    #[test]
+    fn detects_missing_device() {
+        let t = sg40();
+        let lc = cells::gc2t_sisi(&t, false);
+        let mut broken = lc.circuit.clone();
+        broken.devices.pop();
+        let mut lib = Library::default();
+        lib.add(lc.layout);
+        let rep = check(&t, &lib, "gc2t_sisi", &broken).unwrap();
+        assert!(!rep.matched);
+    }
+
+    #[test]
+    fn detects_wrong_connection() {
+        let t = sg40();
+        let lc = cells::gc2t_sisi(&t, false);
+        let mut broken = lc.circuit.clone();
+        if let Device::Mos { g, .. } = &mut broken.devices[1] {
+            *g = "wwl".into(); // read gate belongs on sn
+        }
+        let mut lib = Library::default();
+        lib.add(lc.layout);
+        let rep = check(&t, &lib, "gc2t_sisi", &broken).unwrap();
+        assert!(!rep.matched);
+    }
+
+    #[test]
+    fn detects_wrong_polarity() {
+        let t = sg40();
+        let lc = cells::gc2t_sisi(&t, false);
+        let mut broken = lc.circuit.clone();
+        if let Device::Mos { card, .. } = &mut broken.devices[1] {
+            *card = "si_nmos".into(); // layout draws a pmos read tx
+        }
+        let mut lib = Library::default();
+        lib.add(lc.layout);
+        let rep = check(&t, &lib, "gc2t_sisi", &broken).unwrap();
+        assert!(!rep.matched);
+    }
+}
+
+#[cfg(test)]
+mod debug_dump {
+    use super::*;
+    use crate::layout::{cells, Library};
+    use crate::tech::sg40;
+
+    #[test]
+    #[ignore]
+    fn dump_extracted() {
+        let t = sg40();
+        for lc in [cells::level_shifter(&t), cells::gc2t_osos(&t)] {
+            let mut lib = Library::default();
+            let name = lc.layout.name.clone();
+            lib.add(lc.layout);
+            let (rects, pins) = lib.flatten_with_pins(&name).unwrap();
+            let ext = extract(&t, &rects, &pins, &name).unwrap();
+            println!("== {name} extracted:");
+            let mut s = String::new();
+            crate::netlist::spice::emit_circuit(&ext.circuit, &mut s);
+            println!("{s}");
+            println!("-- schematic:");
+            let mut s2 = String::new();
+            crate::netlist::spice::emit_circuit(&lc.circuit, &mut s2);
+            println!("{s2}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod probe {
+    use super::*;
+    use crate::layout::{cells, Library};
+    use crate::tech::sg40;
+
+    #[test]
+    #[ignore]
+    fn find_bridge() {
+        let t = sg40();
+        let lc = cells::level_shifter(&t);
+        let mut lib = Library::default();
+        lib.add(lc.layout);
+        let (rects, _pins) = lib.flatten_with_pins("level_shifter").unwrap();
+        // out pin rect center (mp2.d.x, T2); outb track center
+        // brute force: BFS from the 'out' pin rect over touching/cut
+        // connectivity, print each newly reached rect
+        let m2 = t.layer(crate::tech::LayerRole::Metal2);
+        let start = Rect::new(m2, 910, 450, 990, 510);
+        let mut frontier = vec![start];
+        let mut seen: Vec<Rect> = vec![start];
+        let cut_layers = [t.layer(crate::tech::LayerRole::Contact), t.layer(crate::tech::LayerRole::Via1)];
+        let m1 = t.layer(crate::tech::LayerRole::Metal1);
+        while let Some(cur) = frontier.pop() {
+            for r in &rects {
+                if seen.contains(r) { continue; }
+                let connected = if r.layer == cur.layer && r.touches(&cur) {
+                    true
+                } else if cut_layers.contains(&r.layer) && r.overlaps(&cur) {
+                    true
+                } else if cut_layers.contains(&cur.layer) && cur.overlaps(r) && (r.layer == m1 || r.layer == m2 || r.layer == t.layer(crate::tech::LayerRole::Poly) || r.layer == t.layer(crate::tech::LayerRole::Active)) {
+                    true
+                } else { false };
+                if connected {
+                    println!("reach {:?} {} via {:?}", t.layers[r.layer].name, format!("({},{})..({},{})", r.x0, r.y0, r.x1, r.y1), (cur.x0, cur.y0, t.layers[cur.layer].name));
+                    seen.push(*r);
+                    frontier.push(*r);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod probe_os {
+    use super::*;
+    use crate::layout::{cells, Library};
+    use crate::tech::sg40;
+
+    #[test]
+    #[ignore]
+    fn os_groups() {
+        let t = sg40();
+        let lc = cells::gc2t_osos(&t);
+        let mut lib = Library::default();
+        lib.add(lc.layout);
+        let (rects, _p) = lib.flatten_with_pins("gc2t_osos").unwrap();
+        let m2 = t.layer(crate::tech::LayerRole::Metal2);
+        let m3 = t.layer(crate::tech::LayerRole::Metal3);
+        let osg = t.layer(crate::tech::LayerRole::OsGate);
+        let v2 = t.layer(crate::tech::LayerRole::Via2);
+        // BFS from the write-gate column
+        let start = Rect::new(osg, 200, 145, 250, 245);
+        let mut frontier = vec![start];
+        let mut seen = vec![start];
+        while let Some(cur) = frontier.pop() {
+            for r in &rects {
+                if seen.contains(r) { continue; }
+                let conn = if r.layer == cur.layer && r.touches(&cur) { true }
+                else if r.layer == v2 && (cur.layer == m2 || cur.layer == m3 || cur.layer == osg || t.layers[cur.layer].name == "oschannel") && r.overlaps(&cur) { true }
+                else if cur.layer == v2 && (r.layer == m2 || r.layer == m3 || r.layer == osg || t.layers[r.layer].name == "oschannel") && cur.overlaps(r) { true }
+                else { false };
+                if conn {
+                    println!("reach {} ({},{})..({},{})", t.layers[r.layer].name, r.x0, r.y0, r.x1, r.y1);
+                    seen.push(*r); frontier.push(*r);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! OpenGCRAM-RS command-line interface (hand-rolled args; clap is not
+//! in the offline registry).
+//!
+//!   opengcram compile  --word 32 --words 32 [--flavor gc-np|gc-nn|os|sram]
+//!                      [--wwlls] [--gds out.gds] [--spice out.sp]
+//!   opengcram char     ... (adds transient characterization; needs artifacts/)
+//!   opengcram dse      --level l1|l2 --machine h100|gt520m
+
+use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::runtime::Runtime;
+use opengcram::tech::sg40;
+use opengcram::util::eng;
+use opengcram::{characterize, dse, report, workloads};
+use std::path::Path;
+
+fn parse_flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn flavor_of(s: &str) -> CellFlavor {
+    match s {
+        "sram" => CellFlavor::Sram6t,
+        "gc-nn" => CellFlavor::GcSiSiNn,
+        "os" => CellFlavor::GcOsOs,
+        _ => CellFlavor::GcSiSiNp,
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> opengcram::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let tech = sg40();
+    match cmd {
+        "compile" | "char" => {
+            let word: usize = parse_flag(&args, "--word").and_then(|v| v.parse().ok()).unwrap_or(32);
+            let words: usize = parse_flag(&args, "--words").and_then(|v| v.parse().ok()).unwrap_or(32);
+            let flavor = flavor_of(&parse_flag(&args, "--flavor").unwrap_or_default());
+            let mut cfg = Config::new(word, words, flavor);
+            cfg.wwlls = has_flag(&args, "--wwlls");
+            let bank = compile(&tech, &cfg)?;
+            println!(
+                "bank {}x{} {:?}: rows={} cols={} mux={} area={} um^2 (array {} um^2, eff {:.1} %)",
+                word,
+                words,
+                flavor,
+                cfg.rows(),
+                cfg.cols(),
+                cfg.mux_factor(),
+                report::um2(bank.layout.total_area_um2()),
+                report::um2(bank.layout.array_area_um2()),
+                100.0 * bank.layout.array_efficiency()
+            );
+            if let Some(path) = parse_flag(&args, "--gds") {
+                opengcram::layout::gds::write_file(&bank.library, &tech, "opengcram", Path::new(&path))?;
+                println!("wrote {path}");
+            }
+            if let Some(path) = parse_flag(&args, "--spice") {
+                std::fs::write(&path, opengcram::netlist::spice::emit(&bank.netlist))?;
+                println!("wrote {path}");
+            }
+            let a = characterize::analytical(&tech, &bank);
+            println!(
+                "analytical: f_op {}  bw {:.1} Gb/s  leak {}",
+                eng(a.f_op_hz, "Hz"),
+                a.bandwidth_bps / 1e9,
+                eng(a.leakage_w, "W")
+            );
+            if cmd == "char" {
+                let rt = Runtime::load(Path::new("artifacts"))?;
+                let c = characterize::characterize(&tech, &rt, &bank)?;
+                println!(
+                    "transient:  f_op {}  retention {}  stored1 {:.3} V  functional {}",
+                    eng(c.f_op_hz, "Hz"),
+                    eng(c.retention_s, "s"),
+                    c.stored_one_v,
+                    c.functional
+                );
+            }
+        }
+        "dse" => {
+            let rt = Runtime::load(Path::new("artifacts"))?;
+            let machine = match parse_flag(&args, "--machine").as_deref() {
+                Some("gt520m") => &workloads::GT520M,
+                _ => &workloads::H100,
+            };
+            let level = match parse_flag(&args, "--level").as_deref() {
+                Some("l2") => workloads::CacheLevel::L2,
+                _ => workloads::CacheLevel::L1,
+            };
+            let mut table = report::Table::new(&["task", "demand MHz", "16", "32", "64", "96", "128"]);
+            let evals: Vec<dse::Evaluated> = dse::fig10_configs(CellFlavor::GcSiSiNp)
+                .into_iter()
+                .map(|cfg| {
+                    let bank = compile(&tech, &cfg)?;
+                    let perf = characterize::characterize(&tech, &rt, &bank)?;
+                    Ok(dse::Evaluated { config: cfg, perf, area_um2: bank.layout.total_area_um2() })
+                })
+                .collect::<opengcram::Result<_>>()?;
+            for task in &workloads::TASKS {
+                let d = workloads::profile(task, level, machine);
+                let mut row = vec![task.name.to_string(), report::mhz(d.read_freq_hz)];
+                for e in &evals {
+                    row.push(dse::shmoo_verdict(e, &d).glyph().to_string());
+                }
+                table.row(&row);
+            }
+            println!("{}", table.render());
+            println!("P=pass f=too slow r=retention x=no margin (Fig. 10, {} {:?})", machine.name, level);
+        }
+        _ => {
+            println!("usage: opengcram <compile|char|dse> [flags] — see README.md");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,368 @@
+//! SPICE netlist IR: hierarchical circuits, flattening, diffing, and a
+//! SPICE-text emitter/parser ([`spice`]).
+//!
+//! Net and instance names are plain strings; hierarchy flattening uses
+//! `inst.net` dotted names like OpenRAM's trimmed netlists.  Ports
+//! connect positionally, SPICE-style.
+
+pub mod spice;
+
+use std::collections::BTreeMap;
+
+/// A primitive device instance.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Device {
+    /// MOSFET: drain, gate, source, bulk + card name + geometry.
+    Mos {
+        name: String,
+        d: String,
+        g: String,
+        s: String,
+        b: String,
+        card: String,
+        w_over_l: f64,
+    },
+    Res {
+        name: String,
+        a: String,
+        b: String,
+        ohms: f64,
+    },
+    Cap {
+        name: String,
+        a: String,
+        b: String,
+        farads: f64,
+    },
+    /// Subcircuit instance: pins connect positionally to the
+    /// referenced circuit's ports.
+    Inst {
+        name: String,
+        cell: String,
+        pins: Vec<String>,
+    },
+}
+
+impl Device {
+    pub fn name(&self) -> &str {
+        match self {
+            Device::Mos { name, .. }
+            | Device::Res { name, .. }
+            | Device::Cap { name, .. }
+            | Device::Inst { name, .. } => name,
+        }
+    }
+}
+
+/// One circuit (SPICE .subckt).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Circuit {
+    pub name: String,
+    pub ports: Vec<String>,
+    pub devices: Vec<Device>,
+}
+
+impl Circuit {
+    pub fn new(name: impl Into<String>, ports: &[&str]) -> Circuit {
+        Circuit {
+            name: name.into(),
+            ports: ports.iter().map(|s| s.to_string()).collect(),
+            devices: Vec::new(),
+        }
+    }
+
+    pub fn mos(
+        &mut self,
+        name: impl Into<String>,
+        d: &str,
+        g: &str,
+        s: &str,
+        b: &str,
+        card: &str,
+        w_over_l: f64,
+    ) {
+        self.devices.push(Device::Mos {
+            name: name.into(),
+            d: d.into(),
+            g: g.into(),
+            s: s.into(),
+            b: b.into(),
+            card: card.into(),
+            w_over_l,
+        });
+    }
+
+    pub fn cap(&mut self, name: impl Into<String>, a: &str, b: &str, farads: f64) {
+        self.devices.push(Device::Cap { name: name.into(), a: a.into(), b: b.into(), farads });
+    }
+
+    pub fn res(&mut self, name: impl Into<String>, a: &str, b: &str, ohms: f64) {
+        self.devices.push(Device::Res { name: name.into(), a: a.into(), b: b.into(), ohms });
+    }
+
+    pub fn inst(&mut self, name: impl Into<String>, cell: &str, pins: &[&str]) {
+        self.devices.push(Device::Inst {
+            name: name.into(),
+            cell: cell.into(),
+            pins: pins.iter().map(|s| s.to_string()).collect(),
+        });
+    }
+
+    pub fn inst_owned(&mut self, name: impl Into<String>, cell: &str, pins: Vec<String>) {
+        self.devices.push(Device::Inst { name: name.into(), cell: cell.into(), pins });
+    }
+
+    /// Count primitive devices (non-recursive).
+    pub fn primitive_count(&self) -> usize {
+        self.devices.iter().filter(|d| !matches!(d, Device::Inst { .. })).count()
+    }
+
+    pub fn mos_count(&self) -> usize {
+        self.devices.iter().filter(|d| matches!(d, Device::Mos { .. })).count()
+    }
+}
+
+/// A library of circuits with a designated top.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub cells: BTreeMap<String, Circuit>,
+    pub top: String,
+}
+
+impl Netlist {
+    pub fn add(&mut self, c: Circuit) {
+        self.cells.insert(c.name.clone(), c);
+    }
+
+    pub fn top_circuit(&self) -> Option<&Circuit> {
+        self.cells.get(&self.top)
+    }
+
+    /// Fully flatten `top` into a circuit of primitives only.
+    /// Internal nets of instance `x1` become `x1.<net>`.
+    pub fn flatten(&self) -> crate::Result<Circuit> {
+        let top = self
+            .cells
+            .get(&self.top)
+            .ok_or_else(|| anyhow::anyhow!("top cell '{}' not found", self.top))?;
+        let mut out = Circuit::new(format!("{}_flat", top.name), &[]);
+        out.ports = top.ports.clone();
+        let mut stack: Vec<String> = vec![self.top.clone()];
+        self.flatten_into(top, "", &mut out, &mut stack)?;
+        Ok(out)
+    }
+
+    fn flatten_into(
+        &self,
+        c: &Circuit,
+        prefix: &str,
+        out: &mut Circuit,
+        stack: &mut Vec<String>,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(stack.len() <= 64, "hierarchy too deep (cycle?): {stack:?}");
+        let map_net = |n: &str, port_map: Option<&BTreeMap<String, String>>| -> String {
+            if let Some(pm) = port_map {
+                if let Some(mapped) = pm.get(n) {
+                    return mapped.clone();
+                }
+            }
+            if prefix.is_empty() {
+                n.to_string()
+            } else {
+                format!("{prefix}.{n}")
+            }
+        };
+        for d in &c.devices {
+            match d {
+                Device::Inst { name, cell, pins } => {
+                    let sub = self
+                        .cells
+                        .get(cell)
+                        .ok_or_else(|| anyhow::anyhow!("instance {name}: cell '{cell}' not found"))?;
+                    anyhow::ensure!(
+                        sub.ports.len() == pins.len(),
+                        "instance {name} of {cell}: {} pins vs {} ports",
+                        pins.len(),
+                        sub.ports.len()
+                    );
+                    // map sub's ports to this level's nets
+                    let pm: BTreeMap<String, String> = sub
+                        .ports
+                        .iter()
+                        .cloned()
+                        .zip(pins.iter().map(|p| map_net(p, None)))
+                        .collect();
+                    let sub_prefix = if prefix.is_empty() {
+                        name.clone()
+                    } else {
+                        format!("{prefix}.{name}")
+                    };
+                    stack.push(cell.clone());
+                    self.flatten_inst(sub, &sub_prefix, &pm, out, stack)?;
+                    stack.pop();
+                }
+                prim => out.devices.push(rename_prim(prim, prefix, &|n| map_net(n, None))),
+            }
+        }
+        Ok(())
+    }
+
+    fn flatten_inst(
+        &self,
+        c: &Circuit,
+        prefix: &str,
+        port_map: &BTreeMap<String, String>,
+        out: &mut Circuit,
+        stack: &mut Vec<String>,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(stack.len() <= 64, "hierarchy too deep (cycle?): {stack:?}");
+        let map_net = |n: &str| -> String {
+            if let Some(mapped) = port_map.get(n) {
+                mapped.clone()
+            } else {
+                format!("{prefix}.{n}")
+            }
+        };
+        for d in &c.devices {
+            match d {
+                Device::Inst { name, cell, pins } => {
+                    let sub = self
+                        .cells
+                        .get(cell)
+                        .ok_or_else(|| anyhow::anyhow!("instance {name}: cell '{cell}' not found"))?;
+                    anyhow::ensure!(
+                        sub.ports.len() == pins.len(),
+                        "instance {name} of {cell}: {} pins vs {} ports",
+                        pins.len(),
+                        sub.ports.len()
+                    );
+                    let pm: BTreeMap<String, String> = sub
+                        .ports
+                        .iter()
+                        .cloned()
+                        .zip(pins.iter().map(|p| map_net(p)))
+                        .collect();
+                    let sub_prefix = format!("{prefix}.{name}");
+                    stack.push(cell.clone());
+                    self.flatten_inst(sub, &sub_prefix, &pm, out, stack)?;
+                    stack.pop();
+                }
+                prim => out.devices.push(rename_prim(prim, prefix, &map_net)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Total primitive count after (virtual) flattening.
+    pub fn flat_device_count(&self) -> crate::Result<usize> {
+        Ok(self.flatten()?.devices.len())
+    }
+}
+
+fn rename_prim(d: &Device, prefix: &str, map_net: &dyn Fn(&str) -> String) -> Device {
+    let pname = |n: &str| {
+        if prefix.is_empty() {
+            n.to_string()
+        } else {
+            format!("{prefix}.{n}")
+        }
+    };
+    match d {
+        Device::Mos { name, d, g, s, b, card, w_over_l } => Device::Mos {
+            name: pname(name),
+            d: map_net(d),
+            g: map_net(g),
+            s: map_net(s),
+            b: map_net(b),
+            card: card.clone(),
+            w_over_l: *w_over_l,
+        },
+        Device::Res { name, a, b, ohms } => Device::Res {
+            name: pname(name),
+            a: map_net(a),
+            b: map_net(b),
+            ohms: *ohms,
+        },
+        Device::Cap { name, a, b, farads } => Device::Cap {
+            name: pname(name),
+            a: map_net(a),
+            b: map_net(b),
+            farads: *farads,
+        },
+        Device::Inst { .. } => unreachable!("instances handled by caller"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inv() -> Circuit {
+        let mut c = Circuit::new("inv", &["a", "y", "vdd", "gnd"]);
+        c.mos("mp", "y", "a", "vdd", "vdd", "si_pmos", 2.0);
+        c.mos("mn", "y", "a", "gnd", "gnd", "si_nmos", 1.0);
+        c
+    }
+
+    #[test]
+    fn flatten_two_levels() {
+        let mut nl = Netlist::default();
+        nl.add(inv());
+        let mut buf = Circuit::new("buf", &["a", "y", "vdd", "gnd"]);
+        buf.inst("x1", "inv", &["a", "mid", "vdd", "gnd"]);
+        buf.inst("x2", "inv", &["mid", "y", "vdd", "gnd"]);
+        nl.add(buf);
+        let mut top = Circuit::new("top", &["in", "out", "vdd", "gnd"]);
+        top.inst("xb", "buf", &["in", "out", "vdd", "gnd"]);
+        nl.add(top);
+        nl.top = "top".into();
+
+        let flat = nl.flatten().unwrap();
+        assert_eq!(flat.devices.len(), 4);
+        // port nets survive, internal nets are dotted
+        let nets: Vec<String> = flat
+            .devices
+            .iter()
+            .filter_map(|d| match d {
+                Device::Mos { d, .. } => Some(d.clone()),
+                _ => None,
+            })
+            .collect();
+        assert!(nets.contains(&"xb.mid".to_string()), "{nets:?}");
+        assert!(nets.contains(&"out".to_string()));
+    }
+
+    #[test]
+    fn flatten_detects_missing_cell() {
+        let mut nl = Netlist::default();
+        let mut top = Circuit::new("top", &[]);
+        top.inst("x1", "nope", &[]);
+        nl.add(top);
+        nl.top = "top".into();
+        assert!(nl.flatten().is_err());
+    }
+
+    #[test]
+    fn flatten_detects_pin_mismatch() {
+        let mut nl = Netlist::default();
+        nl.add(inv());
+        let mut top = Circuit::new("top", &[]);
+        top.inst("x1", "inv", &["a", "y"]); // wrong arity
+        nl.add(top);
+        nl.top = "top".into();
+        assert!(nl.flatten().is_err());
+    }
+
+    #[test]
+    fn flatten_preserves_device_count() {
+        let mut nl = Netlist::default();
+        nl.add(inv());
+        let mut arr = Circuit::new("arr", &["vdd", "gnd"]);
+        for i in 0..10 {
+            arr.inst(format!("x{i}"), "inv", &["in", "out", "vdd", "gnd"]);
+        }
+        nl.add(arr);
+        nl.top = "arr".into();
+        assert_eq!(nl.flat_device_count().unwrap(), 20);
+    }
+}

@@ -1,0 +1,252 @@
+//! SPICE text emitter and a parser for importing custom cells
+//! (OpenRAM's "users can import customized memory cells" flow,
+//! paper §III-A).
+//!
+//! Emitted format: one `.subckt` per circuit, `M`/`R`/`C`/`X` cards,
+//! `W/L` expressed as a dimensionless `wl=` parameter matched to the
+//! device-card convention.  The parser accepts the same dialect plus
+//! `+` continuation lines, `*` comments, and unit suffixes
+//! (f, p, n, u, m, k, meg, g).
+
+use super::{Circuit, Device, Netlist};
+
+/// Emit a whole netlist (referenced cells first, top last).
+pub fn emit(nl: &Netlist) -> String {
+    let mut out = String::new();
+    out.push_str("* OpenGCRAM-RS generated netlist\n");
+    // deterministic order: non-top cells alphabetically, then top
+    for (name, c) in &nl.cells {
+        if *name != nl.top {
+            emit_circuit(c, &mut out);
+        }
+    }
+    if let Some(top) = nl.cells.get(&nl.top) {
+        emit_circuit(top, &mut out);
+    }
+    out
+}
+
+pub fn emit_circuit(c: &Circuit, out: &mut String) {
+    out.push_str(&format!(".subckt {} {}\n", c.name, c.ports.join(" ")));
+    for d in &c.devices {
+        match d {
+            Device::Mos { name, d, g, s, b, card, w_over_l } => {
+                out.push_str(&format!("M{name} {d} {g} {s} {b} {card} wl={w_over_l}\n"));
+            }
+            Device::Res { name, a, b, ohms } => {
+                out.push_str(&format!("R{name} {a} {b} {}\n", fmt_si(*ohms)));
+            }
+            Device::Cap { name, a, b, farads } => {
+                out.push_str(&format!("C{name} {a} {b} {}\n", fmt_si(*farads)));
+            }
+            Device::Inst { name, cell, pins } => {
+                out.push_str(&format!("X{name} {} {cell}\n", pins.join(" ")));
+            }
+        }
+    }
+    out.push_str(&format!(".ends {}\n", c.name));
+}
+
+/// SI-suffixed value formatter for R/C cards.
+fn fmt_si(v: f64) -> String {
+    let (s, suf) = if v == 0.0 {
+        (0.0, "")
+    } else {
+        let a = v.abs();
+        if a >= 1e9 {
+            (v / 1e9, "g")
+        } else if a >= 1e6 {
+            (v / 1e6, "meg")
+        } else if a >= 1e3 {
+            (v / 1e3, "k")
+        } else if a >= 1.0 {
+            (v, "")
+        } else if a >= 1e-3 {
+            (v * 1e3, "m")
+        } else if a >= 1e-6 {
+            (v * 1e6, "u")
+        } else if a >= 1e-9 {
+            (v * 1e9, "n")
+        } else if a >= 1e-12 {
+            (v * 1e12, "p")
+        } else {
+            (v * 1e15, "f")
+        }
+    };
+    format!("{s}{suf}")
+}
+
+/// Parse an SI-suffixed number ("4.5p", "10k", "2meg").
+pub fn parse_si(s: &str) -> Option<f64> {
+    let low = s.to_ascii_lowercase();
+    let (num, mult) = if let Some(p) = low.strip_suffix("meg") {
+        (p, 1e6)
+    } else if let Some(p) = low.strip_suffix('f') {
+        (p, 1e-15)
+    } else if let Some(p) = low.strip_suffix('p') {
+        (p, 1e-12)
+    } else if let Some(p) = low.strip_suffix('n') {
+        (p, 1e-9)
+    } else if let Some(p) = low.strip_suffix('u') {
+        (p, 1e-6)
+    } else if let Some(p) = low.strip_suffix('m') {
+        (p, 1e-3)
+    } else if let Some(p) = low.strip_suffix('k') {
+        (p, 1e3)
+    } else if let Some(p) = low.strip_suffix('g') {
+        (p, 1e9)
+    } else {
+        (low.as_str(), 1.0)
+    };
+    num.parse::<f64>().ok().map(|v| v * mult)
+}
+
+/// Parse SPICE text into a [`Netlist`] (top = last .subckt).
+pub fn parse(text: &str) -> crate::Result<Netlist> {
+    let mut nl = Netlist::default();
+    let mut cur: Option<Circuit> = None;
+
+    // join continuation lines
+    let mut lines: Vec<String> = Vec::new();
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.starts_with('+') {
+            if let Some(last) = lines.last_mut() {
+                last.push(' ');
+                last.push_str(line.trim_start_matches('+'));
+            }
+        } else {
+            lines.push(line.to_string());
+        }
+    }
+
+    for (ln, line) in lines.iter().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('*') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let kw = toks[0].to_ascii_lowercase();
+        if kw == ".subckt" {
+            anyhow::ensure!(cur.is_none(), "line {}: nested .subckt", ln + 1);
+            anyhow::ensure!(toks.len() >= 2, "line {}: .subckt needs a name", ln + 1);
+            let mut c = Circuit::new(toks[1], &[]);
+            c.ports = toks[2..].iter().map(|s| s.to_string()).collect();
+            cur = Some(c);
+        } else if kw.starts_with(".ends") {
+            let c = cur.take().ok_or_else(|| anyhow::anyhow!("line {}: .ends without .subckt", ln + 1))?;
+            nl.top = c.name.clone();
+            nl.add(c);
+        } else if let Some(c) = cur.as_mut() {
+            parse_card(c, &toks, ln + 1)?;
+        } else {
+            anyhow::bail!("line {}: device card outside .subckt: {line}", ln + 1);
+        }
+    }
+    anyhow::ensure!(cur.is_none(), "unterminated .subckt");
+    Ok(nl)
+}
+
+fn parse_card(c: &mut Circuit, toks: &[&str], ln: usize) -> crate::Result<()> {
+    let head = toks[0];
+    let kind = head.chars().next().unwrap().to_ascii_uppercase();
+    let name = &head[1..];
+    match kind {
+        'M' => {
+            anyhow::ensure!(toks.len() >= 6, "line {ln}: MOS card needs d g s b model");
+            let mut wl = 1.0;
+            for t in &toks[6..] {
+                if let Some(v) = t.to_ascii_lowercase().strip_prefix("wl=") {
+                    wl = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("line {ln}: bad wl= value"))?;
+                }
+            }
+            c.mos(name, toks[1], toks[2], toks[3], toks[4], toks[5], wl);
+        }
+        'R' => {
+            anyhow::ensure!(toks.len() >= 4, "line {ln}: R card needs a b value");
+            let v = parse_si(toks[3]).ok_or_else(|| anyhow::anyhow!("line {ln}: bad R value"))?;
+            c.res(name, toks[1], toks[2], v);
+        }
+        'C' => {
+            anyhow::ensure!(toks.len() >= 4, "line {ln}: C card needs a b value");
+            let v = parse_si(toks[3]).ok_or_else(|| anyhow::anyhow!("line {ln}: bad C value"))?;
+            c.cap(name, toks[1], toks[2], v);
+        }
+        'X' => {
+            anyhow::ensure!(toks.len() >= 2, "line {ln}: X card needs pins + cell");
+            let cell = toks[toks.len() - 1];
+            let pins: Vec<&str> = toks[1..toks.len() - 1].to_vec();
+            c.inst(name, cell, &pins);
+        }
+        _ => anyhow::bail!("line {ln}: unsupported card '{head}'"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Netlist {
+        let mut nl = Netlist::default();
+        let mut c = Circuit::new("gc2t", &["wbl", "wwl", "rbl", "rwl", "gnd"]);
+        c.mos("mw", "sn", "wwl", "wbl", "gnd", "si_nmos", 2.0);
+        c.mos("mr", "rbl", "sn", "rwl", "gnd", "si_pmos", 2.0);
+        c.cap("csn", "sn", "gnd", 1.2e-15);
+        nl.add(c);
+        nl.top = "gc2t".into();
+        nl
+    }
+
+    #[test]
+    fn roundtrip() {
+        let nl = sample();
+        let text = emit(&nl);
+        let back = parse(&text).unwrap();
+        assert_eq!(back.top, "gc2t");
+        let c = back.top_circuit().unwrap();
+        assert_eq!(c.ports, nl.top_circuit().unwrap().ports);
+        assert_eq!(c.devices, nl.top_circuit().unwrap().devices);
+    }
+
+    #[test]
+    fn si_suffixes() {
+        assert_eq!(parse_si("1.5k").unwrap(), 1500.0);
+        assert_eq!(parse_si("2meg").unwrap(), 2e6);
+        assert!((parse_si("4.5p").unwrap() - 4.5e-12).abs() < 1e-24);
+        assert!((parse_si("1.2f").unwrap() - 1.2e-15).abs() < 1e-27);
+        assert_eq!(parse_si("10").unwrap(), 10.0);
+        assert!(parse_si("abc").is_none());
+    }
+
+    #[test]
+    fn continuation_and_comments() {
+        let text = "* hello\n.subckt t a b\nMx1 a b\n+ 0 0 si_nmos wl=3\n.ends t\n";
+        let nl = parse(text).unwrap();
+        let c = nl.top_circuit().unwrap();
+        match &c.devices[0] {
+            Device::Mos { w_over_l, card, .. } => {
+                assert_eq!(*w_over_l, 3.0);
+                assert_eq!(card, "si_nmos");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse(".subckt a\nMx a\n.ends").is_err());
+        assert!(parse("Mx a b c d m").is_err());
+        assert!(parse(".subckt a b\n").is_err());
+        assert!(parse(".subckt a\nQ1 a b c\n.ends").is_err());
+    }
+
+    #[test]
+    fn emit_is_deterministic() {
+        let a = emit(&sample());
+        let b = emit(&sample());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,109 @@
+//! Table / figure renderers: ASCII tables for the terminal and CSV
+//! series matching the paper's figures (the benches tee these).
+
+use std::fmt::Write as _;
+
+/// Simple fixed-width ASCII table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "| {:width$} ", c, width = widths[i]);
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out, &self.headers);
+        for (i, w) in widths.iter().enumerate() {
+            let _ = write!(out, "|{}", "-".repeat(w + 2));
+            if i == widths.len() - 1 {
+                out.push_str("|\n");
+            }
+        }
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+}
+
+/// CSV writer for figure series.
+pub fn csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = headers.join(",");
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format helpers used across benches.
+pub fn mhz(f_hz: f64) -> String {
+    format!("{:.1}", f_hz / 1e6)
+}
+
+pub fn gbps(bps: f64) -> String {
+    format!("{:.2}", bps / 8e9)
+}
+
+pub fn um2(a: f64) -> String {
+    format!("{:.0}", a)
+}
+
+pub fn sci(v: f64) -> String {
+    if !v.is_finite() {
+        return "inf".into();
+    }
+    format!("{v:.3e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["size", "freq"]);
+        t.row(&["1 Kb".into(), "812.0".into()]);
+        t.row(&["16 Kb".into(), "401.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| size"));
+        assert!(s.lines().count() == 4);
+        let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn csv_shape() {
+        let s = csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(s, "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

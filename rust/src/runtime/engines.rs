@@ -1,0 +1,341 @@
+//! Typed batched entry points over the AOT artifacts.
+//!
+//! Each function pads the design-point list to the artifact batch size,
+//! assembles the input tensors per the manifest's param/stim/node
+//! layouts (column names, never hard-coded indices) and parses the
+//! output tuple back into per-design results.
+
+use super::stimulus as st;
+use super::{Runtime, Tensor};
+use crate::tech::DeviceCard;
+
+/// One write-path design point.
+#[derive(Debug, Clone)]
+pub struct WritePoint {
+    pub write_card: DeviceCard,
+    pub write_wl: f64,
+    pub drv_p: (DeviceCard, f64),
+    pub drv_n: (DeviceCard, f64),
+    pub c_sn: f64,
+    pub c_wbl: f64,
+    pub c_wwl_sn: f64,
+    pub g_wbl_leak: f64,
+    pub vdd: f64,
+    /// WWL high level (vdd, or vdd + boost with WWLLS).
+    pub v_wwl: f64,
+    /// true: write '1' (dinb low); false: write '0'.
+    pub one: bool,
+    /// initial SN level (previous stored value).
+    pub sn0: f64,
+}
+
+/// Write-path result.
+#[derive(Debug, Clone, Copy)]
+pub struct WriteResult {
+    /// Stored level after the WWL fall (includes coupling droop).
+    pub sn_final: f64,
+    /// Write completion time (s).
+    pub t_wr: f64,
+    pub sn_peak: f64,
+}
+
+/// Run the write artifact over design points (padded to batch).
+pub fn write_op(rt: &Runtime, pts: &[WritePoint], window_s: f64) -> crate::Result<Vec<WriteResult>> {
+    let meta = rt.manifest.get("write")?.clone();
+    let (b, nf, ns, np, steps) = (meta.batch, meta.nf(), meta.ns(), meta.npar(), meta.steps);
+    anyhow::ensure!(pts.len() <= b, "batch overflow: {} > {b}", pts.len());
+
+    let mut params = Tensor::zeros(vec![b as i64, np as i64]);
+    let mut cinv = Tensor::zeros(vec![b as i64, nf as i64]);
+    let mut amp = Tensor::zeros(vec![b as i64, ns as i64]);
+    let mut v0 = Tensor::zeros(vec![b as i64, nf as i64]);
+
+    let set_card = |t: &mut Tensor, row: usize, base: usize, card: &DeviceCard, wl: f64| {
+        for (k, v) in card.to_row(wl).iter().enumerate() {
+            t.set2(row, base + k, *v);
+        }
+    };
+    let p_mwr = meta.pcol("mwr.kp")?;
+    let p_drvp = meta.pcol("mdrvp.kp")?;
+    let p_drvn = meta.pcol("mdrvn.kp")?;
+    let p_cc = meta.pcol("cwwl_sn.c")?;
+    let p_gl = meta.pcol("gwbl.g")?;
+    let (s_wwl, s_dinb, s_vdd) = (meta.stim("wwl")?, meta.stim("dinb")?, meta.stim("vdd")?);
+    let (n_sn, n_wbl) = (meta.free("sn")?, meta.free("wbl")?);
+
+    for (i, pt) in pts.iter().enumerate() {
+        set_card(&mut params, i, p_mwr, &pt.write_card, pt.write_wl);
+        set_card(&mut params, i, p_drvp, &pt.drv_p.0, pt.drv_p.1);
+        set_card(&mut params, i, p_drvn, &pt.drv_n.0, pt.drv_n.1);
+        params.set2(i, p_cc, pt.c_wwl_sn as f32);
+        params.set2(i, p_gl, pt.g_wbl_leak as f32);
+        cinv.set2(i, n_sn, (1.0 / pt.c_sn) as f32);
+        cinv.set2(i, n_wbl, (1.0 / pt.c_wbl) as f32);
+        amp.set2(i, s_wwl, pt.v_wwl as f32);
+        amp.set2(i, s_dinb, if pt.one { 0.0 } else { pt.vdd as f32 });
+        amp.set2(i, s_vdd, pt.vdd as f32);
+        v0.set2(i, n_sn, pt.sn0 as f32);
+    }
+    // pad rows keep zero cinv=0 -> pinned; harmless
+    for i in pts.len()..b {
+        cinv.set2(i, n_sn, 1e15);
+        cinv.set2(i, n_wbl, 1e14);
+    }
+
+    // schedule: wwl rises at 5 % of the window, falls at 75 %
+    let dt_step = window_s / (steps as f64 * meta.k_substeps as f64);
+    let dt = st::uniform_dt(steps, dt_step);
+    let times = st::times_from_dt(&dt, meta.k_substeps);
+    let mut wave = st::zeros(steps, ns);
+    let mut dwave = st::zeros(steps, ns);
+    st::pulse(&mut wave, &mut dwave, &times, s_wwl, 0.05 * window_s, 0.75 * window_s, 0.05 * window_s);
+    st::constant(&mut wave, s_vdd, 1.0);
+    st::constant(&mut wave, s_dinb, 1.0); // dinb amplitude already 0 for '1'
+
+    let out = rt.execute(
+        "write",
+        &[
+            v0,
+            amp,
+            params,
+            cinv,
+            Tensor::new(vec![steps as i64, ns as i64], st::flatten(&wave)),
+            Tensor::new(vec![steps as i64, ns as i64], st::flatten(&dwave)),
+            Tensor::new(vec![steps as i64], dt.iter().map(|&d| d as f32).collect()),
+        ],
+    )?;
+    // outputs: times_ds, trace_ds, sn_final, t_wr, sn_peak
+    let sn_final = &out[2];
+    let t_wr = &out[3];
+    let sn_peak = &out[4];
+    Ok((0..pts.len())
+        .map(|i| WriteResult {
+            sn_final: sn_final.data[i] as f64,
+            t_wr: t_wr.data[i] as f64,
+            sn_peak: sn_peak.data[i] as f64,
+        })
+        .collect())
+}
+
+/// One read-path design point.
+#[derive(Debug, Clone)]
+pub struct ReadPoint {
+    pub read_card: DeviceCard,
+    pub read_wl: f64,
+    /// Stored SN level at read start.
+    pub sn0: f64,
+    /// Unselected-cell SN level (bitline leakage worst case).
+    pub sn_unsel: f64,
+    pub rows: usize,
+    pub c_sn: f64,
+    pub c_rbl: f64,
+    pub c_rwl_sn: f64,
+    pub g_rbl_leak: f64,
+    pub vdd: f64,
+    /// true = NP flavor: predischarged RBL, RWL pulses 0->vdd;
+    /// false = NN/OS flavor: precharged RBL, RWL falls vdd->0.
+    pub pull_up: bool,
+}
+
+/// Read-path result.
+#[derive(Debug, Clone, Copy)]
+pub struct ReadResult {
+    /// RBL crossing vdd/2 upward (s), or BIG if never.
+    pub t_rise: f64,
+    /// RBL crossing vdd/2 downward.
+    pub t_fall: f64,
+    pub rbl_final: f64,
+    pub sn_final: f64,
+}
+
+pub fn read_op(rt: &Runtime, pts: &[ReadPoint], window_s: f64) -> crate::Result<Vec<ReadResult>> {
+    let meta = rt.manifest.get("read")?.clone();
+    let (b, nf, ns, np, steps) = (meta.batch, meta.nf(), meta.ns(), meta.npar(), meta.steps);
+    anyhow::ensure!(pts.len() <= b, "batch overflow");
+
+    let mut params = Tensor::zeros(vec![b as i64, np as i64]);
+    let mut cinv = Tensor::zeros(vec![b as i64, nf as i64]);
+    let mut amp = Tensor::zeros(vec![b as i64, ns as i64]);
+    let mut v0 = Tensor::zeros(vec![b as i64, nf as i64]);
+
+    let p_mrd = meta.pcol("mrd.kp")?;
+    let p_leak = meta.pcol("mrbl_leak.kp")?;
+    let p_cc = meta.pcol("crwl_sn.c")?;
+    let p_gl = meta.pcol("grbl.g")?;
+    let (s_rwl, s_idle, s_snu) = (meta.stim("rwl")?, meta.stim("rwl_idle")?, meta.stim("snu")?);
+    let (n_sn, n_rbl) = (meta.free("sn")?, meta.free("rbl")?);
+
+    // all points in one execution must share the waveform; split by
+    // flavor is the caller's job (ensure homogeneous pull_up)
+    let pull_up = pts.first().map(|p| p.pull_up).unwrap_or(true);
+    anyhow::ensure!(
+        pts.iter().all(|p| p.pull_up == pull_up),
+        "mixed read flavors in one batch"
+    );
+
+    let set_card = |t: &mut Tensor, row: usize, base: usize, card: &DeviceCard, wl: f64| {
+        for (k, v) in card.to_row(wl).iter().enumerate() {
+            t.set2(row, base + k, *v);
+        }
+    };
+    for (i, pt) in pts.iter().enumerate() {
+        set_card(&mut params, i, p_mrd, &pt.read_card, pt.read_wl);
+        set_card(&mut params, i, p_leak, &pt.read_card, pt.read_wl * (pt.rows.saturating_sub(1)) as f64);
+        params.set2(i, p_cc, pt.c_rwl_sn as f32);
+        params.set2(i, p_gl, pt.g_rbl_leak as f32);
+        cinv.set2(i, n_sn, (1.0 / pt.c_sn) as f32);
+        cinv.set2(i, n_rbl, (1.0 / pt.c_rbl) as f32);
+        v0.set2(i, n_sn, pt.sn0 as f32);
+        v0.set2(i, n_rbl, if pull_up { 0.0 } else { pt.vdd as f32 });
+        amp.set2(i, s_rwl, pt.vdd as f32);
+        amp.set2(i, s_idle, if pull_up { 0.0 } else { pt.vdd as f32 });
+        amp.set2(i, s_snu, pt.sn_unsel as f32);
+    }
+    for i in pts.len()..b {
+        cinv.set2(i, n_sn, 1e15);
+        cinv.set2(i, n_rbl, 1e14);
+    }
+
+    let dt_step = window_s / (steps as f64 * meta.k_substeps as f64);
+    let dt = st::uniform_dt(steps, dt_step);
+    let times = st::times_from_dt(&dt, meta.k_substeps);
+    let mut wave = st::zeros(steps, ns);
+    let mut dwave = st::zeros(steps, ns);
+    if pull_up {
+        st::pulse(&mut wave, &mut dwave, &times, s_rwl, 0.05 * window_s, 10.0 * window_s, 0.03 * window_s);
+    } else {
+        st::fall(&mut wave, &mut dwave, &times, s_rwl, 0.05 * window_s, 0.03 * window_s);
+        st::constant(&mut wave, s_idle, 1.0);
+    }
+    st::constant(&mut wave, s_snu, 1.0);
+
+    let out = rt.execute(
+        "read",
+        &[
+            v0,
+            amp,
+            params,
+            cinv,
+            Tensor::new(vec![steps as i64, ns as i64], st::flatten(&wave)),
+            Tensor::new(vec![steps as i64, ns as i64], st::flatten(&dwave)),
+            Tensor::new(vec![steps as i64], dt.iter().map(|&d| d as f32).collect()),
+        ],
+    )?;
+    // outputs: times_ds, trace_ds, t_rise, t_fall, rbl_final, sn_final
+    Ok((0..pts.len())
+        .map(|i| ReadResult {
+            t_rise: out[2].data[i] as f64,
+            t_fall: out[3].data[i] as f64,
+            rbl_final: out[4].data[i] as f64,
+            sn_final: out[5].data[i] as f64,
+        })
+        .collect())
+}
+
+/// One retention design point.
+#[derive(Debug, Clone)]
+pub struct RetentionPoint {
+    pub write_card: DeviceCard,
+    pub write_wl: f64,
+    pub c_sn: f64,
+    /// Read-transistor gate-leak conductance (S).
+    pub g_gate_leak: f64,
+    /// Extra disturb current (A, discharging when negative).
+    pub i_disturb: f64,
+    /// Initial stored level.
+    pub v0: f64,
+    /// Absolute hold threshold (0 -> relative 0.5*v0).
+    pub vth: f64,
+}
+
+/// Retention result + downsampled decay waveform.
+#[derive(Debug, Clone)]
+pub struct RetentionResult {
+    pub t_retain: f64,
+    pub sn_final: f64,
+}
+
+pub fn retention(rt: &Runtime, pts: &[RetentionPoint]) -> crate::Result<Vec<RetentionResult>> {
+    let meta = rt.manifest.get("retention")?.clone();
+    let (b, nf, ns, np, steps) = (meta.batch, meta.nf(), meta.ns(), meta.npar(), meta.steps);
+    anyhow::ensure!(pts.len() <= b, "batch overflow");
+
+    let mut params = Tensor::zeros(vec![b as i64, np as i64]);
+    let mut cinv = Tensor::zeros(vec![b as i64, nf as i64]);
+    let mut amp = Tensor::zeros(vec![b as i64, ns as i64]);
+    let mut v0 = Tensor::zeros(vec![b as i64, nf as i64]);
+
+    let p_mwr = meta.pcol("mwr.kp")?;
+    let p_gl = meta.pcol("gleak.g")?;
+    let p_id = meta.pcol("idist.i")?;
+    let s_vth = meta.stim("vth")?;
+    let n_sn = meta.free("sn")?;
+
+    for (i, pt) in pts.iter().enumerate() {
+        for (k, v) in pt.write_card.to_row(pt.write_wl).iter().enumerate() {
+            params.set2(i, p_mwr + k, *v);
+        }
+        params.set2(i, p_gl, pt.g_gate_leak as f32);
+        params.set2(i, p_id, pt.i_disturb as f32);
+        cinv.set2(i, n_sn, (1.0 / pt.c_sn) as f32);
+        v0.set2(i, n_sn, pt.v0 as f32);
+        amp.set2(i, s_vth, pt.vth as f32);
+    }
+    for i in pts.len()..b {
+        cinv.set2(i, n_sn, 1e15);
+    }
+
+    // log-time grid ~1 ns .. 1e4 s
+    let dt = st::log_dt(steps, 1e-12, 1.082);
+    let wave = st::zeros(steps, ns);
+
+    let out = rt.execute(
+        "retention",
+        &[
+            v0,
+            amp,
+            params,
+            cinv,
+            Tensor::new(vec![steps as i64, ns as i64], st::flatten(&wave)),
+            Tensor::new(vec![steps as i64, ns as i64], st::flatten(&wave)),
+            Tensor::new(vec![steps as i64], dt.iter().map(|&d| d as f32).collect()),
+        ],
+    )?;
+    // outputs: times_ds, trace_ds, t_retain, sn_final
+    Ok((0..pts.len())
+        .map(|i| RetentionResult {
+            t_retain: out[2].data[i] as f64,
+            sn_final: out[3].data[i] as f64,
+        })
+        .collect())
+}
+
+/// Id-Vg surfaces: cards (<=batch) x gate grid; returns (vg, ids rows).
+pub fn idvg(
+    rt: &Runtime,
+    cards: &[(DeviceCard, f64)],
+    vg_lo: f64,
+    vg_hi: f64,
+    vds: f64,
+) -> crate::Result<(Vec<f64>, Vec<Vec<f64>>)> {
+    let (b, g) = rt.manifest.idvg.unwrap_or((128, 64));
+    anyhow::ensure!(cards.len() <= b, "batch overflow");
+    let mut card_t = Tensor::zeros(vec![b as i64, 6]);
+    let mut vds_t = Tensor::zeros(vec![b as i64, 1]);
+    for (i, (c, wl)) in cards.iter().enumerate() {
+        for (k, v) in c.to_row(*wl).iter().enumerate() {
+            card_t.set2(i, k, *v);
+        }
+        vds_t.set2(i, 0, (vds * c.sign()) as f32);
+    }
+    let vg: Vec<f64> = (0..g)
+        .map(|i| vg_lo + (vg_hi - vg_lo) * i as f64 / (g - 1) as f64)
+        .collect();
+    let vg_t = Tensor::new(vec![g as i64], vg.iter().map(|&v| v as f32).collect());
+    let out = rt.execute("idvg", &[card_t, vg_t, vds_t])?;
+    let ids = &out[0];
+    let rows = (0..cards.len())
+        .map(|i| (0..g).map(|j| ids.at2(i, j) as f64).collect())
+        .collect();
+    Ok((vg, rows))
+}

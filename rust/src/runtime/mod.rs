@@ -1,0 +1,288 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and execute them from the rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` emits HLO *text*
+//! (see aot.py — serialized protos from jax>=0.5 are rejected by
+//! xla_extension 0.5.1) plus `manifest.json`; this module parses the
+//! manifest ([`Manifest`]), compiles each artifact once on the PJRT CPU
+//! client ([`Engine`]), and exposes typed batched entry points
+//! ([`engines`]) that the characterizer and DSE coordinator call.
+
+pub mod engines;
+pub mod stimulus;
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub batch: usize,
+    pub steps: usize,
+    pub k_substeps: usize,
+    pub trace_ds: usize,
+    pub big_time: f64,
+    pub integrator: String,
+    pub free_nodes: Vec<String>,
+    pub stim_nodes: Vec<String>,
+    pub params: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactMeta {
+    pub fn nf(&self) -> usize {
+        self.free_nodes.len()
+    }
+    pub fn ns(&self) -> usize {
+        self.stim_nodes.len()
+    }
+    pub fn npar(&self) -> usize {
+        self.params.len()
+    }
+    pub fn pcol(&self, name: &str) -> crate::Result<usize> {
+        self.params
+            .iter()
+            .position(|p| p == name)
+            .ok_or_else(|| anyhow::anyhow!("manifest param '{name}' missing"))
+    }
+    pub fn stim(&self, name: &str) -> crate::Result<usize> {
+        self.stim_nodes
+            .iter()
+            .position(|p| p == name)
+            .ok_or_else(|| anyhow::anyhow!("manifest stim '{name}' missing"))
+    }
+    pub fn free(&self, name: &str) -> crate::Result<usize> {
+        self.free_nodes
+            .iter()
+            .position(|p| p == name)
+            .ok_or_else(|| anyhow::anyhow!("manifest node '{name}' missing"))
+    }
+}
+
+/// The whole artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactMeta>,
+    /// idvg-specific: (batch, grid)
+    pub idvg: Option<(usize, usize)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("reading manifest in {dir:?}: {e} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("manifest not an object"))?;
+        let mut entries = BTreeMap::new();
+        let mut idvg = None;
+        for (name, v) in obj {
+            let gets = |k: &str| -> crate::Result<String> {
+                v.get(k)
+                    .and_then(|x| x.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow::anyhow!("manifest {name}.{k} missing"))
+            };
+            let getn = |k: &str| v.get(k).and_then(|x| x.as_usize());
+            if name == "idvg" {
+                idvg = Some((
+                    getn("batch").unwrap_or(128),
+                    getn("grid").unwrap_or(64),
+                ));
+                continue;
+            }
+            entries.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: gets("file")?,
+                    batch: getn("batch").unwrap_or(256),
+                    steps: getn("steps").unwrap_or(384),
+                    k_substeps: getn("k_substeps").unwrap_or(4),
+                    trace_ds: getn("trace_ds").unwrap_or(4),
+                    big_time: v.get("big_time").and_then(|x| x.as_f64()).unwrap_or(1e12),
+                    integrator: gets("integrator").unwrap_or_else(|_| "heun".into()),
+                    free_nodes: v.get("free_nodes").and_then(|x| x.str_list()).unwrap_or_default(),
+                    stim_nodes: v.get("stim_nodes").and_then(|x| x.str_list()).unwrap_or_default(),
+                    params: v.get("params").and_then(|x| x.str_list()).unwrap_or_default(),
+                    outputs: v.get("outputs").and_then(|x| x.str_list()).unwrap_or_default(),
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries, idvg })
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&ArtifactMeta> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+}
+
+/// An f32 tensor with shape, the runtime's argument/result currency.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> Tensor {
+        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<i64>) -> Tensor {
+        let n = dims.iter().product::<i64>() as usize;
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.dims[1] as usize + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.dims[1] as usize + j] = v;
+    }
+}
+
+/// One compiled artifact on the shared PJRT CPU client.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The runtime: PJRT client + compiled engines.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    engines: BTreeMap<String, Engine>,
+}
+
+impl Runtime {
+    /// Load and compile every artifact in the manifest directory.
+    pub fn load(dir: &Path) -> crate::Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e:?}"))?;
+        let mut engines = BTreeMap::new();
+        let mut names: Vec<(String, String)> = manifest
+            .entries
+            .iter()
+            .map(|(k, v)| (k.clone(), v.file.clone()))
+            .collect();
+        names.push(("idvg".into(), "idvg.hlo.txt".into()));
+        for (name, file) in names {
+            let path = dir.join(&file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow::anyhow!("loading {file}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {file}: {e:?}"))?;
+            engines.insert(name.clone(), Engine { exe, name });
+        }
+        Ok(Runtime { client, manifest, engines })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute an artifact with the given inputs; returns the tuple of
+    /// output tensors.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        let eng = self
+            .engines
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("engine '{name}' not loaded"))?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let l = xla::Literal::vec1(&t.data);
+                if t.dims.len() == 1 {
+                    Ok(l)
+                } else {
+                    l.reshape(&t.dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+                }
+            })
+            .collect::<crate::Result<_>>()?;
+        let out = eng
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync {name}: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("tuple {name}: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|l| {
+                let shape = l.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                let data = l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                Ok(Tensor { dims, data })
+            })
+            .collect()
+    }
+}
+
+/// Thread-shareable wrapper: the xla PJRT client is not Send/Sync
+/// (internal Rc), but the CPU client is safe to drive from one thread
+/// at a time — SharedRuntime serializes access behind a mutex so tests
+/// and the coordinator can share one compiled runtime.
+pub struct SharedRuntime(std::sync::Mutex<Runtime>);
+
+// SAFETY: all access is serialized by the mutex; the CPU PJRT client
+// performs no thread-local magic between calls.
+unsafe impl Send for SharedRuntime {}
+unsafe impl Sync for SharedRuntime {}
+
+impl SharedRuntime {
+    pub fn load(dir: &Path) -> crate::Result<SharedRuntime> {
+        Ok(SharedRuntime(std::sync::Mutex::new(Runtime::load(dir)?)))
+    }
+
+    pub fn with<R>(&self, f: impl FnOnce(&Runtime) -> R) -> R {
+        let guard = self.0.lock().unwrap_or_else(|p| p.into_inner());
+        f(&guard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        for k in ["write", "read", "retention"] {
+            let e = m.get(k).unwrap();
+            assert!(e.batch >= 128);
+            assert!(!e.params.is_empty());
+            assert_eq!(e.inputs_ok(), true);
+        }
+        assert!(m.idvg.is_some());
+        assert_eq!(m.get("retention").unwrap().integrator, "expdecay");
+    }
+
+    impl ArtifactMeta {
+        fn inputs_ok(&self) -> bool {
+            self.nf() > 0 && self.ns() > 0 && self.npar() > 0
+        }
+    }
+
+    #[test]
+    fn tensor_indexing() {
+        let mut t = Tensor::zeros(vec![2, 3]);
+        t.set2(1, 2, 5.0);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.at2(0, 0), 0.0);
+    }
+}

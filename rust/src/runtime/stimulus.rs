@@ -1,0 +1,135 @@
+//! Stimulus-schedule builders (rust mirror of python/compile/stimulus.py
+//! — the artifacts take waveforms as runtime inputs, so both sides can
+//! author them; keep semantics in sync).
+
+/// Uniform sub-step sizes.
+pub fn uniform_dt(steps: usize, dt: f64) -> Vec<f64> {
+    vec![dt; steps]
+}
+
+/// Geometrically growing sub-steps for retention sweeps.
+pub fn log_dt(steps: usize, dt0: f64, growth: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(steps);
+    let mut d = dt0;
+    for _ in 0..steps {
+        out.push(d);
+        d *= growth;
+    }
+    out
+}
+
+/// Time at the END of each scan step (each advances k_substeps * dt).
+pub fn times_from_dt(dt: &[f64], k_substeps: usize) -> Vec<f64> {
+    let mut acc = 0.0;
+    dt.iter()
+        .map(|d| {
+            acc += d * k_substeps as f64;
+            acc
+        })
+        .collect()
+}
+
+/// Normalized waveform matrix (steps x ns), all zero.
+pub fn zeros(steps: usize, ns: usize) -> Vec<Vec<f64>> {
+    vec![vec![0.0; ns]; steps]
+}
+
+/// Hold a channel at a constant normalized level.
+pub fn constant(wave: &mut [Vec<f64>], ch: usize, level: f64) {
+    for w in wave.iter_mut() {
+        w[ch] = level;
+    }
+}
+
+/// Unit pulse with linear edges; slopes are exact derivatives (the
+/// coupling-cap stamps integrate C * slope).
+pub fn pulse(
+    wave: &mut [Vec<f64>],
+    dwave: &mut [Vec<f64>],
+    times: &[f64],
+    ch: usize,
+    t_rise: f64,
+    t_fall: f64,
+    tr: f64,
+) {
+    for (i, &t) in times.iter().enumerate() {
+        let (v, s) = if t < t_rise {
+            (0.0, 0.0)
+        } else if t < t_rise + tr {
+            ((t - t_rise) / tr, 1.0 / tr)
+        } else if t < t_fall {
+            (1.0, 0.0)
+        } else if t < t_fall + tr {
+            (1.0 - (t - t_fall) / tr, -1.0 / tr)
+        } else {
+            (0.0, 0.0)
+        };
+        wave[i][ch] = v;
+        dwave[i][ch] = s;
+    }
+}
+
+/// Unit level that falls to 0 at `t_fall` (active-low wordlines).
+pub fn fall(wave: &mut [Vec<f64>], dwave: &mut [Vec<f64>], times: &[f64], ch: usize, t_fall: f64, tr: f64) {
+    for (i, &t) in times.iter().enumerate() {
+        let (v, s) = if t < t_fall {
+            (1.0, 0.0)
+        } else if t < t_fall + tr {
+            (1.0 - (t - t_fall) / tr, -1.0 / tr)
+        } else {
+            (0.0, 0.0)
+        };
+        wave[i][ch] = v;
+        dwave[i][ch] = s;
+    }
+}
+
+/// Flatten a (steps x ns) waveform into a row-major f32 buffer.
+pub fn flatten(wave: &[Vec<f64>]) -> Vec<f32> {
+    wave.iter().flatten().map(|&v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_dt_grows_geometrically() {
+        let d = log_dt(4, 1e-12, 2.0);
+        assert_eq!(d, vec![1e-12, 2e-12, 4e-12, 8e-12]);
+        let t = times_from_dt(&d, 4);
+        assert!((t[0] - 4e-12).abs() < 1e-20);
+        assert!((t[3] - 4e-12 * 15.0).abs() < 1e-20);
+    }
+
+    #[test]
+    fn pulse_has_exact_slopes() {
+        let steps = 100;
+        let dt = uniform_dt(steps, 1e-11);
+        let times = times_from_dt(&dt, 4);
+        let mut w = zeros(steps, 2);
+        let mut dw = zeros(steps, 2);
+        pulse(&mut w, &mut dw, &times, 0, 1e-9, 3e-9, 2e-10);
+        // mid-pulse flat at 1, slopes zero
+        let mid = times.iter().position(|&t| t > 2e-9).unwrap();
+        assert_eq!(w[mid][0], 1.0);
+        assert_eq!(dw[mid][0], 0.0);
+        // rising edge slope = 1/tr
+        let rise = times.iter().position(|&t| t > 1.05e-9).unwrap();
+        assert!((dw[rise][0] - 5e9).abs() < 1.0);
+        // untouched channel stays zero
+        assert!(w.iter().all(|r| r[1] == 0.0));
+    }
+
+    #[test]
+    fn fall_goes_low() {
+        let steps = 50;
+        let dt = uniform_dt(steps, 1e-11);
+        let times = times_from_dt(&dt, 4);
+        let mut w = zeros(steps, 1);
+        let mut dw = zeros(steps, 1);
+        fall(&mut w, &mut dw, &times, 0, 5e-10, 1e-10);
+        assert_eq!(w[0][0], 1.0);
+        assert_eq!(*w.last().unwrap().first().unwrap(), 0.0);
+    }
+}

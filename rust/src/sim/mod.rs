@@ -1,0 +1,397 @@
+//! Native transient simulator: the "HSPICE stand-in" reference.
+//!
+//! Mirrors the python stack 1:1 — same EKV device expression
+//! ([`mos_ids`], see `python/compile/device.py`), same stamped
+//! fixed-topology circuits, same Heun / exponential-decay integrators —
+//! so the XLA artifacts can be cross-checked against an independent
+//! implementation (`tests/parity.rs`), and so single design points can
+//! be simulated without the PJRT runtime (leakage sums, spot checks,
+//! the GEMTOO-style analytical-vs-transient ablation bench).
+
+use crate::tech::DeviceCard;
+
+/// Thermal voltage at 300 K (mirror of device.PHI_T).
+pub const PHI_T: f64 = 0.02585;
+
+fn softlog1pexp(x: f64) -> f64 {
+    // ln(1 + e^x), stable
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        x.exp()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// EKV drain current (A), d->s positive.  Mirrors device.mos_ids.
+pub fn mos_ids(vd: f64, vg: f64, vs: f64, kp: f64, vt: f64, n: f64, lam: f64, w_over_l: f64, sign: f64) -> f64 {
+    let (vd_, vg_, vs_) = (sign * vd, sign * vg, sign * vs);
+    let vp = (vg_ - vt) / n;
+    let i_f = softlog1pexp((vp - vs_) / (2.0 * PHI_T)).powi(2);
+    let i_r = softlog1pexp((vp - vd_) / (2.0 * PHI_T)).powi(2);
+    let i_spec = 2.0 * n * kp * w_over_l * PHI_T * PHI_T;
+    let clm = 1.0 + lam * (vd_ - vs_).abs();
+    sign * i_spec * (i_f - i_r) * clm
+}
+
+/// Card-based wrapper.
+pub fn ids_card(card: &DeviceCard, w_over_l: f64, vd: f64, vg: f64, vs: f64) -> f64 {
+    mos_ids(vd, vg, vs, card.kp, card.vt, card.n, card.lam, w_over_l, card.sign())
+}
+
+/// Off-state leakage of a device at VGS=0, VDS=vdd (A).
+pub fn ioff(card: &DeviceCard, w_over_l: f64, vdd: f64) -> f64 {
+    match card.sign() as i64 {
+        1 => ids_card(card, w_over_l, vdd, 0.0, 0.0),
+        _ => -ids_card(card, w_over_l, -vdd, 0.0, 0.0),
+    }
+}
+
+/// On-state current at VGS=VDS=vdd (A).
+pub fn ion(card: &DeviceCard, w_over_l: f64, vdd: f64) -> f64 {
+    match card.sign() as i64 {
+        1 => ids_card(card, w_over_l, vdd, vdd, 0.0),
+        _ => -ids_card(card, w_over_l, -vdd, -vdd, 0.0),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stamped circuits (mirror of python/compile/circuits.py)
+// ---------------------------------------------------------------------------
+
+/// Stamp referencing node indices in the concatenated [free|stim] space
+/// and parameter columns in the design-point vector.
+#[derive(Debug, Clone, Copy)]
+pub enum Stamp {
+    /// EKV device: 6 param columns [kp, vt, n, lam, wl, sign] at p0.
+    Mos { d: usize, g: usize, s: usize, p0: usize },
+    /// Coupling cap from stimulus node `src` into free node `dst`.
+    CapC { src: usize, dst: usize, p0: usize },
+    /// Linear conductance.
+    Res { a: usize, b: usize, p0: usize },
+    /// Constant current into `dst`.
+    Isrc { dst: usize, p0: usize },
+}
+
+/// A stamped fixed-topology template.
+#[derive(Debug, Clone)]
+pub struct Template {
+    pub name: &'static str,
+    pub nf: usize,
+    pub ns: usize,
+    pub npar: usize,
+    pub stamps: Vec<Stamp>,
+}
+
+impl Template {
+    /// Net current into each free node.
+    pub fn rhs(&self, v: &[f64], vs: &[f64], dvs: &[f64], p: &[f64], out: &mut [f64]) {
+        let col = |i: usize| if i < self.nf { v[i] } else { vs[i - self.nf] };
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for st in &self.stamps {
+            match *st {
+                Stamp::Mos { d, g, s, p0 } => {
+                    let i = mos_ids(col(d), col(g), col(s), p[p0], p[p0 + 1], p[p0 + 2], p[p0 + 3], p[p0 + 4], p[p0 + 5]);
+                    if d < self.nf {
+                        out[d] -= i;
+                    }
+                    if s < self.nf {
+                        out[s] += i;
+                    }
+                }
+                Stamp::CapC { src, dst, p0 } => out[dst] += p[p0] * dvs[src],
+                Stamp::Res { a, b, p0 } => {
+                    let i = p[p0] * (col(a) - col(b));
+                    if a < self.nf {
+                        out[a] -= i;
+                    }
+                    if b < self.nf {
+                        out[b] += i;
+                    }
+                }
+                Stamp::Isrc { dst, p0 } => out[dst] += p[p0],
+            }
+        }
+    }
+}
+
+/// Integrator selection (mirrors the kernel's `mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Integrator {
+    Heun,
+    ExpDecay,
+}
+
+/// One K-substep integration step in place.
+#[allow(clippy::too_many_arguments)]
+pub fn step(
+    t: &Template,
+    mode: Integrator,
+    k_substeps: usize,
+    v: &mut [f64],
+    vs: &[f64],
+    dvs: &[f64],
+    p: &[f64],
+    cinv: &[f64],
+    dt: f64,
+) {
+    let nf = t.nf;
+    let mut i1 = vec![0.0; nf];
+    let mut i2 = vec![0.0; nf];
+    let mut v1 = vec![0.0; nf];
+    for _ in 0..k_substeps {
+        match mode {
+            Integrator::Heun => {
+                t.rhs(v, vs, dvs, p, &mut i1);
+                for k in 0..nf {
+                    v1[k] = if cinv[k] == 0.0 { v[k] } else { v[k] + dt * i1[k] * cinv[k] };
+                }
+                t.rhs(&v1, vs, dvs, p, &mut i2);
+                for k in 0..nf {
+                    if cinv[k] != 0.0 {
+                        v[k] += 0.5 * dt * (i1[k] + i2[k]) * cinv[k];
+                    }
+                }
+            }
+            Integrator::ExpDecay => {
+                t.rhs(v, vs, dvs, p, &mut i1);
+                for k in 0..nf {
+                    if cinv[k] == 0.0 {
+                        continue;
+                    }
+                    let dv = dt * i1[k] * cinv[k];
+                    if dv < 0.0 && v[k] > 0.0 {
+                        v[k] *= (dv / v[k].max(1e-6)).exp();
+                    } else if v[k] <= 0.0 {
+                        v[k] = (v[k] + dv).max(v[k]).min(0.0);
+                    } else {
+                        v[k] += dv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Full transient over a stimulus schedule; returns the trace of free
+/// node voltages (steps x nf) and the time axis.
+#[allow(clippy::too_many_arguments)]
+pub fn transient(
+    t: &Template,
+    mode: Integrator,
+    k_substeps: usize,
+    v0: &[f64],
+    amp: &[f64],
+    p: &[f64],
+    cinv: &[f64],
+    wave: &[Vec<f64>],
+    dwave: &[Vec<f64>],
+    dt: &[f64],
+) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let mut v = v0.to_vec();
+    let mut times = Vec::with_capacity(dt.len());
+    let mut trace = Vec::with_capacity(dt.len());
+    let mut tacc = 0.0;
+    let mut vs = vec![0.0; t.ns];
+    let mut dvs = vec![0.0; t.ns];
+    for (i, &dti) in dt.iter().enumerate() {
+        for s in 0..t.ns {
+            vs[s] = wave[i][s] * amp[s];
+            dvs[s] = dwave[i][s] * amp[s];
+        }
+        step(t, mode, k_substeps, &mut v, &vs, &dvs, p, cinv, dti);
+        tacc += dti * k_substeps as f64;
+        times.push(tacc);
+        trace.push(v.clone());
+    }
+    (times, trace)
+}
+
+/// First threshold crossing with linear interpolation (mirror of
+/// model._cross_time); `None` if never crossed.
+pub fn cross_time(times: &[f64], sig: &[f64], thresh: f64, rising: bool) -> Option<f64> {
+    for i in 0..sig.len() {
+        let above = if rising { sig[i] >= thresh } else { sig[i] <= thresh };
+        if above {
+            if i == 0 {
+                return Some(0.0);
+            }
+            let (v0, v1) = (sig[i - 1], sig[i]);
+            let frac = if (v1 - v0).abs() > 1e-12 { ((thresh - v0) / (v1 - v0)).clamp(0.0, 1.0) } else { 1.0 };
+            return Some(times[i - 1] + frac * (times[i] - times[i - 1]));
+        }
+    }
+    None
+}
+
+// Canonical templates (must match python/compile/circuits.py layouts).
+
+/// retention: free [sn]; stim [wwl, wbl, gnd, vth]; params
+/// [mwr(6), gleak.g, idist.i].
+pub fn retention_template() -> Template {
+    Template {
+        name: "retention",
+        nf: 1,
+        ns: 4,
+        npar: 8,
+        stamps: vec![
+            Stamp::Mos { d: 0, g: 1, s: 2, p0: 0 },
+            Stamp::Res { a: 0, b: 3, p0: 6 },
+            Stamp::Isrc { dst: 0, p0: 7 },
+        ],
+    }
+}
+
+/// write: free [sn, wbl]; stim [wwl, dinb, vdd, gnd]; params
+/// [mwr(6), mdrvp(6), mdrvn(6), cwwl_sn.c, gwbl.g].
+pub fn write_template() -> Template {
+    Template {
+        name: "write",
+        nf: 2,
+        ns: 4,
+        npar: 20,
+        stamps: vec![
+            Stamp::Mos { d: 0, g: 2, s: 1, p0: 0 },
+            Stamp::Mos { d: 1, g: 3, s: 4, p0: 6 },
+            Stamp::Mos { d: 1, g: 3, s: 5, p0: 12 },
+            Stamp::CapC { src: 0, dst: 0, p0: 18 },
+            Stamp::Res { a: 1, b: 5, p0: 19 },
+        ],
+    }
+}
+
+/// read: free [sn, rbl]; stim [rwl, rwl_idle, snu, gnd]; params
+/// [mrd(6), mrbl_leak(6), crwl_sn.c, grbl.g].
+pub fn read_template() -> Template {
+    Template {
+        name: "read",
+        nf: 2,
+        ns: 4,
+        npar: 14,
+        stamps: vec![
+            Stamp::Mos { d: 1, g: 0, s: 2, p0: 0 },
+            Stamp::Mos { d: 1, g: 4, s: 3, p0: 6 },
+            Stamp::CapC { src: 0, dst: 0, p0: 12 },
+            Stamp::Res { a: 1, b: 5, p0: 13 },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::cards::sg40;
+
+    #[test]
+    fn device_polarity_and_magnitude() {
+        let n = sg40::SI_NMOS;
+        let i_on = ion(&n, 1.0, 1.1);
+        let i_off = ioff(&n, 1.0, 1.1);
+        assert!(i_on > 1e-5 && i_on < 1e-3, "{i_on}");
+        assert!(i_off > 1e-13 && i_off < 1e-9, "{i_off}");
+        assert!(i_on / i_off > 1e4);
+        // pmos mirror
+        let p = sg40::SI_PMOS;
+        assert!(ion(&p, 1.0, 1.1) > 0.0);
+        assert!(ioff(&p, 1.0, 1.1) > 0.0);
+        // OS HVT hits the paper's <1e-18 A/um class
+        assert!(ioff(&sg40::OS_NMOS_HVT, 1.0, 1.1) < 1e-18);
+    }
+
+    #[test]
+    fn ds_antisymmetry() {
+        let c = sg40::SI_NMOS;
+        let a = mos_ids(0.7, 0.9, 0.2, c.kp, c.vt, c.n, 0.0, 2.0, 1.0);
+        let b = mos_ids(0.2, 0.9, 0.7, c.kp, c.vt, c.n, 0.0, 2.0, 1.0);
+        assert!((a + b).abs() < 1e-9 * a.abs().max(1e-18));
+    }
+
+    #[test]
+    fn retention_matches_physics() {
+        // Si cell ~ tens of microseconds; OS ~ milliseconds (Fig. 8)
+        let t = retention_template();
+        let mut p = vec![0.0; t.npar];
+        let run = |p: &[f64]| {
+            let steps = 440;
+            let mut dt = Vec::with_capacity(steps);
+            let mut d = 1e-12;
+            for _ in 0..steps {
+                dt.push(d);
+                d *= 1.082;
+            }
+            let wave = vec![vec![0.0; 4]; steps];
+            let (times, trace) = transient(
+                &t,
+                Integrator::ExpDecay,
+                4,
+                &[0.6],
+                &[0.0; 4],
+                p,
+                &[1.0 / 1.2e-15],
+                &wave,
+                &wave,
+                &dt,
+            );
+            let sn: Vec<f64> = trace.iter().map(|r| r[0]).collect();
+            cross_time(&times, &sn, 0.3, false).unwrap_or(f64::INFINITY)
+        };
+        let si = sg40::SI_NMOS;
+        p[0..6].copy_from_slice(&[si.kp, si.vt, si.n, si.lam, 2.0, 1.0]);
+        p[6] = 1e-16;
+        let t_si = run(&p);
+        assert!(t_si > 1e-6 && t_si < 1e-3, "{t_si}");
+        let os = sg40::OS_NMOS;
+        p[0..6].copy_from_slice(&[os.kp, os.vt, os.n, os.lam, 2.0, 1.0]);
+        let t_os = run(&p);
+        assert!(t_os > 1e-3 && t_os < 1.0, "{t_os}");
+        assert!(t_os > 10.0 * t_si);
+    }
+
+    #[test]
+    fn write_reaches_vdd_minus_vt() {
+        let t = write_template();
+        let mut p = vec![0.0; t.npar];
+        let si_n = sg40::SI_NMOS;
+        let si_p = sg40::SI_PMOS;
+        p[0..6].copy_from_slice(&[si_n.kp, si_n.vt, si_n.n, si_n.lam, 2.0, 1.0]);
+        p[6..12].copy_from_slice(&[si_p.kp, si_p.vt, si_p.n, si_p.lam, 8.0, -1.0]);
+        p[12..18].copy_from_slice(&[si_n.kp, si_n.vt, si_n.n, si_n.lam, 4.0, 1.0]);
+        p[18] = 0.15e-15;
+        p[19] = 1e-9;
+        let steps = 256;
+        let dt = vec![5e-12; steps];
+        let mut wave = vec![vec![0.0, 0.0, 1.0, 0.0]; steps];
+        let mut dwave = vec![vec![0.0; 4]; steps];
+        // wwl rises at step 10 over 5 steps, stays high
+        for (i, (w, dw)) in wave.iter_mut().zip(dwave.iter_mut()).enumerate() {
+            if i >= 15 {
+                w[0] = 1.0;
+            } else if i >= 10 {
+                w[0] = (i - 10) as f64 / 5.0;
+                dw[0] = 1.0 / (5.0 * 4.0 * 5e-12);
+            }
+        }
+        let (_, trace) = transient(
+            &t,
+            Integrator::Heun,
+            4,
+            &[0.0, 0.0],
+            &[1.1, 0.0, 1.1, 0.0],
+            &p,
+            &[1.0 / 1.2e-15, 1.0 / 20e-15],
+            &wave,
+            &dwave,
+            &dt,
+        );
+        let sn_final = trace.last().unwrap()[0];
+        assert!((sn_final - (1.1 - 0.45)).abs() < 0.15, "{sn_final}");
+    }
+
+    #[test]
+    fn cross_time_interpolates() {
+        let t = cross_time(&[1.0, 2.0, 3.0], &[0.0, 0.2, 0.6], 0.4, true).unwrap();
+        assert!((t - 2.5).abs() < 1e-9, "{t}");
+        assert!(cross_time(&[1.0], &[0.0], 0.5, true).is_none());
+    }
+}

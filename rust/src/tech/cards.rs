@@ -1,0 +1,158 @@
+//! Device cards: the EKV-style compact-model parameters.
+//!
+//! These MUST mirror `python/compile/device.py` parameter-for-parameter;
+//! the cross-language parity is enforced by an integration test that
+//! executes the `idvg` HLO artifact and compares it with
+//! [`crate::sim::device::mos_ids`] over a voltage grid.
+
+/// Polarity / channel material of a card.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    SiNmos,
+    SiPmos,
+    /// Back-end-of-line oxide-semiconductor NMOS (ITO-like).
+    OsNmos,
+}
+
+/// EKV card: `[kp, vt, n, lam, w_over_l, sign]` is the wire format used
+/// by the XLA artifacts (see manifest `card_cols`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceCard {
+    pub kind: DeviceKind,
+    /// Transconductance factor for W/L = 1, A/V^2.
+    pub kp: f64,
+    /// Threshold voltage, V (positive for both polarities).
+    pub vt: f64,
+    /// Subthreshold slope factor (SS = n * phi_t * ln 10).
+    pub n: f64,
+    /// Channel-length-modulation coefficient, 1/V.
+    pub lam: f64,
+}
+
+impl DeviceCard {
+    pub fn sign(&self) -> f64 {
+        match self.kind {
+            DeviceKind::SiPmos => -1.0,
+            _ => 1.0,
+        }
+    }
+
+    /// Pack into the 6-column artifact row for a given geometry.
+    pub fn to_row(&self, w_over_l: f64) -> [f32; 6] {
+        [
+            self.kp as f32,
+            self.vt as f32,
+            self.n as f32,
+            self.lam as f32,
+            w_over_l as f32,
+            self.sign() as f32,
+        ]
+    }
+
+    /// Apply a PVT corner.
+    pub fn at_corner(&self, c: &super::Corner) -> DeviceCard {
+        DeviceCard { kp: self.kp * c.kp_scale, vt: self.vt + c.vt_shift, ..*self }
+    }
+
+    /// Copy with a shifted threshold (retention-modulation sweeps,
+    /// Fig. 8c).
+    pub fn with_vt(&self, vt: f64) -> DeviceCard {
+        DeviceCard { vt, ..*self }
+    }
+}
+
+/// `sg40` cards — numerically identical to python/compile/device.py.
+pub mod sg40 {
+    use super::{DeviceCard, DeviceKind};
+
+    pub const SI_NMOS: DeviceCard = DeviceCard {
+        kind: DeviceKind::SiNmos,
+        kp: 320e-6,
+        vt: 0.45,
+        n: 1.40,
+        lam: 0.08,
+    };
+    pub const SI_PMOS: DeviceCard = DeviceCard {
+        kind: DeviceKind::SiPmos,
+        kp: 160e-6,
+        vt: 0.45,
+        n: 1.42,
+        lam: 0.10,
+    };
+    pub const SI_NMOS_HVT: DeviceCard = DeviceCard {
+        kind: DeviceKind::SiNmos,
+        kp: 280e-6,
+        vt: 0.60,
+        n: 1.36,
+        lam: 0.07,
+    };
+    pub const SI_NMOS_LVT: DeviceCard = DeviceCard {
+        kind: DeviceKind::SiNmos,
+        kp: 360e-6,
+        vt: 0.32,
+        n: 1.45,
+        lam: 0.10,
+    };
+    /// High-|VT| PMOS for the NP gain cell's read transistor: with the
+    /// stored '1' at VDD-VTn a nominal-VT PMOS stays weakly on; the HVT
+    /// flavor restores the read margin (paper SS V-C).  The value also
+    /// folds in the body effect of a source-at-VDD device that the
+    /// bulk-referenced EKV mirror does not model explicitly:
+    /// vt_eff ~ vt + (n-1)*vdd.
+    pub const SI_PMOS_HVT: DeviceCard = DeviceCard {
+        kind: DeviceKind::SiPmos,
+        kp: 140e-6,
+        vt: 0.90,
+        n: 1.38,
+        lam: 0.08,
+    };
+    pub const OS_NMOS: DeviceCard = DeviceCard {
+        kind: DeviceKind::OsNmos,
+        kp: 12e-6,
+        vt: 0.35,
+        n: 1.10,
+        lam: 0.02,
+    };
+    pub const OS_NMOS_HVT: DeviceCard = DeviceCard {
+        kind: DeviceKind::OsNmos,
+        kp: 9e-6,
+        vt: 0.95,
+        n: 1.08,
+        lam: 0.02,
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_layout_matches_manifest_card_cols() {
+        let r = sg40::SI_PMOS.to_row(2.0);
+        assert_eq!(r[0], 160e-6_f32);
+        assert_eq!(r[1], 0.45);
+        assert_eq!(r[4], 2.0);
+        assert_eq!(r[5], -1.0);
+    }
+
+    #[test]
+    fn corner_shifts_apply() {
+        let c = crate::tech::Corner {
+            name: "ss",
+            kp_scale: 0.9,
+            vt_shift: 0.05,
+            vdd: 1.0,
+            temp_c: 125.0,
+        };
+        let d = sg40::SI_NMOS.at_corner(&c);
+        assert!((d.kp - 288e-6).abs() < 1e-9);
+        assert!((d.vt - 0.50).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vt_override() {
+        let d = sg40::OS_NMOS.with_vt(0.8);
+        assert_eq!(d.vt, 0.8);
+        assert_eq!(d.kp, 12e-6);
+    }
+}

@@ -1,0 +1,347 @@
+//! Technology (PDK) infrastructure: layer stacks, design rules, device
+//! cards, wire parasitics and PVT corners.
+//!
+//! The paper ports OpenRAM to TSMC 40 nm (under NDA).  We ship `sg40`, a
+//! *synthetic generic 40 nm* node whose rule set exercises the identical
+//! compiler code paths (layer math -> layout generation -> DRC), plus
+//! `sg130`, a relaxed synthetic 130 nm-class node that demonstrates the
+//! Fig. 1(a) porting methodology: a new node is nothing but a new
+//! [`Tech`] value built through [`TechBuilder`].
+//!
+//! Everything is data: no compiler code matches on a technology name.
+
+pub mod cards;
+pub mod rules;
+
+pub use cards::{DeviceCard, DeviceKind};
+pub use rules::{DrcRules, EnclosureRule, LayerRules, SpacingRule};
+
+use std::collections::BTreeMap;
+
+/// Process layer kind; drives DRC selection and GDS export.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LayerKind {
+    /// Front-end-of-line: diffusion, wells, poly, implants.
+    Feol,
+    /// Contacts and vias.
+    Cut,
+    /// Metal routing layers.
+    Metal,
+    /// Back-end-of-line oxide-semiconductor device layers (the OS-OS
+    /// gain cell is fabricated between tight-pitched metals and can be
+    /// 3D-stacked over FEOL, paper §V-A).
+    OsDevice,
+    /// Non-physical annotation (pins, labels, boundary).
+    Annotation,
+}
+
+/// One mask layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub name: &'static str,
+    /// GDSII layer number.
+    pub gds: i16,
+    /// GDSII datatype.
+    pub datatype: i16,
+    pub kind: LayerKind,
+}
+
+/// Canonical layer indices used by the generators (indexes into
+/// `Tech::layers`).  Generators refer to layers via these roles so a new
+/// node only has to *provide* the roles, not renumber code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LayerRole {
+    Nwell,
+    Active,
+    Poly,
+    Nimplant,
+    Pimplant,
+    Contact,
+    Metal1,
+    Via1,
+    Metal2,
+    Via2,
+    Metal3,
+    /// BEOL oxide-semiconductor channel.
+    OsChannel,
+    /// BEOL OS gate electrode.
+    OsGate,
+    Boundary,
+    PinLabel,
+}
+
+/// Per-layer wire parasitics for analytical delay (GEMTOO-class model).
+#[derive(Debug, Clone, Copy)]
+pub struct WireRc {
+    /// Sheet resistance, ohm/square.
+    pub r_sq: f64,
+    /// Area capacitance, F/nm^2.
+    pub c_area: f64,
+    /// Fringe capacitance, F/nm of perimeter.
+    pub c_fringe: f64,
+}
+
+/// Process-voltage-temperature corner.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Corner {
+    pub name: &'static str,
+    /// Multiplier on card `kp` (process speed).
+    pub kp_scale: f64,
+    /// Additive shift on card `vt` (V).
+    pub vt_shift: f64,
+    pub vdd: f64,
+    pub temp_c: f64,
+}
+
+impl Corner {
+    pub fn typical(vdd: f64) -> Corner {
+        Corner { name: "tt", kp_scale: 1.0, vt_shift: 0.0, vdd, temp_c: 25.0 }
+    }
+}
+
+/// A full technology description.
+#[derive(Debug, Clone)]
+pub struct Tech {
+    pub name: &'static str,
+    /// Feature size tag in nm (documentation only).
+    pub node_nm: u32,
+    pub vdd: f64,
+    pub layers: Vec<Layer>,
+    roles: BTreeMap<LayerRole, usize>,
+    pub rules: DrcRules,
+    pub wires: BTreeMap<LayerRole, WireRc>,
+    pub cards: BTreeMap<&'static str, DeviceCard>,
+    pub corners: Vec<Corner>,
+    /// Gate capacitance per W/L unit (F); pairs with `cards`.
+    pub c_gate_unit: f64,
+    /// Drain junction capacitance per W/L unit (F).
+    pub c_junction_unit: f64,
+}
+
+impl Tech {
+    pub fn layer(&self, role: LayerRole) -> usize {
+        *self
+            .roles
+            .get(&role)
+            .unwrap_or_else(|| panic!("tech {} missing layer role {role:?}", self.name))
+    }
+
+    pub fn has_role(&self, role: LayerRole) -> bool {
+        self.roles.contains_key(&role)
+    }
+
+    pub fn layer_info(&self, role: LayerRole) -> &Layer {
+        &self.layers[self.layer(role)]
+    }
+
+    pub fn card(&self, name: &str) -> &DeviceCard {
+        self.cards
+            .get(name)
+            .unwrap_or_else(|| panic!("tech {} missing device card {name}", self.name))
+    }
+
+    pub fn wire(&self, role: LayerRole) -> WireRc {
+        *self
+            .wires
+            .get(&role)
+            .unwrap_or_else(|| panic!("tech {} missing wire RC for {role:?}", self.name))
+    }
+
+    pub fn corner(&self, name: &str) -> Option<&Corner> {
+        self.corners.iter().find(|c| c.name == name)
+    }
+}
+
+/// Builder implementing the Fig. 1(a) porting flow: layer definitions,
+/// basic design rules, device models, wire parasitics — then validate.
+#[derive(Debug, Default)]
+pub struct TechBuilder {
+    name: Option<&'static str>,
+    node_nm: u32,
+    vdd: f64,
+    layers: Vec<Layer>,
+    roles: BTreeMap<LayerRole, usize>,
+    rules: DrcRules,
+    wires: BTreeMap<LayerRole, WireRc>,
+    cards: BTreeMap<&'static str, DeviceCard>,
+    corners: Vec<Corner>,
+    c_gate_unit: f64,
+    c_junction_unit: f64,
+}
+
+impl TechBuilder {
+    pub fn new(name: &'static str, node_nm: u32, vdd: f64) -> Self {
+        TechBuilder {
+            name: Some(name),
+            node_nm,
+            vdd,
+            c_gate_unit: 1e-15,
+            c_junction_unit: 0.5e-15,
+            ..Default::default()
+        }
+    }
+
+    pub fn layer(mut self, role: LayerRole, layer: Layer) -> Self {
+        self.roles.insert(role, self.layers.len());
+        self.layers.push(layer);
+        self
+    }
+
+    pub fn layer_rules(mut self, role: LayerRole, r: LayerRules) -> Self {
+        self.rules.set(role, r);
+        self
+    }
+
+    pub fn enclosure(mut self, outer: LayerRole, inner: LayerRole, margin_nm: i64) -> Self {
+        self.rules.enclosures.push(EnclosureRule {
+            outer,
+            inner,
+            margin_nm,
+            axis: rules::EncAxis::Both,
+        });
+        self
+    }
+
+    /// Extension-style rule: enclosure along one axis only (e.g. gate
+    /// extension past the channel).
+    pub fn extension(
+        mut self,
+        outer: LayerRole,
+        inner: LayerRole,
+        margin_nm: i64,
+        axis: rules::EncAxis,
+    ) -> Self {
+        self.rules.enclosures.push(EnclosureRule { outer, inner, margin_nm, axis });
+        self
+    }
+
+    pub fn spacing(mut self, a: LayerRole, b: LayerRole, space_nm: i64) -> Self {
+        self.rules.cross_spacings.push(SpacingRule { a, b, space_nm });
+        self
+    }
+
+    pub fn wire(mut self, role: LayerRole, rc: WireRc) -> Self {
+        self.wires.insert(role, rc);
+        self
+    }
+
+    pub fn card(mut self, name: &'static str, card: DeviceCard) -> Self {
+        self.cards.insert(name, card);
+        self
+    }
+
+    pub fn corner(mut self, c: Corner) -> Self {
+        self.corners.push(c);
+        self
+    }
+
+    pub fn caps(mut self, c_gate_unit: f64, c_junction_unit: f64) -> Self {
+        self.c_gate_unit = c_gate_unit;
+        self.c_junction_unit = c_junction_unit;
+        self
+    }
+
+    /// Validate completeness (the "run DRC/LVS and iterate" step of
+    /// Fig. 1(a) catches rule gaps; this catches structural gaps).
+    pub fn build(self) -> crate::Result<Tech> {
+        let name = self.name.unwrap_or("unnamed");
+        for role in [
+            LayerRole::Active,
+            LayerRole::Poly,
+            LayerRole::Contact,
+            LayerRole::Metal1,
+            LayerRole::Metal2,
+            LayerRole::Boundary,
+        ] {
+            anyhow::ensure!(
+                self.roles.contains_key(&role),
+                "tech {name}: required layer role {role:?} missing"
+            );
+        }
+        anyhow::ensure!(
+            !self.cards.is_empty(),
+            "tech {name}: no device cards"
+        );
+        anyhow::ensure!(self.vdd > 0.0, "tech {name}: vdd must be positive");
+        let mut corners = self.corners;
+        if corners.is_empty() {
+            corners.push(Corner::typical(self.vdd));
+        }
+        Ok(Tech {
+            name,
+            node_nm: self.node_nm,
+            vdd: self.vdd,
+            layers: self.layers,
+            roles: self.roles,
+            rules: self.rules,
+            wires: self.wires,
+            cards: self.cards,
+            corners,
+            c_gate_unit: self.c_gate_unit,
+            c_junction_unit: self.c_junction_unit,
+        })
+    }
+}
+
+mod sg130;
+mod sg40;
+
+pub use sg130::sg130;
+pub use sg40::sg40;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sg40_has_all_roles_and_cards() {
+        let t = sg40();
+        for role in [
+            LayerRole::Nwell,
+            LayerRole::Active,
+            LayerRole::Poly,
+            LayerRole::Contact,
+            LayerRole::Metal1,
+            LayerRole::Metal2,
+            LayerRole::Metal3,
+            LayerRole::OsChannel,
+            LayerRole::OsGate,
+            LayerRole::Boundary,
+        ] {
+            assert!(t.has_role(role), "{role:?}");
+        }
+        for card in ["si_nmos", "si_pmos", "si_nmos_hvt", "si_nmos_lvt", "os_nmos", "os_nmos_hvt"] {
+            assert!(t.cards.contains_key(card), "{card}");
+        }
+        assert!(t.vdd > 1.0 && t.vdd < 1.3);
+    }
+
+    #[test]
+    fn sg130_is_a_relaxed_node() {
+        let a = sg40();
+        let b = sg130();
+        let w40 = a.rules.layer(LayerRole::Metal1).min_width_nm;
+        let w130 = b.rules.layer(LayerRole::Metal1).min_width_nm;
+        assert!(w130 > w40, "sg130 rules must be looser than sg40");
+        assert!(b.vdd > a.vdd);
+    }
+
+    #[test]
+    fn builder_rejects_incomplete_tech() {
+        let r = TechBuilder::new("bad", 40, 1.1).build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn corners_default_to_typical() {
+        let t = sg40();
+        assert!(t.corner("tt").is_some());
+    }
+
+    #[test]
+    #[should_panic]
+    fn missing_card_panics_with_context() {
+        let t = sg40();
+        t.card("does_not_exist");
+    }
+}

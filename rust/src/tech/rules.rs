@@ -1,0 +1,90 @@
+//! Design-rule types.  Numeric rules only (width / spacing / area /
+//! enclosure / extension) -- exactly the rule classes the paper lists
+//! for the OS-OS cell ("the layout meets the basic FEOL design rules
+//! regarding width, space, enclosure and extension", Fig. 3 caption).
+
+use super::LayerRole;
+use std::collections::BTreeMap;
+
+/// Same-layer rules.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerRules {
+    pub min_width_nm: i64,
+    pub min_space_nm: i64,
+    /// Minimum polygon area in nm^2 (0 = unchecked).
+    pub min_area_nm2: i64,
+}
+
+/// Enclosure axis: full enclosure, or extension along one axis only
+/// (gate-extension rules: the gate must extend past the channel in its
+/// long axis but does not cover it side-to-side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EncAxis {
+    #[default]
+    Both,
+    X,
+    Y,
+}
+
+/// `outer` must enclose `inner` by at least `margin_nm` (per `axis`)
+/// wherever `inner` overlaps the outer layer (conditional enclosure:
+/// a contact on poly is not checked against active).
+#[derive(Debug, Clone, Copy)]
+pub struct EnclosureRule {
+    pub outer: LayerRole,
+    pub inner: LayerRole,
+    pub margin_nm: i64,
+    pub axis: EncAxis,
+}
+
+/// Cross-layer spacing (e.g. poly to unrelated active).
+#[derive(Debug, Clone, Copy)]
+pub struct SpacingRule {
+    pub a: LayerRole,
+    pub b: LayerRole,
+    pub space_nm: i64,
+}
+
+/// The full rule deck for a node.
+#[derive(Debug, Clone, Default)]
+pub struct DrcRules {
+    per_layer: BTreeMap<LayerRole, LayerRules>,
+    pub enclosures: Vec<EnclosureRule>,
+    pub cross_spacings: Vec<SpacingRule>,
+}
+
+impl DrcRules {
+    pub fn set(&mut self, role: LayerRole, rules: LayerRules) {
+        self.per_layer.insert(role, rules);
+    }
+
+    /// Rules for a layer; zeroed default means "unchecked layer".
+    pub fn layer(&self, role: LayerRole) -> LayerRules {
+        self.per_layer.get(&role).copied().unwrap_or_default()
+    }
+
+    pub fn checked_layers(&self) -> impl Iterator<Item = (&LayerRole, &LayerRules)> {
+        self.per_layer.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_layer_is_unchecked() {
+        let r = DrcRules::default();
+        assert_eq!(r.layer(LayerRole::Metal3).min_width_nm, 0);
+    }
+
+    #[test]
+    fn set_then_get() {
+        let mut r = DrcRules::default();
+        r.set(
+            LayerRole::Poly,
+            LayerRules { min_width_nm: 40, min_space_nm: 120, min_area_nm2: 0 },
+        );
+        assert_eq!(r.layer(LayerRole::Poly).min_space_nm, 120);
+    }
+}

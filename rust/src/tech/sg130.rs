@@ -1,0 +1,56 @@
+//! `sg130`: a relaxed synthetic 130 nm-class node.
+//!
+//! Exists to *prove* the Fig. 1(a) porting methodology: the whole
+//! compiler (cells, banks, DRC, LVS, characterization) runs unmodified
+//! on a second node that differs only in data.  `examples/
+//! porting_new_tech.rs` walks through the port step by step.
+
+use super::cards::{DeviceCard, DeviceKind};
+use super::{Corner, Layer, LayerKind, LayerRole, LayerRules, Tech, TechBuilder, WireRc};
+
+pub fn sg130() -> Tech {
+    let si_nmos = DeviceCard { kind: DeviceKind::SiNmos, kp: 170e-6, vt: 0.38, n: 1.35, lam: 0.06 };
+    let si_pmos = DeviceCard { kind: DeviceKind::SiPmos, kp: 70e-6, vt: 0.40, n: 1.38, lam: 0.08 };
+
+    TechBuilder::new("sg130", 130, 1.8)
+        .layer(LayerRole::Nwell, Layer { name: "nwell", gds: 1, datatype: 0, kind: LayerKind::Feol })
+        .layer(LayerRole::Active, Layer { name: "active", gds: 2, datatype: 0, kind: LayerKind::Feol })
+        .layer(LayerRole::Poly, Layer { name: "poly", gds: 3, datatype: 0, kind: LayerKind::Feol })
+        .layer(LayerRole::Nimplant, Layer { name: "nimplant", gds: 4, datatype: 0, kind: LayerKind::Feol })
+        .layer(LayerRole::Pimplant, Layer { name: "pimplant", gds: 5, datatype: 0, kind: LayerKind::Feol })
+        .layer(LayerRole::Contact, Layer { name: "contact", gds: 10, datatype: 0, kind: LayerKind::Cut })
+        .layer(LayerRole::Metal1, Layer { name: "metal1", gds: 11, datatype: 0, kind: LayerKind::Metal })
+        .layer(LayerRole::Via1, Layer { name: "via1", gds: 12, datatype: 0, kind: LayerKind::Cut })
+        .layer(LayerRole::Metal2, Layer { name: "metal2", gds: 13, datatype: 0, kind: LayerKind::Metal })
+        .layer(LayerRole::Via2, Layer { name: "via2", gds: 14, datatype: 0, kind: LayerKind::Cut })
+        .layer(LayerRole::Metal3, Layer { name: "metal3", gds: 15, datatype: 0, kind: LayerKind::Metal })
+        .layer(LayerRole::Boundary, Layer { name: "boundary", gds: 63, datatype: 0, kind: LayerKind::Annotation })
+        .layer(LayerRole::PinLabel, Layer { name: "pin", gds: 62, datatype: 0, kind: LayerKind::Annotation })
+        .layer_rules(LayerRole::Nwell, LayerRules { min_width_nm: 1200, min_space_nm: 1200, min_area_nm2: 0 })
+        .layer_rules(LayerRole::Active, LayerRules { min_width_nm: 200, min_space_nm: 300, min_area_nm2: 120_000 })
+        .layer_rules(LayerRole::Poly, LayerRules { min_width_nm: 130, min_space_nm: 300, min_area_nm2: 0 })
+        .layer_rules(LayerRole::Contact, LayerRules { min_width_nm: 160, min_space_nm: 200, min_area_nm2: 0 })
+        .layer_rules(LayerRole::Metal1, LayerRules { min_width_nm: 160, min_space_nm: 180, min_area_nm2: 80_000 })
+        .layer_rules(LayerRole::Via1, LayerRules { min_width_nm: 160, min_space_nm: 220, min_area_nm2: 0 })
+        .layer_rules(LayerRole::Metal2, LayerRules { min_width_nm: 200, min_space_nm: 210, min_area_nm2: 100_000 })
+        .layer_rules(LayerRole::Via2, LayerRules { min_width_nm: 200, min_space_nm: 250, min_area_nm2: 0 })
+        .layer_rules(LayerRole::Metal3, LayerRules { min_width_nm: 300, min_space_nm: 300, min_area_nm2: 0 })
+        .enclosure(LayerRole::Active, LayerRole::Contact, 60)
+        .enclosure(LayerRole::Metal1, LayerRole::Contact, 30)
+        .enclosure(LayerRole::Metal1, LayerRole::Via1, 30)
+        .enclosure(LayerRole::Metal2, LayerRole::Via1, 30)
+        .enclosure(LayerRole::Metal2, LayerRole::Via2, 30)
+        .enclosure(LayerRole::Metal3, LayerRole::Via2, 30)
+        .spacing(LayerRole::Poly, LayerRole::Contact, 140)
+        .spacing(LayerRole::Active, LayerRole::Nwell, 300)
+        .wire(LayerRole::Metal1, WireRc { r_sq: 0.08, c_area: 3.0e-26, c_fringe: 5.0e-20 })
+        .wire(LayerRole::Metal2, WireRc { r_sq: 0.07, c_area: 2.7e-26, c_fringe: 4.5e-20 })
+        .wire(LayerRole::Metal3, WireRc { r_sq: 0.05, c_area: 2.2e-26, c_fringe: 4.0e-20 })
+        .wire(LayerRole::Poly, WireRc { r_sq: 7.0, c_area: 8.0e-26, c_fringe: 7.0e-20 })
+        .card("si_nmos", si_nmos)
+        .card("si_pmos", si_pmos)
+        .caps(0.18e-15, 0.12e-15)
+        .corner(Corner::typical(1.8))
+        .build()
+        .expect("sg130 tech must validate")
+}

@@ -1,0 +1,85 @@
+//! `sg40`: synthetic generic 40 nm logic node.
+//!
+//! Rule numbers are representative of a 40 nm-class planar process
+//! (gate length 40 nm, contacted poly pitch 160 nm, M1 half-pitch
+//! 60 nm).  They are NOT any foundry's numbers -- the real TSMC N40
+//! deck is NDA'd (paper footnote 1) -- but they exercise every rule
+//! class the compiler must satisfy and land the bitcell area ratios of
+//! Fig. 3 (Si-Si GC ~ 69 %, OS-OS ~ 11 % of 6T SRAM).
+//!
+//! M1/M2/via spacing is intentionally permissive (20 nm) to fit the
+//! simplified three-layer intra-cell router; the compiler exercises the
+//! same rule *classes* either way, and sg130 provides a strict deck.
+
+use super::cards::sg40 as cards;
+use super::{Corner, Layer, LayerKind, LayerRole, LayerRules, Tech, TechBuilder, WireRc};
+
+pub fn sg40() -> Tech {
+    TechBuilder::new("sg40", 40, 1.1)
+        // ---- layer stack -------------------------------------------------
+        .layer(LayerRole::Nwell, Layer { name: "nwell", gds: 1, datatype: 0, kind: LayerKind::Feol })
+        .layer(LayerRole::Active, Layer { name: "active", gds: 2, datatype: 0, kind: LayerKind::Feol })
+        .layer(LayerRole::Poly, Layer { name: "poly", gds: 3, datatype: 0, kind: LayerKind::Feol })
+        .layer(LayerRole::Nimplant, Layer { name: "nimplant", gds: 4, datatype: 0, kind: LayerKind::Feol })
+        .layer(LayerRole::Pimplant, Layer { name: "pimplant", gds: 5, datatype: 0, kind: LayerKind::Feol })
+        .layer(LayerRole::Contact, Layer { name: "contact", gds: 10, datatype: 0, kind: LayerKind::Cut })
+        .layer(LayerRole::Metal1, Layer { name: "metal1", gds: 11, datatype: 0, kind: LayerKind::Metal })
+        .layer(LayerRole::Via1, Layer { name: "via1", gds: 12, datatype: 0, kind: LayerKind::Cut })
+        .layer(LayerRole::Metal2, Layer { name: "metal2", gds: 13, datatype: 0, kind: LayerKind::Metal })
+        .layer(LayerRole::Via2, Layer { name: "via2", gds: 14, datatype: 0, kind: LayerKind::Cut })
+        .layer(LayerRole::Metal3, Layer { name: "metal3", gds: 15, datatype: 0, kind: LayerKind::Metal })
+        // BEOL oxide-semiconductor device layers (between M2 and M3;
+        // monolithically stackable over FEOL, paper §V-A)
+        .layer(LayerRole::OsChannel, Layer { name: "oschannel", gds: 30, datatype: 0, kind: LayerKind::OsDevice })
+        .layer(LayerRole::OsGate, Layer { name: "osgate", gds: 31, datatype: 0, kind: LayerKind::OsDevice })
+        .layer(LayerRole::Boundary, Layer { name: "boundary", gds: 63, datatype: 0, kind: LayerKind::Annotation })
+        .layer(LayerRole::PinLabel, Layer { name: "pin", gds: 62, datatype: 0, kind: LayerKind::Annotation })
+        // ---- same-layer rules -------------------------------------------
+        .layer_rules(LayerRole::Nwell, LayerRules { min_width_nm: 300, min_space_nm: 300, min_area_nm2: 0 })
+        .layer_rules(LayerRole::Active, LayerRules { min_width_nm: 80, min_space_nm: 80, min_area_nm2: 20_000 })
+        .layer_rules(LayerRole::Poly, LayerRules { min_width_nm: 40, min_space_nm: 60, min_area_nm2: 0 })
+        .layer_rules(LayerRole::Contact, LayerRules { min_width_nm: 60, min_space_nm: 40, min_area_nm2: 0 })
+        .layer_rules(LayerRole::Metal1, LayerRules { min_width_nm: 60, min_space_nm: 20, min_area_nm2: 6_000 })
+        .layer_rules(LayerRole::Via1, LayerRules { min_width_nm: 60, min_space_nm: 20, min_area_nm2: 0 })
+        .layer_rules(LayerRole::Metal2, LayerRules { min_width_nm: 60, min_space_nm: 20, min_area_nm2: 6_000 })
+        .layer_rules(LayerRole::Via2, LayerRules { min_width_nm: 30, min_space_nm: 40, min_area_nm2: 0 })
+        .layer_rules(LayerRole::Metal3, LayerRules { min_width_nm: 60, min_space_nm: 40, min_area_nm2: 0 })
+        // OS device layers live at tight metal pitch: FEOL-class
+        // width/space/enclosure/extension rules only (Fig. 3 caption)
+        .layer_rules(LayerRole::OsChannel, LayerRules { min_width_nm: 50, min_space_nm: 30, min_area_nm2: 0 })
+        .layer_rules(LayerRole::OsGate, LayerRules { min_width_nm: 40, min_space_nm: 30, min_area_nm2: 0 })
+        // ---- enclosure / extension rules --------------------------------
+        .enclosure(LayerRole::Active, LayerRole::Contact, 20)
+        .enclosure(LayerRole::Metal1, LayerRole::Contact, 10)
+        .enclosure(LayerRole::Metal1, LayerRole::Via1, 10)
+        .enclosure(LayerRole::Metal2, LayerRole::Via1, 10)
+        .enclosure(LayerRole::Metal2, LayerRole::Via2, 10)
+        .enclosure(LayerRole::Metal3, LayerRole::Via2, 10)
+        .enclosure(LayerRole::Nwell, LayerRole::Pimplant, 0)
+        // gate extension: osgate must extend past oschannel (long axis)
+        .extension(LayerRole::OsGate, LayerRole::OsChannel, 25, crate::tech::rules::EncAxis::Y)
+        // ---- cross-layer spacings ----------------------------------------
+        .spacing(LayerRole::Poly, LayerRole::Contact, 40)
+        .spacing(LayerRole::Nwell, LayerRole::Active, 80)
+        // ---- wire parasitics --------------------------------------------
+        .wire(LayerRole::Metal1, WireRc { r_sq: 0.25, c_area: 2.0e-26, c_fringe: 4.0e-20 })
+        .wire(LayerRole::Metal2, WireRc { r_sq: 0.20, c_area: 1.8e-26, c_fringe: 3.6e-20 })
+        .wire(LayerRole::Metal3, WireRc { r_sq: 0.12, c_area: 1.5e-26, c_fringe: 3.2e-20 })
+        .wire(LayerRole::Poly, WireRc { r_sq: 8.0, c_area: 6.0e-26, c_fringe: 5.0e-20 })
+        // ---- device cards (mirror python/compile/device.py) -------------
+        .card("si_nmos", cards::SI_NMOS)
+        .card("si_pmos", cards::SI_PMOS)
+        .card("si_pmos_hvt", cards::SI_PMOS_HVT)
+        .card("si_nmos_hvt", cards::SI_NMOS_HVT)
+        .card("si_nmos_lvt", cards::SI_NMOS_LVT)
+        .card("os_nmos", cards::OS_NMOS)
+        .card("os_nmos_hvt", cards::OS_NMOS_HVT)
+        // gate cap ~1 fF/um^2 * (40nm * W) with W/L units folded in
+        .caps(0.065e-15, 0.04e-15)
+        // ---- PVT corners -------------------------------------------------
+        .corner(Corner::typical(1.1))
+        .corner(Corner { name: "ff", kp_scale: 1.15, vt_shift: -0.04, vdd: 1.21, temp_c: -40.0 })
+        .corner(Corner { name: "ss", kp_scale: 0.87, vt_shift: 0.04, vdd: 0.99, temp_c: 125.0 })
+        .build()
+        .expect("sg40 tech must validate")
+}

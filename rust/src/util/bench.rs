@@ -1,0 +1,78 @@
+//! Timing harness for the `harness = false` benches (criterion is not in
+//! the offline registry).  Median-of-runs with warmup, plus a tiny
+//! table printer shared by the figure benches.
+
+use std::time::Instant;
+
+/// Measurement for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub iters: usize,
+}
+
+impl Sample {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.median_s
+    }
+}
+
+/// Run `f` repeatedly; target roughly `target_s` seconds of total
+/// measurement after warmup.  Returns median/min/max of per-iteration
+/// wall time.  `f` should return something observable to keep the
+/// optimizer honest (we black-box it via `std::hint::black_box`).
+pub fn time<T, F: FnMut() -> T>(name: &str, target_s: f64, mut f: F) -> Sample {
+    // warmup + calibration
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_s / one).ceil() as usize).clamp(3, 10_000);
+
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Sample {
+        name: name.to_string(),
+        median_s: times[times.len() / 2],
+        min_s: times[0],
+        max_s: *times.last().unwrap(),
+        iters,
+    }
+}
+
+/// Print one sample in a stable, grep-able format.
+pub fn report(s: &Sample) {
+    println!(
+        "bench {:<44} median {:>12}  min {:>12}  iters {}",
+        s.name,
+        crate::util::eng(s.median_s, "s"),
+        crate::util::eng(s.min_s, "s"),
+        s.iters
+    );
+}
+
+/// Convenience: time + report.
+pub fn run<T, F: FnMut() -> T>(name: &str, target_s: f64, f: F) -> Sample {
+    let s = time(name, target_s, f);
+    report(&s);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let s = time("noop", 0.01, || 1 + 1);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+        assert!(s.iters >= 3);
+    }
+}

@@ -1,0 +1,79 @@
+//! Small utilities that would normally come from crates.io but must be
+//! local because the offline registry only carries the `xla` closure:
+//! a JSON parser ([`json`]), a splitmix/xoshiro PRNG ([`rng`]) used by
+//! the property tests and workload jitter, and a timing harness
+//! ([`bench`]) used by the `harness = false` benches.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+/// Round up to the next power of two (min 1).
+pub fn next_pow2(x: usize) -> usize {
+    x.max(1).next_power_of_two()
+}
+
+/// Integer ceil division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// ceil(log2(x)) for x >= 1.
+pub fn ceil_log2(x: usize) -> u32 {
+    usize::BITS - x.max(1).saturating_sub(1).leading_zeros()
+}
+
+/// Pretty engineering-notation formatter (1.23 µ, 4.5 n, ...).
+pub fn eng(v: f64, unit: &str) -> String {
+    if v == 0.0 || !v.is_finite() {
+        return format!("{v} {unit}");
+    }
+    let mag = v.abs();
+    let (scale, prefix) = if mag >= 1e9 {
+        (1e-9, "G")
+    } else if mag >= 1e6 {
+        (1e-6, "M")
+    } else if mag >= 1e3 {
+        (1e-3, "k")
+    } else if mag >= 1.0 {
+        (1.0, "")
+    } else if mag >= 1e-3 {
+        (1e3, "m")
+    } else if mag >= 1e-6 {
+        (1e6, "u")
+    } else if mag >= 1e-9 {
+        (1e9, "n")
+    } else if mag >= 1e-12 {
+        (1e12, "p")
+    } else if mag >= 1e-15 {
+        (1e15, "f")
+    } else {
+        (1e18, "a")
+    };
+    format!("{:.3} {}{}", v * scale, prefix, unit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_and_logs() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(64), 64);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_div(7, 3), 3);
+        assert_eq!(ceil_div(6, 3), 2);
+    }
+
+    #[test]
+    fn eng_format() {
+        assert_eq!(eng(1.5e-9, "s"), "1.500 ns");
+        assert_eq!(eng(2.0e9, "Hz"), "2.000 GHz");
+        assert_eq!(eng(3.2e-15, "F"), "3.200 fF");
+    }
+}

@@ -1,0 +1,246 @@
+//! End-to-end integration: AOT artifacts -> PJRT runtime -> compiler ->
+//! characterization, plus cross-language model parity and full-flow
+//! (netlist + layout + DRC + LVS + GDS) checks.
+//!
+//! Requires `make artifacts` (artifacts/ is gitignored).
+
+use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::runtime::{engines, Runtime, SharedRuntime};
+use opengcram::tech::sg40;
+use opengcram::{characterize, dse, lvs, sim, workloads};
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn shared() -> &'static SharedRuntime {
+    static RT: OnceLock<SharedRuntime> = OnceLock::new();
+    RT.get_or_init(|| SharedRuntime::load(&artifacts_dir()).expect("run `make artifacts` first"))
+}
+
+/// Run a closure against the shared runtime (serialized).
+fn with_rt<R>(f: impl FnOnce(&Runtime) -> R) -> R {
+    shared().with(f)
+}
+
+#[test]
+fn runtime_loads_and_reports_platform() {
+    with_rt(|rt| {
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    });
+}
+
+#[test]
+fn idvg_artifact_matches_native_ekv_model() {
+    // cross-language parity: the XLA-compiled device model must agree
+    // with the independent rust implementation to float32 accuracy
+    let t = sg40();
+    let cards = vec![
+        (*t.card("si_nmos"), 2.0),
+        (*t.card("si_pmos"), 2.0),
+        (*t.card("os_nmos"), 1.5),
+    ];
+    let (vg, rows) = with_rt(|rt| engines::idvg(rt, &cards, -0.2, 1.2, 1.1)).unwrap();
+    for ((card, wl), row) in cards.iter().zip(&rows) {
+        for (x, got) in vg.iter().zip(row) {
+            let want = sim::mos_ids(
+                1.1 * card.sign(),
+                *x,
+                0.0,
+                card.kp,
+                card.vt,
+                card.n,
+                card.lam,
+                *wl,
+                card.sign(),
+            );
+            let tol = 1e-4 * want.abs().max(1e-15);
+            assert!(
+                (got - want).abs() < tol,
+                "card {:?} vg={x}: xla {got} vs rust {want}",
+                card.kind
+            );
+        }
+    }
+}
+
+#[test]
+fn retention_artifact_reproduces_fig8_ranges() {
+    let t = sg40();
+    let mk = |card: &str, vth: f64| engines::RetentionPoint {
+        write_card: *t.card(card),
+        write_wl: 2.5,
+        c_sn: 1.2e-15,
+        g_gate_leak: if card.starts_with("os") { 1e-17 } else { 1e-16 },
+        i_disturb: 0.0,
+        v0: 0.6,
+        vth,
+    };
+    let res = with_rt(|rt| {
+        engines::retention(rt, &[mk("si_nmos", 0.3), mk("os_nmos", 0.3), mk("os_nmos_hvt", 0.3)])
+    })
+    .unwrap();
+    let (si, os, os_hvt) = (res[0].t_retain, res[1].t_retain, res[2].t_retain);
+    assert!(si > 1e-6 && si < 1e-3, "Si-Si ~ us (Fig. 8b): {si}");
+    assert!(os > 1e-3 && os < 10.0, "OS-OS ~ ms (Fig. 8e): {os}");
+    assert!(os_hvt > 10.0, "engineered OS > 10 s (Fig. 8e): {os_hvt}");
+}
+
+#[test]
+fn retention_increases_monotonically_with_write_vt() {
+    // Fig. 8c: VT modulation of the write transistor
+    let t = sg40();
+    let pts: Vec<_> = [0.35, 0.45, 0.55, 0.65]
+        .iter()
+        .map(|&vt| engines::RetentionPoint {
+            write_card: t.card("si_nmos").with_vt(vt),
+            write_wl: 2.5,
+            c_sn: 1.2e-15,
+            g_gate_leak: 1e-16,
+            i_disturb: 0.0,
+            v0: 0.6,
+            vth: 0.3,
+        })
+        .collect();
+    let res = with_rt(|rt| engines::retention(rt, &pts)).unwrap();
+    for w in res.windows(2) {
+        assert!(w[1].t_retain > w[0].t_retain);
+    }
+}
+
+#[test]
+fn wwlls_boosts_stored_level_and_write_speed() {
+    // Fig. 7a/8c: the WWL level shifter raises the stored '1'
+    let t = sg40();
+    let mk = |v_wwl: f64| engines::WritePoint {
+        write_card: *t.card("si_nmos"),
+        write_wl: 2.5,
+        drv_p: (*t.card("si_pmos"), 8.0),
+        drv_n: (*t.card("si_nmos"), 4.0),
+        c_sn: 1.2e-15,
+        c_wbl: 20e-15,
+        c_wwl_sn: 0.15e-15,
+        g_wbl_leak: 1e-9,
+        vdd: 1.1,
+        v_wwl,
+        one: true,
+        sn0: 0.0,
+    };
+    let res = with_rt(|rt| engines::write_op(rt, &[mk(1.1), mk(1.5)], 6e-9)).unwrap();
+    assert!(res[1].sn_final > res[0].sn_final + 0.2, "{res:?}");
+    assert!(res[1].t_wr <= res[0].t_wr * 1.05);
+}
+
+#[test]
+fn full_characterization_of_a_1kb_gc_bank() {
+    let t = sg40();
+    let bank = compile(&t, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap();
+    let perf = with_rt(|rt| characterize::characterize(&t, rt, &bank)).unwrap();
+    assert!(perf.functional, "1 Kb GC bank must resolve: {perf:?}");
+    assert!(perf.f_op_hz > 5e7 && perf.f_op_hz < 5e9, "{}", perf.f_op_hz);
+    assert!(perf.retention_s > 1e-6 && perf.retention_s < 1e-2);
+    assert!(perf.bandwidth_bps > perf.f_op_hz * 32.0);
+}
+
+#[test]
+fn analytical_tracks_transient_within_bounds() {
+    // the GEMTOO-style claim: analytical deviates but stays in the
+    // same ballpark (paper: up to 15 % for GEMTOO; our stand-in stays
+    // within a small constant factor -- the ablation bench reports the
+    // actual deviation per size)
+    let t = sg40();
+    let bank = compile(&t, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap();
+    let a = characterize::analytical(&t, &bank);
+    let c = with_rt(|rt| characterize::characterize(&t, rt, &bank)).unwrap();
+    let ratio = a.f_op_hz / c.f_op_hz;
+    assert!(ratio > 0.2 && ratio < 5.0, "analytical/transient = {ratio}");
+}
+
+#[test]
+fn shmoo_has_passes_and_failures() {
+    // Fig. 10 structure: small banks serve most L1 demands; H100 L2
+    // demands mostly exceed a single bank
+    let t = sg40();
+    let mut pass_l1 = 0;
+    let mut fail_l2 = 0;
+    let cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
+    let bank = compile(&t, &cfg).unwrap();
+    let perf = with_rt(|rt| characterize::characterize(&t, rt, &bank)).unwrap();
+    let e = dse::Evaluated { config: cfg, perf, area_um2: bank.layout.total_area_um2() };
+    for task in &workloads::TASKS {
+        let l1 = workloads::profile(task, workloads::CacheLevel::L1, &workloads::GT520M);
+        let l2 = workloads::profile(task, workloads::CacheLevel::L2, &workloads::H100);
+        if dse::shmoo_verdict(&e, &l1).pass() {
+            pass_l1 += 1;
+        }
+        if !dse::shmoo_verdict(&e, &l2).pass() {
+            fail_l2 += 1;
+        }
+    }
+    assert!(pass_l1 >= 4, "most GT520M L1 demands should pass: {pass_l1}");
+    assert!(fail_l2 >= 4, "most H100 L2 demands need multibank: {fail_l2}");
+}
+
+#[test]
+fn bank_layout_exports_gds_and_passes_drc_lvs_at_small_size() {
+    let t = sg40();
+    let bank = compile(&t, &Config::new(8, 8, CellFlavor::GcSiSiNp)).unwrap();
+    // GDS round-trip
+    let bytes = opengcram::layout::gds::write_bytes(&bank.library, &t, "bank");
+    let summary = opengcram::layout::gds::read_summary(&bytes).unwrap();
+    assert!(summary.structures.iter().any(|s| s == "bank"));
+    assert!(summary.boundaries.len() > 100);
+    // DRC on the flattened array (the generated tile)
+    let rects = bank.library.flatten("bitcell_array").unwrap();
+    let rep = opengcram::drc::check(&t, &rects);
+    assert!(rep.clean(), "{} violations; first {}", rep.violations.len(), rep.violations[0]);
+    // LVS array vs schematic
+    let arr_pins = bank.library.get("bitcell_array").unwrap().pins.clone();
+    let _ = arr_pins; // array pins propagate via bitcell abutment
+    let mut nl = bank.netlist.clone();
+    nl.top = "bitcell_array".into();
+    let flat = nl.flatten().unwrap();
+    assert_eq!(flat.mos_count(), 8 * 8 * 2);
+    // extraction-level check: device count matches schematic
+    let (rects, pins) = bank.library.flatten_with_pins("bitcell_array").unwrap();
+    let ext = lvs::extract(&t, &rects, &pins, "bitcell_array").unwrap();
+    assert_eq!(ext.circuit.mos_count(), flat.mos_count());
+}
+
+#[test]
+fn coordinator_batches_retention_jobs_over_the_runtime() {
+    use opengcram::coordinator::{BatchExec, Coordinator};
+    struct RetExec {
+        rt: &'static SharedRuntime,
+        cap: usize,
+    }
+    impl BatchExec<engines::RetentionPoint, engines::RetentionResult> for RetExec {
+        fn run(&mut self, jobs: &[engines::RetentionPoint]) -> opengcram::Result<Vec<engines::RetentionResult>> {
+            self.rt.with(|rt| engines::retention(rt, jobs))
+        }
+        fn max_batch(&self) -> usize {
+            self.cap
+        }
+    }
+    let cap = with_rt(|rt| rt.manifest.get("retention").unwrap().batch);
+    let t = sg40();
+    let c = Coordinator::spawn(RetExec { rt: shared(), cap });
+    let jobs: Vec<_> = (0..20)
+        .map(|i| engines::RetentionPoint {
+            write_card: t.card("si_nmos").with_vt(0.35 + 0.02 * i as f64),
+            write_wl: 2.5,
+            c_sn: 1.2e-15,
+            g_gate_leak: 1e-16,
+            i_disturb: 0.0,
+            v0: 0.6,
+            vth: 0.3,
+        })
+        .collect();
+    let res = c.run_all(jobs).unwrap();
+    assert_eq!(res.len(), 20);
+    for w in res.windows(2) {
+        assert!(w[1].t_retain >= w[0].t_retain * 0.99);
+    }
+}
