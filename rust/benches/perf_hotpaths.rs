@@ -1,36 +1,165 @@
-//! Performance pass (EXPERIMENTS.md SS Perf): hot-path throughput of
-//! every layer the request path touches — L3 compiler/DRC/extraction,
-//! the PJRT execution path per artifact, and the native sim baseline.
+//! Performance pass (EXPERIMENTS.md, Hot paths): hot-path throughput of
+//! every layer the request path touches — L3 compiler / flatten / DRC
+//! (flat + hierarchical) / DSE, the PJRT execution path per artifact,
+//! and the native sim baseline.
+//!
+//! Emits `BENCH_perf.json` (name, median_s, throughput) so the perf
+//! trajectory is tracked across PRs.
+//!
+//! Env knobs:
+//! * `PERF_SMOKE=1` — CI smoke: 32x32 bank, short targets, geometry
+//!   paths only (no artifacts needed).
+//! * `PERF_BANK=N`  — override the square bank size (default 128,
+//!   32 under smoke).
 use opengcram::compiler::{compile, CellFlavor, Config};
-use opengcram::layout::{cells, Library};
+use opengcram::layout::{cells, FlattenCache, Library};
 use opengcram::runtime::{engines, Runtime};
 use opengcram::tech::sg40;
 use opengcram::util::bench;
-use opengcram::sim;
+use opengcram::{characterize, drc, dse, sim};
 use std::path::Path;
 
 fn main() {
     let tech = sg40();
-    let rt = Runtime::load(Path::new("artifacts")).expect("make artifacts");
+    let smoke = std::env::var("PERF_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let n: usize = std::env::var("PERF_BANK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 32 } else { 128 });
+    let t_short = if smoke { 0.2 } else { 1.5 };
+    let t_long = if smoke { 0.3 } else { 2.0 };
+    let mut records: Vec<(bench::Sample, f64)> = Vec::new();
 
-    // L3: compiler + geometry engines
-    let s = bench::run("l3_compile_1kb_bank", 1.5, || {
+    // ---- L3: compiler ----------------------------------------------------
+    let s = bench::run("l3_compile_1kb_bank", t_short, || {
         compile(&tech, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap()
     });
     println!("banks_per_sec,{:.1}", 1.0 / s.median_s);
-    let bank = compile(&tech, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap();
-    let rects = bank.library.flatten("bitcell_array").unwrap();
-    let s = bench::run("l3_drc_1kb_array", 2.0, || opengcram::drc::check(&tech, &rects));
+    records.push((s.clone(), s.per_sec()));
+    let s = bench::run(&format!("l3_compile_{n}x{n}_bank"), t_long, || {
+        compile(&tech, &Config::new(n, n, CellFlavor::GcSiSiNp)).unwrap()
+    });
+    records.push((s.clone(), s.per_sec()));
+
+    // ---- L3: memoized flatten -------------------------------------------
+    let bank = compile(&tech, &Config::new(n, n, CellFlavor::GcSiSiNp)).unwrap();
+    let rects_cell = std::cell::RefCell::new(Vec::new());
+    let s = bench::run(&format!("l3_flatten_{n}x{n}_array"), t_short, || {
+        *rects_cell.borrow_mut() = bank.library.flatten("bitcell_array").unwrap();
+    });
+    let rects = rects_cell.into_inner();
+    println!("flatten_rects_per_sec,{:.0}", rects.len() as f64 / s.median_s);
+    let tput = rects.len() as f64 / s.median_s;
+    records.push((s, tput));
+    let mut shared_cache = FlattenCache::default();
+    bank.library.flatten_cached("bitcell_array", &mut shared_cache).unwrap();
+    let s = bench::run(&format!("l3_flatten_{n}x{n}_array_warm_cache"), t_short, || {
+        bank.library.flatten_cached("bitcell_array", &mut shared_cache).unwrap()
+    });
+    records.push((s.clone(), rects.len() as f64 / s.median_s));
+
+    // ---- L3: DRC, flat and hierarchical ---------------------------------
+    let s = bench::run(&format!("l3_drc_{n}x{n}_array"), t_long, || {
+        drc::check(&tech, &rects)
+    });
     println!("drc_rects_per_sec,{:.0}", rects.len() as f64 / s.median_s);
+    records.push((s.clone(), rects.len() as f64 / s.median_s));
+    let flat_rep = drc::check(&tech, &rects);
+    let s = bench::run(&format!("l3_drc_hier_{n}x{n}_array"), t_long, || {
+        drc::hier::check_hier(&tech, &bank.library, "bitcell_array").unwrap()
+    });
+    println!("drc_hier_rects_per_sec,{:.0}", rects.len() as f64 / s.median_s);
+    records.push((s.clone(), rects.len() as f64 / s.median_s));
+    let hier_rep = drc::hier::check_hier(&tech, &bank.library, "bitcell_array").unwrap();
+    println!(
+        "# drc sanity: flat {} violations, hier {} violations on {} rects",
+        flat_rep.violations.len(),
+        hier_rep.violations.len(),
+        rects.len()
+    );
+    assert_eq!(
+        flat_rep.clean(),
+        hier_rep.clean(),
+        "flat and hierarchical DRC disagree on the generated array"
+    );
+
+    // ---- L3: DSE (analytical pipeline; no artifacts needed) -------------
+    let shmoo_configs: Vec<Config> = dse::fig10_configs(CellFlavor::GcSiSiNp)
+        .into_iter()
+        .filter(|c| !smoke || c.word_size <= 32)
+        .collect();
+    let eval = |cfg: &Config| -> opengcram::Result<dse::Evaluated> {
+        let b = compile(&tech, cfg)?;
+        Ok(dse::Evaluated {
+            config: cfg.clone(),
+            perf: characterize::analytical(&tech, &b),
+            area_um2: b.layout.total_area_um2(),
+        })
+    };
+    let workers = dse::default_workers();
+    let s = bench::run("dse_shmoo_axis_serial", t_long, || {
+        dse::evaluate_all(&shmoo_configs, 1, eval).unwrap()
+    });
+    let serial_s = s.median_s;
+    records.push((s.clone(), shmoo_configs.len() as f64 / s.median_s));
+    let s = bench::run(&format!("dse_shmoo_axis_parallel_x{workers}"), t_long, || {
+        dse::evaluate_all(&shmoo_configs, workers, eval).unwrap()
+    });
+    println!("shmoo_parallel_speedup,{:.2}x", serial_s / s.median_s.max(1e-12));
+    records.push((s.clone(), shmoo_configs.len() as f64 / s.median_s));
+    let cache = dse::EvalCache::new();
+    dse::evaluate_all_cached(&shmoo_configs, workers, &cache, eval).unwrap();
+    let s = bench::run("dse_shmoo_axis_cached", t_short, || {
+        dse::evaluate_all_cached(&shmoo_configs, workers, &cache, eval).unwrap()
+    });
+    records.push((s.clone(), shmoo_configs.len() as f64 / s.median_s));
+    // the optimizer walk can reach 128x128 compiles; skip under smoke
+    if !smoke {
+        let w = dse::CostWeights {
+            w_delay: 1.0,
+            w_area: 0.5,
+            w_power: 0.5,
+            f_min_hz: 0.0,
+            t_retain_min_s: 0.0,
+        };
+        let evals_cell = std::cell::Cell::new(0usize);
+        let s = bench::run("dse_optimize_analytical", t_long, || {
+            let (_, ev) = dse::optimize(CellFlavor::GcSiSiNp, &w, |cfg| eval(cfg)).unwrap();
+            evals_cell.set(ev);
+        });
+        let evals = evals_cell.get();
+        println!("optimize_pipeline_evals,{evals}");
+        records.push((s.clone(), evals as f64 / s.median_s));
+    }
+
+    // ---- L3: LVS extraction ---------------------------------------------
     let lc = cells::gc2t_sisi(&tech, false);
     let mut lib = Library::default();
     lib.add(lc.layout.clone());
     let (cr, cp) = lib.flatten_with_pins("gc2t_sisi").unwrap();
-    bench::run("l3_lvs_extract_bitcell", 1.0, || {
+    let s = bench::run("l3_lvs_extract_bitcell", if smoke { 0.2 } else { 1.0 }, || {
         opengcram::lvs::extract(&tech, &cr, &cp, "gc2t_sisi").unwrap()
     });
+    records.push((s.clone(), s.per_sec()));
 
-    // L1/L2 via PJRT: batched artifact executions (per-design cost)
+    // ---- L1/L2 via PJRT + native sim baseline (skipped in smoke) --------
+    if smoke {
+        println!("# PERF_SMOKE: skipping XLA and native-sim benches");
+    } else {
+        match Runtime::load(Path::new("artifacts")) {
+            Ok(rt) => xla_benches(&tech, &rt, &mut records),
+            Err(e) => println!("# skipping XLA benches ({e})"),
+        }
+        native_sim_bench(&tech, &mut records);
+    }
+
+    let json_path = Path::new("BENCH_perf.json");
+    bench::write_json(json_path, &records).expect("write BENCH_perf.json");
+    println!("# wrote {} ({} benches)", json_path.display(), records.len());
+}
+
+fn xla_benches(tech: &opengcram::tech::Tech, rt: &Runtime, records: &mut Vec<(bench::Sample, f64)>) {
+    // batched artifact executions (per-design cost)
     let ret_pts: Vec<_> = (0..256)
         .map(|i| engines::RetentionPoint {
             write_card: tech.card("si_nmos").with_vt(0.35 + 0.001 * i as f64),
@@ -42,12 +171,16 @@ fn main() {
             vth: 0.3,
         })
         .collect();
-    let s = bench::run("xla_retention_batch256", 3.0, || engines::retention(&rt, &ret_pts).unwrap());
+    let s = bench::run("xla_retention_batch256", 3.0, || engines::retention(rt, &ret_pts).unwrap());
     println!("retention_points_per_sec,{:.0}", 256.0 / s.median_s);
+    records.push((s.clone(), 256.0 / s.median_s));
     let one = vec![ret_pts[0].clone()];
-    let s1 = bench::run("xla_retention_batch1_padded", 3.0, || engines::retention(&rt, &one).unwrap());
+    let s1 = bench::run("xla_retention_batch1_padded", 3.0, || engines::retention(rt, &one).unwrap());
     println!("batch_amortization,{:.1}x", s1.median_s * 256.0 / s.median_s);
+    records.push((s1.clone(), 1.0 / s1.median_s));
+}
 
+fn native_sim_bench(tech: &opengcram::tech::Tech, records: &mut Vec<(bench::Sample, f64)>) {
     // native rust sim baseline (single design, same template)
     let t = sim::retention_template();
     let mut p = vec![0.0; t.npar];
@@ -66,4 +199,5 @@ fn main() {
         sim::transient(&t, sim::Integrator::ExpDecay, 4, &[0.6], &[0.0; 4], &p, &[1.0 / 1.2e-15], &wave, &wave, &dt)
     });
     println!("native_points_per_sec,{:.0}", 1.0 / s.median_s);
+    records.push((s.clone(), 1.0 / s.median_s));
 }

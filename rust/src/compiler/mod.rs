@@ -17,7 +17,7 @@ use crate::tech::{LayerRole, Tech};
 use crate::util::{ceil_div, ceil_log2, next_pow2};
 
 /// Bit-cell flavor (Fig. 2).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum CellFlavor {
     /// 6T SRAM, single port (the comparison baseline).
     Sram6t,
@@ -61,9 +61,37 @@ pub struct Config {
     pub write_vt: Option<f64>,
 }
 
+/// Hashable identity of a [`Config`] (the f64 VT override is bit-cast)
+/// — the key of the DSE evaluation cache ([`crate::dse::EvalCache`]).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ConfigKey {
+    pub word_size: usize,
+    pub num_words: usize,
+    pub flavor: CellFlavor,
+    pub wwlls: bool,
+    pub mux_factor: Option<usize>,
+    pub write_vt_bits: Option<u64>,
+}
+
 impl Config {
     pub fn new(word_size: usize, num_words: usize, flavor: CellFlavor) -> Config {
         Config { word_size, num_words, flavor, wwlls: false, mux_factor: None, write_vt: None }
+    }
+
+    /// Cache identity: two configs with equal keys compile to the same
+    /// bank and characterize identically.  Exhaustive destructuring:
+    /// adding a Config field without extending the key is a compile
+    /// error, not a silent cache-aliasing bug.
+    pub fn key(&self) -> ConfigKey {
+        let &Config { word_size, num_words, flavor, wwlls, mux_factor, write_vt } = self;
+        ConfigKey {
+            word_size,
+            num_words,
+            flavor,
+            wwlls,
+            mux_factor,
+            write_vt_bits: write_vt.map(f64::to_bits),
+        }
     }
 
     pub fn bits(&self) -> usize {

@@ -1,0 +1,380 @@
+//! Hierarchical DRC: check each unique cell once, then only re-examine
+//! geometry near instance boundaries ("halo" regions).
+//!
+//! The flat checker re-verifies the identical bitcell interior ~16k
+//! times on a 128x128 bank.  This engine decomposes the work into:
+//!
+//! 1. **Interior pass** — every unique cell reachable from `top` gets
+//!    one full flat [`super::check`] over its *local* rects (leaf cells
+//!    therefore get exactly the flat treatment, once).
+//! 2. **Parent-local seams** — per instance, child rects within the
+//!    rule halo of any parent-local rect (power straps, rings, routed
+//!    tracks, vias) are promoted into the parent frame and checked
+//!    cross-owner against those local rects.
+//! 3. **Instance-pair seams** — overlapping-halo instance pairs are
+//!    deduplicated by `(cell_a, orient_a, cell_b, orient_b, rel_dx,
+//!    rel_dy)`: a uniform array has only a handful of distinct
+//!    neighbor configurations, so one representative pair is checked
+//!    per configuration and findings carry an `xN` multiplier.
+//!
+//! Interactions are strictly pairwise cross-owner (intra-cell geometry
+//! is rule 1's job), and violations inside a repeated cell are reported
+//! once — the point of the mode.  Known approximations, conservative
+//! for the generators in this crate: `min_area` is evaluated per cell
+//! (a polygon meeting the rule only via merging across instances would
+//! over-report); exemption connectivity inside a seam window is
+//! limited to promoted rects; and the interior pass sees a cell's
+//! local rects without child context, so a conditional-rule exemption
+//! that only holds via child geometry (e.g. a parent-local contact
+//! whose same-construct poly pad lives inside a child) would
+//! over-report.  None of this crate's generators draw FEOL layers as
+//! parent-local rects, and the flat-vs-hier equivalence tests plus the
+//! perf bench's sanity assert guard the agreement on generated
+//! layouts.
+
+use super::{check, check_window, Grid, Report};
+use crate::layout::{FlattenCache, Library, Rect};
+use crate::tech::Tech;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+/// Maximum distance at which any rule of `tech` can relate two rects
+/// (the halo width).
+pub fn rule_reach(tech: &Tech) -> i64 {
+    let mut h = 1i64;
+    for (_, lr) in tech.rules.checked_layers() {
+        h = h.max(lr.min_space_nm);
+    }
+    for er in &tech.rules.enclosures {
+        h = h.max(er.margin_nm);
+    }
+    for sr in &tech.rules.cross_spacings {
+        h = h.max(sr.space_nm);
+    }
+    h
+}
+
+/// Max-norm rect distance strictly below `halo` (overlap counts).
+fn near(a: &Rect, b: &Rect, halo: i64) -> bool {
+    let dx = (b.x0 - a.x1).max(a.x0 - b.x1);
+    let dy = (b.y0 - a.y1).max(a.y0 - b.y1);
+    dx < halo && dy < halo
+}
+
+fn bbox_of(rects: &[Rect]) -> Option<Rect> {
+    let mut it = rects.iter();
+    let first = *it.next()?;
+    Some(it.fold(first, |a, b| a.union_bbox(b)))
+}
+
+/// Per-layer flag: does the layer participate in any rule at all?
+/// (Annotation layers like `boundary` never need promotion.)
+fn ruled_layers(tech: &Tech) -> Vec<bool> {
+    let mut v = vec![false; tech.layers.len()];
+    for (role, lr) in tech.rules.checked_layers() {
+        if tech.has_role(*role)
+            && (lr.min_width_nm > 0 || lr.min_space_nm > 0 || lr.min_area_nm2 > 0)
+        {
+            v[tech.layer(*role)] = true;
+        }
+    }
+    for er in &tech.rules.enclosures {
+        if tech.has_role(er.outer) && tech.has_role(er.inner) {
+            v[tech.layer(er.outer)] = true;
+            v[tech.layer(er.inner)] = true;
+        }
+    }
+    for sr in &tech.rules.cross_spacings {
+        if tech.has_role(sr.a) && tech.has_role(sr.b) {
+            v[tech.layer(sr.a)] = true;
+            v[tech.layer(sr.b)] = true;
+        }
+    }
+    v
+}
+
+/// Hierarchically check `top` (fresh flatten memo).
+pub fn check_hier(tech: &Tech, lib: &Library, top: &str) -> crate::Result<Report> {
+    let mut cache = FlattenCache::default();
+    check_hier_cached(tech, lib, top, &mut cache)
+}
+
+/// Hierarchically check `top`, sharing a caller-owned flatten memo
+/// (sweeps re-checking many banks over the same cell library).
+pub fn check_hier_cached(
+    tech: &Tech,
+    lib: &Library,
+    top: &str,
+    cache: &mut FlattenCache,
+) -> crate::Result<Report> {
+    let halo = rule_reach(tech);
+    let ruled = ruled_layers(tech);
+
+    // unique cells reachable from top
+    let mut order: Vec<String> = Vec::new();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut stack = vec![top.to_string()];
+    while let Some(name) = stack.pop() {
+        if !seen.insert(name.clone()) {
+            continue;
+        }
+        let c = lib.get(&name)?;
+        for i in &c.insts {
+            stack.push(i.cell.clone());
+        }
+        order.push(name);
+    }
+
+    let mut report = Report::default();
+    for name in &order {
+        check_cell_frame(tech, lib, name, halo, &ruled, cache, &mut report)?;
+    }
+    Ok(report)
+}
+
+fn check_cell_frame(
+    tech: &Tech,
+    lib: &Library,
+    name: &str,
+    halo: i64,
+    ruled: &[bool],
+    cache: &mut FlattenCache,
+    report: &mut Report,
+) -> crate::Result<()> {
+    let c = lib.get(name)?;
+
+    // 1. interior: full flat rule set over this cell's local rects
+    let local_rep = check(tech, &c.rects);
+    report.rects_checked += local_rep.rects_checked;
+    for v in local_rep.violations {
+        report.violations.push(super::Violation {
+            detail: format!("{} [cell {name}]", v.detail),
+            ..v
+        });
+    }
+
+    if c.insts.is_empty() {
+        return Ok(());
+    }
+
+    // placed flattened geometry per instance; flat lists AND their
+    // local bboxes are memoized per (cell, orient) — an array frame
+    // has ~16k instances of a handful of distinct children
+    let mut flats: Vec<Arc<Vec<Rect>>> = Vec::with_capacity(c.insts.len());
+    let mut bbs: Vec<Rect> = Vec::with_capacity(c.insts.len());
+    let mut bb_memo: BTreeMap<(&str, usize), Option<Rect>> = BTreeMap::new();
+    for i in &c.insts {
+        let flat = lib.flatten_oriented(&i.cell, i.orient, cache)?;
+        let local_bb = *bb_memo
+            .entry((i.cell.as_str(), i.orient.idx()))
+            .or_insert_with(|| bbox_of(&flat));
+        let bb = local_bb
+            .map(|b| b.translated(i.dx, i.dy))
+            // empty cells interact with nothing; park a point far away
+            .unwrap_or(Rect { layer: 0, x0: i64::MIN / 4, y0: i64::MIN / 4, x1: i64::MIN / 4, y1: i64::MIN / 4 });
+        flats.push(flat);
+        bbs.push(bb);
+    }
+
+    // 2. parent-local rects vs each instance's promoted halo rects
+    let ruled_local: Vec<Rect> = c.rects.iter().copied().filter(|r| ruled[r.layer]).collect();
+    if !ruled_local.is_empty() {
+        let lgrid = Grid::build(&ruled_local, halo);
+        let mut cands = Vec::new();
+        for (k, inst) in c.insts.iter().enumerate() {
+            // bbox-level early-out: most instances of an array frame are
+            // nowhere near any parent-local rect (straps/rings/tracks)
+            lgrid.query_into(&bbs[k], &mut cands);
+            if !cands.iter().any(|&q| near(&ruled_local[q], &bbs[k], halo)) {
+                continue;
+            }
+            let mut window: Vec<Rect> = Vec::new();
+            let mut owners: Vec<usize> = Vec::new();
+            for r in flats[k].iter() {
+                if !ruled[r.layer] {
+                    continue;
+                }
+                let rt = r.translated(inst.dx, inst.dy);
+                lgrid.query_into(&rt, &mut cands);
+                if cands.iter().any(|&q| near(&ruled_local[q], &rt, halo)) {
+                    window.push(rt);
+                    owners.push(1);
+                }
+            }
+            if window.is_empty() {
+                continue;
+            }
+            for lr in &ruled_local {
+                if near(lr, &bbs[k], halo) {
+                    window.push(*lr);
+                    owners.push(0);
+                }
+            }
+            check_window(tech, &window, &owners, 1, report);
+        }
+    }
+
+    // 3. instance-pair seams, deduplicated by relative configuration.
+    // Cell names are interned to per-frame ids so the dedup key is
+    // all-integer (no String allocation per candidate pair).
+    let mut cell_ids: BTreeMap<&str, usize> = BTreeMap::new();
+    for i in &c.insts {
+        let next = cell_ids.len();
+        cell_ids.entry(i.cell.as_str()).or_insert(next);
+    }
+    type PairKey = (usize, usize, usize, usize, i64, i64);
+    let mut pairs: BTreeMap<PairKey, (usize, usize, usize)> = BTreeMap::new();
+    let pair_grid = Grid::build(&bbs, halo);
+    let mut cands = Vec::new();
+    for (k, bk) in bbs.iter().enumerate() {
+        pair_grid.query_into(bk, &mut cands);
+        for &j in &cands {
+            if j <= k || !near(bk, &bbs[j], halo) {
+                continue;
+            }
+            let (a, b) = (&c.insts[k], &c.insts[j]);
+            let key: PairKey = (
+                cell_ids[a.cell.as_str()],
+                a.orient.idx(),
+                cell_ids[b.cell.as_str()],
+                b.orient.idx(),
+                b.dx - a.dx,
+                b.dy - a.dy,
+            );
+            pairs
+                .entry(key)
+                .and_modify(|e| e.2 += 1)
+                .or_insert((k, j, 1));
+        }
+    }
+    for (k, j, count) in pairs.into_values() {
+        let mut window: Vec<Rect> = Vec::new();
+        let mut owners: Vec<usize> = Vec::new();
+        let (ik, ij) = (&c.insts[k], &c.insts[j]);
+        for r in flats[k].iter() {
+            if !ruled[r.layer] {
+                continue;
+            }
+            let rt = r.translated(ik.dx, ik.dy);
+            if near(&rt, &bbs[j], halo) {
+                window.push(rt);
+                owners.push(1);
+            }
+        }
+        for r in flats[j].iter() {
+            if !ruled[r.layer] {
+                continue;
+            }
+            let rt = r.translated(ij.dx, ij.dy);
+            if near(&rt, &bbs[k], halo) {
+                window.push(rt);
+                owners.push(2);
+            }
+        }
+        if !window.is_empty() {
+            check_window(tech, &window, &owners, count, report);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{bank, cells, Cell, Library, Orient};
+    use crate::tech::{sg40, LayerRole};
+
+    #[test]
+    fn rule_reach_covers_the_widest_rule() {
+        let t = sg40();
+        // sg40's widest reach is the 300 nm nwell spacing
+        assert_eq!(rule_reach(&t), 300);
+    }
+
+    #[test]
+    fn hier_matches_flat_on_clean_array_and_dff() {
+        let t = sg40();
+        let mut lib = Library::default();
+        lib.add(cells::gc2t_sisi(&t, false).layout);
+        bank::tile_array(&mut lib, &t, "arr", "gc2t_sisi", 16, 16, 8, 400).unwrap();
+        crate::layout::compose::dff(&mut lib, &t).unwrap();
+        for top in ["arr", "dff"] {
+            let flat = check(&t, &lib.flatten(top).unwrap());
+            let hier = check_hier(&t, &lib, top).unwrap();
+            assert!(flat.clean(), "{top} flat: {:?}", flat.violations.first());
+            assert!(hier.clean(), "{top} hier: {:?}", hier.violations.first());
+        }
+    }
+
+    #[test]
+    fn interior_violation_reported_once_not_per_instance() {
+        let t = sg40();
+        let mut lib = Library::default();
+        let mut lc = cells::gc2t_sisi(&t, false);
+        // inject a skinny m1 sliver deep inside the bitcell
+        let m1 = t.layer(LayerRole::Metal1);
+        lc.layout.add(Rect::new(m1, 500, 300, 530, 700));
+        lib.add(lc.layout);
+        bank::tile_array(&mut lib, &t, "arr", "gc2t_sisi", 8, 8, 0, 0).unwrap();
+
+        let flat = check(&t, &lib.flatten("arr").unwrap());
+        let flat_widths = flat.violations.iter().filter(|v| v.rule == "min_width").count();
+        assert_eq!(flat_widths, 64, "flat re-reports per instance");
+
+        let hier = check_hier(&t, &lib, "arr").unwrap();
+        let hier_widths = hier.violations.iter().filter(|v| v.rule == "min_width").count();
+        assert_eq!(hier_widths, 1, "hier reports the unique cell once: {:?}", hier.violations);
+    }
+
+    #[test]
+    fn seam_violation_across_instances_is_caught_and_deduped() {
+        let t = sg40();
+        let m1 = t.layer(LayerRole::Metal1);
+        let b = t.layer(LayerRole::Boundary);
+        let mut lib = Library::default();
+        let mut leaf = Cell::new("pad");
+        leaf.add(Rect::new(m1, 0, 0, 200, 200));
+        leaf.add(Rect::new(b, 0, 0, 210, 200));
+        lib.add(leaf);
+        // row of pads 10 nm apart: m1 spacing rule is 20 nm -> seam
+        // violations between every adjacent pair, one configuration
+        let mut row = Cell::new("row");
+        for i in 0..8 {
+            row.place(format!("p{i}"), "pad", i * 210, 0, Orient::R0);
+        }
+        lib.add(row);
+
+        let flat = check(&t, &lib.flatten("row").unwrap());
+        assert_eq!(flat.violations.iter().filter(|v| v.rule == "min_space").count(), 7);
+
+        let hier = check_hier(&t, &lib, "row").unwrap();
+        let seams: Vec<_> = hier.violations.iter().filter(|v| v.rule == "min_space").collect();
+        assert_eq!(seams.len(), 1, "{:?}", hier.violations);
+        assert!(seams[0].detail.contains("x7 instance pairs"), "{}", seams[0].detail);
+    }
+
+    #[test]
+    fn parent_local_strap_interaction_is_checked() {
+        let t = sg40();
+        let m1 = t.layer(LayerRole::Metal1);
+        let b = t.layer(LayerRole::Boundary);
+        let mut lib = Library::default();
+        let mut leaf = Cell::new("bit");
+        leaf.add(Rect::new(m1, 0, 100, 400, 200));
+        leaf.add(Rect::new(b, 0, 0, 400, 300));
+        lib.add(leaf);
+        // parent strap 10 nm below the child's m1: cross-owner violation
+        let mut top = Cell::new("top");
+        top.place("b0", "bit", 0, 0, Orient::R0);
+        top.add(Rect::new(m1, 0, 0, 400, 90));
+        lib.add(top);
+        let hier = check_hier(&t, &lib, "top").unwrap();
+        assert!(
+            hier.violations.iter().any(|v| v.rule == "min_space"),
+            "{:?}",
+            hier.violations
+        );
+        let flat = check(&t, &lib.flatten("top").unwrap());
+        assert!(flat.violations.iter().any(|v| v.rule == "min_space"));
+    }
+}

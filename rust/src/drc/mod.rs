@@ -1,11 +1,15 @@
 //! Design-rule checker: width / spacing / area / enclosure / extension
-//! checks over a flattened rect soup.
+//! checks over a flattened rect soup, plus a hierarchical mode
+//! ([`hier`]) that checks each unique cell once and only re-examines
+//! instance-boundary halo regions.
 //!
-//! The engine is the scanline-bucketed pairwise checker a memory
-//! compiler needs: rects are merged per layer into connected groups
-//! first (so abutting wire segments of one net do not flag spacing),
-//! then same-layer spacing runs over a sorted sweep with an active set,
-//! and enclosure rules run via point-in-group queries.
+//! Every pairwise pass is grid-accelerated: candidates come from a
+//! coarse spatial hash ([`Grid`]) instead of scanning the full rect
+//! list, so same-layer spacing, cross-layer spacing, enclosure and the
+//! touching-group union-find are all ~O(n) on array-scale layouts
+//! (the generators emit bounded-density geometry).
+
+pub mod hier;
 
 use crate::layout::Rect;
 use crate::tech::Tech;
@@ -83,7 +87,7 @@ pub fn check(tech: &Tech, rects: &[Rect]) -> Report {
 
         // 2. spacing between different groups
         if rules.min_space_nm > 0 {
-            check_spacing(lr, &groups, rules.min_space_nm, lname, &mut report);
+            check_spacing(lr, &groups, None, rules.min_space_nm, lname, 1, &mut report);
         }
 
         // 3. area per group (merged area approximated by rect-union sum;
@@ -108,42 +112,19 @@ pub fn check(tech: &Tech, rects: &[Rect]) -> Report {
         }
     }
 
-    // 4. enclosure / extension rules.  Conditional: an inner rect is
-    //    checked only where it overlaps the outer layer at all (a
-    //    contact on poly is governed by the poly rule, not the active
-    //    rule).  Axis-restricted rules model gate extension.
+    // 4. enclosure / extension rules.
     for er in &tech.rules.enclosures {
         if !tech.has_role(er.outer) || !tech.has_role(er.inner) {
             continue;
         }
         let (oi, ii) = (tech.layer(er.outer), tech.layer(er.inner));
-        let iname = tech.layers[ii].name;
         let empty = Vec::new();
         let outers = by_layer.get(&oi).unwrap_or(&empty);
-        let grid = Grid::build(outers, 0);
-        for inner in by_layer.get(&ii).unwrap_or(&empty) {
-            let cands = grid.query(inner);
-            let related = cands.iter().any(|&k| outers[k].overlaps(inner));
-            if !related {
-                continue;
-            }
-            let ok = cands
-                .iter()
-                .any(|&k| encloses_axis(&outers[k], inner, er.margin_nm, er.axis));
-            if !ok {
-                report.violations.push(Violation {
-                    rule: format!("enclosure({}>{})", tech.layers[oi].name, iname),
-                    layer: iname,
-                    at: *inner,
-                    detail: format!("needs {} nm margin ({:?})", er.margin_nm, er.axis),
-                });
-            }
-        }
+        let inners = by_layer.get(&ii).unwrap_or(&empty);
+        check_enclosure(tech, er, oi, ii, outers, inners, None, 1, &mut report);
     }
 
-    // 5. cross-layer spacing.  Pairs where the b-rect lands on an
-    //    a-layer shape *connected* to the tested rect are exempt (e.g.
-    //    a gate-pad contact 10 nm from its own poly column).
+    // 5. cross-layer spacing.
     for sr in &tech.rules.cross_spacings {
         if !tech.has_role(sr.a) || !tech.has_role(sr.b) {
             continue;
@@ -152,68 +133,29 @@ pub fn check(tech: &Tech, rects: &[Rect]) -> Report {
         let empty = Vec::new();
         let al = by_layer.get(&ai).unwrap_or(&empty);
         let bl = by_layer.get(&bi).unwrap_or(&empty);
-        let a_groups = group_touching(al);
-        let a_grid = Grid::build(al, sr.space_nm);
-        for (ia, ra) in al.iter().enumerate() {
-            let cands = a_grid.query(ra); // a-rects near ra (for grouping)
-            for rb in bl {
-                let dxq = (rb.x0 - ra.x1).max(ra.x0 - rb.x1);
-                let dyq = (rb.y0 - ra.y1).max(ra.y0 - rb.y1);
-                if dxq >= sr.space_nm || dyq >= sr.space_nm {
-                    continue; // beyond reach: no violation possible
-                }
-                // exempt if rb overlaps any a-rect in ra's group
-                let same_construct = cands.iter().any(|&j| {
-                    a_groups[j] == a_groups[ia] && al[j].overlaps(rb)
-                });
-                if same_construct {
-                    continue;
-                }
-                // skip related shapes (touching = same construct, e.g.
-                // the gate contact pad ON its poly)
-                let dx = (rb.x0 - ra.x1).max(ra.x0 - rb.x1);
-                let dy = (rb.y0 - ra.y1).max(ra.y0 - rb.y1);
-                if dx <= 0 && dy <= 0 {
-                    continue; // overlapping/touching: not a spacing issue
-                }
-                let dist = if dx > 0 && dy > 0 {
-                    // diagonal: use max-norm (manhattan rules)
-                    dx.max(dy)
-                } else {
-                    dx.max(dy)
-                };
-                if dist < sr.space_nm {
-                    report.violations.push(Violation {
-                        rule: format!(
-                            "spacing({},{})",
-                            tech.layers[ai].name, tech.layers[bi].name
-                        ),
-                        layer: tech.layers[ai].name,
-                        at: *ra,
-                        detail: format!("{} < {}", dist, sr.space_nm),
-                    });
-                }
-            }
-        }
+        check_cross_spacing(tech, ai, bi, al, bl, None, sr.space_nm, 1, &mut report);
     }
 
     report
 }
 
 /// Coarse spatial hash over rects: bucket size 2 um; rects are inserted
-/// into every bucket they overlap so point/overlap queries only scan
-/// their own bucket neighborhood.  Turns the enclosure / cross-spacing
-/// passes from O(inner x outer) into ~O(inner) on array-scale layouts
-/// (89 s -> well under a second on a 1 Kb array; EXPERIMENTS.md SS Perf).
-struct Grid {
+/// into every bucket they overlap (after `pad` expansion) so
+/// point/overlap queries only scan their own bucket neighborhood.
+/// Turns every pairwise DRC pass from O(n x m) into ~O(n) on
+/// array-scale layouts (EXPERIMENTS.md, Hot paths).
+pub struct Grid {
     cell: i64,
-    map: BTreeMap<(i64, i64), Vec<usize>>,
+    map: std::collections::HashMap<(i64, i64), Vec<usize>>,
 }
 
 impl Grid {
-    fn build(rects: &[Rect], pad: i64) -> Grid {
+    /// Index `rects`, expanding each by `pad` so a later `query(r)`
+    /// returns every rect within `pad` of `r` (superset).
+    pub fn build(rects: &[Rect], pad: i64) -> Grid {
         let cell = 2_000;
-        let mut map: BTreeMap<(i64, i64), Vec<usize>> = BTreeMap::new();
+        let mut map: std::collections::HashMap<(i64, i64), Vec<usize>> =
+            std::collections::HashMap::new();
         for (i, r) in rects.iter().enumerate() {
             let (x0, x1) = ((r.x0 - pad).div_euclid(cell), (r.x1 + pad).div_euclid(cell));
             let (y0, y1) = ((r.y0 - pad).div_euclid(cell), (r.y1 + pad).div_euclid(cell));
@@ -226,11 +168,19 @@ impl Grid {
         Grid { cell, map }
     }
 
-    /// Candidate indices whose padded extent may touch `r`.
-    fn query(&self, r: &Rect) -> Vec<usize> {
+    /// Candidate indices whose padded extent may touch `r`, sorted
+    /// ascending and deduplicated.
+    pub fn query(&self, r: &Rect) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.query_into(r, &mut out);
+        out
+    }
+
+    /// [`Self::query`] into a reusable buffer (cleared first).
+    pub fn query_into(&self, r: &Rect, out: &mut Vec<usize>) {
+        out.clear();
         let (x0, x1) = (r.x0.div_euclid(self.cell), r.x1.div_euclid(self.cell));
         let (y0, y1) = (r.y0.div_euclid(self.cell), r.y1.div_euclid(self.cell));
-        let mut out = Vec::new();
         for bx in x0..=x1 {
             for by in y0..=y1 {
                 if let Some(v) = self.map.get(&(bx, by)) {
@@ -240,7 +190,6 @@ impl Grid {
         }
         out.sort_unstable();
         out.dedup();
-        out
     }
 }
 
@@ -256,56 +205,87 @@ fn encloses_axis(o: &Rect, i: &Rect, m: i64, axis: crate::tech::rules::EncAxis) 
     }
 }
 
-/// Union-find grouping of touching same-layer rects.
-fn group_touching(rects: &[Rect]) -> Vec<usize> {
+fn uf_find(parent: &mut Vec<usize>, i: usize) -> usize {
+    let mut i = i;
+    while parent[i] != i {
+        parent[i] = parent[parent[i]];
+        i = parent[i];
+    }
+    i
+}
+
+/// Union-find grouping of touching same-layer rects.  Grid-bucketed:
+/// each rect is only tested against spatial-hash neighbors, replacing
+/// the old x-sorted sweep that degenerated to O(n^2) on column-aligned
+/// geometry (bitline stacks share x0, defeating the x-window prune).
+pub(crate) fn group_touching(rects: &[Rect]) -> Vec<usize> {
     let n = rects.len();
     let mut parent: Vec<usize> = (0..n).collect();
-    fn find(p: &mut Vec<usize>, i: usize) -> usize {
-        let mut i = i;
-        while p[i] != i {
-            p[i] = p[p[i]];
-            i = p[i];
-        }
-        i
-    }
-    // sweep by x to bound pair checks
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by_key(|&i| rects[i].x0);
-    for (oi, &i) in order.iter().enumerate() {
-        for &j in order.iter().skip(oi + 1) {
-            if rects[j].x0 > rects[i].x1 {
-                break;
+    let grid = Grid::build(rects, 0);
+    let mut cands = Vec::new();
+    for (i, r) in rects.iter().enumerate() {
+        grid.query_into(r, &mut cands);
+        for &j in &cands {
+            if j <= i {
+                continue;
             }
-            if rects[i].touches(&rects[j]) {
-                let (ri, rj) = (find(&mut parent, i), find(&mut parent, j));
+            if r.touches(&rects[j]) {
+                let (ri, rj) = (uf_find(&mut parent, i), uf_find(&mut parent, j));
                 if ri != rj {
                     parent[ri] = rj;
                 }
             }
         }
     }
-    (0..n).map(|i| find(&mut parent, i)).collect()
+    (0..n).map(|i| uf_find(&mut parent, i)).collect()
 }
 
-/// Spacing check between rects of *different* groups via x-sweep.
+/// Append the hierarchical-replication multiplier to a detail string.
+fn with_mult(detail: String, mult: usize) -> String {
+    if mult > 1 {
+        format!("{detail} (x{mult} instance pairs)")
+    } else {
+        detail
+    }
+}
+
+/// Spacing check between rects of *different* groups.  Candidates come
+/// from a `min_space`-padded grid; emission order matches the legacy
+/// x-sorted sweep (outer rect ascending by x0, partner ascending by
+/// x0-rank) so the violation set is byte-identical to the old engine.
+/// With `owners`, only cross-owner pairs are reported (hier seams).
 fn check_spacing(
     rects: &[Rect],
     groups: &[usize],
+    owners: Option<&[usize]>,
     min_space: i64,
     lname: &'static str,
+    mult: usize,
     report: &mut Report,
 ) {
     let n = rects.len();
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by_key(|&i| rects[i].x0);
-    for (oi, &i) in order.iter().enumerate() {
-        for &j in order.iter().skip(oi + 1) {
-            // prune: beyond reach in x
-            if rects[j].x0 - rects[i].x1 >= min_space {
-                break;
-            }
+    let mut rank = vec![0usize; n];
+    for (k, &i) in order.iter().enumerate() {
+        rank[i] = k;
+    }
+    let grid = Grid::build(rects, min_space);
+    let mut cands = Vec::new();
+    let mut js: Vec<usize> = Vec::new();
+    for &i in &order {
+        grid.query_into(&rects[i], &mut cands);
+        js.clear();
+        js.extend(cands.iter().copied().filter(|&j| rank[j] > rank[i]));
+        js.sort_by_key(|&j| rank[j]);
+        for &j in &js {
             if groups[i] == groups[j] {
                 continue;
+            }
+            if let Some(ow) = owners {
+                if ow[i] == ow[j] {
+                    continue;
+                }
             }
             let (a, b) = (&rects[i], &rects[j]);
             let dx = (b.x0 - a.x1).max(a.x0 - b.x1).max(0);
@@ -318,10 +298,183 @@ fn check_spacing(
                     rule: "min_space".into(),
                     layer: lname,
                     at: *a,
-                    detail: format!("{} < {} (vs rect at {},{})", dist, min_space, b.x0, b.y0),
+                    detail: with_mult(
+                        format!("{} < {} (vs rect at {},{})", dist, min_space, b.x0, b.y0),
+                        mult,
+                    ),
                 });
             }
         }
+    }
+}
+
+/// Conditional enclosure: an inner rect is checked only where it
+/// overlaps the outer layer at all (a contact on poly is governed by
+/// the poly rule, not the active rule).  Axis-restricted rules model
+/// gate extension.  With `owners` = (inner owners, outer owners), an
+/// inner is only examined when it overlaps an outer of a *different*
+/// owner (same-owner context is covered by that cell's own pass).
+#[allow(clippy::too_many_arguments)]
+fn check_enclosure(
+    tech: &Tech,
+    er: &crate::tech::rules::EnclosureRule,
+    oi: usize,
+    ii: usize,
+    outers: &[Rect],
+    inners: &[Rect],
+    owners: Option<(&[usize], &[usize])>,
+    mult: usize,
+    report: &mut Report,
+) {
+    let iname = tech.layers[ii].name;
+    let grid = Grid::build(outers, 0);
+    let mut cands = Vec::new();
+    for (ki, inner) in inners.iter().enumerate() {
+        grid.query_into(inner, &mut cands);
+        let related = cands.iter().any(|&k| outers[k].overlaps(inner));
+        if !related {
+            continue;
+        }
+        if let Some((io, oo)) = owners {
+            let cross = cands
+                .iter()
+                .any(|&k| outers[k].overlaps(inner) && oo[k] != io[ki]);
+            if !cross {
+                continue;
+            }
+        }
+        let ok = cands
+            .iter()
+            .any(|&k| encloses_axis(&outers[k], inner, er.margin_nm, er.axis));
+        if !ok {
+            report.violations.push(Violation {
+                rule: format!("enclosure({}>{})", tech.layers[oi].name, iname),
+                layer: iname,
+                at: *inner,
+                detail: with_mult(format!("needs {} nm margin ({:?})", er.margin_nm, er.axis), mult),
+            });
+        }
+    }
+}
+
+/// Cross-layer spacing.  Pairs where the b-rect lands on an a-layer
+/// shape *connected* to the tested rect are exempt (e.g. a gate-pad
+/// contact 10 nm from its own poly column).  The b-side candidates come
+/// from a padded grid instead of the old full scan over every b-rect.
+#[allow(clippy::too_many_arguments)]
+fn check_cross_spacing(
+    tech: &Tech,
+    ai: usize,
+    bi: usize,
+    al: &[Rect],
+    bl: &[Rect],
+    owners: Option<(&[usize], &[usize])>,
+    space_nm: i64,
+    mult: usize,
+    report: &mut Report,
+) {
+    if al.is_empty() || bl.is_empty() {
+        return;
+    }
+    let a_groups = group_touching(al);
+    let a_grid = Grid::build(al, space_nm);
+    let b_grid = Grid::build(bl, space_nm);
+    let mut bcands = Vec::new();
+    let mut acands = Vec::new();
+    for (ia, ra) in al.iter().enumerate() {
+        b_grid.query_into(ra, &mut bcands);
+        let mut have_acands = false;
+        for &ib in &bcands {
+            let rb = &bl[ib];
+            if let Some((ao, bo)) = owners {
+                if ao[ia] == bo[ib] {
+                    continue;
+                }
+            }
+            let dx = (rb.x0 - ra.x1).max(ra.x0 - rb.x1);
+            let dy = (rb.y0 - ra.y1).max(ra.y0 - rb.y1);
+            if dx >= space_nm || dy >= space_nm {
+                continue; // beyond reach: no violation possible
+            }
+            // overlapping/touching = same construct (e.g. the gate
+            // contact pad ON its poly): not a spacing issue
+            let dist = dx.max(dy);
+            if dist <= 0 {
+                continue;
+            }
+            // exempt if rb overlaps any a-rect in ra's group
+            if !have_acands {
+                a_grid.query_into(ra, &mut acands);
+                have_acands = true;
+            }
+            let same_construct = acands
+                .iter()
+                .any(|&j| a_groups[j] == a_groups[ia] && al[j].overlaps(rb));
+            if same_construct {
+                continue;
+            }
+            // dist < space_nm is guaranteed here: both axis gaps passed
+            // the beyond-reach check above
+            report.violations.push(Violation {
+                rule: format!("spacing({},{})", tech.layers[ai].name, tech.layers[bi].name),
+                layer: tech.layers[ai].name,
+                at: *ra,
+                detail: with_mult(format!("{} < {}", dist, space_nm), mult),
+            });
+        }
+    }
+}
+
+/// Owner-tagged interaction check used by the hierarchical engine:
+/// runs same-layer spacing, enclosure and cross-layer spacing over a
+/// window of rects, reporting only cross-owner findings (intra-owner
+/// geometry is covered by that cell's own frame pass).
+pub(crate) fn check_window(
+    tech: &Tech,
+    rects: &[Rect],
+    owners: &[usize],
+    mult: usize,
+    report: &mut Report,
+) {
+    debug_assert_eq!(rects.len(), owners.len());
+    report.rects_checked += rects.len();
+    let mut by_layer: BTreeMap<usize, (Vec<Rect>, Vec<usize>)> = BTreeMap::new();
+    for (r, &o) in rects.iter().zip(owners) {
+        let slot = by_layer.entry(r.layer).or_default();
+        slot.0.push(*r);
+        slot.1.push(o);
+    }
+
+    for (role, rules) in tech.rules.checked_layers() {
+        if !tech.has_role(*role) || rules.min_space_nm == 0 {
+            continue;
+        }
+        let li = tech.layer(*role);
+        let Some((lr, lo)) = by_layer.get(&li) else { continue };
+        let groups = group_touching(lr);
+        check_spacing(lr, &groups, Some(lo), rules.min_space_nm, tech.layers[li].name, mult, report);
+    }
+
+    for er in &tech.rules.enclosures {
+        if !tech.has_role(er.outer) || !tech.has_role(er.inner) {
+            continue;
+        }
+        let (oi, ii) = (tech.layer(er.outer), tech.layer(er.inner));
+        let (Some((ol, oo)), Some((il, io))) = (by_layer.get(&oi), by_layer.get(&ii)) else {
+            continue;
+        };
+        check_enclosure(tech, er, oi, ii, ol, il, Some((io, oo)), mult, report);
+    }
+
+    for sr in &tech.rules.cross_spacings {
+        if !tech.has_role(sr.a) || !tech.has_role(sr.b) {
+            continue;
+        }
+        let (ai, bi) = (tech.layer(sr.a), tech.layer(sr.b));
+        let (Some((al, ao)), Some((bl, bo))) = (by_layer.get(&ai), by_layer.get(&bi)) else {
+            continue;
+        };
+        check_cross_spacing(tech, ai, bi, al, bl, Some((ao, bo)), sr.space_nm, mult, report);
     }
 }
 
@@ -446,6 +599,141 @@ mod tests {
         rects.push(Rect::new(m1(&t), 5000, 5000, 5030, 5400));
         let rep = check(&t, &rects);
         assert!(!rep.clean());
+    }
+
+    /// Grid correctness for rects that straddle bucket boundaries: any
+    /// pair within `pad` of each other must co-appear in a query.
+    #[test]
+    fn grid_query_covers_bucket_straddlers() {
+        // bucket size is 2000; place rects ON and ACROSS the seams
+        let rects = vec![
+            Rect::new(0, 1990, 0, 2010, 50),      // straddles x seam
+            Rect::new(0, 2015, 0, 2100, 50),      // 5 nm right of it
+            Rect::new(0, -60, -60, -40, -40),     // negative-coord bucket
+            Rect::new(0, -30, -60, 10, -40),      // straddles origin seam
+            Rect::new(0, 0, 1990, 50, 6100),      // tall: many y buckets
+            Rect::new(0, 70, 3990, 120, 4020),    // beside the tall one
+            Rect::new(0, 10_000, 10_000, 10_050, 10_050), // far away
+        ];
+        let pad = 40;
+        let grid = Grid::build(&rects, pad);
+        let near = |a: &Rect, b: &Rect| {
+            let dx = (b.x0 - a.x1).max(a.x0 - b.x1);
+            let dy = (b.y0 - a.y1).max(a.y0 - b.y1);
+            dx <= pad && dy <= pad
+        };
+        for (i, r) in rects.iter().enumerate() {
+            let cands = grid.query(r);
+            // completeness: every rect within pad must be returned
+            for (j, o) in rects.iter().enumerate() {
+                if near(r, o) {
+                    assert!(cands.contains(&j), "rect {j} missing from query({i})");
+                }
+            }
+            // sanity: the far rect is not a candidate of the origin ones
+            if i < 4 {
+                assert!(!cands.contains(&6), "far rect leaked into query({i})");
+            }
+            // sorted + deduplicated contract
+            let mut sorted = cands.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(cands, sorted);
+        }
+    }
+
+    /// Property: grid-backed group_touching matches the brute-force
+    /// O(n^2) union-find on random rect soups.
+    #[test]
+    fn group_touching_matches_bruteforce() {
+        use crate::util::rng::{check as prop, Rng};
+        fn brute(rects: &[Rect]) -> Vec<usize> {
+            let n = rects.len();
+            let mut parent: Vec<usize> = (0..n).collect();
+            for i in 0..n {
+                for j in i + 1..n {
+                    if rects[i].touches(&rects[j]) {
+                        let (ri, rj) = (uf_find(&mut parent, i), uf_find(&mut parent, j));
+                        if ri != rj {
+                            parent[ri] = rj;
+                        }
+                    }
+                }
+            }
+            (0..n).map(|i| uf_find(&mut parent, i)).collect()
+        }
+        fn canon(groups: &[usize]) -> Vec<usize> {
+            // relabel group ids by first appearance so different union
+            // orders compare equal
+            let mut map = std::collections::BTreeMap::new();
+            groups
+                .iter()
+                .map(|g| {
+                    let next = map.len();
+                    *map.entry(*g).or_insert(next)
+                })
+                .collect()
+        }
+        prop("group_touching", 25, |rng: &mut Rng| {
+            let n = 2 + rng.below(120);
+            let rects: Vec<Rect> = (0..n)
+                .map(|_| {
+                    let x0 = rng.below(8_000) as i64 - 2_000;
+                    let y0 = rng.below(8_000) as i64 - 2_000;
+                    let w = 20 + rng.below(2_500) as i64;
+                    let h = 20 + rng.below(2_500) as i64;
+                    Rect::new(0, x0, y0, x0 + w, y0 + h)
+                })
+                .collect();
+            assert_eq!(canon(&group_touching(&rects)), canon(&brute(&rects)));
+        });
+    }
+
+    /// The grid-accelerated cross-spacing pass must report exactly what
+    /// the old full-scan loop reported, including the same-construct
+    /// exemption.
+    #[test]
+    fn cross_spacing_matches_legacy_semantics() {
+        let t = sg40();
+        let poly = t.layer(LayerRole::Poly);
+        let cont = t.layer(LayerRole::Contact);
+        // contact 10 nm from an unrelated poly rect: violation (rule 40)
+        let rects = vec![
+            Rect::new(poly, 0, 0, 40, 400),
+            Rect::new(cont, 50, 100, 110, 160),
+        ];
+        let rep = check(&t, &rects);
+        assert!(
+            rep.violations.iter().any(|v| v.rule == "spacing(poly,contact)"),
+            "{:?}",
+            rep.violations
+        );
+        // same contact ON a poly pad connected to the column: exempt
+        let rects2 = vec![
+            Rect::new(poly, 0, 0, 40, 400),
+            Rect::new(poly, 40, 100, 140, 200), // pad touching the column
+            Rect::new(cont, 60, 120, 120, 180), // on the pad
+        ];
+        let rep2 = check(&t, &rects2);
+        assert!(
+            !rep2.violations.iter().any(|v| v.rule.starts_with("spacing(")),
+            "{:?}",
+            rep2.violations
+        );
+    }
+
+    #[test]
+    fn generated_array_is_drc_clean_via_flat_and_hier() {
+        let t = sg40();
+        use crate::layout::{bank, cells, Library};
+        let mut lib = Library::default();
+        lib.add(cells::gc2t_sisi(&t, false).layout);
+        bank::tile_array(&mut lib, &t, "arr", "gc2t_sisi", 8, 8, 4, 400).unwrap();
+        let rects = lib.flatten("arr").unwrap();
+        let flat = check(&t, &rects);
+        assert!(flat.clean(), "flat: {:?}", flat.violations.first());
+        let hrep = hier::check_hier(&t, &lib, "arr").unwrap();
+        assert!(hrep.clean(), "hier: {:?}", hrep.violations.first());
     }
 }
 

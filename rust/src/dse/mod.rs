@@ -3,8 +3,11 @@
 //! the future-work gradient-descent co-optimizer (§VI).
 
 use crate::characterize::BankPerf;
-use crate::compiler::{CellFlavor, Config};
+use crate::compiler::{CellFlavor, Config, ConfigKey};
 use crate::workloads::Demand;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -12,6 +15,124 @@ pub struct Evaluated {
     pub config: Config,
     pub perf: BankPerf,
     pub area_um2: f64,
+}
+
+/// Thread-safe (config -> evaluation) memo keyed on
+/// [`ConfigKey`](crate::compiler::ConfigKey).  Shared by `optimize`,
+/// shmoo sweeps and Pareto evaluation so a *settled* design point is
+/// never compiled or characterized twice.  There is deliberately no
+/// in-flight dedup: concurrent first misses on the same config may
+/// each evaluate once (eval runs outside the lock so different
+/// configs can evaluate in parallel); every later request is a pure
+/// hit.  Callers that must avoid even that duplication should dedup
+/// the config list before fanning out.
+#[derive(Default)]
+pub struct EvalCache {
+    map: Mutex<HashMap<ConfigKey, Evaluated>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl EvalCache {
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (cache hits, underlying evaluations) so far.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Return the memoized evaluation of `cfg`, running `eval` on miss.
+    /// `eval` executes outside the lock so concurrent misses on
+    /// *different* configs evaluate in parallel.
+    pub fn get_or_eval<F>(&self, cfg: &Config, eval: F) -> crate::Result<Evaluated>
+    where
+        F: FnOnce(&Config) -> crate::Result<Evaluated>,
+    {
+        let key = cfg.key();
+        if let Some(hit) = self.map.lock().unwrap_or_else(|p| p.into_inner()).get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(hit.clone());
+        }
+        let e = eval(cfg)?;
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .entry(key)
+            .or_insert_with(|| e.clone());
+        Ok(e)
+    }
+}
+
+/// Default DSE fan-out width: one worker per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Evaluate every config concurrently over `std::thread::scope`
+/// workers (work-stealing index, so uneven per-config costs balance).
+/// Results preserve input order.  The per-config compile+characterize
+/// pipeline dominates shmoo (Fig. 10) and Pareto sweep wall-clock, and
+/// each evaluation is independent — the embarrassing parallelism the
+/// coordinate-descent inner loop cannot exploit.
+pub fn evaluate_all<F>(configs: &[Config], workers: usize, eval: F) -> crate::Result<Vec<Evaluated>>
+where
+    F: Fn(&Config) -> crate::Result<Evaluated> + Sync,
+{
+    let n = configs.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<crate::Result<Evaluated>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = eval(&configs[i]);
+                *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(|p| p.into_inner())
+                .expect("worker filled every slot")
+        })
+        .collect()
+}
+
+/// [`evaluate_all`] through a shared [`EvalCache`]: repeated configs
+/// (shmoo axes overlapping optimizer walks, re-runs across workloads)
+/// cost one evaluation once settled — see [`EvalCache`] for the
+/// concurrent-first-miss caveat.
+pub fn evaluate_all_cached<F>(
+    configs: &[Config],
+    workers: usize,
+    cache: &EvalCache,
+    eval: F,
+) -> crate::Result<Vec<Evaluated>>
+where
+    F: Fn(&Config) -> crate::Result<Evaluated> + Sync,
+{
+    evaluate_all(configs, workers, |cfg| cache.get_or_eval(cfg, &eval))
 }
 
 /// Shmoo verdict for (config, demand).
@@ -100,6 +221,12 @@ pub fn cost(w: &CostWeights, e: &Evaluated) -> f64 {
 /// Coordinate-descent co-optimizer over (size exponent, write VT).
 /// `eval` maps a Config to an Evaluated (the caller decides whether
 /// that's analytical or transient-backed).
+///
+/// Memoized on [`ConfigKey`]: the descent revisits neighbors of every
+/// accepted move, and without the cache each revisit re-ran the full
+/// compile+characterize pipeline.  `evals` counts *underlying*
+/// evaluations (cache misses), so it is also the pipeline invocation
+/// count a caller pays for.
 pub fn optimize<F>(
     flavor: CellFlavor,
     weights: &CostWeights,
@@ -117,9 +244,9 @@ where
         c.write_vt = vts[vi];
         c
     };
-    let mut best = eval(&mk(si, vi))?;
+    let cache = EvalCache::new();
+    let mut best = cache.get_or_eval(&mk(si, vi), &mut eval)?;
     let mut best_cost = cost(weights, &best);
-    let mut evals = 1usize;
     // coordinate descent until no single-step move improves
     loop {
         let mut improved = false;
@@ -133,8 +260,7 @@ where
         .filter(|&(a, b)| a < sizes.len() && b < vts.len())
         .collect();
         for (a, b) in moves {
-            let e = eval(&mk(a, b))?;
-            evals += 1;
+            let e = cache.get_or_eval(&mk(a, b), &mut eval)?;
             let c = cost(weights, &e);
             if c < best_cost {
                 best_cost = c;
@@ -145,12 +271,15 @@ where
                 break;
             }
         }
-        if !improved || evals > 40 {
+        // termination: each accepted move strictly decreases cost and
+        // the memoized 5x5 grid bounds distinct evaluations at 25, so
+        // no separate runaway cap is needed
+        if !improved {
             break;
         }
     }
     anyhow::ensure!(best_cost.is_finite(), "no feasible configuration found");
-    Ok((best, evals))
+    Ok((best, cache.stats().1))
 }
 
 #[cfg(test)]
@@ -224,5 +353,89 @@ mod tests {
         let cfgs = fig10_configs(CellFlavor::GcSiSiNp);
         assert_eq!(cfgs.len(), 5);
         assert!(cfgs.iter().all(|c| c.word_size == c.num_words));
+    }
+
+    #[test]
+    fn optimizer_never_reevaluates_a_visited_point() {
+        let w = CostWeights { w_delay: 1.0, w_area: 1.0, w_power: 1.0, f_min_hz: 0.0, t_retain_min_s: 0.0 };
+        let mut seen: std::collections::HashSet<crate::compiler::ConfigKey> =
+            std::collections::HashSet::new();
+        let (_, evals) = optimize(CellFlavor::GcSiSiNp, &w, |cfg| {
+            assert!(seen.insert(cfg.key()), "config evaluated twice: {cfg:?}");
+            let n = cfg.word_size as f64;
+            let vt = cfg.write_vt.unwrap_or(0.45);
+            let f = 1e9 / (1.0 + ((n - 64.0) / 64.0).powi(2) + (vt - 0.52).abs());
+            Ok(fake(f, 1e-3, n * n))
+        })
+        .unwrap();
+        assert_eq!(evals, seen.len());
+        // the 5x5 grid bounds the distinct points the walk can touch
+        assert!(evals <= 25);
+    }
+
+    #[test]
+    fn eval_cache_dedupes_concurrent_sweeps() {
+        let cache = EvalCache::new();
+        let calls = AtomicUsize::new(0);
+        // the five fig10 configs, each requested four times
+        let mut configs = Vec::new();
+        for _ in 0..4 {
+            configs.extend(fig10_configs(CellFlavor::GcSiSiNp));
+        }
+        let run = |cfg: &Config| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            let mut e = fake(1e9 / cfg.word_size as f64, 1e-3, cfg.bits() as f64);
+            e.config = cfg.clone();
+            Ok(e)
+        };
+        let evals = evaluate_all_cached(&configs, 4, &cache, run).unwrap();
+        assert_eq!(evals.len(), 20);
+        assert_eq!(cache.len(), 5);
+        // results preserve input order and resolve to the right config
+        for (cfg, e) in configs.iter().zip(&evals) {
+            assert_eq!(e.config.word_size, cfg.word_size);
+        }
+        // a second identical sweep is served entirely from the cache
+        let calls_before = calls.load(Ordering::Relaxed);
+        let (hits_before, _) = cache.stats();
+        let evals2 = evaluate_all_cached(&configs, 4, &cache, run).unwrap();
+        assert_eq!(evals2.len(), 20);
+        assert_eq!(calls.load(Ordering::Relaxed), calls_before, "second sweep re-evaluated");
+        let (hits_after, misses) = cache.stats();
+        assert!(hits_after >= hits_before + 20, "hits {hits_before} -> {hits_after}");
+        assert_eq!(cache.len(), 5);
+        assert!(misses <= calls_before);
+    }
+
+    #[test]
+    fn evaluate_all_preserves_order_and_propagates_errors() {
+        let cfgs: Vec<Config> = (1..=9).map(|i| Config::new(8 * i, 8 * i, CellFlavor::GcSiSiNp)).collect();
+        let evals = evaluate_all(&cfgs, 3, |cfg| {
+            Ok(fake(1e9, 1e-3, cfg.bits() as f64))
+        })
+        .unwrap();
+        let areas: Vec<f64> = evals.iter().map(|e| e.area_um2).collect();
+        let want: Vec<f64> = cfgs.iter().map(|c| c.bits() as f64).collect();
+        assert_eq!(areas, want);
+        let err = evaluate_all(&cfgs, 3, |cfg| {
+            if cfg.word_size == 40 {
+                anyhow::bail!("injected failure")
+            }
+            Ok(fake(1e9, 1e-3, 1.0))
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn config_key_identity() {
+        let a = Config::new(32, 32, CellFlavor::GcSiSiNp);
+        let mut b = Config::new(32, 32, CellFlavor::GcSiSiNp);
+        assert_eq!(a.key(), b.key());
+        b.write_vt = Some(0.5);
+        assert_ne!(a.key(), b.key());
+        let mut c = Config::new(32, 32, CellFlavor::GcSiSiNp);
+        c.wwlls = true;
+        assert_ne!(a.key(), c.key());
+        assert_ne!(a.key(), Config::new(32, 32, CellFlavor::GcOsOs).key());
     }
 }

@@ -14,10 +14,11 @@ pub mod cells;
 pub mod compose;
 pub mod gds;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
 /// Axis-aligned rectangle on a layer (coordinates in nm, x0<x1, y0<y1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Rect {
     pub layer: usize,
     pub x0: i64,
@@ -95,7 +96,7 @@ impl Rect {
 }
 
 /// Placement orientation (the subset memory tiling needs).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Orient {
     #[default]
     R0,
@@ -107,6 +108,16 @@ pub enum Orient {
 }
 
 impl Orient {
+    /// Dense index (memo-table slot).
+    pub fn idx(&self) -> usize {
+        match self {
+            Orient::R0 => 0,
+            Orient::Mx => 1,
+            Orient::My => 2,
+            Orient::R180 => 3,
+        }
+    }
+
     /// Apply to a rect, then translate by (dx, dy).
     pub fn apply(&self, r: &Rect, dx: i64, dy: i64) -> Rect {
         let (x0, y0, x1, y1) = match self {
@@ -195,12 +206,85 @@ impl Library {
     }
 
     /// Flatten a cell to a rect soup (pins lost; DRC input).
+    ///
+    /// Memoized: the flattened rect list of every `(cell, orient)` pair
+    /// is computed once and instances are emitted by translating the
+    /// cached list, instead of re-walking the hierarchy per instance.
+    /// A 128x128 bank references the identical bitcell ~16k times; the
+    /// old recursive walk re-oriented every rect of every instance.
     pub fn flatten(&self, name: &str) -> crate::Result<Vec<Rect>> {
+        let mut cache = FlattenCache::default();
+        let shared = self.flat_cell(name, Orient::R0, &mut cache, 0)?;
+        // the private cache holds the only other Arc; dropping it lets
+        // the top-level list be returned without an O(n) copy
+        drop(cache);
+        Ok(Arc::try_unwrap(shared).unwrap_or_else(|arc| arc.as_ref().clone()))
+    }
+
+    /// [`Self::flatten`] with a caller-owned memo so repeated flattens
+    /// (hierarchical DRC, sweeps, benches) share per-cell work.
+    pub fn flatten_cached(&self, name: &str, cache: &mut FlattenCache) -> crate::Result<Vec<Rect>> {
+        Ok(self.flat_cell(name, Orient::R0, cache, 0)?.as_ref().clone())
+    }
+
+    /// Memoized flattened rect list of `name` under `orient`, at the
+    /// cell's local origin (shared, do not mutate).
+    pub fn flatten_oriented(
+        &self,
+        name: &str,
+        orient: Orient,
+        cache: &mut FlattenCache,
+    ) -> crate::Result<Arc<Vec<Rect>>> {
+        self.flat_cell(name, orient, cache, 0)
+    }
+
+    fn flat_cell(
+        &self,
+        name: &str,
+        orient: Orient,
+        cache: &mut FlattenCache,
+        depth: usize,
+    ) -> crate::Result<Arc<Vec<Rect>>> {
+        anyhow::ensure!(depth <= 32, "layout hierarchy too deep (cycle?)");
+        if let Some(hit) = cache.get(name, orient) {
+            return Ok(hit);
+        }
+        let c = self.get(name)?;
+        let mut out: Vec<Rect> = Vec::with_capacity(c.rects.len());
+        for r in &c.rects {
+            out.push(orient.apply(r, 0, 0));
+        }
+        for i in &c.insts {
+            // compose: child placed in parent frame, then parent's
+            // transform applied.  For the Orient subset, composing is
+            // applying parent's orient to the child's local offset and
+            // multiplying orients.
+            let (cdx, cdy) = match orient {
+                Orient::R0 => (i.dx, i.dy),
+                Orient::Mx => (i.dx, -i.dy),
+                Orient::My => (-i.dx, i.dy),
+                Orient::R180 => (-i.dx, -i.dy),
+            };
+            let comp = compose(orient, i.orient);
+            let child = self.flat_cell(&i.cell, comp, cache, depth + 1)?;
+            out.reserve(child.len());
+            out.extend(child.iter().map(|r| r.translated(cdx, cdy)));
+        }
+        let shared = Arc::new(out);
+        cache.put(name, orient, shared.clone());
+        Ok(shared)
+    }
+
+    /// Reference flatten: the plain recursive walk the memoized path
+    /// must reproduce exactly (kept for the equivalence tests).
+    #[cfg(test)]
+    fn flatten_reference(&self, name: &str) -> crate::Result<Vec<Rect>> {
         let mut out = Vec::new();
         self.flatten_into(name, 0, 0, Orient::R0, &mut out, 0)?;
         Ok(out)
     }
 
+    #[cfg(test)]
     fn flatten_into(
         &self,
         name: &str,
@@ -216,10 +300,6 @@ impl Library {
             out.push(orient.apply(r, dx, dy));
         }
         for i in &c.insts {
-            // compose: child placed in parent frame, then parent's
-            // transform applied.  For the Orient subset, composing is
-            // applying parent's orient to the child's local offset and
-            // multiplying orients.
             let (cdx, cdy) = match orient {
                 Orient::R0 => (i.dx, i.dy),
                 Orient::Mx => (i.dx, -i.dy),
@@ -247,6 +327,34 @@ impl Library {
             .next()
             .ok_or_else(|| anyhow::anyhow!("cell '{name}' is empty"))?;
         Ok(it.fold(first, |a, b| a.union_bbox(b)))
+    }
+}
+
+/// Memo for [`Library::flatten`]: per-cell flattened rect lists under
+/// each orientation, at the cell's local origin.  One `String` is
+/// allocated per cell on first miss; lookups are by `&str`.
+#[derive(Debug, Default)]
+pub struct FlattenCache {
+    map: HashMap<String, [Option<Arc<Vec<Rect>>>; 4]>,
+}
+
+impl FlattenCache {
+    fn get(&self, name: &str, orient: Orient) -> Option<Arc<Vec<Rect>>> {
+        self.map.get(name).and_then(|slots| slots[orient.idx()].clone())
+    }
+
+    fn put(&mut self, name: &str, orient: Orient, rects: Arc<Vec<Rect>>) {
+        self.map.entry(name.to_string()).or_default()[orient.idx()] = Some(rects);
+    }
+
+    /// Number of memoized (cell, orient) entries.
+    pub fn entries(&self) -> usize {
+        self.map.values().map(|s| s.iter().flatten().count()).sum()
+    }
+
+    /// Drop all memoized lists (call after mutating the library).
+    pub fn clear(&mut self) {
+        self.map.clear();
     }
 }
 
@@ -332,5 +440,75 @@ mod tests {
     fn missing_cell_is_error() {
         let lib = Library::default();
         assert!(lib.flatten("nope").is_err());
+    }
+
+    /// The memoized flatten must reproduce the reference recursive walk
+    /// rect-for-rect (same multiset AND same order) for every generated
+    /// cell under every orientation.
+    #[test]
+    fn memoized_flatten_matches_reference_walk_for_all_cells() {
+        let t = crate::tech::sg40();
+        let mut lib = Library::default();
+        for lc in [
+            cells::sram6t(&t),
+            cells::gc2t_sisi(&t, false),
+            cells::gc2t_sisi(&t, true),
+            cells::gc2t_osos(&t),
+            cells::inverter(&t, 1.0),
+            cells::inverter(&t, 2.0),
+            cells::nand2(&t),
+            cells::sense_amp(&t),
+            cells::write_driver(&t),
+            cells::precharge(&t),
+            cells::predischarge(&t),
+            cells::level_shifter(&t),
+            cells::column_mux(&t),
+            cells::tgate(&t),
+        ] {
+            lib.add(lc.layout);
+        }
+        compose::dff(&mut lib, &t).unwrap();
+        bank::tile_array(&mut lib, &t, "arr", "gc2t_sisi", 16, 16, 8, 400).unwrap();
+        // a mixed-orientation top exercises every compose() branch
+        let mut top = Cell::new("mixed");
+        for (i, o) in [Orient::R0, Orient::Mx, Orient::My, Orient::R180].iter().enumerate() {
+            top.place(format!("a{i}"), "arr", i as i64 * 20_000, 0, *o);
+            top.place(format!("d{i}"), "dff", i as i64 * 20_000, -10_000, *o);
+        }
+        lib.add(top);
+
+        let names: Vec<String> = lib.cells.keys().cloned().collect();
+        let mut cache = FlattenCache::default();
+        for name in &names {
+            for orient in [Orient::R0, Orient::Mx, Orient::My, Orient::R180] {
+                let mut reference = Vec::new();
+                lib.flatten_into(name, 0, 0, orient, &mut reference, 0).unwrap();
+                let memo = lib.flatten_oriented(name, orient, &mut cache).unwrap();
+                assert_eq!(
+                    memo.as_ref(),
+                    &reference,
+                    "flatten mismatch for cell '{name}' under {orient:?}"
+                );
+            }
+        }
+        // public single-shot path too
+        for name in &names {
+            assert_eq!(lib.flatten(name).unwrap(), lib.flatten_reference(name).unwrap());
+        }
+    }
+
+    #[test]
+    fn flatten_cache_is_reused_across_calls() {
+        let t = crate::tech::sg40();
+        let mut lib = Library::default();
+        lib.add(cells::gc2t_sisi(&t, false).layout);
+        bank::tile_array(&mut lib, &t, "arr", "gc2t_sisi", 32, 32, 16, 400).unwrap();
+        let mut cache = FlattenCache::default();
+        let a = lib.flatten_cached("arr", &mut cache).unwrap();
+        // 1024 instances, but only (bitcell, R0) + (arr, R0) memo entries
+        assert_eq!(cache.entries(), 2);
+        let b = lib.flatten_cached("arr", &mut cache).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 32 * 32 * lib.get("gc2t_sisi").unwrap().rects.len() + 3 + 1);
     }
 }

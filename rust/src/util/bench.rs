@@ -65,6 +65,29 @@ pub fn run<T, F: FnMut() -> T>(name: &str, target_s: f64, f: F) -> Sample {
     s
 }
 
+/// Write samples as machine-readable JSON (`BENCH_perf.json`) so the
+/// perf trajectory is tracked across PRs.  `throughput` is the bench's
+/// natural unit (rects/s, banks/s, points/s); pass `s.per_sec()` when
+/// there is no better unit.  Bench names are identifier-like, so no
+/// string escaping is needed.
+pub fn write_json(path: &std::path::Path, samples: &[(Sample, f64)]) -> std::io::Result<()> {
+    let mut out = String::from("[\n");
+    for (i, (s, tput)) in samples.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"median_s\": {:e}, \"min_s\": {:e}, \"max_s\": {:e}, \"iters\": {}, \"throughput\": {:e}}}{}\n",
+            s.name,
+            s.median_s,
+            s.min_s,
+            s.max_s,
+            s.iters,
+            tput,
+            if i + 1 < samples.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    std::fs::write(path, out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +97,23 @@ mod tests {
         let s = time("noop", 0.01, || 1 + 1);
         assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
         assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn json_emission_round_trips() {
+        let a = time("bench_a", 0.005, || 1 + 1);
+        let b = time("bench_b", 0.005, || 2 + 2);
+        let tput_a = a.per_sec();
+        let path = std::env::temp_dir().join("opengcram_bench_test.json");
+        write_json(&path, &[(a, tput_a), (b, 1234.5)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("bench_a"));
+        assert!(arr[0].get("median_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(arr[1].get("throughput").unwrap().as_f64(), Some(1234.5));
+        assert!(arr[1].get("iters").unwrap().as_usize().unwrap() >= 3);
+        std::fs::remove_file(&path).ok();
     }
 }
