@@ -1,20 +1,21 @@
 //! END-TO-END DRIVER: the paper's headline use case (SS V-E).  Profiles
 //! the seven Table-I AI workloads, sweeps GCRAM bank configurations
-//! through the full compile -> transient-characterize pipeline on the
-//! AOT artifacts, prints the Fig. 10 shmoo plots and the headline
-//! metric (largest passing bank per task), and runs the SS VI
-//! co-optimizer for an L1-cache target.
-use opengcram::compiler::{compile, CellFlavor, Config};
-use opengcram::runtime::Runtime;
+//! through the batch-first compile -> characterize pipeline (every
+//! design's transient points pack into shared padded artifact batches
+//! via the coordinator), prints the Fig. 10 shmoo plots and the
+//! headline metric (largest passing bank per task), and runs the SS VI
+//! co-optimizer — also batch-first — for an L1-cache target.
+use opengcram::compiler::CellFlavor;
+use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
 use opengcram::util::eng;
-use opengcram::{characterize, dse, report, workloads};
+use opengcram::{dse, report, workloads};
 use std::path::Path;
 use std::time::Instant;
 
 fn main() -> opengcram::Result<()> {
     let tech = sg40();
-    let rt = Runtime::load(Path::new("artifacts"))?;
+    let rt = SharedRuntime::load(Path::new("artifacts"))?;
     let t0 = Instant::now();
 
     println!("== profiling Table-I workloads (GainSight-style) ==");
@@ -25,17 +26,21 @@ fn main() -> opengcram::Result<()> {
         );
     }
 
-    println!("\n== sweeping bank configs 16x16..128x128 (full pipeline) ==");
-    let mut evals = Vec::new();
-    for cfg in dse::fig10_configs(CellFlavor::GcSiSiNp) {
-        let bank = compile(&tech, &cfg)?;
-        let perf = characterize::characterize(&tech, &rt, &bank)?;
+    println!("\n== sweeping bank configs 16x16..128x128 (batch-first pipeline) ==");
+    let cache = dse::EvalCache::new();
+    let evals = dse::evaluate_all_batched_cached(
+        &tech,
+        &rt,
+        &dse::fig10_configs(CellFlavor::GcSiSiNp),
+        dse::default_workers(),
+        &cache,
+    )?;
+    for e in &evals {
         println!(
             "  {:>3}x{:<3} f_op {:>9} MHz  retention {:>10}  area {:>9} um^2",
-            cfg.word_size, cfg.num_words, report::mhz(perf.f_op_hz),
-            eng(perf.retention_s, "s"), report::um2(bank.layout.total_area_um2())
+            e.config.word_size, e.config.num_words, report::mhz(e.perf.f_op_hz),
+            eng(e.perf.retention_s, "s"), report::um2(e.area_um2)
         );
-        evals.push(dse::Evaluated { config: cfg, perf, area_um2: bank.layout.total_area_um2() });
     }
 
     println!("\n== Fig. 10 shmoo (GT520M L1 / H100 L2) ==");
@@ -66,20 +71,13 @@ fn main() -> opengcram::Result<()> {
         f_min_hz: 3e8,
         t_retain_min_s: 1e-5,
     };
-    let (best, nevals) = dse::optimize(CellFlavor::GcSiSiNp, &weights, |cfg| {
-        let bank = compile(&tech, cfg)?;
-        let perf = characterize::characterize(&tech, &rt, bank_ref(&bank))?;
-        Ok(dse::Evaluated { config: cfg.clone(), perf, area_um2: bank.layout.total_area_um2() })
-    })?;
+    let (best, nevals) = dse::optimize_batched(&tech, &rt, CellFlavor::GcSiSiNp, &weights)?;
     println!(
         "  best: {}x{} write_vt={:?} -> f_op {} MHz, retention {}, {} evals",
         best.config.word_size, best.config.num_words, best.config.write_vt,
         report::mhz(best.perf.f_op_hz), eng(best.perf.retention_s, "s"), nevals
     );
     println!("\nend-to-end DSE wall time: {:.1} s", t0.elapsed().as_secs_f64());
+    println!("PJRT artifact executions (batched): {:?}", rt.call_counts());
     Ok(())
-}
-
-fn bank_ref(b: &opengcram::compiler::Bank) -> &opengcram::compiler::Bank {
-    b
 }

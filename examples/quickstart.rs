@@ -1,7 +1,7 @@
 //! Quickstart: compile a 32x32 GCRAM bank, characterize it on the AOT
 //! artifacts, export SPICE + GDS.  Run: cargo run --release --example quickstart
 use opengcram::compiler::{compile, CellFlavor, Config};
-use opengcram::runtime::Runtime;
+use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
 use opengcram::util::eng;
 use opengcram::characterize;
@@ -21,8 +21,11 @@ fn main() -> opengcram::Result<()> {
     opengcram::layout::gds::write_file(&bank.library, &tech, "opengcram", Path::new("/tmp/gcram_bank.gds"))?;
     println!("wrote /tmp/gcram_bank.sp and /tmp/gcram_bank.gds");
 
-    let rt = Runtime::load(Path::new("artifacts"))?;
-    let perf = characterize::characterize(&tech, &rt, &bank)?;
+    let rt = SharedRuntime::load(Path::new("artifacts"))?;
+    // characterize_all packs designs into shared artifact batches; a
+    // singleton list bitwise-matches the single-design path
+    let perf = characterize::characterize_all(&tech, &rt, std::slice::from_ref(&bank))?
+        .remove(0);
     println!(
         "f_op {}  bandwidth {:.1} Gb/s  retention {}  leakage {}  functional {}",
         eng(perf.f_op_hz, "Hz"),

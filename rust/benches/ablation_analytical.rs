@@ -1,8 +1,9 @@
 //! Ablation: GEMTOO-class analytical model vs the transient-backed
 //! characterization (the paper quotes <=15 % deviation for GEMTOO;
 //! our stand-in reports its own deviation per size) + speed ratio.
+//! The transient column is one batch-first `characterize_all` pass.
 use opengcram::compiler::{compile, CellFlavor, Config};
-use opengcram::runtime::Runtime;
+use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
 use opengcram::util::bench;
 use opengcram::characterize;
@@ -10,15 +11,18 @@ use std::path::Path;
 
 fn main() {
     let tech = sg40();
-    let rt = Runtime::load(Path::new("artifacts")).expect("make artifacts");
+    let rt = SharedRuntime::load(Path::new("artifacts")).expect("make artifacts");
+    let banks: Vec<_> = [(16usize, 16usize), (32, 32), (64, 64), (128, 128)]
+        .iter()
+        .map(|&(w, n)| compile(&tech, &Config::new(w, n, CellFlavor::GcSiSiNp)).unwrap())
+        .collect();
+    let transients = characterize::characterize_all(&tech, &rt, &banks).unwrap();
     println!("bits,f_analytical_mhz,f_transient_mhz,deviation_pct");
-    for (w, n) in [(16usize, 16usize), (32, 32), (64, 64), (128, 128)] {
-        let bank = compile(&tech, &Config::new(w, n, CellFlavor::GcSiSiNp)).unwrap();
-        let a = characterize::analytical(&tech, &bank);
-        let c = characterize::characterize(&tech, &rt, &bank).unwrap();
+    for (bank, c) in banks.iter().zip(&transients) {
+        let a = characterize::analytical(&tech, bank);
         println!(
             "{},{:.1},{:.1},{:.1}",
-            w * n,
+            bank.config.bits(),
             a.f_op_hz / 1e6,
             c.f_op_hz / 1e6,
             100.0 * (a.f_op_hz - c.f_op_hz).abs() / c.f_op_hz
@@ -27,7 +31,7 @@ fn main() {
     let bank = compile(&tech, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap();
     let sa = bench::run("analytical_model", 1.0, || characterize::analytical(&tech, &bank));
     let st = bench::run("transient_model", 2.0, || {
-        characterize::characterize(&tech, &rt, &bank).unwrap()
+        rt.with(|r| characterize::characterize(&tech, r, &bank)).unwrap()
     });
     println!("speedup_analytical_over_transient,{:.0}x", st.median_s / sa.median_s);
 }

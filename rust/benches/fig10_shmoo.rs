@@ -1,11 +1,16 @@
 //! Fig. 10 regenerator: shmoo of GCRAM bank configs against the
 //! Table-I demands, plus end-to-end DSE throughput.
 //!
-//! The per-config compile+characterize pipeline fans out across
-//! `std::thread::scope` workers through the shared [`dse::EvalCache`];
-//! the PJRT runtime itself is serialized behind `SharedRuntime` (the
-//! XLA client is single-threaded) but compilation and geometry — the
-//! bulk of each evaluation — run concurrently.
+//! The sweep is batch-first: `dse::evaluate_all_batched` compiles the
+//! configs across `std::thread::scope` workers and characterizes them
+//! in one `characterize_all` pass, packing every design's transient
+//! points into shared padded artifact batches through the coordinator
+//! — workers never serialize on the `SharedRuntime` mutex themselves.
+//! The legacy per-design path (each worker running `characterize`
+//! under the runtime lock) is kept as a comparison series, and the
+//! artifact-call KPI is asserted: a sweep of N designs must issue
+//! ceil(N/batch) retention executions, not N.
+use opengcram::characterize::batch;
 use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
@@ -24,15 +29,29 @@ fn main() {
             return;
         }
     };
-    let cache = dse::EvalCache::new();
-    let eval = |cfg: &Config| -> opengcram::Result<dse::Evaluated> {
-        let bank = compile(&tech, cfg)?;
-        let perf = rt.with(|rt| characterize::characterize(&tech, rt, &bank))?;
-        Ok(dse::Evaluated { config: cfg.clone(), perf, area_um2: bank.layout.total_area_um2() })
-    };
     let configs = dse::fig10_configs(CellFlavor::GcSiSiNp);
     let workers = dse::default_workers();
-    let evals = dse::evaluate_all_cached(&configs, workers, &cache, eval).unwrap();
+
+    // ---- batch-first sweep with artifact-call accounting ----------------
+    let ret_cap = rt.batch_cap("retention").unwrap();
+    let ret_before = rt.call_count("retention");
+    let cache = dse::EvalCache::new();
+    let evals =
+        dse::evaluate_all_batched_cached(&tech, &rt, &configs, workers, &cache).unwrap();
+    let ret_calls = (rt.call_count("retention") - ret_before) as usize;
+    let want_calls = batch::calls_for(configs.len(), ret_cap);
+    assert!(
+        ret_calls <= want_calls,
+        "batched sweep issued {ret_calls} retention executions for {} designs (cap {ret_cap}); \
+         the batcher guarantees <= {want_calls}",
+        configs.len()
+    );
+    println!("retention_calls_per_sweep,{ret_calls}");
+    println!(
+        "retention_batch_occupancy,{:.4}",
+        configs.len() as f64 / (ret_calls.max(1) * ret_cap) as f64
+    );
+
     println!("machine,level,task,c16,c32,c64,c96,c128");
     for (level, m) in [
         (workloads::CacheLevel::L1, &workloads::GT520M),
@@ -47,18 +66,32 @@ fn main() {
             println!("{},{:?},{},{}", m.name, level, task.name, glyphs.join(","));
         }
     }
-    // cold sweep (fresh cache) vs cached re-sweep: the caching win
-    let s_cold = bench::run("dse_shmoo_axis_cold_parallel", 3.0, || {
-        let fresh = dse::EvalCache::new();
-        dse::evaluate_all_cached(&configs, workers, &fresh, eval).unwrap()
+
+    // ---- batched vs legacy-mutex sweep (both cold) ----------------------
+    let legacy_eval = |cfg: &Config| -> opengcram::Result<dse::Evaluated> {
+        let bank = compile(&tech, cfg)?;
+        let perf = rt.with(|r| characterize::characterize(&tech, r, &bank))?;
+        Ok(dse::Evaluated { config: cfg.clone(), perf, area_um2: bank.layout.total_area_um2() })
+    };
+    let s_legacy = bench::run("dse_shmoo_axis_legacy_mutex", 3.0, || {
+        dse::evaluate_all(&configs, workers, legacy_eval).unwrap()
     });
+    let s_batched = bench::run("dse_shmoo_axis_batched", 3.0, || {
+        dse::evaluate_all_batched(&tech, &rt, &configs, workers).unwrap()
+    });
+    println!(
+        "shmoo_batched_speedup,{:.2}x",
+        s_legacy.median_s / s_batched.median_s.max(1e-12)
+    );
+
+    // cached re-sweep: the caching win on top of batching
     let s_hot = bench::run("dse_shmoo_axis_cached", 1.0, || {
-        dse::evaluate_all_cached(&configs, workers, &cache, eval).unwrap()
+        dse::evaluate_all_batched_cached(&tech, &rt, &configs, workers, &cache).unwrap()
     });
-    println!("shmoo_cache_speedup,{:.1}x", s_cold.median_s / s_hot.median_s.max(1e-9));
+    println!("shmoo_cache_speedup,{:.1}x", s_batched.median_s / s_hot.median_s.max(1e-9));
     bench::run("dse_full_pipeline_one_config", 3.0, || {
         let cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
         let bank = compile(&tech, &cfg).unwrap();
-        rt.with(|r| characterize::characterize(&tech, r, &bank)).unwrap()
+        characterize::characterize_all(&tech, &rt, std::slice::from_ref(&bank)).unwrap()
     });
 }

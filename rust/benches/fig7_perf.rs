@@ -1,7 +1,9 @@
 //! Fig. 7 regenerator: operating frequency, effective bandwidth and
-//! leakage across sizes/flavors (transient-backed characterization).
+//! leakage across sizes/flavors.  The whole figure is one batch-first
+//! `characterize_all` pass: all 15 designs' transient points pack into
+//! shared padded artifact batches through the coordinator.
 use opengcram::compiler::{compile, CellFlavor, Config};
-use opengcram::runtime::Runtime;
+use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
 use opengcram::util::bench;
 use opengcram::characterize;
@@ -9,8 +11,9 @@ use std::path::Path;
 
 fn main() {
     let tech = sg40();
-    let rt = Runtime::load(Path::new("artifacts")).expect("make artifacts");
-    println!("config,flavor,f_op_mhz,bw_gbps,leak_nw,stages");
+    let rt = SharedRuntime::load(Path::new("artifacts")).expect("make artifacts");
+    let mut labels: Vec<(String, &'static str, usize)> = Vec::new();
+    let mut banks = Vec::new();
     for (w, n, label) in [
         (16usize, 16usize, "256b_1to1"),
         (32, 32, "1kb_1to1"),
@@ -23,29 +26,31 @@ fn main() {
             (CellFlavor::GcSiSiNp, "gc"),
         ] {
             let bank = compile(&tech, &Config::new(w, n, fl)).unwrap();
-            let p = characterize::characterize(&tech, &rt, &bank).unwrap();
-            println!(
-                "{label},{name},{:.1},{:.2},{:.2},{}",
-                p.f_op_hz / 1e6,
-                p.bandwidth_bps / 1e9,
-                p.leakage_w * 1e9,
-                bank.delay_chain_stages
-            );
+            labels.push((label.to_string(), name, bank.delay_chain_stages));
+            banks.push(bank);
         }
         let mut cfg = Config::new(w, n, CellFlavor::GcSiSiNp);
         cfg.wwlls = true;
         let bank = compile(&tech, &cfg).unwrap();
-        let p = characterize::characterize(&tech, &rt, &bank).unwrap();
+        labels.push((label.to_string(), "gc_wwlls", bank.delay_chain_stages));
+        banks.push(bank);
+    }
+    let perfs = characterize::characterize_all(&tech, &rt, &banks).unwrap();
+    println!("config,flavor,f_op_mhz,bw_gbps,leak_nw,stages");
+    for ((label, name, stages), p) in labels.iter().zip(&perfs) {
         println!(
-            "{label},gc_wwlls,{:.1},{:.2},{:.2},{}",
+            "{label},{name},{:.1},{:.2},{:.2},{stages}",
             p.f_op_hz / 1e6,
             p.bandwidth_bps / 1e9,
             p.leakage_w * 1e9,
-            bank.delay_chain_stages
         );
     }
     let bank = compile(&tech, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap();
     bench::run("characterize_1kb_transient", 2.0, || {
-        characterize::characterize(&tech, &rt, &bank).unwrap()
+        rt.with(|r| characterize::characterize(&tech, r, &bank)).unwrap()
     });
+    bench::run("characterize_all_fig7_15designs", 3.0, || {
+        characterize::characterize_all(&tech, &rt, &banks).unwrap()
+    });
+    println!("# artifact executions: {:?}", rt.call_counts());
 }

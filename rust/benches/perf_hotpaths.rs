@@ -11,13 +11,17 @@
 //!   paths only (no artifacts needed).
 //! * `PERF_BANK=N`  — override the square bank size (default 128,
 //!   32 under smoke).
+use opengcram::characterize::batch;
 use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::coordinator::{BatchExec, Coordinator};
 use opengcram::layout::{cells, FlattenCache, Library};
-use opengcram::runtime::{engines, Runtime};
+use opengcram::runtime::{engines, SharedRuntime};
 use opengcram::tech::sg40;
 use opengcram::util::bench;
 use opengcram::{characterize, drc, dse, sim};
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 fn main() {
     let tech = sg40();
@@ -142,11 +146,17 @@ fn main() {
     });
     records.push((s.clone(), s.per_sec()));
 
+    // ---- coordinator batch packing (runtime-free; runs in CI smoke) -----
+    // a fig10-size sweep (one retention point per design) routed
+    // through the coordinator must issue ceil(points/cap) artifact
+    // calls — not one per point, which was the pre-batching behavior
+    coordinator_packing_records(&mut records);
+
     // ---- L1/L2 via PJRT + native sim baseline (skipped in smoke) --------
     if smoke {
         println!("# PERF_SMOKE: skipping XLA and native-sim benches");
     } else {
-        match Runtime::load(Path::new("artifacts")) {
+        match SharedRuntime::load(Path::new("artifacts")) {
             Ok(rt) => xla_benches(&tech, &rt, &mut records),
             Err(e) => println!("# skipping XLA benches ({e})"),
         }
@@ -158,7 +168,58 @@ fn main() {
     println!("# wrote {} ({} benches)", json_path.display(), records.len());
 }
 
-fn xla_benches(tech: &opengcram::tech::Tech, rt: &Runtime, records: &mut Vec<(bench::Sample, f64)>) {
+/// Mock executor standing in for the retention engine: counts the
+/// artifact calls the coordinator would issue.
+struct CountingExec {
+    cap: usize,
+    calls: Arc<AtomicUsize>,
+}
+
+impl BatchExec<usize, usize> for CountingExec {
+    fn run(&mut self, jobs: &[usize]) -> opengcram::Result<Vec<usize>> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        Ok(jobs.to_vec())
+    }
+    fn max_batch(&self) -> usize {
+        self.cap
+    }
+}
+
+fn coordinator_packing_records(records: &mut Vec<(bench::Sample, f64)>) {
+    let cap = 256; // the AOT artifacts' manifest batch size
+    let fig10_points = dse::fig10_configs(CellFlavor::GcSiSiNp).len();
+    for (name, points) in [
+        ("coord_retention_packing_fig10_axis", fig10_points),
+        ("coord_retention_packing_1k_sweep", 1000),
+    ] {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls_in = calls.clone();
+        let s = bench::run(name, 0.05, || {
+            calls_in.store(0, Ordering::SeqCst);
+            let c = Coordinator::spawn(CountingExec { cap, calls: calls_in.clone() });
+            c.run_all((0..points).collect()).unwrap()
+        });
+        let got = calls.load(Ordering::SeqCst);
+        let want = batch::calls_for(points, cap);
+        assert_eq!(
+            got, want,
+            "{points}-point sweep through the coordinator must issue ceil(points/cap) = \
+             {want} artifact calls, got {got}"
+        );
+        let occupancy = points as f64 / (got * cap) as f64;
+        println!("batch_calls_{points}pt,{got}");
+        println!("batch_occupancy_{points}pt,{occupancy:.4}");
+        // throughput column records occupancy so the packing trajectory
+        // lands in BENCH_perf.json alongside the timing series
+        records.push((s, occupancy));
+    }
+}
+
+fn xla_benches(
+    tech: &opengcram::tech::Tech,
+    rt: &SharedRuntime,
+    records: &mut Vec<(bench::Sample, f64)>,
+) {
     // batched artifact executions (per-design cost)
     let ret_pts: Vec<_> = (0..256)
         .map(|i| engines::RetentionPoint {
@@ -171,13 +232,47 @@ fn xla_benches(tech: &opengcram::tech::Tech, rt: &Runtime, records: &mut Vec<(be
             vth: 0.3,
         })
         .collect();
-    let s = bench::run("xla_retention_batch256", 3.0, || engines::retention(rt, &ret_pts).unwrap());
+    let s = bench::run("xla_retention_batch256", 3.0, || {
+        rt.with(|r| engines::retention(r, &ret_pts)).unwrap()
+    });
     println!("retention_points_per_sec,{:.0}", 256.0 / s.median_s);
     records.push((s.clone(), 256.0 / s.median_s));
     let one = vec![ret_pts[0].clone()];
-    let s1 = bench::run("xla_retention_batch1_padded", 3.0, || engines::retention(rt, &one).unwrap());
+    let s1 = bench::run("xla_retention_batch1_padded", 3.0, || {
+        rt.with(|r| engines::retention(r, &one)).unwrap()
+    });
     println!("batch_amortization,{:.1}x", s1.median_s * 256.0 / s.median_s);
     records.push((s1.clone(), 1.0 / s1.median_s));
+
+    // ---- batch-first transient sweep over real artifacts ----------------
+    // characterize_all packs a write-VT retention axis (same geometry,
+    // shared windows) — assert the artifact-call KPI and record the
+    // measured occupancy
+    let banks: opengcram::Result<Vec<_>> = [None, Some(0.40), Some(0.45), Some(0.50), Some(0.55)]
+        .iter()
+        .map(|&vt| {
+            let mut cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
+            cfg.write_vt = vt;
+            compile(tech, &cfg)
+        })
+        .collect();
+    let banks = banks.unwrap();
+    let before = rt.call_count("retention");
+    let perfs = characterize::characterize_all(tech, rt, &banks).unwrap();
+    assert_eq!(perfs.len(), banks.len());
+    let ret_calls = (rt.call_count("retention") - before) as usize;
+    let cap = rt.batch_cap("retention").unwrap();
+    let want = batch::calls_for(banks.len(), cap);
+    assert!(
+        ret_calls <= want,
+        "characterize_all issued {ret_calls} retention executions for {} designs (<= {want} expected)",
+        banks.len()
+    );
+    println!("char_batched_retention_calls,{ret_calls}");
+    let s = bench::run("char_batched_vt_axis_5designs", 3.0, || {
+        characterize::characterize_all(tech, rt, &banks).unwrap()
+    });
+    records.push((s.clone(), banks.len() as f64 / s.median_s));
 }
 
 fn native_sim_bench(tech: &opengcram::tech::Tech, records: &mut Vec<(bench::Sample, f64)>) {

@@ -5,7 +5,7 @@
 
 use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::layout::{cells, Library};
-use opengcram::runtime::{engines, Runtime};
+use opengcram::runtime::{engines, SharedRuntime};
 use opengcram::tech::{sg40, LayerRole};
 use opengcram::util::eng;
 use opengcram::{characterize, dse, report, workloads};
@@ -13,7 +13,7 @@ use std::path::Path;
 
 fn main() -> opengcram::Result<()> {
     let tech = sg40();
-    let rt = Runtime::load(Path::new("artifacts"))?;
+    let rt = SharedRuntime::load(Path::new("artifacts"))?;
 
     // ---- Fig. 3: cell areas ------------------------------------------------
     println!("== Fig. 3: bitcell areas (logic rules) ==");
@@ -60,10 +60,14 @@ fn main() -> opengcram::Result<()> {
     println!("{}", t6.render());
 
     // ---- Fig. 7: frequency / bandwidth / leakage ----------------------------
-    println!("== Fig. 7: frequency, bandwidth, leakage (transient-backed) ==");
+    // one batch-first characterization pass over all 15 designs: the
+    // transient points pack into shared artifact batches
+    println!("== Fig. 7: frequency, bandwidth, leakage (transient-backed, batched) ==");
     let mut t7 = report::Table::new(&[
         "config", "flavor", "f_op MHz", "bw Gb/s", "leak nW", "stages",
     ]);
+    let mut t7_meta: Vec<(String, String)> = Vec::new();
+    let mut t7_banks = Vec::new();
     for (w, n, label) in [
         (16usize, 16usize, "256 b 1:1"),
         (32, 32, "1 Kb 1:1"),
@@ -72,25 +76,20 @@ fn main() -> opengcram::Result<()> {
         (128, 128, "16 Kb 1:1"),
     ] {
         for flavor in [CellFlavor::Sram6t, CellFlavor::GcSiSiNp] {
-            let bank = compile(&tech, &Config::new(w, n, flavor))?;
-            let perf = characterize::characterize(&tech, &rt, &bank)?;
-            t7.row(&[
-                label.into(),
-                format!("{flavor:?}"),
-                report::mhz(perf.f_op_hz),
-                format!("{:.1}", perf.bandwidth_bps / 1e9),
-                format!("{:.1}", perf.leakage_w * 1e9),
-                format!("{}", bank.delay_chain_stages),
-            ]);
+            t7_banks.push(compile(&tech, &Config::new(w, n, flavor))?);
+            t7_meta.push((label.into(), format!("{flavor:?}")));
         }
         // WWLLS variant
         let mut cfg = Config::new(w, n, CellFlavor::GcSiSiNp);
         cfg.wwlls = true;
-        let bank = compile(&tech, &cfg)?;
-        let perf = characterize::characterize(&tech, &rt, &bank)?;
+        t7_banks.push(compile(&tech, &cfg)?);
+        t7_meta.push((label.into(), "GcSiSiNp+LS".into()));
+    }
+    let t7_perfs = characterize::characterize_all(&tech, &rt, &t7_banks)?;
+    for (((label, flavor), bank), perf) in t7_meta.iter().zip(&t7_banks).zip(&t7_perfs) {
         t7.row(&[
-            label.into(),
-            "GcSiSiNp+LS".into(),
+            label.clone(),
+            flavor.clone(),
             report::mhz(perf.f_op_hz),
             format!("{:.1}", perf.bandwidth_bps / 1e9),
             format!("{:.1}", perf.leakage_w * 1e9),
@@ -108,7 +107,7 @@ fn main() -> opengcram::Result<()> {
         ("os_nmos_hvt", 1.5),
     ];
     let card_list: Vec<_> = cards.iter().map(|(n, wl)| (*tech.card(n), *wl)).collect();
-    let (vg, ids) = engines::idvg(&rt, &card_list, -0.2, 1.2, 1.1)?;
+    let (vg, ids) = rt.with(|r| engines::idvg(r, &card_list, -0.2, 1.2, 1.1))?;
     for ((name, _), row) in cards.iter().zip(&ids) {
         let at = |x: f64| {
             let i = vg.iter().position(|&v| v >= x).unwrap_or(vg.len() - 1);
@@ -132,7 +131,7 @@ fn main() -> opengcram::Result<()> {
         mk_ret("os_nmos", None),
         mk_ret("os_nmos_hvt", None),
     ];
-    let rets = engines::retention(&rt, &pts)?;
+    let rets = rt.with(|r| engines::retention(r, &pts))?;
     let labels = ["Si-Si (vt .45)", "Si-Si vt .55", "Si-Si vt .65", "OS-OS", "OS-OS HVT"];
     for (l, r) in labels.iter().zip(&rets) {
         println!("  retention {l:16} = {}", eng(r.t_retain, "s"));
@@ -157,15 +156,13 @@ fn main() -> opengcram::Result<()> {
     }
 
     // ---- Fig. 10: shmoo -------------------------------------------------------
-    println!("== Fig. 10: shmoo (GCRAM bank configs vs tasks) ==");
-    let evals: Vec<dse::Evaluated> = dse::fig10_configs(CellFlavor::GcSiSiNp)
-        .into_iter()
-        .map(|cfg| {
-            let bank = compile(&tech, &cfg)?;
-            let perf = characterize::characterize(&tech, &rt, &bank)?;
-            Ok(dse::Evaluated { config: cfg, perf, area_um2: bank.layout.total_area_um2() })
-        })
-        .collect::<opengcram::Result<_>>()?;
+    println!("== Fig. 10: shmoo (GCRAM bank configs vs tasks, batch-first sweep) ==");
+    let evals = dse::evaluate_all_batched(
+        &tech,
+        &rt,
+        &dse::fig10_configs(CellFlavor::GcSiSiNp),
+        dse::default_workers(),
+    )?;
     for (level, machine) in [
         (workloads::CacheLevel::L1, &workloads::GT520M),
         (workloads::CacheLevel::L2, &workloads::H100),
@@ -194,5 +191,11 @@ fn main() -> opengcram::Result<()> {
     lib2.add(lc.layout.clone());
     let lvs = opengcram::lvs::check(&tech, &lib2, "gc2t_sisi", &lc.circuit)?;
     println!("  bitcell LVS: {}", if lvs.matched { "CLEAN" } else { "MISMATCH" });
+
+    // ---- batching KPI: artifact executions for the whole run ------------------
+    println!("\n== PJRT artifact executions (batch-first pipeline) ==");
+    for (name, calls) in rt.call_counts() {
+        println!("  {name:10} {calls}");
+    }
     Ok(())
 }

@@ -1,0 +1,261 @@
+//! Per-engine [`BatchExec`] implementations over
+//! [`crate::runtime::engines`] — the bridge between the job
+//! [`crate::coordinator`] and the AOT artifacts.
+//!
+//! Jobs carry their transient window; the executors re-group whatever
+//! batch the coordinator hands them into *runnable* homogeneous calls:
+//! points in one artifact execution must share the window (the dt
+//! schedule tensor is per-batch, not per-row) and, for reads, the
+//! `pull_up` flavor (the RWL waveform is per-batch).  This makes
+//! `read_op`'s "mixed read flavors in one batch" `ensure` an invariant
+//! the batcher upholds instead of a caller footgun.  Retention points
+//! have neither a window nor a flavor, so they always pack to full
+//! artifact occupancy — the sweep-cost headline: a shmoo axis issues
+//! `ceil(points / batch)` retention executions, not one per point.
+
+use crate::coordinator::BatchExec;
+use crate::runtime::{engines, SharedRuntime};
+
+/// One write-transient job: the design point plus its simulation
+/// window.  Jobs with bit-equal windows share an artifact execution.
+#[derive(Debug, Clone)]
+pub struct WriteJob {
+    pub pt: engines::WritePoint,
+    pub window_s: f64,
+}
+
+/// One read-transient job; groups by `(pull_up, window)`.
+#[derive(Debug, Clone)]
+pub struct ReadJob {
+    pub pt: engines::ReadPoint,
+    pub window_s: f64,
+}
+
+/// One retention job; the retention artifact runs a fixed log-time
+/// grid, so every job is group-compatible.
+#[derive(Debug, Clone)]
+pub struct RetentionJob {
+    pub pt: engines::RetentionPoint,
+}
+
+/// Homogeneity key of a write job (window bits).
+pub(crate) fn write_key(j: &WriteJob) -> u128 {
+    j.window_s.to_bits() as u128
+}
+
+/// Homogeneity key of a read job: `pull_up` in the high bits (the
+/// waveform split) and the window bits below.
+pub(crate) fn read_key(j: &ReadJob) -> u128 {
+    ((j.pt.pull_up as u128) << 64) | j.window_s.to_bits() as u128
+}
+
+/// Partition job indices into runnable groups by `key`, preserving
+/// submission order inside each group and first-seen order across
+/// groups.  The scatter side of the executors depends on every index
+/// appearing in exactly one group.
+pub(crate) fn group_indices<J>(jobs: &[J], mut key: impl FnMut(&J) -> u128) -> Vec<Vec<usize>> {
+    let mut map: std::collections::HashMap<u128, usize> = std::collections::HashMap::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (i, j) in jobs.iter().enumerate() {
+        let g = *map.entry(key(j)).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[g].push(i);
+    }
+    groups
+}
+
+/// Expected artifact executions for `points` homogeneous jobs at batch
+/// capacity `cap` — the occupancy model documented in EXPERIMENTS.md.
+pub fn calls_for(points: usize, cap: usize) -> usize {
+    let cap = cap.max(1);
+    (points + cap - 1) / cap
+}
+
+/// Run `jobs` as grouped, cap-chunked engine calls and scatter the
+/// results back to submission order.
+fn run_grouped<J, R: Clone>(
+    jobs: &[J],
+    cap: usize,
+    key: impl FnMut(&J) -> u128,
+    mut call: impl FnMut(&[usize]) -> crate::Result<Vec<R>>,
+) -> crate::Result<Vec<R>> {
+    let mut out: Vec<Option<R>> = vec![None; jobs.len()];
+    for group in group_indices(jobs, key) {
+        for chunk in group.chunks(cap.max(1)) {
+            let res = call(chunk)?;
+            anyhow::ensure!(
+                res.len() == chunk.len(),
+                "engine returned {} results for {} points",
+                res.len(),
+                chunk.len()
+            );
+            for (&i, r) in chunk.iter().zip(res) {
+                out[i] = Some(r);
+            }
+        }
+    }
+    Ok(out.into_iter().map(|r| r.expect("grouping covers every job")).collect())
+}
+
+/// Write-engine executor: one `write_op` per (window, cap-chunk).
+pub struct WriteExec<'rt> {
+    rt: &'rt SharedRuntime,
+    cap: usize,
+}
+
+impl<'rt> WriteExec<'rt> {
+    pub fn new(rt: &'rt SharedRuntime) -> crate::Result<WriteExec<'rt>> {
+        Ok(WriteExec { rt, cap: rt.batch_cap("write")? })
+    }
+}
+
+impl BatchExec<WriteJob, engines::WriteResult> for WriteExec<'_> {
+    fn run(&mut self, jobs: &[WriteJob]) -> crate::Result<Vec<engines::WriteResult>> {
+        run_grouped(jobs, self.cap, write_key, |chunk| {
+            let pts: Vec<engines::WritePoint> = chunk.iter().map(|&i| jobs[i].pt.clone()).collect();
+            self.rt.with(|r| engines::write_op(r, &pts, jobs[chunk[0]].window_s))
+        })
+    }
+    fn max_batch(&self) -> usize {
+        self.cap
+    }
+}
+
+/// Read-engine executor: one `read_op` per (pull_up, window, cap-chunk)
+/// — the split that turns `read_op`'s homogeneity `ensure` into a
+/// batcher invariant.
+pub struct ReadExec<'rt> {
+    rt: &'rt SharedRuntime,
+    cap: usize,
+}
+
+impl<'rt> ReadExec<'rt> {
+    pub fn new(rt: &'rt SharedRuntime) -> crate::Result<ReadExec<'rt>> {
+        Ok(ReadExec { rt, cap: rt.batch_cap("read")? })
+    }
+}
+
+impl BatchExec<ReadJob, engines::ReadResult> for ReadExec<'_> {
+    fn run(&mut self, jobs: &[ReadJob]) -> crate::Result<Vec<engines::ReadResult>> {
+        run_grouped(jobs, self.cap, read_key, |chunk| {
+            let pts: Vec<engines::ReadPoint> = chunk.iter().map(|&i| jobs[i].pt.clone()).collect();
+            self.rt.with(|r| engines::read_op(r, &pts, jobs[chunk[0]].window_s))
+        })
+    }
+    fn max_batch(&self) -> usize {
+        self.cap
+    }
+}
+
+/// Retention-engine executor: every job packs; calls = ceil(n / cap).
+pub struct RetentionExec<'rt> {
+    rt: &'rt SharedRuntime,
+    cap: usize,
+}
+
+impl<'rt> RetentionExec<'rt> {
+    pub fn new(rt: &'rt SharedRuntime) -> crate::Result<RetentionExec<'rt>> {
+        Ok(RetentionExec { rt, cap: rt.batch_cap("retention")? })
+    }
+}
+
+impl BatchExec<RetentionJob, engines::RetentionResult> for RetentionExec<'_> {
+    fn run(&mut self, jobs: &[RetentionJob]) -> crate::Result<Vec<engines::RetentionResult>> {
+        run_grouped(jobs, self.cap, |_| 0, |chunk| {
+            let pts: Vec<engines::RetentionPoint> =
+                chunk.iter().map(|&i| jobs[i].pt.clone()).collect();
+            self.rt.with(|r| engines::retention(r, &pts))
+        })
+    }
+    fn max_batch(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::sg40;
+    use crate::util::rng::{check, Rng};
+
+    #[test]
+    fn group_indices_is_a_partition_preserving_order() {
+        check("grouping partition", 20, |rng: &mut Rng| {
+            let n = 1 + rng.below(300);
+            let keys: Vec<u128> = (0..n).map(|_| rng.below(5) as u128).collect();
+            let groups = group_indices(&keys, |k| *k);
+            // every index appears exactly once
+            let mut seen = vec![false; n];
+            for g in &groups {
+                // homogeneous and ascending inside each group
+                assert!(g.windows(2).all(|w| w[0] < w[1]));
+                assert!(g.iter().all(|&i| keys[i] == keys[g[0]]));
+                for &i in g {
+                    assert!(!seen[i], "index {i} grouped twice");
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.into_iter().all(|s| s), "index lost by grouping");
+        });
+    }
+
+    #[test]
+    fn read_key_splits_mixed_pull_up_flavors() {
+        // regression scaffold for the read_op "mixed read flavors"
+        // bail: NP (pull-up) and NN/OS (pull-down) points sharing a
+        // window must land in different groups
+        let t = sg40();
+        let mk = |pull_up: bool, window_s: f64| ReadJob {
+            pt: engines::ReadPoint {
+                read_card: *t.card("si_nmos"),
+                read_wl: 3.5,
+                sn0: 0.05,
+                sn_unsel: 0.0,
+                rows: 32,
+                c_sn: 1.2e-15,
+                c_rbl: 20e-15,
+                c_rwl_sn: 0.1e-15,
+                g_rbl_leak: 1e-9,
+                vdd: 1.1,
+                pull_up,
+            },
+            window_s,
+        };
+        let jobs = vec![mk(true, 6e-9), mk(false, 6e-9), mk(true, 6e-9), mk(false, 8e-9)];
+        let groups = group_indices(&jobs, read_key);
+        assert_eq!(groups.len(), 3, "{groups:?}");
+        assert_eq!(groups[0], vec![0, 2], "pull-up points share one call");
+        assert_eq!(groups[1], vec![1], "pull-down split off");
+        assert_eq!(groups[2], vec![3], "different window split off");
+        for g in &groups {
+            let pu = jobs[g[0]].pt.pull_up;
+            assert!(g.iter().all(|&i| jobs[i].pt.pull_up == pu), "mixed flavors in a group");
+        }
+    }
+
+    #[test]
+    fn occupancy_model() {
+        assert_eq!(calls_for(0, 256), 0);
+        assert_eq!(calls_for(1, 256), 1);
+        assert_eq!(calls_for(256, 256), 1);
+        assert_eq!(calls_for(257, 256), 2);
+        assert_eq!(calls_for(1000, 256), 4);
+        assert_eq!(calls_for(5, 0), 5, "degenerate cap clamps to 1");
+    }
+
+    #[test]
+    fn run_grouped_scatters_back_to_submission_order() {
+        // identity over a shuffled key pattern: results must come back
+        // positionally even though execution is grouped
+        let jobs: Vec<u128> = vec![3, 1, 3, 2, 1, 3, 2, 0];
+        let res = run_grouped(&jobs, 2, |j| *j, |chunk| {
+            assert!(chunk.len() <= 2);
+            Ok(chunk.iter().map(|&i| jobs[i] * 10 + i as u128).collect())
+        })
+        .unwrap();
+        let want: Vec<u128> = jobs.iter().enumerate().map(|(i, j)| j * 10 + i as u128).collect();
+        assert_eq!(res, want);
+    }
+}

@@ -8,11 +8,22 @@
 //! * [`characterize`] — cell-level transients executed on the AOT XLA
 //!   artifacts through the PJRT runtime (HSPICE-class for the critical
 //!   path) combined with analytical periphery delays.
+//!
+//! Characterization is *batch-first*: a [`CharPlan`] decomposes one
+//! design into its transient jobs (plan) and folds the results back
+//! into a [`BankPerf`] (finish); [`characterize`] runs one plan with
+//! singleton batches, while [`characterize_all`] packs the jobs of
+//! many designs into shared padded artifact batches through the
+//! [`crate::coordinator`] — the DSE sweep cost is then paid per batch,
+//! not per design.
+
+pub mod batch;
 
 use crate::compiler::{Bank, CellFlavor};
-use crate::runtime::{engines, Runtime};
+use crate::coordinator;
+use crate::runtime::{engines, Runtime, SharedRuntime};
 use crate::sim;
-use crate::tech::Tech;
+use crate::tech::{DeviceCard, Tech};
 use crate::util::ceil_log2;
 
 /// Sense-amp offset margin (V) and timing guardband.
@@ -20,6 +31,8 @@ const SENSE_MARGIN_V: f64 = 0.05;
 const GUARDBAND: f64 = 1.15;
 /// Replica delay-chain stage delay (s), x1 inverter FO4-ish.
 pub const TAU_STAGE: f64 = 25e-12;
+/// Stored-'0' probe level for the read discrimination transient.
+const STORED_ZERO: f64 = 0.05;
 
 /// Characterization result for one bank.
 #[derive(Debug, Clone, Copy)]
@@ -94,29 +107,84 @@ pub fn analytical(tech: &Tech, bank: &Bank) -> BankPerf {
     }
 }
 
-/// Full characterization: write + read + retention transients on the
-/// XLA artifacts, analytical periphery, delay-chain quantization.
-pub fn characterize(tech: &Tech, rt: &Runtime, bank: &Bank) -> crate::Result<BankPerf> {
-    // the 6T SRAM baseline reads differentially (BL/BLb) -- the GC
-    // read template does not model it; the calibrated analytical model
-    // is the SRAM reference (its differential sense needs only ~150 mV
-    // of swing, which is why SRAM is faster than GCRAM in Fig. 7a)
-    if bank.config.flavor == CellFlavor::Sram6t {
-        return Ok(analytical(tech, bank));
-    }
-    let vdd = tech.vdd;
-    let cfg = &bank.config;
-    let p = &bank.parasitics;
-    let flavor = cfg.flavor;
-    let rows = cfg.rows();
+/// Staged decomposition of [`characterize`].
+///
+/// * `new` extracts everything the transients need from (tech, bank) —
+///   pure, no runtime access;
+/// * [`CharPlan::write_jobs`] emits stage 1 ([`engines::WritePoint`]);
+/// * [`CharPlan::absorb_writes`] folds the write results in (the read
+///   and retention points start from the written stored-'1' level);
+/// * [`CharPlan::read_jobs`] / [`CharPlan::retention_jobs`] emit
+///   stage 2;
+/// * [`CharPlan::finish`] folds the transient results into a
+///   [`BankPerf`].
+///
+/// Results are positional with the emitted job lists.  Both
+/// [`characterize`] (singleton batches) and [`characterize_all`]
+/// (shared cross-design batches) run exactly this plan, so the two
+/// paths are equivalent by construction: a singleton
+/// `characterize_all` issues byte-identical artifact calls.
+#[derive(Debug, Clone)]
+pub struct CharPlan {
+    kind: PlanKind,
+}
 
-    let (wr_card, wr_wl) = write_card(tech, flavor, cfg.write_vt);
-    let (rd_card, rd_wl) = read_card(tech, flavor);
-    let v_wwl = if cfg.wwlls { vdd + 0.4 } else { vdd };
+#[derive(Debug, Clone)]
+enum PlanKind {
+    /// No transient jobs: the 6T SRAM baseline reads differentially
+    /// (BL/BLb), which the GC read template does not model; the
+    /// calibrated analytical model is the SRAM reference (its
+    /// differential sense needs only ~150 mV of swing, which is why
+    /// SRAM is faster than GCRAM in Fig. 7a).
+    Analytical(BankPerf),
+    Transient(Box<TransientPlan>),
+}
 
-    // --- write transient -------------------------------------------------
-    let wr_pts = vec![
-        engines::WritePoint {
+#[derive(Debug, Clone)]
+struct TransientPlan {
+    flavor: CellFlavor,
+    word_size: usize,
+    mux_gt1: bool,
+    rows: usize,
+    vdd: f64,
+    // write stage
+    wr_pt: engines::WritePoint,
+    /// Write window scales with the WBL RC.
+    wr_window: f64,
+    // read stage (points need the write result's stored level)
+    rd_card: DeviceCard,
+    rd_wl: f64,
+    rd_window: f64,
+    pull_up: bool,
+    // retention stage
+    g_gate_leak: f64,
+    // parasitics the later stages re-use
+    c_sn: f64,
+    c_rbl: f64,
+    c_rwl_sn: f64,
+    // analytical periphery terms (precomputed: finish has no tech)
+    t_dec: f64,
+    t_wl: f64,
+    leakage_w: f64,
+    // filled by absorb_writes
+    wr: Option<engines::WriteResult>,
+}
+
+impl CharPlan {
+    /// Build the job plan for one bank (pure; no runtime access).
+    pub fn new(tech: &Tech, bank: &Bank) -> CharPlan {
+        if bank.config.flavor == CellFlavor::Sram6t {
+            return CharPlan { kind: PlanKind::Analytical(analytical(tech, bank)) };
+        }
+        let vdd = tech.vdd;
+        let cfg = &bank.config;
+        let p = &bank.parasitics;
+        let flavor = cfg.flavor;
+        let rows = cfg.rows();
+        let (wr_card, wr_wl) = write_card(tech, flavor, cfg.write_vt);
+        let (rd_card, rd_wl) = read_card(tech, flavor);
+        let v_wwl = if cfg.wwlls { vdd + 0.4 } else { vdd };
+        let wr_pt = engines::WritePoint {
             write_card: wr_card,
             write_wl: wr_wl,
             drv_p: (*tech.card("si_pmos"), 8.0),
@@ -129,85 +197,291 @@ pub fn characterize(tech: &Tech, rt: &Runtime, bank: &Bank) -> crate::Result<Ban
             v_wwl,
             one: true,
             sn0: 0.0,
-        },
-    ];
-    // window scales with the WBL RC
-    let wr_window = (40.0 * p.c_wbl * vdd / sim::ion(&wr_card, 4.0, vdd)).max(4e-9);
-    let wr = engines::write_op(rt, &wr_pts, wr_window)?;
-    let stored_one = wr[0].sn_final as f64;
-    let t_write_cell = wr[0].t_wr;
+        };
+        CharPlan {
+            kind: PlanKind::Transient(Box::new(TransientPlan {
+                flavor,
+                word_size: cfg.word_size,
+                mux_gt1: cfg.mux_factor() > 1,
+                rows,
+                vdd,
+                wr_window: (40.0 * p.c_wbl * vdd / sim::ion(&wr_card, 4.0, vdd)).max(4e-9),
+                wr_pt,
+                rd_card,
+                rd_wl,
+                rd_window: (60.0 * p.c_rbl * 0.55 / sim::ion(&rd_card, rd_wl, vdd)).max(6e-9),
+                pull_up: flavor.pull_up_read(),
+                g_gate_leak: gate_leak(flavor),
+                c_sn: p.c_sn,
+                c_rbl: p.c_rbl,
+                c_rwl_sn: p.c_rwl_sn,
+                t_dec: decoder_delay(tech, rows),
+                t_wl: 0.38 * p.r_wl * p.c_wl + 20e-12,
+                leakage_w: leakage(tech, bank),
+                wr: None,
+            })),
+        }
+    }
 
-    // --- read transient: stored '0' vs stored '1' discrimination ---------
-    let pull_up = flavor.pull_up_read();
-    let mk_read = |sn0: f64| engines::ReadPoint {
-        read_card: rd_card,
-        read_wl: rd_wl,
-        sn0,
-        sn_unsel: if pull_up { stored_one } else { 0.0 },
-        rows,
-        c_sn: p.c_sn,
-        c_rbl: p.c_rbl,
-        c_rwl_sn: p.c_rwl_sn,
-        g_rbl_leak: 1e-9,
-        vdd,
-        pull_up,
-    };
-    let stored_zero = 0.05;
-    let rd_window = (60.0 * p.c_rbl * 0.55 / sim::ion(&rd_card, rd_wl, vdd)).max(6e-9);
-    let rd = engines::read_op(rt, &[mk_read(stored_zero), mk_read(stored_one)], rd_window)?;
-    // driving case crosses first; opposite case must cross later (margin)
-    let (t_drive, t_hold) = if pull_up {
-        (rd[0].t_rise, rd[1].t_rise)
-    } else {
-        (rd[1].t_fall, rd[0].t_fall)
-    };
-    let discriminates = t_hold > 1.3 * t_drive;
-    let t_cell_read = t_drive;
+    /// Stage-1 write-transient jobs (empty for the analytical plan).
+    pub fn write_jobs(&self) -> Vec<batch::WriteJob> {
+        match &self.kind {
+            PlanKind::Analytical(_) => Vec::new(),
+            PlanKind::Transient(t) => {
+                vec![batch::WriteJob { pt: t.wr_pt.clone(), window_s: t.wr_window }]
+            }
+        }
+    }
 
-    // --- retention ---------------------------------------------------------
-    let ret = engines::retention(
-        rt,
-        &[engines::RetentionPoint {
-            write_card: wr_card,
-            write_wl: wr_wl,
-            c_sn: p.c_sn,
-            g_gate_leak: gate_leak(flavor),
-            i_disturb: 0.0,
-            v0: stored_one.max(0.05),
-            vth: 0.0, // relative threshold: decay to half the stored level
-        }],
-    )?;
-    let retention_s = if flavor == CellFlavor::Sram6t { f64::INFINITY } else { ret[0].t_retain };
+    /// Fold the stage-1 results in (positional with
+    /// [`Self::write_jobs`]).
+    pub fn absorb_writes(&mut self, res: &[engines::WriteResult]) -> crate::Result<()> {
+        match &mut self.kind {
+            PlanKind::Analytical(_) => {
+                anyhow::ensure!(res.is_empty(), "analytical plan expected no write results");
+            }
+            PlanKind::Transient(t) => {
+                anyhow::ensure!(res.len() == 1, "plan emitted 1 write job, got {} results", res.len());
+                t.wr = Some(res[0]);
+            }
+        }
+        Ok(())
+    }
 
-    // --- compose the cycle --------------------------------------------------
-    let t_dec = decoder_delay(tech, rows);
-    let t_wl = 0.38 * p.r_wl * p.c_wl + 20e-12;
-    let t_sense = 60e-12;
-    // replica delay chain quantizes the sense window (Fig. 7a step)
-    let stages = ((t_wl + t_cell_read + t_sense) / TAU_STAGE).ceil() as usize + 2;
-    let t_ctrl = stages as f64 * TAU_STAGE;
-    let mux_penalty = if cfg.mux_factor() > 1 { 40e-12 } else { 0.0 };
-    let t_read = (t_dec + t_wl + t_ctrl.max(t_cell_read + t_sense) + mux_penalty) * GUARDBAND;
-    let t_write = (t_dec + t_wl + t_write_cell + 50e-12) * GUARDBAND;
-    let f_read = 1.0 / t_read;
-    let f_write = 1.0 / t_write;
-    let f_op = f_read.min(f_write);
+    /// Stage-2 read jobs: stored-'0' vs stored-'1' discrimination.
+    /// Needs [`Self::absorb_writes`] first (the '1' probe and the
+    /// unselected-cell level start from the written `sn_final`).
+    pub fn read_jobs(&self) -> crate::Result<Vec<batch::ReadJob>> {
+        let t = match &self.kind {
+            PlanKind::Analytical(_) => return Ok(Vec::new()),
+            PlanKind::Transient(t) => t,
+        };
+        let wr = t.wr.ok_or_else(|| anyhow::anyhow!("read_jobs before absorb_writes"))?;
+        let stored_one = wr.sn_final as f64;
+        let mk = |sn0: f64| engines::ReadPoint {
+            read_card: t.rd_card,
+            read_wl: t.rd_wl,
+            sn0,
+            sn_unsel: if t.pull_up { stored_one } else { 0.0 },
+            rows: t.rows,
+            c_sn: t.c_sn,
+            c_rbl: t.c_rbl,
+            c_rwl_sn: t.c_rwl_sn,
+            g_rbl_leak: 1e-9,
+            vdd: t.vdd,
+            pull_up: t.pull_up,
+        };
+        Ok(vec![
+            batch::ReadJob { pt: mk(STORED_ZERO), window_s: t.rd_window },
+            batch::ReadJob { pt: mk(stored_one), window_s: t.rd_window },
+        ])
+    }
 
-    let functional = discriminates && stored_one > sense_floor(vdd);
+    /// Stage-2 retention job.  Needs [`Self::absorb_writes`] first
+    /// (decay starts from the written level).
+    pub fn retention_jobs(&self) -> crate::Result<Vec<batch::RetentionJob>> {
+        let t = match &self.kind {
+            PlanKind::Analytical(_) => return Ok(Vec::new()),
+            PlanKind::Transient(t) => t,
+        };
+        let wr = t.wr.ok_or_else(|| anyhow::anyhow!("retention_jobs before absorb_writes"))?;
+        Ok(vec![batch::RetentionJob {
+            pt: engines::RetentionPoint {
+                write_card: t.wr_pt.write_card,
+                write_wl: t.wr_pt.write_wl,
+                c_sn: t.c_sn,
+                g_gate_leak: t.g_gate_leak,
+                i_disturb: 0.0,
+                v0: (wr.sn_final as f64).max(0.05),
+                vth: 0.0, // relative threshold: decay to half the stored level
+            },
+        }])
+    }
 
-    Ok(BankPerf {
-        f_read_hz: f_read,
-        f_write_hz: f_write,
-        f_op_hz: f_op,
-        bandwidth_bps: bandwidth(flavor, cfg.word_size, f_op),
-        retention_s,
-        leakage_w: leakage(tech, bank),
-        e_read_j: p.c_rbl * vdd * vdd * cfg.word_size as f64,
-        t_decoder_s: t_dec,
-        t_cell_read_s: t_cell_read,
-        stored_one_v: stored_one,
-        functional,
-    })
+    /// Fold the stage-2 results (positional with the job lists) into
+    /// the final [`BankPerf`]: discrimination margin, delay-chain
+    /// quantization, cycle composition.
+    pub fn finish(
+        &self,
+        rd: &[engines::ReadResult],
+        ret: &[engines::RetentionResult],
+    ) -> crate::Result<BankPerf> {
+        let t = match &self.kind {
+            PlanKind::Analytical(perf) => {
+                anyhow::ensure!(
+                    rd.is_empty() && ret.is_empty(),
+                    "analytical plan expected no transient results"
+                );
+                return Ok(*perf);
+            }
+            PlanKind::Transient(t) => t,
+        };
+        let wr = t.wr.ok_or_else(|| anyhow::anyhow!("finish before absorb_writes"))?;
+        anyhow::ensure!(rd.len() == 2, "plan emitted 2 read jobs, got {} results", rd.len());
+        anyhow::ensure!(ret.len() == 1, "plan emitted 1 retention job, got {} results", ret.len());
+        let stored_one = wr.sn_final as f64;
+        let t_write_cell = wr.t_wr;
+        // driving case crosses first; opposite case must cross later
+        // (margin)
+        let (t_drive, t_hold) = if t.pull_up {
+            (rd[0].t_rise, rd[1].t_rise)
+        } else {
+            (rd[1].t_fall, rd[0].t_fall)
+        };
+        let discriminates = t_hold > 1.3 * t_drive;
+        let t_cell_read = t_drive;
+        let retention_s = ret[0].t_retain;
+
+        // --- compose the cycle ---------------------------------------
+        let t_sense = 60e-12;
+        // replica delay chain quantizes the sense window (Fig. 7a step)
+        let stages = ((t.t_wl + t_cell_read + t_sense) / TAU_STAGE).ceil() as usize + 2;
+        let t_ctrl = stages as f64 * TAU_STAGE;
+        let mux_penalty = if t.mux_gt1 { 40e-12 } else { 0.0 };
+        let t_read =
+            (t.t_dec + t.t_wl + t_ctrl.max(t_cell_read + t_sense) + mux_penalty) * GUARDBAND;
+        let t_write = (t.t_dec + t.t_wl + t_write_cell + 50e-12) * GUARDBAND;
+        let f_read = 1.0 / t_read;
+        let f_write = 1.0 / t_write;
+        let f_op = f_read.min(f_write);
+        let functional = discriminates && stored_one > sense_floor(t.vdd);
+        Ok(BankPerf {
+            f_read_hz: f_read,
+            f_write_hz: f_write,
+            f_op_hz: f_op,
+            bandwidth_bps: bandwidth(t.flavor, t.word_size, f_op),
+            retention_s,
+            leakage_w: t.leakage_w,
+            e_read_j: t.c_rbl * t.vdd * t.vdd * t.word_size as f64,
+            t_decoder_s: t.t_dec,
+            t_cell_read_s: t_cell_read,
+            stored_one_v: stored_one,
+            functional,
+        })
+    }
+}
+
+/// Full characterization: write + read + retention transients on the
+/// XLA artifacts, analytical periphery, delay-chain quantization.
+/// Runs one [`CharPlan`] with singleton batches; sweeps should prefer
+/// [`characterize_all`], which packs the same jobs across designs.
+pub fn characterize(tech: &Tech, rt: &Runtime, bank: &Bank) -> crate::Result<BankPerf> {
+    let mut plan = CharPlan::new(tech, bank);
+    let wj = plan.write_jobs();
+    if wj.is_empty() {
+        return plan.finish(&[], &[]);
+    }
+    let wr_pts: Vec<engines::WritePoint> = wj.iter().map(|j| j.pt.clone()).collect();
+    let wr = engines::write_op(rt, &wr_pts, wj[0].window_s)?;
+    plan.absorb_writes(&wr)?;
+    let rj = plan.read_jobs()?;
+    let rd_pts: Vec<engines::ReadPoint> = rj.iter().map(|j| j.pt.clone()).collect();
+    let rd = engines::read_op(rt, &rd_pts, rj[0].window_s)?;
+    let tj = plan.retention_jobs()?;
+    let ret_pts: Vec<engines::RetentionPoint> = tj.iter().map(|j| j.pt.clone()).collect();
+    let ret = engines::retention(rt, &ret_pts)?;
+    plan.finish(&rd, &ret)
+}
+
+/// Batch-first characterization of many designs: every plan's
+/// write/read/retention points are packed into shared padded artifact
+/// batches through [`coordinator`] executors ([`batch`]).
+///
+/// * Read batches are split by `pull_up` flavor inside the executor,
+///   so mixed-flavor design lists are fine — the `read_op` homogeneity
+///   `ensure` is a batcher invariant here, not a caller obligation.
+/// * Write/read points pack across designs that share a transient
+///   window (same-geometry sweeps, e.g. a write-VT retention axis);
+///   retention points *always* pack — the retention artifact has no
+///   per-batch window — so a sweep issues `ceil(points/batch)`
+///   retention executions instead of one per design.
+/// * For a singleton list the emitted artifact calls are exactly those
+///   of [`characterize`], so results bitwise-match the single-design
+///   path (`tests/integration.rs` asserts this per flavor).
+pub fn characterize_all(
+    tech: &Tech,
+    rt: &SharedRuntime,
+    banks: &[Bank],
+) -> crate::Result<Vec<BankPerf>> {
+    let mut plans: Vec<CharPlan> = banks.iter().map(|b| CharPlan::new(tech, b)).collect();
+
+    // ---- stage 1: write transients, packed across designs ------------
+    let mut wr_jobs: Vec<batch::WriteJob> = Vec::new();
+    let mut wr_span: Vec<usize> = Vec::with_capacity(plans.len());
+    for p in &plans {
+        let jobs = p.write_jobs();
+        wr_span.push(jobs.len());
+        wr_jobs.extend(jobs);
+    }
+    let wr_res = run_packed(wr_jobs, batch::write_key, |groups| {
+        coordinator::scope(batch::WriteExec::new(rt)?, |sub| sub.run_grouped(groups))
+    })?;
+    let mut off = 0;
+    for (p, &n) in plans.iter_mut().zip(&wr_span) {
+        p.absorb_writes(&wr_res[off..off + n])?;
+        off += n;
+    }
+
+    // ---- stage 2: read + retention, packed across designs ------------
+    let mut rd_jobs: Vec<batch::ReadJob> = Vec::new();
+    let mut rd_span: Vec<usize> = Vec::with_capacity(plans.len());
+    let mut ret_jobs: Vec<batch::RetentionJob> = Vec::new();
+    let mut ret_span: Vec<usize> = Vec::with_capacity(plans.len());
+    for p in &plans {
+        let jobs = p.read_jobs()?;
+        rd_span.push(jobs.len());
+        rd_jobs.extend(jobs);
+        let jobs = p.retention_jobs()?;
+        ret_span.push(jobs.len());
+        ret_jobs.extend(jobs);
+    }
+    let rd_res = run_packed(rd_jobs, batch::read_key, |groups| {
+        coordinator::scope(batch::ReadExec::new(rt)?, |sub| sub.run_grouped(groups))
+    })?;
+    let ret_res = run_packed(ret_jobs, |_| 0, |groups| {
+        coordinator::scope(batch::RetentionExec::new(rt)?, |sub| sub.run_grouped(groups))
+    })?;
+
+    // ---- finish -------------------------------------------------------
+    let (mut ro, mut to) = (0usize, 0usize);
+    let mut out = Vec::with_capacity(plans.len());
+    for ((p, &nr), &nt) in plans.iter().zip(&rd_span).zip(&ret_span) {
+        out.push(p.finish(&rd_res[ro..ro + nr], &ret_res[to..to + nt])?);
+        ro += nr;
+        to += nt;
+    }
+    Ok(out)
+}
+
+/// Partition `jobs` into their homogeneity groups, hand the groups to
+/// `run` (which submits them with group-boundary flushes — see
+/// [`crate::coordinator::Submitter::run_grouped`] — so no worker batch
+/// ever spans two groups), then restore the results to the original
+/// job order.  The artifact-call count is exactly
+/// `sum(ceil(group_len / cap))` over the key's groups.
+fn run_packed<J: Clone, R>(
+    jobs: Vec<J>,
+    key: impl FnMut(&J) -> u128,
+    run: impl FnOnce(Vec<Vec<J>>) -> crate::Result<Vec<R>>,
+) -> crate::Result<Vec<R>> {
+    let groups = batch::group_indices(&jobs, key);
+    let order: Vec<usize> = groups.iter().flatten().copied().collect();
+    let grouped: Vec<Vec<J>> = groups
+        .iter()
+        .map(|g| g.iter().map(|&i| jobs[i].clone()).collect())
+        .collect();
+    let res = run(grouped)?;
+    anyhow::ensure!(
+        res.len() == jobs.len(),
+        "packed run returned {} results for {} jobs",
+        res.len(),
+        jobs.len()
+    );
+    let mut out: Vec<Option<R>> = std::iter::repeat_with(|| None).take(jobs.len()).collect();
+    for (&slot, r) in order.iter().zip(res) {
+        out[slot] = Some(r);
+    }
+    Ok(out.into_iter().map(|r| r.expect("permutation covers every slot")).collect())
 }
 
 /// Logical-effort decoder + WL driver delay.
@@ -327,5 +601,85 @@ mod tests {
     fn decoder_delay_grows_with_rows() {
         let t = sg40();
         assert!(decoder_delay(&t, 256) > decoder_delay(&t, 16));
+    }
+
+    #[test]
+    fn sram_plan_emits_no_jobs_and_finishes_analytically() {
+        let t = sg40();
+        let bank = compile(&t, &Config::new(32, 32, CellFlavor::Sram6t)).unwrap();
+        let plan = CharPlan::new(&t, &bank);
+        assert!(plan.write_jobs().is_empty());
+        assert!(plan.read_jobs().unwrap().is_empty());
+        assert!(plan.retention_jobs().unwrap().is_empty());
+        let perf = plan.finish(&[], &[]).unwrap();
+        let a = analytical(&t, &bank);
+        assert_eq!(perf.f_op_hz.to_bits(), a.f_op_hz.to_bits());
+        assert_eq!(perf.leakage_w.to_bits(), a.leakage_w.to_bits());
+        assert!(perf.retention_s.is_infinite());
+        // transient results handed to an analytical plan are a bug
+        let bogus = engines::ReadResult { t_rise: 1e-9, t_fall: 1e-9, rbl_final: 0.0, sn_final: 0.0 };
+        assert!(plan.finish(&[bogus, bogus], &[]).is_err());
+    }
+
+    #[test]
+    fn transient_plan_stages_are_ordered_and_positional() {
+        let t = sg40();
+        let bank = compile(&t, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap();
+        let mut plan = CharPlan::new(&t, &bank);
+        // stage order is enforced: reads/retention need the write result
+        assert!(plan.read_jobs().is_err());
+        assert!(plan.retention_jobs().is_err());
+        assert!(plan.finish(&[], &[]).is_err());
+        let wj = plan.write_jobs();
+        assert_eq!(wj.len(), 1);
+        assert!(wj[0].pt.one && wj[0].pt.sn0 == 0.0);
+        assert!(wj[0].window_s >= 4e-9);
+        let wr = engines::WriteResult { sn_final: 0.62, t_wr: 1.5e-9, sn_peak: 0.7 };
+        assert!(plan.absorb_writes(&[wr, wr]).is_err(), "result count must match jobs");
+        plan.absorb_writes(&[wr]).unwrap();
+        // read jobs: stored-'0' probe first, then the written '1'
+        let rj = plan.read_jobs().unwrap();
+        assert_eq!(rj.len(), 2);
+        assert_eq!(rj[0].pt.sn0, STORED_ZERO);
+        assert!((rj[1].pt.sn0 - 0.62).abs() < 1e-12);
+        assert!(rj.iter().all(|j| j.pt.pull_up), "NP flavor reads pull-up");
+        assert_eq!(rj[0].window_s.to_bits(), rj[1].window_s.to_bits());
+        // retention decays from the written level
+        let tj = plan.retention_jobs().unwrap();
+        assert_eq!(tj.len(), 1);
+        assert!((tj[0].pt.v0 - 0.62).abs() < 1e-12);
+        // finish folds synthetic transients into a functional BankPerf
+        let rd = [
+            engines::ReadResult { t_rise: 1.0e-9, t_fall: 9e9, rbl_final: 0.6, sn_final: 0.05 },
+            engines::ReadResult { t_rise: 2.0e-9, t_fall: 9e9, rbl_final: 0.1, sn_final: 0.62 },
+        ];
+        let ret = [engines::RetentionResult { t_retain: 3e-4, sn_final: 0.31 }];
+        assert!(plan.finish(&rd[..1], &ret).is_err(), "read results are positional");
+        let perf = plan.finish(&rd, &ret).unwrap();
+        assert!(perf.functional, "2x margin discriminates: {perf:?}");
+        assert_eq!(perf.retention_s, 3e-4);
+        assert_eq!(perf.stored_one_v, 0.62);
+        assert_eq!(perf.t_cell_read_s, 1.0e-9);
+        assert!(perf.f_op_hz > 0.0 && perf.f_op_hz.is_finite());
+        // no discrimination margin -> non-functional
+        let rd_bad = [
+            engines::ReadResult { t_rise: 1.0e-9, t_fall: 9e9, rbl_final: 0.6, sn_final: 0.05 },
+            engines::ReadResult { t_rise: 1.1e-9, t_fall: 9e9, rbl_final: 0.5, sn_final: 0.62 },
+        ];
+        assert!(!plan.finish(&rd_bad, &ret).unwrap().functional);
+    }
+
+    #[test]
+    fn pull_down_flavors_plan_pull_down_reads() {
+        let t = sg40();
+        for flavor in [CellFlavor::GcSiSiNn, CellFlavor::GcOsOs] {
+            let bank = compile(&t, &Config::new(32, 32, flavor)).unwrap();
+            let mut plan = CharPlan::new(&t, &bank);
+            plan.absorb_writes(&[engines::WriteResult { sn_final: 0.6, t_wr: 1e-9, sn_peak: 0.65 }])
+                .unwrap();
+            let rj = plan.read_jobs().unwrap();
+            assert!(rj.iter().all(|j| !j.pt.pull_up), "{flavor:?} reads pull-down");
+            assert!(rj.iter().all(|j| j.pt.sn_unsel == 0.0));
+        }
     }
 }

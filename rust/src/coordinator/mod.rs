@@ -7,12 +7,32 @@
 //! logic is generic over the executor so its invariants (no job lost,
 //! results map back to submitters in order, batches never exceed the
 //! cap) are property-tested with a mock.
+//!
+//! Two spawn modes:
+//! * [`Coordinator::spawn`] — detached worker for `'static` executors
+//!   (owns its runtime handle; lives as long as the coordinator);
+//! * [`scope`] — scoped worker for executors that *borrow* (the
+//!   [`crate::characterize::characterize_all`] executors borrow the
+//!   shared runtime), joined when the closure returns.
+//!
+//! Failure semantics: an executor `Err` is recoverable — every
+//! submitter of the failed batch receives the executor's own error and
+//! the worker keeps serving.  An executor *panic* is fatal: the panic
+//! payload is recorded as the worker's epitaph, in-flight submitters
+//! get it as an error, and later [`Submitter::submit`] calls fail fast
+//! with the same underlying cause instead of handing out a receiver
+//! that can only ever report a bare "worker died".
 
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 
 /// A batch executor: runs a slice of jobs, returns one result per job
-/// in order.  The PJRT-backed implementation wraps runtime::engines.
+/// in order.  The PJRT-backed implementations wrap runtime::engines
+/// (see [`crate::characterize::batch`]); an executor may subdivide the
+/// handed batch internally (e.g. by transient window or read flavor)
+/// as long as results come back positionally.
 pub trait BatchExec<J, R>: Send {
     fn run(&mut self, jobs: &[J]) -> crate::Result<Vec<R>>;
     fn max_batch(&self) -> usize;
@@ -24,63 +44,41 @@ enum Msg<J, R> {
     Stop,
 }
 
-/// Handle for submitting jobs.
-pub struct Coordinator<J, R> {
+/// Why the worker stopped serving (executor panic), shared so late
+/// submitters can report the original failure.
+type Epitaph = Arc<Mutex<Option<String>>>;
+
+/// Clonable submission handle.  `mpsc::Sender` is `Send` but not
+/// `Sync`, so concurrent submitters (DSE sweep workers) each take
+/// their own clone via [`Coordinator::handle`].
+pub struct Submitter<J, R> {
     tx: mpsc::Sender<Msg<J, R>>,
-    worker: Option<thread::JoinHandle<()>>,
+    epitaph: Epitaph,
 }
 
-impl<J: Send + 'static, R: Send + 'static> Coordinator<J, R> {
-    /// Spawn the worker owning the executor.
-    pub fn spawn<E: BatchExec<J, R> + 'static>(mut exec: E) -> Coordinator<J, R> {
-        let (tx, rx) = mpsc::channel::<Msg<J, R>>();
-        let worker = thread::spawn(move || {
-            let cap = exec.max_batch().max(1);
-            let mut jobs: Vec<J> = Vec::new();
-            let mut replies: Vec<mpsc::Sender<crate::Result<R>>> = Vec::new();
-            let flush = |jobs: &mut Vec<J>, replies: &mut Vec<mpsc::Sender<crate::Result<R>>>, exec: &mut E| {
-                if jobs.is_empty() {
-                    return;
-                }
-                match exec.run(jobs) {
-                    Ok(results) => {
-                        for (r, tx) in results.into_iter().zip(replies.drain(..)) {
-                            let _ = tx.send(Ok(r));
-                        }
-                    }
-                    Err(e) => {
-                        for tx in replies.drain(..) {
-                            let _ = tx.send(Err(anyhow::anyhow!("batch failed: {e}")));
-                        }
-                    }
-                }
-                jobs.clear();
-            };
-            loop {
-                match rx.recv() {
-                    Ok(Msg::Job(j, reply)) => {
-                        jobs.push(j);
-                        replies.push(reply);
-                        if jobs.len() >= cap {
-                            flush(&mut jobs, &mut replies, &mut exec);
-                        }
-                    }
-                    Ok(Msg::Flush) => flush(&mut jobs, &mut replies, &mut exec),
-                    Ok(Msg::Stop) | Err(_) => {
-                        flush(&mut jobs, &mut replies, &mut exec);
-                        break;
-                    }
-                }
-            }
-        });
-        Coordinator { tx, worker: Some(worker) }
+impl<J, R> Clone for Submitter<J, R> {
+    fn clone(&self) -> Self {
+        Submitter { tx: self.tx.clone(), epitaph: self.epitaph.clone() }
+    }
+}
+
+impl<J: Send, R: Send> Submitter<J, R> {
+    fn death_error(&self, context: &str) -> anyhow::Error {
+        match self.epitaph.lock().unwrap_or_else(|p| p.into_inner()).clone() {
+            Some(why) => anyhow::anyhow!("{context}: {why}"),
+            None => anyhow::anyhow!("{context}: worker stopped"),
+        }
     }
 
-    /// Submit a job; returns a receiver for its result.
-    pub fn submit(&self, job: J) -> mpsc::Receiver<crate::Result<R>> {
+    /// Submit a job; returns a receiver for its result.  Fails fast —
+    /// carrying the worker's recorded failure cause — once the worker
+    /// is gone, instead of returning a forever-dead receiver.
+    pub fn submit(&self, job: J) -> crate::Result<mpsc::Receiver<crate::Result<R>>> {
         let (rtx, rrx) = mpsc::channel();
-        let _ = self.tx.send(Msg::Job(job, rtx));
-        rrx
+        self.tx
+            .send(Msg::Job(job, rtx))
+            .map_err(|_| self.death_error("coordinator worker is gone"))?;
+        Ok(rrx)
     }
 
     /// Force the pending partial batch to execute.
@@ -90,19 +88,188 @@ impl<J: Send + 'static, R: Send + 'static> Coordinator<J, R> {
 
     /// Submit many jobs and wait for all results (flushes).
     pub fn run_all(&self, jobs: Vec<J>) -> crate::Result<Vec<R>> {
-        let rxs: Vec<_> = jobs.into_iter().map(|j| self.submit(j)).collect();
-        self.flush();
+        self.run_grouped(std::iter::once(jobs))
+    }
+
+    /// Submit jobs group by group with a flush at every group boundary,
+    /// then wait for all results (in submission order).  Boundary
+    /// flushes keep a worker batch from spanning two groups — jobs of
+    /// different groups can never share an artifact execution anyway
+    /// (different window/waveform), so this costs nothing and makes the
+    /// execution count exactly `sum(ceil(group_len / cap))`.
+    pub fn run_grouped(
+        &self,
+        groups: impl IntoIterator<Item = Vec<J>>,
+    ) -> crate::Result<Vec<R>> {
+        let mut rxs = Vec::new();
+        for group in groups {
+            for j in group {
+                rxs.push(self.submit(j)?);
+            }
+            self.flush();
+        }
         rxs.into_iter()
-            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("worker died"))?)
+            .map(|rx| rx.recv().map_err(|_| self.death_error("coordinator worker died"))?)
             .collect()
+    }
+}
+
+/// Handle owning a detached worker thread (joined on drop).
+pub struct Coordinator<J, R> {
+    sub: Submitter<J, R>,
+    worker: Option<thread::JoinHandle<()>>,
+}
+
+impl<J: Send + 'static, R: Send + 'static> Coordinator<J, R> {
+    /// Spawn the worker owning the executor.
+    pub fn spawn<E: BatchExec<J, R> + 'static>(exec: E) -> Coordinator<J, R> {
+        let (tx, rx) = mpsc::channel::<Msg<J, R>>();
+        let epitaph: Epitaph = Arc::new(Mutex::new(None));
+        let ep = epitaph.clone();
+        let worker = thread::spawn(move || worker_loop(exec, rx, ep));
+        Coordinator { sub: Submitter { tx, epitaph }, worker: Some(worker) }
+    }
+
+    /// A clonable [`Submitter`] for concurrent submission threads.
+    pub fn handle(&self) -> Submitter<J, R> {
+        self.sub.clone()
+    }
+
+    /// See [`Submitter::submit`].
+    pub fn submit(&self, job: J) -> crate::Result<mpsc::Receiver<crate::Result<R>>> {
+        self.sub.submit(job)
+    }
+
+    /// See [`Submitter::flush`].
+    pub fn flush(&self) {
+        self.sub.flush()
+    }
+
+    /// See [`Submitter::run_all`].
+    pub fn run_all(&self, jobs: Vec<J>) -> crate::Result<Vec<R>> {
+        self.sub.run_all(jobs)
     }
 }
 
 impl<J, R> Drop for Coordinator<J, R> {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Stop);
+        let _ = self.sub.tx.send(Msg::Stop);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
+        }
+    }
+}
+
+/// Run `f` against a coordinator whose executor may borrow local state
+/// (no `'static` bound): the worker runs on a scoped thread and is
+/// flushed, stopped and joined when `f` returns — or panics (a guard
+/// sends the stop message on unwind so the scope join cannot deadlock).
+pub fn scope<J: Send, R: Send, E: BatchExec<J, R>, T>(
+    exec: E,
+    f: impl FnOnce(&Submitter<J, R>) -> T,
+) -> T {
+    let (tx, rx) = mpsc::channel::<Msg<J, R>>();
+    let epitaph: Epitaph = Arc::new(Mutex::new(None));
+    let sub = Submitter { tx, epitaph: epitaph.clone() };
+    thread::scope(|s| {
+        s.spawn(move || worker_loop(exec, rx, epitaph));
+        struct StopGuard<J, R>(mpsc::Sender<Msg<J, R>>);
+        impl<J, R> Drop for StopGuard<J, R> {
+            fn drop(&mut self) {
+                let _ = self.0.send(Msg::Stop);
+            }
+        }
+        let _guard = StopGuard(sub.tx.clone());
+        f(&sub)
+    })
+}
+
+fn worker_loop<J, R, E: BatchExec<J, R>>(
+    mut exec: E,
+    rx: mpsc::Receiver<Msg<J, R>>,
+    epitaph: Epitaph,
+) {
+    let cap = exec.max_batch().max(1);
+    let mut jobs: Vec<J> = Vec::new();
+    let mut replies: Vec<mpsc::Sender<crate::Result<R>>> = Vec::new();
+    loop {
+        match rx.recv() {
+            Ok(Msg::Job(j, reply)) => {
+                jobs.push(j);
+                replies.push(reply);
+                if jobs.len() >= cap
+                    && flush_batch(&mut exec, &mut jobs, &mut replies, &epitaph).is_err()
+                {
+                    return;
+                }
+            }
+            Ok(Msg::Flush) => {
+                if flush_batch(&mut exec, &mut jobs, &mut replies, &epitaph).is_err() {
+                    return;
+                }
+            }
+            Ok(Msg::Stop) | Err(_) => {
+                let _ = flush_batch(&mut exec, &mut jobs, &mut replies, &epitaph);
+                return;
+            }
+        }
+    }
+}
+
+/// Run the pending batch.  `Err(())` means the executor panicked and
+/// the worker must stop (its state may be inconsistent); the panic
+/// payload is recorded as the epitaph first so every later submitter
+/// sees the underlying failure, not a bare "worker died".
+fn flush_batch<J, R, E: BatchExec<J, R>>(
+    exec: &mut E,
+    jobs: &mut Vec<J>,
+    replies: &mut Vec<mpsc::Sender<crate::Result<R>>>,
+    epitaph: &Epitaph,
+) -> Result<(), ()> {
+    if jobs.is_empty() {
+        return Ok(());
+    }
+    let n = jobs.len();
+    match std::panic::catch_unwind(AssertUnwindSafe(|| exec.run(jobs))) {
+        Ok(Ok(results)) if results.len() == n => {
+            for (r, tx) in results.into_iter().zip(replies.drain(..)) {
+                let _ = tx.send(Ok(r));
+            }
+            jobs.clear();
+            Ok(())
+        }
+        Ok(Ok(results)) => {
+            // a miscounting executor loses the job<->result bijection;
+            // fail the whole batch rather than misroute results
+            for tx in replies.drain(..) {
+                let _ = tx.send(Err(anyhow::anyhow!(
+                    "executor returned {} results for {n} jobs",
+                    results.len()
+                )));
+            }
+            jobs.clear();
+            Ok(())
+        }
+        Ok(Err(e)) => {
+            for tx in replies.drain(..) {
+                let _ = tx.send(Err(anyhow::anyhow!("batch of {n} failed: {e:#}")));
+            }
+            jobs.clear();
+            Ok(())
+        }
+        Err(payload) => {
+            let what = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            let msg = format!("executor panicked on a batch of {n}: {what}");
+            *epitaph.lock().unwrap_or_else(|p| p.into_inner()) = Some(msg.clone());
+            for tx in replies.drain(..) {
+                let _ = tx.send(Err(anyhow::anyhow!("{msg}")));
+            }
+            jobs.clear();
+            Err(())
         }
     }
 }
@@ -152,6 +319,80 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_submitters_across_flushes_get_bijective_results() {
+        // property: concurrent submitters sharing one worker, each
+        // submitting multiple chunks (each chunk forces a flush), all
+        // get exactly their own results back regardless of how their
+        // jobs interleave into shared batches
+        check("interleaved bijection", 8, |rng: &mut Rng| {
+            let cap = 1 + rng.below(16);
+            let nthreads = 2 + rng.below(4);
+            let chunks = 1 + rng.below(6);
+            let batches = Arc::new(AtomicUsize::new(0));
+            let max_seen = Arc::new(AtomicUsize::new(0));
+            let c = Coordinator::spawn(Mock { cap, batches, max_seen: max_seen.clone() });
+            std::thread::scope(|s| {
+                for t in 0..nthreads {
+                    let sub = c.handle();
+                    s.spawn(move || {
+                        let mut next = t as u64 * 1_000_000;
+                        for k in 0..chunks {
+                            let len = 1 + ((t + k) % 9) as u64;
+                            let jobs: Vec<u64> = (next..next + len).collect();
+                            next += len;
+                            let res = sub.run_all(jobs.clone()).unwrap();
+                            let want: Vec<u64> = jobs.iter().map(|j| j * 10).collect();
+                            assert_eq!(res, want, "thread {t} chunk {k}");
+                        }
+                    });
+                }
+            });
+            assert!(max_seen.load(Ordering::SeqCst) <= cap);
+        });
+    }
+
+    /// Mock standing in for the window-splitting engine executors: one
+    /// "artifact call" per distinct key (job >= 1000) in a handed batch.
+    struct KeyedMock {
+        cap: usize,
+        calls: Arc<AtomicUsize>,
+    }
+
+    impl BatchExec<u64, u64> for KeyedMock {
+        fn run(&mut self, jobs: &[u64]) -> crate::Result<Vec<u64>> {
+            let distinct: std::collections::HashSet<bool> =
+                jobs.iter().map(|&j| j >= 1000).collect();
+            self.calls.fetch_add(distinct.len(), Ordering::SeqCst);
+            Ok(jobs.iter().map(|j| j * 10).collect())
+        }
+        fn max_batch(&self) -> usize {
+            self.cap
+        }
+    }
+
+    #[test]
+    fn grouped_submission_pays_exactly_ceil_per_group() {
+        // cap-straddle regression: group A = 1 job, group B = 256 jobs,
+        // cap = 256.  Plain run_all batches [A + 255 B] + [1 B], so a
+        // key-splitting executor pays 3 calls; run_grouped's boundary
+        // flush isolates A and the cost is ceil(1/256) + ceil(256/256)
+        // = 2 — the bound characterize_all documents.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Coordinator::spawn(KeyedMock { cap: 256, calls: calls.clone() });
+        let a: Vec<u64> = vec![1];
+        let b: Vec<u64> = (1000..1256).collect();
+        let all: Vec<u64> = a.iter().chain(&b).copied().collect();
+        let res = c.run_all(all.clone()).unwrap();
+        assert_eq!(res, all.iter().map(|j| j * 10).collect::<Vec<_>>());
+        assert_eq!(calls.load(Ordering::SeqCst), 3, "un-grouped submission splits the big group");
+        calls.store(0, Ordering::SeqCst);
+        let res = c.run_grouped(vec![a.clone(), b.clone()]).unwrap();
+        let want: Vec<u64> = all.iter().map(|j| j * 10).collect();
+        assert_eq!(res, want);
+        assert_eq!(calls.load(Ordering::SeqCst), 2, "boundary flushes keep groups whole");
+    }
+
+    #[test]
     fn partial_batches_flush() {
         let batches = Arc::new(AtomicUsize::new(0));
         let max_seen = Arc::new(AtomicUsize::new(0));
@@ -175,7 +416,70 @@ mod tests {
     fn executor_failure_propagates_to_every_submitter() {
         let c = Coordinator::spawn(FailingMock);
         let r = c.run_all(vec![1, 2, 3]);
-        assert!(r.is_err());
+        let e = format!("{:#}", r.unwrap_err());
+        assert!(e.contains("injected failure"), "original error lost: {e}");
+        // executor errors are recoverable: the worker keeps serving
+        let r2 = c.run_all(vec![4]);
+        assert!(format!("{:#}", r2.unwrap_err()).contains("injected failure"));
+    }
+
+    struct PanickingMock;
+    impl BatchExec<u64, u64> for PanickingMock {
+        fn run(&mut self, _jobs: &[u64]) -> crate::Result<Vec<u64>> {
+            panic!("executor blew up on purpose")
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+    }
+
+    #[test]
+    fn panic_is_preserved_and_submit_after_death_errors() {
+        let c = Coordinator::spawn(PanickingMock);
+        let err = format!("{:#}", c.run_all(vec![1, 2]).unwrap_err());
+        assert!(err.contains("blew up on purpose"), "panic cause lost: {err}");
+        // the worker is dead now: submit must fail fast with the cause,
+        // not hand out a receiver that never resolves
+        let sub = c.handle();
+        // allow the worker thread to exit so the channel closes
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            match sub.submit(7) {
+                Err(e) => {
+                    let e = format!("{e:#}");
+                    assert!(e.contains("blew up on purpose"), "late submit lost the cause: {e}");
+                    break;
+                }
+                Ok(rx) => {
+                    // raced the worker's exit; the receiver must still
+                    // resolve to the recorded failure, not hang
+                    let got = rx.recv();
+                    assert!(
+                        got.map(|r| r.is_err()).unwrap_or(true),
+                        "job accepted after executor panic"
+                    );
+                }
+            }
+            assert!(std::time::Instant::now() < deadline, "worker never died");
+            std::thread::yield_now();
+        }
+    }
+
+    struct MiscountingMock;
+    impl BatchExec<u64, u64> for MiscountingMock {
+        fn run(&mut self, jobs: &[u64]) -> crate::Result<Vec<u64>> {
+            Ok(vec![0; jobs.len() / 2])
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+    }
+
+    #[test]
+    fn result_count_mismatch_fails_the_batch_instead_of_misrouting() {
+        let c = Coordinator::spawn(MiscountingMock);
+        let err = format!("{:#}", c.run_all(vec![1, 2, 3, 4]).unwrap_err());
+        assert!(err.contains("2 results for 4 jobs"), "{err}");
     }
 
     #[test]
@@ -183,8 +487,30 @@ mod tests {
         let batches = Arc::new(AtomicUsize::new(0));
         let max_seen = Arc::new(AtomicUsize::new(0));
         let c = Coordinator::spawn(Mock { cap: 10, batches: batches.clone(), max_seen });
-        let rx = c.submit(7);
+        let rx = c.submit(7).unwrap();
         drop(c);
         assert_eq!(rx.recv().unwrap().unwrap(), 70);
+    }
+
+    #[test]
+    fn scoped_coordinator_borrows_its_executor_state() {
+        // an executor borrowing stack-local state (what the
+        // characterize_all executors do with the shared runtime)
+        let offsets: Vec<u64> = vec![100, 200];
+        struct Borrowing<'a> {
+            offsets: &'a [u64],
+        }
+        impl BatchExec<u64, u64> for Borrowing<'_> {
+            fn run(&mut self, jobs: &[u64]) -> crate::Result<Vec<u64>> {
+                Ok(jobs.iter().map(|j| j + self.offsets[0]).collect())
+            }
+            fn max_batch(&self) -> usize {
+                4
+            }
+        }
+        let out = scope(Borrowing { offsets: &offsets }, |sub| {
+            sub.run_all(vec![1, 2, 3, 4, 5]).unwrap()
+        });
+        assert_eq!(out, vec![101, 102, 103, 104, 105]);
     }
 }

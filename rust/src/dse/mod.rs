@@ -2,8 +2,10 @@
 //! evaluation against workload demands (Fig. 10), Pareto fronts, and
 //! the future-work gradient-descent co-optimizer (§VI).
 
-use crate::characterize::BankPerf;
-use crate::compiler::{CellFlavor, Config, ConfigKey};
+use crate::characterize::{self, BankPerf};
+use crate::compiler::{compile, Bank, CellFlavor, Config, ConfigKey};
+use crate::runtime::SharedRuntime;
+use crate::tech::Tech;
 use crate::workloads::Demand;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -51,6 +53,36 @@ impl EvalCache {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
+    /// Cache lookup without evaluation; counts a hit when present.
+    /// The read side of the batch-first sweep, which evaluates its
+    /// misses out-of-band (see [`evaluate_all_batched_cached`]).
+    pub fn peek(&self, key: &ConfigKey) -> Option<Evaluated> {
+        let hit = self.lookup(key);
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Lookup that leaves `stats()` untouched — for bookkeeping passes
+    /// that re-read entries they just inserted (a cold batched sweep
+    /// must report 0 hits, not one per resolved config).
+    fn lookup(&self, key: &ConfigKey) -> Option<Evaluated> {
+        self.map.lock().unwrap_or_else(|p| p.into_inner()).get(key).cloned()
+    }
+
+    /// Record an externally produced evaluation; counts a miss (an
+    /// underlying pipeline invocation was paid).  First write wins,
+    /// matching [`Self::get_or_eval`]'s concurrent-miss semantics.
+    pub fn insert(&self, e: Evaluated) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .entry(e.config.key())
+            .or_insert(e);
+    }
+
     /// Return the memoized evaluation of `cfg`, running `eval` on miss.
     /// `eval` executes outside the lock so concurrent misses on
     /// *different* configs evaluate in parallel.
@@ -89,14 +121,20 @@ pub fn evaluate_all<F>(configs: &[Config], workers: usize, eval: F) -> crate::Re
 where
     F: Fn(&Config) -> crate::Result<Evaluated> + Sync,
 {
-    let n = configs.len();
+    par_map(configs, workers, |c| eval(c)).into_iter().collect()
+}
+
+/// Scoped work-stealing parallel map; results keep input order.  The
+/// fan-out primitive under [`evaluate_all`] and the parallel compile
+/// stage of [`evaluate_all_batched_cached`].
+fn par_map<T: Sync, R: Send>(items: &[T], workers: usize, f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    let n = items.len();
     if n == 0 {
-        return Ok(Vec::new());
+        return Vec::new();
     }
     let workers = workers.clamp(1, n);
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<crate::Result<Evaluated>>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
@@ -104,7 +142,7 @@ where
                 if i >= n {
                     break;
                 }
-                let r = eval(&configs[i]);
+                let r = f(&items[i]);
                 *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(r);
             });
         }
@@ -133,6 +171,68 @@ where
     F: Fn(&Config) -> crate::Result<Evaluated> + Sync,
 {
     evaluate_all(configs, workers, |cfg| cache.get_or_eval(cfg, &eval))
+}
+
+/// Batch-first transient sweep: compile the distinct cache misses in
+/// parallel (pure geometry/netlist work — no runtime contention), then
+/// characterize them all in one
+/// [`characterize_all`](crate::characterize::characterize_all) pass so
+/// their transient points pack into shared padded artifact batches.
+/// Sweep workers never touch the `SharedRuntime` mutex themselves;
+/// only the coordinator executors do, once per batch.  Results
+/// preserve input order; repeated configs cost one evaluation.
+pub fn evaluate_all_batched_cached(
+    tech: &Tech,
+    rt: &SharedRuntime,
+    configs: &[Config],
+    workers: usize,
+    cache: &EvalCache,
+) -> crate::Result<Vec<Evaluated>> {
+    // distinct configs not yet cached, in first-appearance order
+    let mut seen: std::collections::HashSet<ConfigKey> = std::collections::HashSet::new();
+    let mut miss_cfgs: Vec<Config> = Vec::new();
+    for cfg in configs {
+        let key = cfg.key();
+        if !seen.insert(key.clone()) {
+            continue;
+        }
+        if cache.peek(&key).is_none() {
+            miss_cfgs.push(cfg.clone());
+        }
+    }
+    let banks: Vec<Bank> = par_map(&miss_cfgs, workers, |cfg| compile(tech, cfg))
+        .into_iter()
+        .collect::<crate::Result<Vec<_>>>()?;
+    let perfs = characterize::characterize_all(tech, rt, &banks)?;
+    for (bank, perf) in banks.iter().zip(perfs) {
+        cache.insert(Evaluated {
+            config: bank.config.clone(),
+            perf,
+            area_um2: bank.layout.total_area_um2(),
+        });
+    }
+    // order-preserving resolution: every key is cached now (uncounted
+    // lookup — these reads are bookkeeping, not cache hits)
+    configs
+        .iter()
+        .map(|cfg| {
+            cache
+                .lookup(&cfg.key())
+                .ok_or_else(|| anyhow::anyhow!("config missing from cache after batch evaluation"))
+        })
+        .collect()
+}
+
+/// [`evaluate_all_batched_cached`] with a throwaway cache (the
+/// batch-first replacement for a plain [`evaluate_all`] over a
+/// transient-backed closure).
+pub fn evaluate_all_batched(
+    tech: &Tech,
+    rt: &SharedRuntime,
+    configs: &[Config],
+    workers: usize,
+) -> crate::Result<Vec<Evaluated>> {
+    evaluate_all_batched_cached(tech, rt, configs, workers, &EvalCache::new())
 }
 
 /// Shmoo verdict for (config, demand).
@@ -235,32 +335,16 @@ pub fn optimize<F>(
 where
     F: FnMut(&Config) -> crate::Result<Evaluated>,
 {
-    let sizes = [16usize, 32, 64, 96, 128];
-    let vts: Vec<Option<f64>> = vec![None, Some(0.38), Some(0.45), Some(0.52), Some(0.60)];
     let mut si = 1usize;
     let mut vi = 0usize;
-    let mk = |si: usize, vi: usize| {
-        let mut c = Config::new(sizes[si], sizes[si], flavor);
-        c.write_vt = vts[vi];
-        c
-    };
     let cache = EvalCache::new();
-    let mut best = cache.get_or_eval(&mk(si, vi), &mut eval)?;
+    let mut best = cache.get_or_eval(&opt_config(flavor, si, vi), &mut eval)?;
     let mut best_cost = cost(weights, &best);
     // coordinate descent until no single-step move improves
     loop {
         let mut improved = false;
-        let moves: Vec<(usize, usize)> = [
-            (si.wrapping_sub(1), vi),
-            (si + 1, vi),
-            (si, vi.wrapping_sub(1)),
-            (si, vi + 1),
-        ]
-        .into_iter()
-        .filter(|&(a, b)| a < sizes.len() && b < vts.len())
-        .collect();
-        for (a, b) in moves {
-            let e = cache.get_or_eval(&mk(a, b), &mut eval)?;
+        for (a, b) in opt_moves(si, vi) {
+            let e = cache.get_or_eval(&opt_config(flavor, a, b), &mut eval)?;
             let c = cost(weights, &e);
             if c < best_cost {
                 best_cost = c;
@@ -274,6 +358,84 @@ where
         // termination: each accepted move strictly decreases cost and
         // the memoized 5x5 grid bounds distinct evaluations at 25, so
         // no separate runaway cap is needed
+        if !improved {
+            break;
+        }
+    }
+    anyhow::ensure!(best_cost.is_finite(), "no feasible configuration found");
+    Ok((best, cache.stats().1))
+}
+
+/// The co-optimizer's search grid: square bank sizes x write-VT
+/// overrides.  Shared by [`optimize`] and [`optimize_batched`] so the
+/// two walks cannot drift apart.
+const OPT_SIZES: [usize; 5] = [16, 32, 64, 96, 128];
+const OPT_VTS: [Option<f64>; 5] = [None, Some(0.38), Some(0.45), Some(0.52), Some(0.60)];
+
+/// Grid point -> Config (shared by both optimizers).
+fn opt_config(flavor: CellFlavor, si: usize, vi: usize) -> Config {
+    let mut c = Config::new(OPT_SIZES[si], OPT_SIZES[si], flavor);
+    c.write_vt = OPT_VTS[vi];
+    c
+}
+
+/// In-bounds single-step neighbor moves in the order both optimizers
+/// probe them (the first-improving rule makes this order part of the
+/// walk's identity).
+fn opt_moves(si: usize, vi: usize) -> Vec<(usize, usize)> {
+    [
+        (si.wrapping_sub(1), vi),
+        (si + 1, vi),
+        (si, vi.wrapping_sub(1)),
+        (si, vi + 1),
+    ]
+    .into_iter()
+    .filter(|&(a, b)| a < OPT_SIZES.len() && b < OPT_VTS.len())
+    .collect()
+}
+
+/// [`optimize`] with batch-first transient evaluation: each
+/// coordinate-descent iteration evaluates *all* candidate moves in one
+/// [`evaluate_all_batched_cached`] pass (their transient points share
+/// artifact batches — in particular one retention execution per
+/// iteration instead of one per neighbor), then applies the same
+/// first-improving-move rule as [`optimize`], so the walk itself is
+/// identical.  `evals` counts underlying pipeline invocations (cache
+/// misses); batching may prefetch a neighbor the serial walk would
+/// have skipped after an early improvement — that prefetch is the
+/// batching tradeoff, and it lands in the cache for later iterations.
+pub fn optimize_batched(
+    tech: &Tech,
+    rt: &SharedRuntime,
+    flavor: CellFlavor,
+    weights: &CostWeights,
+) -> crate::Result<(Evaluated, usize)> {
+    let mut si = 1usize;
+    let mut vi = 0usize;
+    let cache = EvalCache::new();
+    let workers = default_workers();
+    let eval_batch =
+        |cfgs: &[Config]| evaluate_all_batched_cached(tech, rt, cfgs, workers, &cache);
+    let mut best = eval_batch(&[opt_config(flavor, si, vi)])?.remove(0);
+    let mut best_cost = cost(weights, &best);
+    loop {
+        let moves = opt_moves(si, vi);
+        let cfgs: Vec<Config> = moves.iter().map(|&(a, b)| opt_config(flavor, a, b)).collect();
+        let evs = eval_batch(&cfgs)?;
+        let mut improved = false;
+        for ((a, b), e) in moves.into_iter().zip(evs) {
+            let c = cost(weights, &e);
+            if c < best_cost {
+                best_cost = c;
+                best = e;
+                si = a;
+                vi = b;
+                improved = true;
+                break;
+            }
+        }
+        // termination matches `optimize`: each accepted move strictly
+        // decreases cost and the memoized 5x5 grid bounds evaluations
         if !improved {
             break;
         }
@@ -424,6 +586,27 @@ mod tests {
             Ok(fake(1e9, 1e-3, 1.0))
         });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn cache_peek_and_insert_back_the_batched_sweep() {
+        let cache = EvalCache::new();
+        let cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
+        assert!(cache.peek(&cfg.key()).is_none());
+        let mut e = fake(1e9, 1e-3, 42.0);
+        e.config = cfg.clone();
+        cache.insert(e);
+        let hit = cache.peek(&cfg.key()).expect("inserted evaluation is visible");
+        assert_eq!(hit.area_um2, 42.0);
+        // first write wins (concurrent-miss semantics of get_or_eval)
+        let mut e2 = fake(2e9, 1e-3, 99.0);
+        e2.config = cfg.clone();
+        cache.insert(e2);
+        assert_eq!(cache.peek(&cfg.key()).unwrap().area_um2, 42.0);
+        assert_eq!(cache.len(), 1);
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 2, "inserts count as paid evaluations");
+        assert!(hits >= 2);
     }
 
     #[test]

@@ -23,7 +23,10 @@
 //! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`.
 //! * [`coordinator`] — batched DSE job execution over the runtime.
 //! * [`compiler`] — the GCRAM bank compiler (the paper's contribution).
-//! * [`characterize`] — area/delay/power/retention characterization.
+//! * [`characterize`] — area/delay/power/retention characterization,
+//!   batch-first: `CharPlan` plan/finish decomposition plus
+//!   `characterize_all`, which packs many designs' transient points
+//!   into shared padded artifact batches through the coordinator.
 //! * [`workloads`] — GainSight-like AI workload profiler (Table I).
 //! * [`dse`] — sweeps, shmoo plots, Pareto fronts, co-optimization.
 //! * [`report`] — table/CSV renderers for the paper's figures.

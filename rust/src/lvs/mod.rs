@@ -11,6 +11,7 @@
 //!   layers themselves (OS);
 //! * net names come from the top cell's pin shapes.
 
+use crate::drc::Grid;
 use crate::layout::{Pin, Rect};
 use crate::netlist::{Circuit, Device};
 use crate::tech::{LayerRole, Tech};
@@ -71,15 +72,23 @@ pub fn extract(tech: &Tech, rects: &[Rect], pins: &[Pin], name: &str) -> crate::
     let via2 = tech.has_role(LayerRole::Via2).then(|| l(LayerRole::Via2));
     let nwell = tech.has_role(LayerRole::Nwell).then(|| l(LayerRole::Nwell));
 
+    // spatial hash over the raw rects (shared drc::Grid): gate-crossing
+    // and nwell lookups query a strip's neighborhood instead of
+    // rescanning the full rect list per device strip — the former
+    // quadratic term at array-scale extraction
+    let rect_grid = Grid::build(rects, 0);
+    let mut rcands: Vec<usize> = Vec::new();
+
     // --- split device strips at gate crossings -------------------------
     let mut pieces: Vec<Rect> = Vec::new();
     let mut devices: Vec<(Rect, Rect, bool)> = Vec::new(); // (strip, gate, is_os)
 
-    let gates_for = |strip: &Rect, gate_layer: usize| -> Vec<Rect> {
-        let mut g: Vec<Rect> = rects
+    let gates_for = |strip: &Rect, gate_layer: usize, cands: &mut Vec<usize>| -> Vec<Rect> {
+        rect_grid.query_into(strip, cands);
+        let mut g: Vec<Rect> = cands
             .iter()
+            .map(|&k| rects[k])
             .filter(|r| r.layer == gate_layer && r.overlaps(strip) && r.h() > strip.h())
-            .copied()
             .collect();
         g.sort_by_key(|r| r.x0);
         g
@@ -88,7 +97,7 @@ pub fn extract(tech: &Tech, rects: &[Rect], pins: &[Pin], name: &str) -> crate::
     for r in rects {
         if r.layer == active || Some(r.layer) == os_ch {
             let gate_layer = if r.layer == active { poly } else { os_gate.unwrap() };
-            let gates = gates_for(r, gate_layer);
+            let gates = gates_for(r, gate_layer, &mut rcands);
             if gates.is_empty() {
                 pieces.push(*r);
                 continue;
@@ -120,20 +129,21 @@ pub fn extract(tech: &Tech, rects: &[Rect], pins: &[Pin], name: &str) -> crate::
         }
         v
     };
-    let idx: Vec<usize> = pieces
-        .iter()
-        .enumerate()
-        .filter(|(_, r)| conductors.contains(&r.layer))
-        .map(|(i, _)| i)
-        .collect();
+    let is_cond: Vec<bool> = pieces.iter().map(|p| conductors.contains(&p.layer)).collect();
+    let idx: Vec<usize> = (0..pieces.len()).filter(|&i| is_cond[i]).collect();
+    // spatial hash over the split pieces: same-layer touching, cut
+    // connectivity, pin naming and S/D assembly all query it instead
+    // of walking the conductor list (the old x-sorted sweep degenerates
+    // on column-aligned array geometry, like drc::group_touching did)
+    let piece_grid = Grid::build(&pieces, 0);
+    let mut pcands: Vec<usize> = Vec::new();
     let mut uf = Uf::new(pieces.len());
-    // same-layer touching (x-sorted sweep to bound pair checks)
-    let mut order = idx.clone();
-    order.sort_by_key(|&i| pieces[i].x0);
-    for (oi, &i) in order.iter().enumerate() {
-        for &j in order.iter().skip(oi + 1) {
-            if pieces[j].x0 > pieces[i].x1 {
-                break;
+    // same-layer touching
+    for &i in &idx {
+        piece_grid.query_into(&pieces[i], &mut pcands);
+        for &j in &pcands {
+            if j <= i || !is_cond[j] {
+                continue;
             }
             if pieces[i].layer == pieces[j].layer && pieces[i].touches(&pieces[j]) {
                 uf.union(i, j);
@@ -158,9 +168,10 @@ pub fn extract(tech: &Tech, rects: &[Rect], pins: &[Pin], name: &str) -> crate::
         } else {
             continue;
         };
+        piece_grid.query_into(r, &mut pcands);
         let mut touched: Vec<usize> = Vec::new();
-        for &i in &idx {
-            if connected.contains(&pieces[i].layer) && pieces[i].overlaps(r) {
+        for &i in &pcands {
+            if is_cond[i] && connected.contains(&pieces[i].layer) && pieces[i].overlaps(r) {
                 touched.push(i);
             }
         }
@@ -172,8 +183,9 @@ pub fn extract(tech: &Tech, rects: &[Rect], pins: &[Pin], name: &str) -> crate::
     // --- name nets from pins --------------------------------------------
     let mut net_names: HashMap<usize, String> = HashMap::new();
     for pin in pins {
-        for &i in &idx {
-            if pieces[i].layer == pin.rect.layer && pieces[i].touches(&pin.rect) {
+        piece_grid.query_into(&pin.rect, &mut pcands);
+        for &i in &pcands {
+            if is_cond[i] && pieces[i].layer == pin.rect.layer && pieces[i].touches(&pin.rect) {
                 let root = uf.find(i);
                 net_names.entry(root).or_insert_with(|| pin.name.clone());
             }
@@ -193,11 +205,18 @@ pub fn extract(tech: &Tech, rects: &[Rect], pins: &[Pin], name: &str) -> crate::
 
     // --- assemble devices --------------------------------------------------
     let mut raw: Vec<RawMos> = Vec::new();
+    let mut scands: Vec<usize> = Vec::new();
     for (strip, gate, is_os) in &devices {
+        // candidate pieces come from the strip's grid neighborhood
+        // (the S/D segments lie inside the strip's own extent)
+        piece_grid.query_into(strip, &mut scands);
         // nearest same-strip S/D piece left/right of the gate
         let side = |left: bool| -> Option<usize> {
             let mut best: Option<(i64, usize)> = None;
-            for &i in &idx {
+            for &i in &scands {
+                if !is_cond[i] {
+                    continue;
+                }
                 let p = &pieces[i];
                 if p.layer != strip.layer || p.y0 != strip.y0 || p.y1 != strip.y1 {
                     continue;
@@ -225,16 +244,20 @@ pub fn extract(tech: &Tech, rects: &[Rect], pins: &[Pin], name: &str) -> crate::
         let (Some(s_i), Some(d_i)) = (side(true), side(false)) else {
             anyhow::bail!("device at ({}, {}) lacks S/D pieces", gate.x0, strip.y0);
         };
-        let g_i = idx
+        piece_grid.query_into(gate, &mut scands);
+        let g_i = scands
             .iter()
             .copied()
-            .find(|&i| pieces[i].layer == gate.layer && pieces[i].touches(gate))
+            .find(|&i| is_cond[i] && pieces[i].layer == gate.layer && pieces[i].touches(gate))
             .ok_or_else(|| anyhow::anyhow!("gate stripe not in conductor set"))?;
         let card: &'static str = if *is_os {
             "os_nmos"
         } else {
             let in_nwell = nwell
-                .map(|nw| rects.iter().any(|r| r.layer == nw && r.overlaps(strip)))
+                .map(|nw| {
+                    rect_grid.query_into(strip, &mut rcands);
+                    rcands.iter().any(|&k| rects[k].layer == nw && rects[k].overlaps(strip))
+                })
                 .unwrap_or(false);
             if in_nwell {
                 "si_pmos"

@@ -7,7 +7,7 @@
 //!   opengcram dse      --level l1|l2 --machine h100|gt520m
 
 use opengcram::compiler::{compile, CellFlavor, Config};
-use opengcram::runtime::Runtime;
+use opengcram::runtime::{Runtime, SharedRuntime};
 use opengcram::tech::sg40;
 use opengcram::util::eng;
 use opengcram::{characterize, dse, report, workloads};
@@ -89,7 +89,7 @@ fn run() -> opengcram::Result<()> {
             }
         }
         "dse" => {
-            let rt = Runtime::load(Path::new("artifacts"))?;
+            let rt = SharedRuntime::load(Path::new("artifacts"))?;
             let machine = match parse_flag(&args, "--machine").as_deref() {
                 Some("gt520m") => &workloads::GT520M,
                 _ => &workloads::H100,
@@ -99,14 +99,14 @@ fn run() -> opengcram::Result<()> {
                 _ => workloads::CacheLevel::L1,
             };
             let mut table = report::Table::new(&["task", "demand MHz", "16", "32", "64", "96", "128"]);
-            let evals: Vec<dse::Evaluated> = dse::fig10_configs(CellFlavor::GcSiSiNp)
-                .into_iter()
-                .map(|cfg| {
-                    let bank = compile(&tech, &cfg)?;
-                    let perf = characterize::characterize(&tech, &rt, &bank)?;
-                    Ok(dse::Evaluated { config: cfg, perf, area_um2: bank.layout.total_area_um2() })
-                })
-                .collect::<opengcram::Result<_>>()?;
+            // batch-first sweep: compile in parallel, characterize in
+            // shared padded artifact batches via the coordinator
+            let evals = dse::evaluate_all_batched(
+                &tech,
+                &rt,
+                &dse::fig10_configs(CellFlavor::GcSiSiNp),
+                dse::default_workers(),
+            )?;
             for task in &workloads::TASKS {
                 let d = workloads::profile(task, level, machine);
                 let mut row = vec![task.name.to_string(), report::mhz(d.read_freq_hz)];

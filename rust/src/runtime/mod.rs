@@ -28,6 +28,7 @@ compile_error!(
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Parsed manifest entry for one artifact.
 #[derive(Debug, Clone)]
@@ -165,6 +166,9 @@ impl Tensor {
 pub struct Engine {
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
+    /// PJRT executions issued since load — the batching KPI: a
+    /// batch-first sweep pays O(points/batch) of these, not O(points).
+    calls: AtomicU64,
 }
 
 /// The runtime: PJRT client + compiled engines.
@@ -194,13 +198,31 @@ impl Runtime {
             let exe = client
                 .compile(&comp)
                 .map_err(|e| anyhow::anyhow!("compiling {file}: {e:?}"))?;
-            engines.insert(name.clone(), Engine { exe, name });
+            engines.insert(name.clone(), Engine { exe, name, calls: AtomicU64::new(0) });
         }
         Ok(Runtime { client, manifest, engines })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// PJRT executions issued against artifact `name` since load
+    /// (0 for unknown names).
+    pub fn call_count(&self, name: &str) -> u64 {
+        self.engines
+            .get(name)
+            .map(|e| e.calls.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Per-artifact execution counts — the DSE batching KPI recorded
+    /// by the benches (`BENCH_perf.json`).
+    pub fn call_counts(&self) -> BTreeMap<String, u64> {
+        self.engines
+            .iter()
+            .map(|(k, e)| (k.clone(), e.calls.load(Ordering::Relaxed)))
+            .collect()
     }
 
     /// Execute an artifact with the given inputs; returns the tuple of
@@ -210,6 +232,7 @@ impl Runtime {
             .engines
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("engine '{name}' not loaded"))?;
+        eng.calls.fetch_add(1, Ordering::Relaxed);
         let lits: Vec<xla::Literal> = inputs
             .iter()
             .map(|t| {
@@ -262,6 +285,21 @@ impl SharedRuntime {
     pub fn with<R>(&self, f: impl FnOnce(&Runtime) -> R) -> R {
         let guard = self.0.lock().unwrap_or_else(|p| p.into_inner());
         f(&guard)
+    }
+
+    /// See [`Runtime::call_count`].
+    pub fn call_count(&self, name: &str) -> u64 {
+        self.with(|r| r.call_count(name))
+    }
+
+    /// See [`Runtime::call_counts`].
+    pub fn call_counts(&self) -> BTreeMap<String, u64> {
+        self.with(|r| r.call_counts())
+    }
+
+    /// Batch capacity of artifact `name` from the manifest.
+    pub fn batch_cap(&self, name: &str) -> crate::Result<usize> {
+        self.with(|r| r.manifest.get(name).map(|m| m.batch))
     }
 }
 

@@ -209,6 +209,112 @@ fn bank_layout_exports_gds_and_passes_drc_lvs_at_small_size() {
     assert_eq!(ext.circuit.mos_count(), flat.mos_count());
 }
 
+/// Field-by-field bitwise comparison of two BankPerf results — the
+/// batched-vs-single equivalence contract is *exact*, not approximate.
+fn assert_perf_bits_eq(a: &characterize::BankPerf, b: &characterize::BankPerf, what: &str) {
+    let fields = [
+        ("f_read_hz", a.f_read_hz, b.f_read_hz),
+        ("f_write_hz", a.f_write_hz, b.f_write_hz),
+        ("f_op_hz", a.f_op_hz, b.f_op_hz),
+        ("bandwidth_bps", a.bandwidth_bps, b.bandwidth_bps),
+        ("retention_s", a.retention_s, b.retention_s),
+        ("leakage_w", a.leakage_w, b.leakage_w),
+        ("e_read_j", a.e_read_j, b.e_read_j),
+        ("t_decoder_s", a.t_decoder_s, b.t_decoder_s),
+        ("t_cell_read_s", a.t_cell_read_s, b.t_cell_read_s),
+        ("stored_one_v", a.stored_one_v, b.stored_one_v),
+    ];
+    for (name, x, y) in fields {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {name} diverged ({x} vs {y})");
+    }
+    assert_eq!(a.functional, b.functional, "{what}: functional verdict diverged");
+}
+
+#[test]
+fn batched_singleton_matches_single_design_path_for_every_flavor() {
+    // the tentpole equivalence proof: characterize_all(&[bank]) issues
+    // exactly the artifact calls of characterize(bank), so results
+    // bitwise-match for every cell flavor (including the analytical
+    // SRAM reference path)
+    let t = sg40();
+    for flavor in [
+        CellFlavor::Sram6t,
+        CellFlavor::GcSiSiNp,
+        CellFlavor::GcSiSiNn,
+        CellFlavor::GcOsOs,
+    ] {
+        let bank = compile(&t, &Config::new(32, 32, flavor)).unwrap();
+        let single = with_rt(|rt| characterize::characterize(&t, rt, &bank)).unwrap();
+        let batched =
+            characterize::characterize_all(&t, shared(), std::slice::from_ref(&bank)).unwrap();
+        assert_eq!(batched.len(), 1);
+        assert_perf_bits_eq(&single, &batched[0], &format!("{flavor:?}"));
+    }
+}
+
+#[test]
+fn mixed_flavor_batch_splits_reads_and_packs_retention() {
+    // regression for the read_op "mixed read flavors in one batch"
+    // bail: NP (pull-up) and NN/OS (pull-down) designs in one list are
+    // split into homogeneous read batches by the executor, while all
+    // retention points pack into a single artifact execution
+    let t = sg40();
+    let mut np_vt = Config::new(32, 32, CellFlavor::GcSiSiNp);
+    np_vt.write_vt = Some(0.52);
+    let cfgs = vec![
+        Config::new(32, 32, CellFlavor::GcSiSiNp),
+        np_vt, // same geometry as the first: shares its read batch
+        Config::new(32, 32, CellFlavor::GcOsOs),
+        Config::new(32, 32, CellFlavor::GcSiSiNn),
+        Config::new(16, 16, CellFlavor::GcSiSiNp),
+    ];
+    let banks: Vec<_> = cfgs.iter().map(|c| compile(&t, c).unwrap()).collect();
+    // a private runtime: the call-count deltas below must not see
+    // artifact executions from concurrently running tests
+    let rt = SharedRuntime::load(&artifacts_dir()).expect("run `make artifacts` first");
+    let read_before = rt.call_count("read");
+    let ret_before = rt.call_count("retention");
+    let batched = characterize::characterize_all(&t, &rt, &banks).unwrap();
+    let read_calls = rt.call_count("read") - read_before;
+    let ret_calls = rt.call_count("retention") - ret_before;
+    // every design's results still match its own single-design run
+    for (bank, bp) in banks.iter().zip(&batched) {
+        let single = with_rt(|r| characterize::characterize(&t, r, bank)).unwrap();
+        assert_perf_bits_eq(&single, bp, &format!("{:?}", bank.config));
+    }
+    // read batches: at most one call per design (batching never adds
+    // calls), and the two same-geometry NP designs share one
+    assert!(read_calls <= 4, "expected <= 4 read executions, got {read_calls}");
+    // retention: all five designs in one padded artifact call
+    assert_eq!(ret_calls, 1, "retention points must pack into one execution");
+}
+
+#[test]
+fn batched_sweep_matches_per_design_sweep() {
+    let t = sg40();
+    let mut vt = Config::new(16, 16, CellFlavor::GcSiSiNp);
+    vt.write_vt = Some(0.5);
+    // repeated config: the cache must dedupe it within the sweep
+    let configs = vec![
+        Config::new(16, 16, CellFlavor::GcSiSiNp),
+        Config::new(32, 32, CellFlavor::GcSiSiNp),
+        vt,
+        Config::new(16, 16, CellFlavor::GcSiSiNp),
+    ];
+    let cache = dse::EvalCache::new();
+    let batched =
+        dse::evaluate_all_batched_cached(&t, shared(), &configs, 2, &cache).unwrap();
+    assert_eq!(batched.len(), configs.len());
+    assert_eq!(cache.len(), 3, "duplicate config evaluated twice");
+    for (cfg, e) in configs.iter().zip(&batched) {
+        assert_eq!(e.config.key(), cfg.key(), "sweep results out of order");
+        let bank = compile(&t, cfg).unwrap();
+        let single = with_rt(|rt| characterize::characterize(&t, rt, &bank)).unwrap();
+        assert_perf_bits_eq(&single, &e.perf, &format!("{cfg:?}"));
+        assert_eq!(e.area_um2, bank.layout.total_area_um2());
+    }
+}
+
 #[test]
 fn coordinator_batches_retention_jobs_over_the_runtime() {
     use opengcram::coordinator::{BatchExec, Coordinator};
