@@ -16,7 +16,13 @@ fn main() {
         .iter()
         .map(|&(w, n)| compile(&tech, &Config::new(w, n, CellFlavor::GcSiSiNp)).unwrap())
         .collect();
-    let transients = characterize::characterize_all(&tech, &rt, &banks).unwrap();
+    let transients = characterize::characterize_all(
+        &tech,
+        &rt,
+        &banks,
+        characterize::DEFAULT_WINDOW_RESOLUTION,
+    )
+    .unwrap();
     println!("bits,f_analytical_mhz,f_transient_mhz,deviation_pct");
     for (bank, c) in banks.iter().zip(&transients) {
         let a = characterize::analytical(&tech, bank);

@@ -8,8 +8,10 @@
 //! — workers never serialize on the `SharedRuntime` mutex themselves.
 //! The legacy per-design path (each worker running `characterize`
 //! under the runtime lock) is kept as a comparison series, and the
-//! artifact-call KPI is asserted: a sweep of N designs must issue
-//! ceil(N/batch) retention executions, not N.
+//! artifact-call KPIs are asserted: a sweep of N designs must issue
+//! ceil(N/batch) retention executions (not N), and with window
+//! quantization a fine size axis must issue grouped-ceiling write and
+//! read executions (not N either).
 use opengcram::characterize::batch;
 use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::runtime::SharedRuntime;
@@ -32,12 +34,15 @@ fn main() {
     let configs = dse::fig10_configs(CellFlavor::GcSiSiNp);
     let workers = dse::default_workers();
 
+    let window_res = characterize::DEFAULT_WINDOW_RESOLUTION;
+
     // ---- batch-first sweep with artifact-call accounting ----------------
     let ret_cap = rt.batch_cap("retention").unwrap();
     let ret_before = rt.call_count("retention");
     let cache = dse::EvalCache::new();
     let evals =
-        dse::evaluate_all_batched_cached(&tech, &rt, &configs, workers, &cache).unwrap();
+        dse::evaluate_all_batched_cached(&tech, &rt, &configs, workers, &cache, window_res)
+            .unwrap();
     let ret_calls = (rt.call_count("retention") - ret_before) as usize;
     let want_calls = batch::calls_for(configs.len(), ret_cap);
     assert!(
@@ -67,6 +72,47 @@ fn main() {
         }
     }
 
+    // ---- window-quantized mixed-geometry packing ------------------------
+    // a fine rows axis, pinned >= 180 rows (mux 1) so both windows sit
+    // above their floor clamps: every design's exact windows differ,
+    // so the pre-quantization batcher issued one write and one read
+    // execution per design; the bucket grid must collapse them to the
+    // grouped ceiling computed from the plans' own window bits
+    let axis_cfgs: Vec<Config> = characterize::quantization_axis(5, 180, 4);
+    let axis_banks: Vec<_> = axis_cfgs.iter().map(|c| compile(&tech, c).unwrap()).collect();
+    let (wr_groups, rd_groups) =
+        characterize::window_group_counts(&tech, &axis_banks, window_res);
+    let wr_before = rt.call_count("write");
+    let rd_before = rt.call_count("read");
+    let axis_cache = dse::EvalCache::new();
+    let axis_evals =
+        dse::evaluate_all_batched_cached(&tech, &rt, &axis_cfgs, workers, &axis_cache, window_res)
+            .unwrap();
+    assert_eq!(axis_evals.len(), axis_cfgs.len());
+    let wr_calls = (rt.call_count("write") - wr_before) as usize;
+    let rd_calls = (rt.call_count("read") - rd_before) as usize;
+    // each bucket holds <= 2N points << cap, so calls == groups; and
+    // rows 180..196 span less than two 10 % steps, so groups < designs
+    assert_eq!(
+        wr_calls, wr_groups,
+        "size-axis sweep issued {wr_calls} write executions for {wr_groups} window buckets"
+    );
+    assert_eq!(
+        rd_calls, rd_groups,
+        "size-axis sweep issued {rd_calls} read executions for {rd_groups} window buckets"
+    );
+    assert!(
+        wr_calls < axis_cfgs.len() && rd_calls < axis_cfgs.len(),
+        "quantization failed to pack the size axis: wr {wr_calls} rd {rd_calls} of {}",
+        axis_cfgs.len()
+    );
+    println!("sizeaxis_write_calls,{wr_calls}");
+    println!("sizeaxis_read_calls,{rd_calls}");
+    println!(
+        "sizeaxis_designs_per_write_call,{:.2}",
+        axis_cfgs.len() as f64 / wr_calls.max(1) as f64
+    );
+
     // ---- batched vs legacy-mutex sweep (both cold) ----------------------
     let legacy_eval = |cfg: &Config| -> opengcram::Result<dse::Evaluated> {
         let bank = compile(&tech, cfg)?;
@@ -76,22 +122,35 @@ fn main() {
     let s_legacy = bench::run("dse_shmoo_axis_legacy_mutex", 3.0, || {
         dse::evaluate_all(&configs, workers, legacy_eval).unwrap()
     });
+    // resolution 0 keeps this series apples-to-apples with the legacy
+    // arm (and with pre-quantization runs): it isolates the
+    // coordinator-batching win from the quantization packing win,
+    // which gets its own series below
     let s_batched = bench::run("dse_shmoo_axis_batched", 3.0, || {
-        dse::evaluate_all_batched(&tech, &rt, &configs, workers).unwrap()
+        dse::evaluate_all_batched(&tech, &rt, &configs, workers, 0.0).unwrap()
     });
     println!(
         "shmoo_batched_speedup,{:.2}x",
         s_legacy.median_s / s_batched.median_s.max(1e-12)
     );
+    let s_quant = bench::run("dse_shmoo_axis_batched_quantized", 3.0, || {
+        dse::evaluate_all_batched(&tech, &rt, &configs, workers, window_res).unwrap()
+    });
+    println!(
+        "shmoo_quantized_speedup,{:.2}x",
+        s_batched.median_s / s_quant.median_s.max(1e-12)
+    );
 
     // cached re-sweep: the caching win on top of batching
     let s_hot = bench::run("dse_shmoo_axis_cached", 1.0, || {
-        dse::evaluate_all_batched_cached(&tech, &rt, &configs, workers, &cache).unwrap()
+        dse::evaluate_all_batched_cached(&tech, &rt, &configs, workers, &cache, window_res)
+            .unwrap()
     });
     println!("shmoo_cache_speedup,{:.1}x", s_batched.median_s / s_hot.median_s.max(1e-9));
     bench::run("dse_full_pipeline_one_config", 3.0, || {
         let cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
         let bank = compile(&tech, &cfg).unwrap();
-        characterize::characterize_all(&tech, &rt, std::slice::from_ref(&bank)).unwrap()
+        characterize::characterize_all(&tech, &rt, std::slice::from_ref(&bank), window_res)
+            .unwrap()
     });
 }

@@ -35,7 +35,8 @@ fn main() {
         labels.push((label.to_string(), "gc_wwlls", bank.delay_chain_stages));
         banks.push(bank);
     }
-    let perfs = characterize::characterize_all(&tech, &rt, &banks).unwrap();
+    let res = characterize::DEFAULT_WINDOW_RESOLUTION;
+    let perfs = characterize::characterize_all(&tech, &rt, &banks, res).unwrap();
     println!("config,flavor,f_op_mhz,bw_gbps,leak_nw,stages");
     for ((label, name, stages), p) in labels.iter().zip(&perfs) {
         println!(
@@ -50,7 +51,7 @@ fn main() {
         rt.with(|r| characterize::characterize(&tech, r, &bank)).unwrap()
     });
     bench::run("characterize_all_fig7_15designs", 3.0, || {
-        characterize::characterize_all(&tech, &rt, &banks).unwrap()
+        characterize::characterize_all(&tech, &rt, &banks, res).unwrap()
     });
     println!("# artifact executions: {:?}", rt.call_counts());
 }

@@ -152,6 +152,9 @@ fn main() {
     // calls — not one per point, which was the pre-batching behavior
     coordinator_packing_records(&mut records);
 
+    // ---- window-quantization packing (runtime-free; runs in CI smoke) ---
+    quantization_packing_records(&tech, &mut records);
+
     // ---- L1/L2 via PJRT + native sim baseline (skipped in smoke) --------
     if smoke {
         println!("# PERF_SMOKE: skipping XLA and native-sim benches");
@@ -215,6 +218,60 @@ fn coordinator_packing_records(records: &mut Vec<(bench::Sample, f64)>) {
     }
 }
 
+/// Tentpole KPI for the window-quantized batcher, checked without any
+/// runtime: a fine rows-axis sweep (whose exact windows all differ)
+/// must collapse its write/read windows into fewer buckets than
+/// designs at the default resolution, and every bucket must stay
+/// conservative within one step.
+fn quantization_packing_records(
+    tech: &opengcram::tech::Tech,
+    records: &mut Vec<(bench::Sample, f64)>,
+) {
+    use opengcram::characterize::{
+        quantization_axis, window_group_counts, CharPlan, DEFAULT_WINDOW_RESOLUTION,
+    };
+    let n_designs = 8usize;
+    // rows pinned >= 180 (mux 1): both windows sit above their floor
+    // clamps, so every exact window is distinct and grouping is the
+    // quantizer's doing, not the clamp's
+    let banks: Vec<_> = quantization_axis(n_designs, 180, 2)
+        .iter()
+        .map(|cfg| compile(tech, cfg).unwrap())
+        .collect();
+    let s = bench::run("char_plan_quantized_rows_axis", 0.05, || {
+        banks
+            .iter()
+            .map(|b| CharPlan::with_resolution(tech, b, DEFAULT_WINDOW_RESOLUTION))
+            .collect::<Vec<_>>()
+    });
+    for b in &banks {
+        let (we, re) = CharPlan::new(tech, b).window_bits().unwrap();
+        let (wq, rq) =
+            CharPlan::with_resolution(tech, b, DEFAULT_WINDOW_RESOLUTION).window_bits().unwrap();
+        let bound = (1.0 + DEFAULT_WINDOW_RESOLUTION) * (1.0 + 1e-9);
+        assert!(f64::from_bits(wq) >= f64::from_bits(we));
+        assert!(f64::from_bits(wq) <= f64::from_bits(we) * bound);
+        assert!(f64::from_bits(rq) >= f64::from_bits(re));
+        assert!(f64::from_bits(rq) <= f64::from_bits(re) * bound);
+    }
+    let (wr_exact, rd_exact) = window_group_counts(tech, &banks, 0.0);
+    assert_eq!(wr_exact, n_designs, "write floors clamp: axis too small");
+    assert_eq!(rd_exact, n_designs, "read floors clamp: axis too small");
+    // rows 180..194 span barely one 10 % step, so the bucket grid
+    // holds the axis in <= 2 write and read groups — the grouped
+    // ceiling a characterize_all sweep pays, instead of one per design
+    let (wr_groups, rd_groups) = window_group_counts(tech, &banks, DEFAULT_WINDOW_RESOLUTION);
+    assert!(
+        wr_groups < n_designs && rd_groups < n_designs,
+        "size axis did not collapse: wr {wr_groups} rd {rd_groups} of {n_designs}"
+    );
+    println!("quantized_write_groups_{n_designs}designs,{wr_groups}");
+    println!("quantized_read_groups_{n_designs}designs,{rd_groups}");
+    // throughput column records designs-per-write-group so the packing
+    // trajectory lands in BENCH_perf.json
+    records.push((s, n_designs as f64 / wr_groups as f64));
+}
+
 fn xla_benches(
     tech: &opengcram::tech::Tech,
     rt: &SharedRuntime,
@@ -257,8 +314,9 @@ fn xla_benches(
         })
         .collect();
     let banks = banks.unwrap();
+    let res = characterize::DEFAULT_WINDOW_RESOLUTION;
     let before = rt.call_count("retention");
-    let perfs = characterize::characterize_all(tech, rt, &banks).unwrap();
+    let perfs = characterize::characterize_all(tech, rt, &banks, res).unwrap();
     assert_eq!(perfs.len(), banks.len());
     let ret_calls = (rt.call_count("retention") - before) as usize;
     let cap = rt.batch_cap("retention").unwrap();
@@ -270,9 +328,45 @@ fn xla_benches(
     );
     println!("char_batched_retention_calls,{ret_calls}");
     let s = bench::run("char_batched_vt_axis_5designs", 3.0, || {
-        characterize::characterize_all(tech, rt, &banks).unwrap()
+        characterize::characterize_all(tech, rt, &banks, res).unwrap()
     });
     records.push((s.clone(), banks.len() as f64 / s.median_s));
+
+    // ---- window-quantized size axis over real artifacts -----------------
+    // rows 180..196 (mux 1, above both window floors): every design's
+    // exact windows differ, so the pre-quantization batcher paid one
+    // write and one read execution per design; the bucket grid must
+    // pay exactly the grouped ceiling
+    let size_banks: Vec<_> = characterize::quantization_axis(5, 180, 4)
+        .iter()
+        .map(|cfg| compile(tech, cfg).unwrap())
+        .collect();
+    let (wr_groups, rd_groups) = characterize::window_group_counts(tech, &size_banks, res);
+    let wr_before = rt.call_count("write");
+    let rd_before = rt.call_count("read");
+    let perfs = characterize::characterize_all(tech, rt, &size_banks, res).unwrap();
+    assert_eq!(perfs.len(), size_banks.len());
+    let wr_calls = (rt.call_count("write") - wr_before) as usize;
+    let rd_calls = (rt.call_count("read") - rd_before) as usize;
+    assert_eq!(
+        wr_calls, wr_groups,
+        "size-axis sweep issued {wr_calls} write executions for {wr_groups} buckets"
+    );
+    assert_eq!(
+        rd_calls, rd_groups,
+        "size-axis sweep issued {rd_calls} read executions for {rd_groups} buckets"
+    );
+    assert!(
+        wr_calls < size_banks.len() && rd_calls < size_banks.len(),
+        "quantization failed to pack the size axis: wr {wr_calls} rd {rd_calls} of {}",
+        size_banks.len()
+    );
+    println!("char_sizeaxis_write_calls,{wr_calls}");
+    println!("char_sizeaxis_read_calls,{rd_calls}");
+    let s = bench::run("char_batched_size_axis_5designs", 3.0, || {
+        characterize::characterize_all(tech, rt, &size_banks, res).unwrap()
+    });
+    records.push((s.clone(), size_banks.len() as f64 / s.median_s));
 }
 
 fn native_sim_bench(tech: &opengcram::tech::Tech, records: &mut Vec<(bench::Sample, f64)>) {

@@ -5,6 +5,7 @@
 //! via the coordinator), prints the Fig. 10 shmoo plots and the
 //! headline metric (largest passing bank per task), and runs the SS VI
 //! co-optimizer — also batch-first — for an L1-cache target.
+use opengcram::characterize::DEFAULT_WINDOW_RESOLUTION;
 use opengcram::compiler::CellFlavor;
 use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
@@ -34,6 +35,7 @@ fn main() -> opengcram::Result<()> {
         &dse::fig10_configs(CellFlavor::GcSiSiNp),
         dse::default_workers(),
         &cache,
+        DEFAULT_WINDOW_RESOLUTION,
     )?;
     for e in &evals {
         println!(
@@ -71,7 +73,13 @@ fn main() -> opengcram::Result<()> {
         f_min_hz: 3e8,
         t_retain_min_s: 1e-5,
     };
-    let (best, nevals) = dse::optimize_batched(&tech, &rt, CellFlavor::GcSiSiNp, &weights)?;
+    let (best, nevals) = dse::optimize_batched(
+        &tech,
+        &rt,
+        CellFlavor::GcSiSiNp,
+        &weights,
+        DEFAULT_WINDOW_RESOLUTION,
+    )?;
     println!(
         "  best: {}x{} write_vt={:?} -> f_op {} MHz, retention {}, {} evals",
         best.config.word_size, best.config.num_words, best.config.write_vt,

@@ -23,9 +23,11 @@ fn main() -> opengcram::Result<()> {
 
     let rt = SharedRuntime::load(Path::new("artifacts"))?;
     // characterize_all packs designs into shared artifact batches; a
-    // singleton list bitwise-matches the single-design path
-    let perf = characterize::characterize_all(&tech, &rt, std::slice::from_ref(&bank))?
-        .remove(0);
+    // singleton list at window resolution 0 bitwise-matches the
+    // single-design path (sweeps pass DEFAULT_WINDOW_RESOLUTION to
+    // trade a bounded deviation for cross-design packing)
+    let perf =
+        characterize::characterize_all(&tech, &rt, std::slice::from_ref(&bank), 0.0)?.remove(0);
     println!(
         "f_op {}  bandwidth {:.1} Gb/s  retention {}  leakage {}  functional {}",
         eng(perf.f_op_hz, "Hz"),

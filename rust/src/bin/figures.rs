@@ -85,7 +85,10 @@ fn main() -> opengcram::Result<()> {
         t7_banks.push(compile(&tech, &cfg)?);
         t7_meta.push((label.into(), "GcSiSiNp+LS".into()));
     }
-    let t7_perfs = characterize::characterize_all(&tech, &rt, &t7_banks)?;
+    // figure regeneration runs at resolution 0 (exact windows): the
+    // published numbers should not move with the packing trade, and
+    // the 15-design batch gains little from quantization anyway
+    let t7_perfs = characterize::characterize_all(&tech, &rt, &t7_banks, 0.0)?;
     for (((label, flavor), bank), perf) in t7_meta.iter().zip(&t7_banks).zip(&t7_perfs) {
         t7.row(&[
             label.clone(),
@@ -157,11 +160,13 @@ fn main() -> opengcram::Result<()> {
 
     // ---- Fig. 10: shmoo -------------------------------------------------------
     println!("== Fig. 10: shmoo (GCRAM bank configs vs tasks, batch-first sweep) ==");
+    // resolution 0: canonical figure output stays bitwise-exact
     let evals = dse::evaluate_all_batched(
         &tech,
         &rt,
         &dse::fig10_configs(CellFlavor::GcSiSiNp),
         dse::default_workers(),
+        0.0,
     )?;
     for (level, machine) in [
         (workloads::CacheLevel::L1, &workloads::GT520M),

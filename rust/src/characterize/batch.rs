@@ -2,29 +2,50 @@
 //! [`crate::runtime::engines`] — the bridge between the job
 //! [`crate::coordinator`] and the AOT artifacts.
 //!
+//! # Homogeneity keys
+//!
 //! Jobs carry their transient window; the executors re-group whatever
 //! batch the coordinator hands them into *runnable* homogeneous calls:
 //! points in one artifact execution must share the window (the dt
 //! schedule tensor is per-batch, not per-row) and, for reads, the
 //! `pull_up` flavor (the RWL waveform is per-batch).  This makes
 //! `read_op`'s "mixed read flavors in one batch" `ensure` an invariant
-//! the batcher upholds instead of a caller footgun.  Retention points
-//! have neither a window nor a flavor, so they always pack to full
-//! artifact occupancy — the sweep-cost headline: a shmoo axis issues
-//! `ceil(points / batch)` retention executions, not one per point.
+//! the batcher upholds instead of a caller footgun.  The keys are
+//! [`write_key`] (window bits) and [`read_key`] (`pull_up` over the
+//! window bits); because [`super::CharPlan::with_resolution`]
+//! snaps windows onto the quantization bucket grid *before* the jobs
+//! are emitted, the window bits the keys see are already the bucket
+//! values — designs in one bucket group across the whole sweep with no
+//! extra logic here.
+//!
+//! # Padding and occupancy
+//!
+//! One artifact execution holds up to `cap` points (the manifest batch
+//! size; short batches are zero-padded by the engines).  A group of
+//! `n` homogeneous jobs therefore costs [`calls_for`]`(n, cap)` =
+//! `ceil(n / cap)` executions, and a whole sweep costs the sum of that
+//! over its homogeneity groups — the occupancy model EXPERIMENTS.md
+//! tabulates and the fig10/perf benches assert.  Retention points have
+//! neither a window nor a flavor (fixed log-time grid; the threshold
+//! is a per-row stimulus), so they always pack to full occupancy: a
+//! shmoo axis issues `ceil(points / batch)` retention executions, not
+//! one per point.
 
 use crate::coordinator::BatchExec;
 use crate::runtime::{engines, SharedRuntime};
 
 /// One write-transient job: the design point plus its simulation
-/// window.  Jobs with bit-equal windows share an artifact execution.
+/// window.  Jobs with bit-equal windows share an artifact execution —
+/// with window quantization the window is a bucket-grid value, so
+/// "bit-equal" means "same bucket", not "same geometry".
 #[derive(Debug, Clone)]
 pub struct WriteJob {
     pub pt: engines::WritePoint,
     pub window_s: f64,
 }
 
-/// One read-transient job; groups by `(pull_up, window)`.
+/// One read-transient job; groups by `(pull_up, window)` where the
+/// window is the (possibly bucket-quantized) plan window.
 #[derive(Debug, Clone)]
 pub struct ReadJob {
     pub pt: engines::ReadPoint,
@@ -38,14 +59,15 @@ pub struct RetentionJob {
     pub pt: engines::RetentionPoint,
 }
 
-/// Homogeneity key of a write job (window bits).
-pub(crate) fn write_key(j: &WriteJob) -> u128 {
+/// Homogeneity key of a write job: the (bucket-quantized) window bits.
+/// Jobs with equal keys share an artifact execution.
+pub fn write_key(j: &WriteJob) -> u128 {
     j.window_s.to_bits() as u128
 }
 
 /// Homogeneity key of a read job: `pull_up` in the high bits (the
-/// waveform split) and the window bits below.
-pub(crate) fn read_key(j: &ReadJob) -> u128 {
+/// waveform split) and the (bucket-quantized) window bits below.
+pub fn read_key(j: &ReadJob) -> u128 {
     ((j.pt.pull_up as u128) << 64) | j.window_s.to_bits() as u128
 }
 

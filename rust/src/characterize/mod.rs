@@ -16,10 +16,45 @@
 //! many designs into shared padded artifact batches through the
 //! [`crate::coordinator`] — the DSE sweep cost is then paid per batch,
 //! not per design.
+//!
+//! # Window quantization
+//!
+//! Write/read transient points can only share an artifact execution
+//! when they share the simulation window (the dt-schedule tensor is
+//! per-batch, not per-row), so a sweep that varies geometry — and with
+//! it `c_wbl`/`c_rbl`, and with them the windows — would degenerate to
+//! one execution per design.  [`CharPlan::with_resolution`] therefore
+//! snaps each computed window *up* to the ceiling of a geometric
+//! bucket grid via [`quantize_window`]: at resolution `r`, bucket `k`
+//! sits at `(1+r)^k`, mirroring the replica delay-chain quantization
+//! the cycle composition already applies ([`TAU_STAGE`]).  Designs
+//! whose exact windows fall inside the same bucket get bit-identical
+//! quantized windows and share executions ([`batch::write_key`] /
+//! [`batch::read_key`] group on the window bits).
+//!
+//! The accuracy contract, asserted by the unit and integration tests:
+//!
+//! * **Conservative** — the quantized window is `>= ` the exact window
+//!   (settle time only grows) and `<= (1+r)` times it (one bucket
+//!   step), monotone and idempotent in the window.
+//! * **Resolution 0 is exact** — `with_resolution(.., 0.0)` returns
+//!   the window unchanged, bit for bit, so a resolution-0 batched
+//!   sweep reproduces the unquantized singleton path bitwise.
+//! * **Bounded deviation** — the quantized window feeds the measured
+//!   transients (stimulus edges scale with the window at <= 8 % of it,
+//!   and crossing times are linearly interpolated, so the shift is
+//!   first-order bounded by the stretch): every window-dependent
+//!   [`BankPerf`] field stays within one resolution step (relative)
+//!   of the resolution-0 result, while the window-independent fields
+//!   (`leakage_w`, `t_decoder_s`, `e_read_j`) are bitwise unchanged.
+//!
+//! [`DEFAULT_WINDOW_RESOLUTION`] (10 % per step) is the sweep entry
+//! points' default trade: a fine size axis collapses to a handful of
+//! buckets while the measured figures move by a few percent at most.
 
 pub mod batch;
 
-use crate::compiler::{Bank, CellFlavor};
+use crate::compiler::{Bank, CellFlavor, Config};
 use crate::coordinator;
 use crate::runtime::{engines, Runtime, SharedRuntime};
 use crate::sim;
@@ -33,6 +68,52 @@ const GUARDBAND: f64 = 1.15;
 pub const TAU_STAGE: f64 = 25e-12;
 /// Stored-'0' probe level for the read discrimination transient.
 const STORED_ZERO: f64 = 0.05;
+
+/// Default window-quantization resolution for the batch-first sweep
+/// entry points: ~10 % bucket steps (see the module docs for the
+/// accuracy contract).  Pass `0.0` anywhere a resolution is accepted
+/// to recover the exact, unquantized windows bitwise.
+pub const DEFAULT_WINDOW_RESOLUTION: f64 = 0.10;
+
+/// Snap `window_s` up to the ceiling of the geometric bucket grid
+/// `(1+resolution)^k` — the resolution-bounded quantization that lets
+/// mixed-geometry sweeps share write/read artifact executions.
+///
+/// Guarantees (property-tested in this module):
+///
+/// * `resolution <= 0` (or a non-finite/non-positive window) returns
+///   `window_s` unchanged, bit for bit; so does a resolution so fine
+///   (below ~2e-7 at nanosecond windows) that the bucket grid would
+///   be finer than f64 can represent — identity is exact there;
+/// * otherwise the result is the smallest grid value `>= window_s`,
+///   so it is conservative (`>= window_s`), within one step
+///   (`<= window_s * (1 + resolution)`, up to one ulp of `powi`),
+///   monotone in `window_s`, and idempotent;
+/// * every window inside a bucket maps to the *bit-identical* grid
+///   value (`powi` of the same integer exponent), which is what makes
+///   the bucket usable as a batch homogeneity key.
+pub fn quantize_window(window_s: f64, resolution: f64) -> f64 {
+    if !(resolution > 0.0) || !(window_s > 0.0) || !window_s.is_finite() {
+        return window_s;
+    }
+    let step = 1.0 + resolution;
+    let est = window_s.ln() / step.ln();
+    // sub-ulp grids (tiny resolutions push the exponent beyond i32)
+    // degrade to the exact identity instead of overflowing `powi`
+    if !est.is_finite() || est.abs() > 1e8 {
+        return window_s;
+    }
+    // smallest integer k with step^k >= window; the ln estimate is
+    // within one ulp of the true exponent, the loops correct it
+    let mut k = est.ceil() as i32;
+    while step.powi(k) < window_s {
+        k += 1;
+    }
+    while step.powi(k - 1) >= window_s {
+        k -= 1;
+    }
+    step.powi(k)
+}
 
 /// Characterization result for one bank.
 #[derive(Debug, Clone, Copy)]
@@ -171,8 +252,18 @@ struct TransientPlan {
 }
 
 impl CharPlan {
-    /// Build the job plan for one bank (pure; no runtime access).
+    /// Build the job plan for one bank (pure; no runtime access) with
+    /// exact, unquantized transient windows — shorthand for
+    /// [`CharPlan::with_resolution`] at resolution `0.0`.
     pub fn new(tech: &Tech, bank: &Bank) -> CharPlan {
+        CharPlan::with_resolution(tech, bank, 0.0)
+    }
+
+    /// Build the job plan for one bank with its write/read windows
+    /// snapped up to the `window_resolution` bucket grid (see
+    /// [`quantize_window`] and the module docs for the accuracy
+    /// contract).  Resolution `0.0` keeps the exact windows bitwise.
+    pub fn with_resolution(tech: &Tech, bank: &Bank, window_resolution: f64) -> CharPlan {
         if bank.config.flavor == CellFlavor::Sram6t {
             return CharPlan { kind: PlanKind::Analytical(analytical(tech, bank)) };
         }
@@ -205,11 +296,17 @@ impl CharPlan {
                 mux_gt1: cfg.mux_factor() > 1,
                 rows,
                 vdd,
-                wr_window: (40.0 * p.c_wbl * vdd / sim::ion(&wr_card, 4.0, vdd)).max(4e-9),
+                wr_window: quantize_window(
+                    (40.0 * p.c_wbl * vdd / sim::ion(&wr_card, 4.0, vdd)).max(4e-9),
+                    window_resolution,
+                ),
                 wr_pt,
                 rd_card,
                 rd_wl,
-                rd_window: (60.0 * p.c_rbl * 0.55 / sim::ion(&rd_card, rd_wl, vdd)).max(6e-9),
+                rd_window: quantize_window(
+                    (60.0 * p.c_rbl * 0.55 / sim::ion(&rd_card, rd_wl, vdd)).max(6e-9),
+                    window_resolution,
+                ),
                 pull_up: flavor.pull_up_read(),
                 g_gate_leak: gate_leak(flavor),
                 c_sn: p.c_sn,
@@ -220,6 +317,20 @@ impl CharPlan {
                 leakage_w: leakage(tech, bank),
                 wr: None,
             })),
+        }
+    }
+
+    /// The `(write, read)` transient-window bit patterns this plan will
+    /// execute with (`None` for the analytical SRAM plan).  These are
+    /// exactly the bits [`batch::write_key`] / [`batch::read_key`]
+    /// group on, so two plans with equal bits share write (and, per
+    /// `pull_up` flavor, read) artifact executions — the benches and
+    /// tests use this to compute the expected grouped-ceiling call
+    /// counts without reaching into the executors.
+    pub fn window_bits(&self) -> Option<(u64, u64)> {
+        match &self.kind {
+            PlanKind::Analytical(_) => None,
+            PlanKind::Transient(t) => Some((t.wr_window.to_bits(), t.rd_window.to_bits())),
         }
     }
 
@@ -390,20 +501,32 @@ pub fn characterize(tech: &Tech, rt: &Runtime, bank: &Bank) -> crate::Result<Ban
 /// * Read batches are split by `pull_up` flavor inside the executor,
 ///   so mixed-flavor design lists are fine — the `read_op` homogeneity
 ///   `ensure` is a batcher invariant here, not a caller obligation.
-/// * Write/read points pack across designs that share a transient
-///   window (same-geometry sweeps, e.g. a write-VT retention axis);
-///   retention points *always* pack — the retention artifact has no
+/// * Write/read points pack across designs whose *quantized* windows
+///   coincide: each design's windows are snapped up to the
+///   `window_resolution` bucket grid ([`quantize_window`]), so a
+///   mixed-geometry size axis shares executions the way a
+///   same-geometry write-VT axis always did.  Pass
+///   [`DEFAULT_WINDOW_RESOLUTION`] for the standard packing/accuracy
+///   trade, or `0.0` for exact windows (designs then pack only when
+///   their windows are naturally bit-equal).
+/// * Retention points *always* pack — the retention artifact has no
 ///   per-batch window — so a sweep issues `ceil(points/batch)`
 ///   retention executions instead of one per design.
-/// * For a singleton list the emitted artifact calls are exactly those
-///   of [`characterize`], so results bitwise-match the single-design
-///   path (`tests/integration.rs` asserts this per flavor).
+/// * For a singleton list at resolution `0.0` the emitted artifact
+///   calls are exactly those of [`characterize`], so results
+///   bitwise-match the single-design path (`tests/integration.rs`
+///   asserts this per flavor); at nonzero resolution the deviation is
+///   bounded by the module-level quantization contract.
 pub fn characterize_all(
     tech: &Tech,
     rt: &SharedRuntime,
     banks: &[Bank],
+    window_resolution: f64,
 ) -> crate::Result<Vec<BankPerf>> {
-    let mut plans: Vec<CharPlan> = banks.iter().map(|b| CharPlan::new(tech, b)).collect();
+    let mut plans: Vec<CharPlan> = banks
+        .iter()
+        .map(|b| CharPlan::with_resolution(tech, b, window_resolution))
+        .collect();
 
     // ---- stage 1: write transients, packed across designs ------------
     let mut wr_jobs: Vec<batch::WriteJob> = Vec::new();
@@ -451,6 +574,43 @@ pub fn characterize_all(
         to += nt;
     }
     Ok(out)
+}
+
+/// The pinned-mux fine rows axis the quantization KPI benches and
+/// tests share: 32-bit words, `first_words + i * words_step` words
+/// each, column mux forced to 1 so rows == words.  On sg40, rows of
+/// roughly 150 and above keep both transient windows over their
+/// 4 ns / 6 ns floor clamps — below that the exact windows are
+/// already bit-equal and any packing is the clamp's doing, not the
+/// quantizer's — so callers pin the axis at `first_words >= 180`.
+pub fn quantization_axis(n: usize, first_words: usize, words_step: usize) -> Vec<Config> {
+    (0..n)
+        .map(|i| {
+            let mut cfg = Config::new(32, first_words + i * words_step, CellFlavor::GcSiSiNp);
+            cfg.mux_factor = Some(1);
+            cfg
+        })
+        .collect()
+}
+
+/// Distinct `(write, read)` execution-group counts over `banks` at
+/// `resolution`: write groups key on the quantized window bits, read
+/// groups on `(pull_up, window bits)` — exactly the homogeneity keys
+/// [`batch::write_key`] / [`batch::read_key`] use, so for group sizes
+/// under the artifact cap these are the per-engine execution counts a
+/// [`characterize_all`] sweep pays (the KPI the benches assert
+/// against the runtime's call counters).  Analytical SRAM plans emit
+/// no transient jobs and are skipped.
+pub fn window_group_counts(tech: &Tech, banks: &[Bank], resolution: f64) -> (usize, usize) {
+    let mut wr = std::collections::HashSet::new();
+    let mut rd = std::collections::HashSet::new();
+    for b in banks {
+        if let Some((w, r)) = CharPlan::with_resolution(tech, b, resolution).window_bits() {
+            wr.insert(w);
+            rd.insert((b.config.flavor.pull_up_read(), r));
+        }
+    }
+    (wr.len(), rd.len())
 }
 
 /// Partition `jobs` into their homogeneity groups, hand the groups to
@@ -667,6 +827,77 @@ mod tests {
             engines::ReadResult { t_rise: 1.1e-9, t_fall: 9e9, rbl_final: 0.5, sn_final: 0.62 },
         ];
         assert!(!plan.finish(&rd_bad, &ret).unwrap().functional);
+    }
+
+    #[test]
+    fn quantize_window_contract() {
+        use crate::util::rng::{check, Rng};
+        // resolution 0 (and degenerate inputs) are bitwise identity
+        for w in [4e-9, 6.123e-9, 1.0, f64::INFINITY, -1.0, 0.0] {
+            assert_eq!(quantize_window(w, 0.0).to_bits(), w.to_bits());
+            assert_eq!(quantize_window(w, -0.1).to_bits(), w.to_bits());
+            // sub-ulp grid (exponent would overflow i32): exact identity,
+            // not a panic or a hang
+            assert_eq!(quantize_window(w, 1e-9).to_bits(), w.to_bits());
+        }
+        check("quantized window is conservative within one step", 50, |rng: &mut Rng| {
+            let r = [0.02, 0.05, DEFAULT_WINDOW_RESOLUTION, 0.25][rng.below(4)];
+            let w = rng.log_range(1e-10, 1e-6);
+            let q = quantize_window(w, r);
+            assert!(q >= w, "not conservative: {q} < {w} at r={r}");
+            assert!(q <= w * (1.0 + r) * (1.0 + 1e-9), "{q} > one step above {w} at r={r}");
+            // buckets are fixed points: re-quantizing lands on the
+            // same bits (the grouping key is stable)
+            assert_eq!(quantize_window(q, r).to_bits(), q.to_bits(), "not idempotent at {w}");
+            // monotone: a longer window never gets a shorter bucket
+            let w2 = w * rng.range(1.0, 2.0);
+            assert!(quantize_window(w2, r) >= q);
+        });
+    }
+
+    #[test]
+    fn fine_size_axis_collapses_window_buckets() {
+        // the tentpole claim at plan level: a rows axis whose exact
+        // windows all differ shares buckets once quantized.  (The
+        // resolution-0 identity itself is carried by
+        // quantize_window_contract and the integration singleton test
+        // — CharPlan::new delegates to with_resolution(.., 0.0), so
+        // comparing the two here would be a tautology.)
+        let t = sg40();
+        let banks: Vec<_> = quantization_axis(5, 180, 4)
+            .iter()
+            .map(|cfg| compile(&t, cfg).unwrap())
+            .collect();
+        let exact: Vec<(u64, u64)> = banks
+            .iter()
+            .map(|b| CharPlan::new(&t, b).window_bits().unwrap())
+            .collect();
+        let quant: Vec<(u64, u64)> = banks
+            .iter()
+            .map(|b| {
+                CharPlan::with_resolution(&t, b, DEFAULT_WINDOW_RESOLUTION).window_bits().unwrap()
+            })
+            .collect();
+        for (&(we, re), &(wq, rq)) in exact.iter().zip(&quant) {
+            let (we, re) = (f64::from_bits(we), f64::from_bits(re));
+            let (wq, rq) = (f64::from_bits(wq), f64::from_bits(rq));
+            assert!(wq >= we && wq <= we * (1.0 + DEFAULT_WINDOW_RESOLUTION) * (1.0 + 1e-9));
+            assert!(rq >= re && rq <= re * (1.0 + DEFAULT_WINDOW_RESOLUTION) * (1.0 + 1e-9));
+        }
+        // above the floors every exact window is distinct — the
+        // pre-quantization batcher paid one execution per design here
+        let (wr_exact, rd_exact) = window_group_counts(&t, &banks, 0.0);
+        assert_eq!(wr_exact, banks.len(), "write floors clamp: axis too small");
+        assert_eq!(rd_exact, banks.len(), "read floors clamp: axis too small");
+        // rows 180..196 span under two 10 % steps, so the bucket grid
+        // holds the axis in <= 3 groups; quantization never adds any
+        let (wr_q, rd_q) = window_group_counts(&t, &banks, DEFAULT_WINDOW_RESOLUTION);
+        assert!(wr_q <= wr_exact && rd_q <= rd_exact);
+        assert!(
+            wr_q < banks.len() && rd_q < banks.len(),
+            "size axis did not collapse: wr {wr_q} rd {rd_q} of {}",
+            banks.len()
+        );
     }
 
     #[test]

@@ -4,9 +4,27 @@
 //! The paper's contribution is the compiler, so L3 coordination is the
 //! "thin driver" case: a bounded job queue feeding one executor thread
 //! that assembles batches up to the artifact batch size.  The batching
-//! logic is generic over the executor so its invariants (no job lost,
-//! results map back to submitters in order, batches never exceed the
-//! cap) are property-tested with a mock.
+//! logic is generic over the executor so its invariants are
+//! property-tested with a mock.
+//!
+//! # Batching invariants
+//!
+//! * **No job lost, no result misrouted** — every submitted job
+//!   produces exactly one result, delivered to its submitter's
+//!   receiver in submission order; a result-count mismatch from the
+//!   executor fails the whole batch rather than shifting results.
+//! * **The cap is a hard ceiling** — a worker batch never exceeds
+//!   [`BatchExec::max_batch`] (the artifact batch size from the
+//!   manifest); the executor may *subdivide* further (e.g. by
+//!   transient window or read flavor — see
+//!   [`crate::characterize::batch`]) but never sees more jobs than the
+//!   cap at once.
+//! * **Group boundaries are flush boundaries** —
+//!   [`Submitter::run_grouped`] flushes between groups, so no worker
+//!   batch spans two homogeneity groups and the execution count is
+//!   exactly `sum(ceil(group_len / cap))` over the groups — the
+//!   occupancy model the benches assert
+//!   ([`crate::characterize::batch::calls_for`]).
 //!
 //! Two spawn modes:
 //! * [`Coordinator::spawn`] — detached worker for `'static` executors

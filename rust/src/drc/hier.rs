@@ -17,20 +17,32 @@
 //!    neighbor configurations, so one representative pair is checked
 //!    per configuration and findings carry an `xN` multiplier.
 //!
+//! # Invariants
+//!
 //! Interactions are strictly pairwise cross-owner (intra-cell geometry
-//! is rule 1's job), and violations inside a repeated cell are reported
-//! once — the point of the mode.  Known approximations, conservative
-//! for the generators in this crate: `min_area` is evaluated per cell
-//! (a polygon meeting the rule only via merging across instances would
-//! over-report); exemption connectivity inside a seam window is
-//! limited to promoted rects; and the interior pass sees a cell's
-//! local rects without child context, so a conditional-rule exemption
-//! that only holds via child geometry (e.g. a parent-local contact
-//! whose same-construct poly pad lives inside a child) would
-//! over-report.  None of this crate's generators draw FEOL layers as
-//! parent-local rects, and the flat-vs-hier equivalence tests plus the
-//! perf bench's sanity assert guard the agreement on generated
-//! layouts.
+//! is rule 1's job), and violations inside a repeated cell are
+//! reported once — the point of the mode.  Seam findings carry an
+//! `xN` multiplier for the `N` instance pairs sharing the checked
+//! relative configuration, so the violation *count* stays comparable
+//! to the flat checker even though the work is per-configuration.
+//!
+//! # Conservative approximations
+//!
+//! Known approximations, each *conservative* (they can over-report,
+//! never under-report) for the generators in this crate:
+//!
+//! * `min_area` is evaluated per cell — a polygon meeting the rule
+//!   only via merging across instances would over-report;
+//! * exemption connectivity inside a seam window is limited to
+//!   promoted rects;
+//! * the interior pass sees a cell's local rects without child
+//!   context, so a conditional-rule exemption that only holds via
+//!   child geometry (e.g. a parent-local contact whose same-construct
+//!   poly pad lives inside a child) would over-report.
+//!
+//! None of this crate's generators draw FEOL layers as parent-local
+//! rects, and the flat-vs-hier equivalence tests plus the perf bench's
+//! sanity assert guard the agreement on generated layouts.
 
 use super::{check, check_window, Grid, Report};
 use crate::layout::{FlattenCache, Library, Rect};

@@ -20,7 +20,7 @@ pub struct Evaluated {
 }
 
 /// Thread-safe (config -> evaluation) memo keyed on
-/// [`ConfigKey`](crate::compiler::ConfigKey).  Shared by `optimize`,
+/// [`ConfigKey`].  Shared by `optimize`,
 /// shmoo sweeps and Pareto evaluation so a *settled* design point is
 /// never compiled or characterized twice.  There is deliberately no
 /// in-flight dedup: concurrent first misses on the same config may
@@ -33,6 +33,9 @@ pub struct EvalCache {
     map: Mutex<HashMap<ConfigKey, Evaluated>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    /// Window-quantization resolution (bit pattern) this cache is
+    /// bound to — see [`Self::bind_resolution`].
+    resolution_bits: Mutex<Option<u64>>,
 }
 
 impl EvalCache {
@@ -81,6 +84,39 @@ impl EvalCache {
             .unwrap_or_else(|p| p.into_inner())
             .entry(e.config.key())
             .or_insert(e);
+    }
+
+    /// Bind the cache to one window-quantization resolution.  Entries
+    /// record results *produced at* some resolution but are keyed on
+    /// [`ConfigKey`] alone, so a cache shared across resolutions would
+    /// silently serve one resolution's evaluation to the other; the
+    /// batched sweep entry points call this to turn that mistake into
+    /// an error.  The first bind wins; later binds must match bitwise.
+    ///
+    /// Scope: this guards the *batched* sweeps against each other.
+    /// Entries populated through [`Self::insert`] / [`Self::get_or_eval`]
+    /// (e.g. an [`evaluate_all_cached`] closure) carry whatever
+    /// resolution the caller's eval pipeline used — the cache cannot
+    /// see inside the closure, so mixing those with a batched sweep at
+    /// a different resolution remains the caller's responsibility.
+    pub fn bind_resolution(&self, window_resolution: f64) -> crate::Result<()> {
+        let mut bound = self.resolution_bits.lock().unwrap_or_else(|p| p.into_inner());
+        match *bound {
+            None => {
+                *bound = Some(window_resolution.to_bits());
+                Ok(())
+            }
+            Some(bits) => {
+                anyhow::ensure!(
+                    bits == window_resolution.to_bits(),
+                    "EvalCache is bound to window resolution {} but this sweep uses {}; \
+                     entries are keyed on the config only — use one cache per resolution",
+                    f64::from_bits(bits),
+                    window_resolution
+                );
+                Ok(())
+            }
+        }
     }
 
     /// Return the memoized evaluation of `cfg`, running `eval` on miss.
@@ -181,13 +217,26 @@ where
 /// Sweep workers never touch the `SharedRuntime` mutex themselves;
 /// only the coordinator executors do, once per batch.  Results
 /// preserve input order; repeated configs cost one evaluation.
+///
+/// `window_resolution` is the window-quantization bucket step
+/// ([`characterize::quantize_window`]): at
+/// [`characterize::DEFAULT_WINDOW_RESOLUTION`] a mixed-geometry
+/// (rows/cols) axis shares write/read artifact executions per bucket;
+/// at `0.0` results bitwise-match the per-design path.  The cache is
+/// keyed on [`ConfigKey`] only, so **one cache must not be shared
+/// across different resolutions** — a hit would silently return the
+/// other resolution's evaluation; [`EvalCache::bind_resolution`]
+/// enforces this (the first sweep binds the cache, a later mismatch
+/// errors).
 pub fn evaluate_all_batched_cached(
     tech: &Tech,
     rt: &SharedRuntime,
     configs: &[Config],
     workers: usize,
     cache: &EvalCache,
+    window_resolution: f64,
 ) -> crate::Result<Vec<Evaluated>> {
+    cache.bind_resolution(window_resolution)?;
     // distinct configs not yet cached, in first-appearance order
     let mut seen: std::collections::HashSet<ConfigKey> = std::collections::HashSet::new();
     let mut miss_cfgs: Vec<Config> = Vec::new();
@@ -203,7 +252,7 @@ pub fn evaluate_all_batched_cached(
     let banks: Vec<Bank> = par_map(&miss_cfgs, workers, |cfg| compile(tech, cfg))
         .into_iter()
         .collect::<crate::Result<Vec<_>>>()?;
-    let perfs = characterize::characterize_all(tech, rt, &banks)?;
+    let perfs = characterize::characterize_all(tech, rt, &banks, window_resolution)?;
     for (bank, perf) in banks.iter().zip(perfs) {
         cache.insert(Evaluated {
             config: bank.config.clone(),
@@ -231,8 +280,9 @@ pub fn evaluate_all_batched(
     rt: &SharedRuntime,
     configs: &[Config],
     workers: usize,
+    window_resolution: f64,
 ) -> crate::Result<Vec<Evaluated>> {
-    evaluate_all_batched_cached(tech, rt, configs, workers, &EvalCache::new())
+    evaluate_all_batched_cached(tech, rt, configs, workers, &EvalCache::new(), window_resolution)
 }
 
 /// Shmoo verdict for (config, demand).
@@ -404,18 +454,22 @@ fn opt_moves(si: usize, vi: usize) -> Vec<(usize, usize)> {
 /// misses); batching may prefetch a neighbor the serial walk would
 /// have skipped after an early improvement — that prefetch is the
 /// batching tradeoff, and it lands in the cache for later iterations.
+/// `window_resolution` follows the [`evaluate_all_batched_cached`]
+/// contract (the walk's internal cache sees one resolution only).
 pub fn optimize_batched(
     tech: &Tech,
     rt: &SharedRuntime,
     flavor: CellFlavor,
     weights: &CostWeights,
+    window_resolution: f64,
 ) -> crate::Result<(Evaluated, usize)> {
     let mut si = 1usize;
     let mut vi = 0usize;
     let cache = EvalCache::new();
     let workers = default_workers();
-    let eval_batch =
-        |cfgs: &[Config]| evaluate_all_batched_cached(tech, rt, cfgs, workers, &cache);
+    let eval_batch = |cfgs: &[Config]| {
+        evaluate_all_batched_cached(tech, rt, cfgs, workers, &cache, window_resolution)
+    };
     let mut best = eval_batch(&[opt_config(flavor, si, vi)])?.remove(0);
     let mut best_cost = cost(weights, &best);
     loop {
@@ -607,6 +661,15 @@ mod tests {
         let (hits, misses) = cache.stats();
         assert_eq!(misses, 2, "inserts count as paid evaluations");
         assert!(hits >= 2);
+    }
+
+    #[test]
+    fn eval_cache_rejects_mixed_resolutions() {
+        let cache = EvalCache::new();
+        cache.bind_resolution(0.1).unwrap();
+        cache.bind_resolution(0.1).unwrap();
+        let err = cache.bind_resolution(0.0);
+        assert!(err.is_err(), "a resolution mismatch must not silently alias the cache");
     }
 
     #[test]

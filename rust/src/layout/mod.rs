@@ -17,7 +17,8 @@ pub mod gds;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
-/// Axis-aligned rectangle on a layer (coordinates in nm, x0<x1, y0<y1).
+/// Axis-aligned rectangle on a layer (coordinates in nm, `x0 < x1`,
+/// `y0 < y1`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Rect {
     pub layer: usize,

@@ -4,7 +4,12 @@
 //!   opengcram compile  --word 32 --words 32 [--flavor gc-np|gc-nn|os|sram]
 //!                      [--wwlls] [--gds out.gds] [--spice out.sp]
 //!   opengcram char     ... (adds transient characterization; needs artifacts/)
-//!   opengcram dse      --level l1|l2 --machine h100|gt520m
+//!   opengcram dse      --level l1|l2 --machine h100|gt520m [--window-res 0.1]
+//!
+//! `--window-res` sets the transient window-quantization resolution
+//! (bucket step) of the batched sweep: larger packs mixed-geometry
+//! designs into fewer artifact executions, `0` reproduces the exact
+//! unquantized windows.  Default: `characterize::DEFAULT_WINDOW_RESOLUTION`.
 
 use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::runtime::{Runtime, SharedRuntime};
@@ -98,6 +103,9 @@ fn run() -> opengcram::Result<()> {
                 Some("l2") => workloads::CacheLevel::L2,
                 _ => workloads::CacheLevel::L1,
             };
+            let window_res: f64 = parse_flag(&args, "--window-res")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(characterize::DEFAULT_WINDOW_RESOLUTION);
             let mut table = report::Table::new(&["task", "demand MHz", "16", "32", "64", "96", "128"]);
             // batch-first sweep: compile in parallel, characterize in
             // shared padded artifact batches via the coordinator
@@ -106,6 +114,7 @@ fn run() -> opengcram::Result<()> {
                 &rt,
                 &dse::fig10_configs(CellFlavor::GcSiSiNp),
                 dse::default_workers(),
+                window_res,
             )?;
             for task in &workloads::TASKS {
                 let d = workloads::profile(task, level, machine);

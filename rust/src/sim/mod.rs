@@ -227,8 +227,8 @@ pub fn cross_time(times: &[f64], sig: &[f64], thresh: f64, rising: bool) -> Opti
 
 // Canonical templates (must match python/compile/circuits.py layouts).
 
-/// retention: free [sn]; stim [wwl, wbl, gnd, vth]; params
-/// [mwr(6), gleak.g, idist.i].
+/// retention: free `[sn]`; stim `[wwl, wbl, gnd, vth]`; params
+/// `[mwr(6), gleak.g, idist.i]`.
 pub fn retention_template() -> Template {
     Template {
         name: "retention",

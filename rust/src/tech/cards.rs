@@ -3,7 +3,7 @@
 //! These MUST mirror `python/compile/device.py` parameter-for-parameter;
 //! the cross-language parity is enforced by an integration test that
 //! executes the `idvg` HLO artifact and compares it with
-//! [`crate::sim::device::mos_ids`] over a voltage grid.
+//! [`crate::sim::mos_ids`] over a voltage grid.
 
 /// Polarity / channel material of a card.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

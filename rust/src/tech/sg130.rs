@@ -2,7 +2,7 @@
 //!
 //! Exists to *prove* the Fig. 1(a) porting methodology: the whole
 //! compiler (cells, banks, DRC, LVS, characterization) runs unmodified
-//! on a second node that differs only in data.  `examples/
+//! on a second node that differs only in data.  `rust/examples/
 //! porting_new_tech.rs` walks through the port step by step.
 
 use super::cards::{DeviceCard, DeviceKind};

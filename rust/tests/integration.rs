@@ -231,9 +231,10 @@ fn assert_perf_bits_eq(a: &characterize::BankPerf, b: &characterize::BankPerf, w
 }
 
 #[test]
-fn batched_singleton_matches_single_design_path_for_every_flavor() {
-    // the tentpole equivalence proof: characterize_all(&[bank]) issues
-    // exactly the artifact calls of characterize(bank), so results
+fn batched_singleton_at_resolution_zero_matches_single_design_path_for_every_flavor() {
+    // the equivalence contract: at window resolution 0 (exact,
+    // unquantized windows) characterize_all(&[bank]) issues exactly
+    // the artifact calls of characterize(bank), so results
     // bitwise-match for every cell flavor (including the analytical
     // SRAM reference path)
     let t = sg40();
@@ -246,7 +247,8 @@ fn batched_singleton_matches_single_design_path_for_every_flavor() {
         let bank = compile(&t, &Config::new(32, 32, flavor)).unwrap();
         let single = with_rt(|rt| characterize::characterize(&t, rt, &bank)).unwrap();
         let batched =
-            characterize::characterize_all(&t, shared(), std::slice::from_ref(&bank)).unwrap();
+            characterize::characterize_all(&t, shared(), std::slice::from_ref(&bank), 0.0)
+                .unwrap();
         assert_eq!(batched.len(), 1);
         assert_perf_bits_eq(&single, &batched[0], &format!("{flavor:?}"));
     }
@@ -274,7 +276,7 @@ fn mixed_flavor_batch_splits_reads_and_packs_retention() {
     let rt = SharedRuntime::load(&artifacts_dir()).expect("run `make artifacts` first");
     let read_before = rt.call_count("read");
     let ret_before = rt.call_count("retention");
-    let batched = characterize::characterize_all(&t, &rt, &banks).unwrap();
+    let batched = characterize::characterize_all(&t, &rt, &banks, 0.0).unwrap();
     let read_calls = rt.call_count("read") - read_before;
     let ret_calls = rt.call_count("retention") - ret_before;
     // every design's results still match its own single-design run
@@ -303,7 +305,7 @@ fn batched_sweep_matches_per_design_sweep() {
     ];
     let cache = dse::EvalCache::new();
     let batched =
-        dse::evaluate_all_batched_cached(&t, shared(), &configs, 2, &cache).unwrap();
+        dse::evaluate_all_batched_cached(&t, shared(), &configs, 2, &cache, 0.0).unwrap();
     assert_eq!(batched.len(), configs.len());
     assert_eq!(cache.len(), 3, "duplicate config evaluated twice");
     for (cfg, e) in configs.iter().zip(&batched) {
@@ -312,6 +314,61 @@ fn batched_sweep_matches_per_design_sweep() {
         let single = with_rt(|rt| characterize::characterize(&t, rt, &bank)).unwrap();
         assert_perf_bits_eq(&single, &e.perf, &format!("{cfg:?}"));
         assert_eq!(e.area_um2, bank.layout.total_area_um2());
+    }
+}
+
+#[test]
+fn window_quantization_packs_size_axis_within_deviation_bound() {
+    // the quantization accuracy contract (characterize module docs):
+    // on a mixed-geometry rows axis the default resolution collapses
+    // write/read executions to the bucket count, window-independent
+    // fields are bitwise unchanged, and window-dependent fields stay
+    // within one resolution step of the resolution-0 (exact) results
+    let t = sg40();
+    let res = characterize::DEFAULT_WINDOW_RESOLUTION;
+    // rows pinned >= 180 (mux 1) keep both transient windows above
+    // their floor clamps, so every design's exact windows differ and
+    // the exact axis genuinely pays one execution per design
+    let banks: Vec<_> = characterize::quantization_axis(5, 180, 4)
+        .iter()
+        .map(|cfg| compile(&t, cfg).unwrap())
+        .collect();
+    // a private runtime: the call-count deltas below must not see
+    // artifact executions from concurrently running tests
+    let rt = SharedRuntime::load(&artifacts_dir()).expect("run `make artifacts` first");
+    let wr0 = rt.call_count("write");
+    let rd0 = rt.call_count("read");
+    let exact = characterize::characterize_all(&t, &rt, &banks, 0.0).unwrap();
+    let exact_wr = rt.call_count("write") - wr0;
+    let exact_rd = rt.call_count("read") - rd0;
+    let wr1 = rt.call_count("write");
+    let rd1 = rt.call_count("read");
+    let quant = characterize::characterize_all(&t, &rt, &banks, res).unwrap();
+    let quant_wr = rt.call_count("write") - wr1;
+    let quant_rd = rt.call_count("read") - rd1;
+    // the packing claim: the exact axis pays one write execution per
+    // design (every window differs); the quantized axis pays the
+    // grouped ceiling, which is strictly fewer on this fine axis
+    assert_eq!(exact_wr as usize, banks.len(), "exact rows axis should not share windows");
+    assert!(
+        quant_wr < exact_wr && quant_rd < exact_rd,
+        "quantization did not reduce executions: wr {exact_wr}->{quant_wr} rd {exact_rd}->{quant_rd}"
+    );
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-300);
+    for ((e, q), bank) in exact.iter().zip(&quant).zip(&banks) {
+        let what = format!("{:?}", bank.config);
+        // window-independent fields: bitwise identical
+        assert_eq!(e.leakage_w.to_bits(), q.leakage_w.to_bits(), "{what}: leakage");
+        assert_eq!(e.t_decoder_s.to_bits(), q.t_decoder_s.to_bits(), "{what}: t_decoder");
+        assert_eq!(e.e_read_j.to_bits(), q.e_read_j.to_bits(), "{what}: e_read");
+        // window-dependent fields: within one resolution step
+        assert!(rel(q.f_read_hz, e.f_read_hz) <= res, "{what}: f_read {} vs {}", q.f_read_hz, e.f_read_hz);
+        assert!(rel(q.f_write_hz, e.f_write_hz) <= res, "{what}: f_write {} vs {}", q.f_write_hz, e.f_write_hz);
+        assert!(rel(q.f_op_hz, e.f_op_hz) <= res, "{what}: f_op {} vs {}", q.f_op_hz, e.f_op_hz);
+        assert!(rel(q.bandwidth_bps, e.bandwidth_bps) <= res, "{what}: bandwidth");
+        assert!(rel(q.retention_s, e.retention_s) <= res, "{what}: retention {} vs {}", q.retention_s, e.retention_s);
+        assert!((q.stored_one_v - e.stored_one_v).abs() < 0.02, "{what}: stored1 {} vs {}", q.stored_one_v, e.stored_one_v);
+        assert_eq!(e.functional, q.functional, "{what}: functional verdict flipped");
     }
 }
 
