@@ -17,7 +17,7 @@ use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
 use opengcram::util::bench;
-use opengcram::{characterize, dse, workloads};
+use opengcram::{characterize, compose, dse, workloads};
 use std::path::Path;
 
 fn main() {
@@ -112,6 +112,40 @@ fn main() {
         "sizeaxis_designs_per_write_call,{:.2}",
         axis_cfgs.len() as f64 / wr_calls.max(1) as f64
     );
+
+    // ---- cross-flavor composition mega-sweep ----------------------------
+    // the compose subsystem's KPI over real artifacts: all four
+    // flavors' designs go through ONE evaluate_all_batched_cached pass
+    // and their retention points share one grouped-ceiling batch
+    // sequence — not per-flavor x per-design executions
+    let grid = compose::design_grid();
+    let transient = grid.iter().filter(|c| c.flavor.is_gc()).count();
+    let ret_before = rt.call_count("retention");
+    let comp_cache = dse::EvalCache::new();
+    let comp_evals =
+        dse::evaluate_all_batched_cached(&tech, &rt, &grid, workers, &comp_cache, window_res)
+            .unwrap();
+    assert_eq!(comp_evals.len(), grid.len());
+    let ret_calls = (rt.call_count("retention") - ret_before) as usize;
+    let want = batch::calls_for(transient, ret_cap);
+    assert_eq!(
+        ret_calls, want,
+        "cross-flavor sweep issued {ret_calls} retention executions for {transient} transient \
+         designs; the shared batch sequence guarantees the grouped ceiling {want}"
+    );
+    println!("compose_retention_calls,{ret_calls}");
+    println!(
+        "compose_retention_occupancy,{:.4}",
+        transient as f64 / (ret_calls.max(1) * ret_cap) as f64
+    );
+    // the composition itself rides the same cache: selecting for a
+    // machine pays zero additional pipeline evaluations
+    let mut spec = compose::ComposeSpec::new(&workloads::H100);
+    spec.window_resolution = window_res;
+    let comp = compose::compose_cached(&tech, &rt, &spec, &comp_cache).unwrap();
+    assert_eq!(comp.cache_misses, 0, "composition re-ran the sweep instead of reusing the cache");
+    let served = comp.per_demand.iter().filter(|s| s.choice.is_some()).count();
+    println!("compose_h100_demands_served,{served}/{}", comp.per_demand.len());
 
     // ---- batched vs legacy-mutex sweep (both cold) ----------------------
     let legacy_eval = |cfg: &Config| -> opengcram::Result<dse::Evaluated> {

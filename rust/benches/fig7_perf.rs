@@ -6,7 +6,7 @@ use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
 use opengcram::util::bench;
-use opengcram::characterize;
+use opengcram::{characterize, report};
 use std::path::Path;
 
 fn main() {
@@ -40,9 +40,9 @@ fn main() {
     println!("config,flavor,f_op_mhz,bw_gbps,leak_nw,stages");
     for ((label, name, stages), p) in labels.iter().zip(&perfs) {
         println!(
-            "{label},{name},{:.1},{:.2},{:.2},{stages}",
+            "{label},{name},{:.1},{},{:.2},{stages}",
             p.f_op_hz / 1e6,
-            p.bandwidth_bps / 1e9,
+            report::gbps(p.bandwidth_bps),
             p.leakage_w * 1e9,
         );
     }

@@ -155,6 +155,9 @@ fn main() {
     // ---- window-quantization packing (runtime-free; runs in CI smoke) ---
     quantization_packing_records(&tech, &mut records);
 
+    // ---- cross-flavor composition plan (runtime-free; runs in CI smoke) -
+    compose_packing_records(&tech, smoke, &mut records);
+
     // ---- L1/L2 via PJRT + native sim baseline (skipped in smoke) --------
     if smoke {
         println!("# PERF_SMOKE: skipping XLA and native-sim benches");
@@ -270,6 +273,56 @@ fn quantization_packing_records(
     // throughput column records designs-per-write-group so the packing
     // trajectory lands in BENCH_perf.json
     records.push((s, n_designs as f64 / wr_groups as f64));
+}
+
+/// Tentpole KPI for the composition engine's cross-flavor mega-sweep,
+/// checked without any runtime: all flavors' retention points must
+/// pack into one shared grouped-ceiling batch sequence — not
+/// per-flavor x per-design executions — and the mock coordinator must
+/// agree with the plan arithmetic.  The packing arithmetic is
+/// size-independent, so the bench caps the grid (32 under smoke, 64
+/// otherwise) rather than re-compiling 128x128 banks every iteration;
+/// the full grid is exercised by `fig10_shmoo` and the integration
+/// tests.
+fn compose_packing_records(
+    tech: &opengcram::tech::Tech,
+    smoke: bool,
+    records: &mut Vec<(bench::Sample, f64)>,
+) {
+    use opengcram::compose;
+    let cap = 256; // the AOT artifacts' manifest batch size
+    let max_words = if smoke { 32 } else { 64 };
+    let grid: Vec<Config> = compose::design_grid()
+        .into_iter()
+        .filter(|c| c.word_size <= max_words)
+        .collect();
+    let res = characterize::DEFAULT_WINDOW_RESOLUTION;
+    let plan_cell = std::cell::RefCell::new(None);
+    let s = bench::run("compose_crossflavor_plan", 0.05, || {
+        *plan_cell.borrow_mut() = Some(compose::plan(tech, &grid, res, cap).unwrap());
+    });
+    let plan = plan_cell.into_inner().expect("bench ran at least once");
+    assert!(plan.transient_flavors >= 3, "all GC flavors must contribute transient points");
+    assert_eq!(
+        plan.retention_calls,
+        batch::calls_for(plan.transient, cap),
+        "cross-flavor retention must pay the grouped ceiling over ALL flavors' points"
+    );
+    assert!(
+        plan.retention_calls < plan.retention_calls_per_flavor,
+        "shared sweep ({}) must beat per-flavor batching ({})",
+        plan.retention_calls,
+        plan.retention_calls_per_flavor
+    );
+    let mock = compose::mock_retention_calls(plan.transient, cap).unwrap();
+    assert_eq!(mock, plan.retention_calls, "mock coordinator diverged from the plan");
+    println!("compose_retention_calls,{}", plan.retention_calls);
+    println!("compose_retention_calls_per_flavor,{}", plan.retention_calls_per_flavor);
+    println!("compose_write_groups,{}", plan.write_groups);
+    println!("compose_read_groups,{}", plan.read_groups);
+    // throughput column records transient designs per retention call
+    // so the cross-flavor packing trajectory lands in BENCH_perf.json
+    records.push((s, plan.transient as f64 / plan.retention_calls.max(1) as f64));
 }
 
 fn xla_benches(

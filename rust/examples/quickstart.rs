@@ -4,7 +4,7 @@ use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
 use opengcram::util::eng;
-use opengcram::characterize;
+use opengcram::{characterize, report};
 use std::path::Path;
 
 fn main() -> opengcram::Result<()> {
@@ -29,9 +29,9 @@ fn main() -> opengcram::Result<()> {
     let perf =
         characterize::characterize_all(&tech, &rt, std::slice::from_ref(&bank), 0.0)?.remove(0);
     println!(
-        "f_op {}  bandwidth {:.1} Gb/s  retention {}  leakage {}  functional {}",
+        "f_op {}  bandwidth {} Gb/s  retention {}  leakage {}  functional {}",
         eng(perf.f_op_hz, "Hz"),
-        perf.bandwidth_bps / 1e9,
+        report::gbps(perf.bandwidth_bps),
         eng(perf.retention_s, "s"),
         eng(perf.leakage_w, "W"),
         perf.functional

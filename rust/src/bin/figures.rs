@@ -8,7 +8,7 @@ use opengcram::layout::{cells, Library};
 use opengcram::runtime::{engines, SharedRuntime};
 use opengcram::tech::{sg40, LayerRole};
 use opengcram::util::eng;
-use opengcram::{characterize, dse, report, workloads};
+use opengcram::{characterize, compose, dse, report, workloads};
 use std::path::Path;
 
 fn main() -> opengcram::Result<()> {
@@ -94,7 +94,7 @@ fn main() -> opengcram::Result<()> {
             label.clone(),
             flavor.clone(),
             report::mhz(perf.f_op_hz),
-            format!("{:.1}", perf.bandwidth_bps / 1e9),
+            report::gbps(perf.bandwidth_bps),
             format!("{:.1}", perf.leakage_w * 1e9),
             format!("{}", bank.delay_chain_stages),
         ]);
@@ -184,6 +184,33 @@ fn main() -> opengcram::Result<()> {
         println!("-- {:?} on {} --\n{}", level, machine.name, t10.render());
     }
     println!("P=pass f=frequency r=retention x=margin");
+
+    // ---- heterogeneous composition (GainSight follow-on) ---------------------
+    println!("\n== Composition: workload-driven heterogeneous bank selection ==");
+    // one cross-flavor mega-sweep shared by both machines: the second
+    // composition is served entirely from the EvalCache (the demands
+    // change the selection, not the sweep)
+    let comp_cache = dse::EvalCache::new();
+    for m in [&workloads::H100, &workloads::GT520M] {
+        let mut spec = compose::ComposeSpec::new(m);
+        // canonical figure output stays bitwise-exact
+        spec.window_resolution = 0.0;
+        let c = compose::compose_cached(&tech, &rt, &spec, &comp_cache)?;
+        println!("-- {} --\n{}", m.name, compose::table(&c));
+        match (c.total_area_um2(), c.total_leakage_w()) {
+            (Some(area), Some(leak)) => println!(
+                "portfolio: {} um^2, {} leakage ({} evals, {} cache hits)\n",
+                report::um2(area),
+                eng(leak, "W"),
+                c.cache_misses,
+                c.cache_hits
+            ),
+            _ => println!(
+                "portfolio: some level has no feasible single bank ({} evals, {} cache hits)\n",
+                c.cache_misses, c.cache_hits
+            ),
+        }
+    }
 
     // ---- bank LVS/DRC status (Fig. 5 claim) ----------------------------------
     println!("\n== Fig. 5: DRC/LVS status of a generated 32x32 bank array ==");

@@ -54,6 +54,11 @@
 
 pub mod batch;
 
+/// Re-exported at the module root: the occupancy model is part of the
+/// characterization contract, and the composition layer
+/// ([`crate::compose`]) computes its packing plans from it.
+pub use batch::calls_for;
+
 use crate::compiler::{Bank, CellFlavor, Config};
 use crate::coordinator;
 use crate::runtime::{engines, Runtime, SharedRuntime};

@@ -1,0 +1,184 @@
+//! Shared command-line parsing for the `opengcram` binary (hand-rolled
+//! args; clap is not in the offline registry).
+//!
+//! All value parsing is **strict**: a flag whose value does not parse
+//! (`--word abc`, `--window-res fast`) or an unknown enumerated name
+//! (`--flavor gc-pn`, `--machine a100`) is a hard error carrying the
+//! offending string — never a silent fallback to a default.  Defaults
+//! apply only when the flag is absent.  (Regression: the pre-PR-4 CLI
+//! swallowed bad numbers via `.and_then(parse().ok()).unwrap_or(..)`
+//! and mapped any unknown flavor to `GcSiSiNp`.)
+//!
+//! Every subcommand — including `compose` — parses through these
+//! helpers, so new flags inherit the strictness for free.
+
+use crate::compiler::CellFlavor;
+use crate::workloads::{self, CacheLevel, Machine};
+
+/// The value following `name`, if the flag is present.
+pub fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Whether the bare flag `name` is present.
+pub fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+/// Parse `name`'s value if present; an absent flag yields `default`,
+/// an unparseable value is a hard error naming the flag and the
+/// offending string.
+pub fn parse_or<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> crate::Result<T> {
+    match flag_value(args, name) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "invalid value for {name}: '{v}' is not a valid {}",
+                std::any::type_name::<T>()
+            )
+        }),
+    }
+}
+
+/// Parse a `--flavor` spelling; unknown names are hard errors.
+pub fn parse_flavor(s: &str) -> crate::Result<CellFlavor> {
+    match s {
+        "gc-np" => Ok(CellFlavor::GcSiSiNp),
+        "gc-nn" => Ok(CellFlavor::GcSiSiNn),
+        "os" => Ok(CellFlavor::GcOsOs),
+        "sram" => Ok(CellFlavor::Sram6t),
+        _ => anyhow::bail!("unknown --flavor '{s}' (expected gc-np|gc-nn|os|sram)"),
+    }
+}
+
+/// The `--flavor` flag: absent yields `default`, present-but-unknown
+/// errors (it used to map to `GcSiSiNp` silently).
+pub fn parse_flavor_flag(args: &[String], default: CellFlavor) -> crate::Result<CellFlavor> {
+    match flag_value(args, "--flavor") {
+        None => Ok(default),
+        Some(s) => parse_flavor(&s),
+    }
+}
+
+/// The `--flavor` spelling of a flavor (round-trips [`parse_flavor`]);
+/// the composition report prints these.
+pub fn flavor_name(f: CellFlavor) -> &'static str {
+    match f {
+        CellFlavor::GcSiSiNp => "gc-np",
+        CellFlavor::GcSiSiNn => "gc-nn",
+        CellFlavor::GcOsOs => "os",
+        CellFlavor::Sram6t => "sram",
+    }
+}
+
+/// The `--machine` flag (default H100); unknown names error.
+pub fn parse_machine(args: &[String]) -> crate::Result<&'static Machine> {
+    match flag_value(args, "--machine").as_deref() {
+        None | Some("h100") => Ok(&workloads::H100),
+        Some("gt520m") => Ok(&workloads::GT520M),
+        Some(other) => anyhow::bail!("unknown --machine '{other}' (expected h100|gt520m)"),
+    }
+}
+
+/// The `--level` flag (default L1); unknown names error.
+pub fn parse_level(args: &[String]) -> crate::Result<CacheLevel> {
+    match flag_value(args, "--level").as_deref() {
+        None | Some("l1") => Ok(CacheLevel::L1),
+        Some("l2") => Ok(CacheLevel::L2),
+        Some(other) => anyhow::bail!("unknown --level '{other}' (expected l1|l2)"),
+    }
+}
+
+/// The `--weights delay,area,power` flag: three comma-separated
+/// numbers, each validated individually.
+pub fn parse_weights(
+    args: &[String],
+    default: (f64, f64, f64),
+) -> crate::Result<(f64, f64, f64)> {
+    let s = match flag_value(args, "--weights") {
+        None => return Ok(default),
+        Some(s) => s,
+    };
+    let parts: Vec<&str> = s.split(',').collect();
+    anyhow::ensure!(
+        parts.len() == 3,
+        "invalid --weights '{s}': expected three comma-separated numbers (delay,area,power)"
+    );
+    let mut w = [0.0f64; 3];
+    for (slot, part) in w.iter_mut().zip(&parts) {
+        *slot = part
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --weights component '{part}' in '{s}'"))?;
+    }
+    Ok((w[0], w[1], w[2]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn numeric_flags_parse_strictly() {
+        let args = a(&["--word", "64", "--words", "abc"]);
+        assert_eq!(parse_or(&args, "--word", 32usize).unwrap(), 64);
+        assert_eq!(parse_or(&args, "--missing", 7usize).unwrap(), 7);
+        // regression: '--words abc' used to fall back silently to 32
+        let err = parse_or::<usize>(&args, "--words", 32).unwrap_err();
+        assert!(err.to_string().contains("abc"), "{err}");
+        assert!(err.to_string().contains("--words"), "{err}");
+        let err = parse_or::<f64>(&a(&["--window-res", "fast"]), "--window-res", 0.1).unwrap_err();
+        assert!(err.to_string().contains("fast"), "{err}");
+        assert_eq!(parse_or(&a(&["--window-res", "0.25"]), "--window-res", 0.1).unwrap(), 0.25);
+    }
+
+    #[test]
+    fn flavor_parsing_rejects_unknown_names() {
+        for f in [
+            CellFlavor::Sram6t,
+            CellFlavor::GcSiSiNp,
+            CellFlavor::GcSiSiNn,
+            CellFlavor::GcOsOs,
+        ] {
+            assert_eq!(parse_flavor(flavor_name(f)).unwrap(), f, "round-trip {f:?}");
+        }
+        // regression: any unknown string used to map to GcSiSiNp
+        let err = parse_flavor("gc-pn").unwrap_err();
+        assert!(err.to_string().contains("gc-pn"), "{err}");
+        assert!(parse_flavor("").is_err());
+        // absent flag -> default; present + unknown -> error
+        assert_eq!(parse_flavor_flag(&a(&[]), CellFlavor::GcOsOs).unwrap(), CellFlavor::GcOsOs);
+        assert!(parse_flavor_flag(&a(&["--flavor", "6t"]), CellFlavor::GcSiSiNp).is_err());
+    }
+
+    #[test]
+    fn machine_level_weights_parse_strictly() {
+        assert_eq!(parse_machine(&a(&[])).unwrap().name, "H100");
+        assert_eq!(parse_machine(&a(&["--machine", "gt520m"])).unwrap().name, "GT520M");
+        assert!(parse_machine(&a(&["--machine", "a100"])).is_err());
+        assert_eq!(parse_level(&a(&[])).unwrap(), CacheLevel::L1);
+        assert_eq!(parse_level(&a(&["--level", "l2"])).unwrap(), CacheLevel::L2);
+        assert!(parse_level(&a(&["--level", "l3"])).is_err());
+        assert_eq!(parse_weights(&a(&[]), (1.0, 0.5, 0.5)).unwrap(), (1.0, 0.5, 0.5));
+        assert_eq!(
+            parse_weights(&a(&["--weights", "2, 1, 0.25"]), (1.0, 0.5, 0.5)).unwrap(),
+            (2.0, 1.0, 0.25)
+        );
+        let err = parse_weights(&a(&["--weights", "2,x,3"]), (1.0, 0.5, 0.5)).unwrap_err();
+        assert!(err.to_string().contains('x'), "{err}");
+        assert!(parse_weights(&a(&["--weights", "1,2"]), (1.0, 0.5, 0.5)).is_err());
+    }
+
+    #[test]
+    fn flag_scanning_basics() {
+        let args = a(&["compile", "--word", "16", "--wwlls"]);
+        assert_eq!(flag_value(&args, "--word").as_deref(), Some("16"));
+        assert_eq!(flag_value(&args, "--words"), None);
+        assert!(has_flag(&args, "--wwlls"));
+        assert!(!has_flag(&args, "--gds"));
+    }
+}

@@ -1,0 +1,647 @@
+//! Workload-driven heterogeneous composition: close the loop from the
+//! Table-I cache demands to a selected per-level bank portfolio.
+//!
+//! The paper's end goal is "performance-tailored memory blocks that
+//! meet diverse application requirements", and the follow-on work
+//! (GainSight; heterogeneous memory design exploration with a gain
+//! cell compiler) shows the payoff: a *different* GCRAM flavor per
+//! cache level and per workload.  This module is that layer:
+//!
+//! 1. profile the full L1/L2 demand grid of a machine
+//!    ([`crate::workloads::all_demands`] plus the per-level
+//!    [`crate::workloads::envelope`]);
+//! 2. run **one cross-flavor mega-sweep** — every flavor in
+//!    [`FLAVORS`] over the co-optimizer's size/VT grid
+//!    ([`crate::dse::grid_configs`]) — through a single shared
+//!    [`EvalCache`] and one
+//!    [`dse::evaluate_all_batched_cached`] pass, so all flavors'
+//!    transient points pack into shared padded artifact batches
+//!    (retention always packs; write/read pack per window bucket);
+//! 3. per demand: the feasible set
+//!    ([`dse::shmoo_verdict`] passes), a multi-objective Pareto front
+//!    over area/leakage/f_op among *feasible points only*
+//!    ([`pareto_area_leak_fop`]), and a minimum-cost selection under
+//!    [`CostWeights`] whose frequency/lifetime floors are the demand
+//!    itself.
+//!
+//! The result is a [`Composition`]: per (task, level) the chosen
+//! flavor/geometry/VT with its margins, per cache level the envelope
+//! choice, and portfolio area/leakage totals.
+//!
+//! # Packing model (the KPI)
+//!
+//! Because the whole grid goes through one batched sweep, the sweep
+//! issues `ceil(total transient points / batch_cap)` retention
+//! executions ([`crate::characterize::calls_for`]) — **not**
+//! per-flavor x per-design.  [`plan`] computes that packing plan
+//! without any runtime (compile + `CharPlan` window bits only), and
+//! [`mock_retention_calls`] drives the same grouping through a
+//! counting mock coordinator executor — the CI "mock-coordinator"
+//! smoke mode (`opengcram compose --plan`) asserts both with no
+//! artifacts on disk.  `benches/fig10_shmoo.rs` asserts the same KPI
+//! against the real runtime's call counters.
+//!
+//! # Determinism
+//!
+//! The grid order (flavor-major, then size x VT row-major), the
+//! order-preserving batched sweep, and first-minimum tie-breaking make
+//! the selection a pure function of the evaluated figures; at window
+//! resolution `0` those are bitwise-reproducible, so the composition
+//! is pinned by `tests/integration.rs`.
+
+use crate::characterize::{self, calls_for};
+use crate::compiler::{compile, CellFlavor, Config, ConfigKey};
+use crate::coordinator::{BatchExec, Coordinator};
+use crate::dse::{self, CostWeights, EvalCache, Evaluated};
+use crate::report;
+use crate::runtime::SharedRuntime;
+use crate::tech::Tech;
+use crate::util::eng;
+use crate::workloads::{self, CacheLevel, Demand, Machine};
+use std::collections::{BTreeMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Every cell flavor the composition engine sweeps, in grid order.
+pub const FLAVORS: [CellFlavor; 4] = [
+    CellFlavor::GcSiSiNp,
+    CellFlavor::GcSiSiNn,
+    CellFlavor::GcOsOs,
+    CellFlavor::Sram6t,
+];
+
+/// The cross-flavor design grid: [`dse::grid_configs`] (size x
+/// write-VT) per gain-cell flavor, sizes only for the 6T SRAM baseline
+/// (the VT axis modulates the *write transistor*, which SRAM does not
+/// have — keeping the overrides would add identical-by-construction
+/// design points).  Deterministic order: [`FLAVORS`]-major.
+pub fn design_grid() -> Vec<Config> {
+    let mut out = Vec::new();
+    for flavor in FLAVORS {
+        let grid = dse::grid_configs(flavor);
+        if flavor == CellFlavor::Sram6t {
+            out.extend(grid.into_iter().filter(|c| c.write_vt.is_none()));
+        } else {
+            out.extend(grid);
+        }
+    }
+    out
+}
+
+/// Composition request: the machine whose demands to serve, the sweep
+/// resolution, and the selection cost weights (the frequency/lifetime
+/// floors come from each demand, not from here).
+#[derive(Debug, Clone)]
+pub struct ComposeSpec {
+    pub machine: &'static Machine,
+    /// Window-quantization resolution of the mega-sweep
+    /// ([`characterize::DEFAULT_WINDOW_RESOLUTION`] by default; `0.0`
+    /// for bitwise-reproducible selections).
+    pub window_resolution: f64,
+    pub w_delay: f64,
+    pub w_area: f64,
+    pub w_power: f64,
+    /// Parallel-compile fan-out of the sweep.
+    pub workers: usize,
+}
+
+impl ComposeSpec {
+    pub fn new(machine: &'static Machine) -> ComposeSpec {
+        ComposeSpec {
+            machine,
+            window_resolution: characterize::DEFAULT_WINDOW_RESOLUTION,
+            w_delay: 1.0,
+            w_area: 0.5,
+            w_power: 0.5,
+            workers: dse::default_workers(),
+        }
+    }
+}
+
+/// The winning design point for one demand.
+#[derive(Debug, Clone)]
+pub struct Chosen {
+    pub eval: Evaluated,
+    /// [`dse::cost`] under the demand-floored weights (finite).
+    pub cost: f64,
+    /// `f_op / demanded read frequency` (>= 1 for a feasible choice).
+    pub freq_margin: f64,
+    /// `retention / demanded lifetime` (>= 1; infinite for SRAM).
+    pub retention_margin: f64,
+}
+
+/// Feasible-set / front / selection summary for one demand.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    pub demand: Demand,
+    /// True for the per-level envelope rows (the demand's `task` then
+    /// names only the frequency-critical task).
+    pub envelope: bool,
+    /// Number of grid points passing the shmoo verdict.
+    pub feasible: usize,
+    /// Size of the area/leakage/f_op Pareto front among feasible points.
+    pub front: usize,
+    /// Minimum-cost point on that front; `None` iff nothing is feasible.
+    pub choice: Option<Chosen>,
+}
+
+/// The heterogeneous composition report for one machine.
+#[derive(Debug, Clone)]
+pub struct Composition {
+    pub machine: &'static str,
+    /// Per (task, level) selections in [`workloads::all_demands`] order.
+    pub per_demand: Vec<Selection>,
+    /// Per cache level (L1 then L2): the envelope selection — one bank
+    /// that serves every task at that level.
+    pub per_level: Vec<Selection>,
+    /// Distinct design points in the shared sweep cache.
+    pub distinct: usize,
+    /// Cache hits / underlying pipeline evaluations paid by *this*
+    /// composition (a second composition over a shared cache pays 0).
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+}
+
+impl Composition {
+    /// Portfolio area over the per-level envelope choices; `None` when
+    /// some level found no feasible single bank.
+    pub fn total_area_um2(&self) -> Option<f64> {
+        self.per_level.iter().map(|s| s.choice.as_ref().map(|c| c.eval.area_um2)).sum()
+    }
+
+    /// Portfolio leakage over the per-level envelope choices.
+    pub fn total_leakage_w(&self) -> Option<f64> {
+        self.per_level.iter().map(|s| s.choice.as_ref().map(|c| c.eval.perf.leakage_w)).sum()
+    }
+}
+
+/// The composition-layer Pareto front: minimize area and leakage,
+/// maximize f_op.  Delegates to [`dse::pareto_front`], which also
+/// drops electrically non-functional and NaN-fielded points — the
+/// selection must never propagate an infeasible survivor into chosen
+/// hardware.
+pub fn pareto_area_leak_fop(points: &[Evaluated]) -> Vec<usize> {
+    dse::pareto_front(
+        points,
+        &[dse::objectives::area, dse::objectives::leakage, dse::objectives::neg_f_op],
+    )
+}
+
+/// Feasible set -> front -> minimum-cost selection for one demand.
+/// Deterministic: ties in cost resolve to the earliest front index,
+/// and the front preserves `evals` order.
+pub fn select_for(
+    evals: &[Evaluated],
+    d: &Demand,
+    w_delay: f64,
+    w_area: f64,
+    w_power: f64,
+) -> Selection {
+    let feasible: Vec<Evaluated> = evals
+        .iter()
+        .filter(|e| dse::shmoo_verdict(e, d).pass())
+        .cloned()
+        .collect();
+    let front = pareto_area_leak_fop(&feasible);
+    let w = CostWeights {
+        w_delay,
+        w_area,
+        w_power,
+        f_min_hz: d.read_freq_hz,
+        t_retain_min_s: d.lifetime_s,
+    };
+    let choice = front
+        .iter()
+        .map(|&i| (i, dse::cost(&w, &feasible[i])))
+        .filter(|(_, c)| c.is_finite())
+        .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite costs compare"))
+        .map(|(i, c)| {
+            let e = feasible[i].clone();
+            Chosen {
+                freq_margin: e.perf.f_op_hz / d.read_freq_hz,
+                retention_margin: e.perf.retention_s / d.lifetime_s,
+                cost: c,
+                eval: e,
+            }
+        });
+    Selection {
+        demand: *d,
+        envelope: false,
+        feasible: feasible.len(),
+        front: front.len(),
+        choice,
+    }
+}
+
+/// Compose with a throwaway sweep cache — see [`compose_cached`].
+pub fn compose(tech: &Tech, rt: &SharedRuntime, spec: &ComposeSpec) -> crate::Result<Composition> {
+    compose_cached(tech, rt, spec, &EvalCache::new())
+}
+
+/// Run the cross-flavor mega-sweep through `cache` (one
+/// [`dse::evaluate_all_batched_cached`] pass over [`design_grid`])
+/// and select per-demand and per-level banks for `spec.machine`.
+/// Passing one cache to several compositions (e.g. H100 then GT520M —
+/// `bin/figures` does this) re-uses every evaluation: the demands only
+/// change the selection, not the sweep.  The cache binds to
+/// `spec.window_resolution` on first use ([`EvalCache::bind_resolution`]).
+pub fn compose_cached(
+    tech: &Tech,
+    rt: &SharedRuntime,
+    spec: &ComposeSpec,
+    cache: &EvalCache,
+) -> crate::Result<Composition> {
+    let configs = design_grid();
+    let (h0, m0) = cache.stats();
+    let evals = dse::evaluate_all_batched_cached(
+        tech,
+        rt,
+        &configs,
+        spec.workers,
+        cache,
+        spec.window_resolution,
+    )?;
+    let (h1, m1) = cache.stats();
+    let mut per_demand = Vec::new();
+    for d in workloads::all_demands(spec.machine) {
+        per_demand.push(select_for(&evals, &d, spec.w_delay, spec.w_area, spec.w_power));
+    }
+    let mut per_level = Vec::new();
+    for level in [CacheLevel::L1, CacheLevel::L2] {
+        let env = workloads::envelope(level, spec.machine);
+        let mut s = select_for(&evals, &env, spec.w_delay, spec.w_area, spec.w_power);
+        s.envelope = true;
+        per_level.push(s);
+    }
+    Ok(Composition {
+        machine: spec.machine.name,
+        per_demand,
+        per_level,
+        distinct: cache.len(),
+        cache_hits: h1 - h0,
+        cache_misses: m1 - m0,
+    })
+}
+
+/// Runtime-free packing plan of the cross-flavor mega-sweep, computed
+/// from the designs' own `CharPlan` window bits (compile + plan only;
+/// no artifacts needed).  `retention_cap` is the retention artifact's
+/// manifest batch size (256 for the shipped artifacts).
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    /// Distinct design points after [`ConfigKey`] dedup.
+    pub distinct: usize,
+    /// Transient-backed (gain-cell) design points: one write + one
+    /// retention point and two read points each.
+    pub transient: usize,
+    /// Flavors contributing transient points.
+    pub transient_flavors: usize,
+    /// Write/read execution groups at the plan's resolution
+    /// ([`characterize::window_group_counts`]).
+    pub write_groups: usize,
+    pub read_groups: usize,
+    /// Retention executions the shared sweep issues: the grouped
+    /// ceiling over **all** flavors' points in one batch sequence.
+    pub retention_calls: usize,
+    /// What per-flavor batching would have paid instead (the KPI
+    /// baseline the `compose --plan` smoke asserts against).
+    pub retention_calls_per_flavor: usize,
+}
+
+/// Compute the [`SweepPlan`] for `configs` at `window_resolution`.
+pub fn plan(
+    tech: &Tech,
+    configs: &[Config],
+    window_resolution: f64,
+    retention_cap: usize,
+) -> crate::Result<SweepPlan> {
+    let mut seen: HashSet<ConfigKey> = HashSet::new();
+    let mut distinct_cfgs: Vec<Config> = Vec::new();
+    for cfg in configs {
+        if seen.insert(cfg.key()) {
+            distinct_cfgs.push(cfg.clone());
+        }
+    }
+    // same parallel compile fan-out as the real sweep (pure geometry)
+    let banks: Vec<_> = dse::par_map(&distinct_cfgs, dse::default_workers(), |cfg| {
+        compile(tech, cfg)
+    })
+    .into_iter()
+    .collect::<crate::Result<Vec<_>>>()?;
+    let (write_groups, read_groups) =
+        characterize::window_group_counts(tech, &banks, window_resolution);
+    let mut per_flavor: BTreeMap<CellFlavor, usize> = BTreeMap::new();
+    for b in &banks {
+        if b.config.flavor.is_gc() {
+            *per_flavor.entry(b.config.flavor).or_insert(0) += 1;
+        }
+    }
+    let transient: usize = per_flavor.values().sum();
+    Ok(SweepPlan {
+        distinct: banks.len(),
+        transient,
+        transient_flavors: per_flavor.len(),
+        write_groups,
+        read_groups,
+        retention_calls: calls_for(transient, retention_cap),
+        retention_calls_per_flavor: per_flavor
+            .values()
+            .map(|&n| calls_for(n, retention_cap))
+            .sum(),
+    })
+}
+
+/// Drive `points` retention-class jobs through a counting mock
+/// coordinator executor (no artifacts, real batching machinery) and
+/// return the executions it issued — by the coordinator's batching
+/// invariants this equals [`calls_for`]`(points, cap)`.  The CI
+/// "mock-coordinator" smoke (`opengcram compose --plan`) asserts it
+/// against [`SweepPlan::retention_calls`].
+pub fn mock_retention_calls(points: usize, cap: usize) -> crate::Result<usize> {
+    struct CountingExec {
+        cap: usize,
+        calls: Arc<AtomicUsize>,
+    }
+    impl BatchExec<usize, usize> for CountingExec {
+        fn run(&mut self, jobs: &[usize]) -> crate::Result<Vec<usize>> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            Ok(jobs.to_vec())
+        }
+        fn max_batch(&self) -> usize {
+            self.cap
+        }
+    }
+    let calls = Arc::new(AtomicUsize::new(0));
+    let c = Coordinator::spawn(CountingExec { cap: cap.max(1), calls: calls.clone() });
+    let res = c.run_all((0..points).collect())?;
+    anyhow::ensure!(res.len() == points, "mock coordinator lost jobs");
+    Ok(calls.load(Ordering::SeqCst))
+}
+
+/// Render the composition as the terminal table `opengcram compose`
+/// and `bin/figures` print: one row per (task, level) demand plus the
+/// per-level envelope rows.
+pub fn table(c: &Composition) -> String {
+    let mut t = report::Table::new(&[
+        "level", "task", "need MHz", "need life", "flavor", "bank", "vt", "f_op MHz",
+        "bw Gb/s", "area um2", "leak nW", "xf", "xr", "feas", "front",
+    ]);
+    for s in c.per_demand.iter().chain(c.per_level.iter()) {
+        t.row(&selection_row(s));
+    }
+    t.render()
+}
+
+fn selection_row(s: &Selection) -> Vec<String> {
+    let d = &s.demand;
+    let mut row = vec![
+        format!("{:?}", d.level),
+        if s.envelope { "(all tasks)".to_string() } else { d.task.name.to_string() },
+        report::mhz(d.read_freq_hz),
+        eng(d.lifetime_s, "s"),
+    ];
+    match &s.choice {
+        None => {
+            for _ in 0..9 {
+                row.push("-".into());
+            }
+        }
+        Some(ch) => {
+            let cfg = &ch.eval.config;
+            row.push(crate::cli::flavor_name(cfg.flavor).to_string());
+            row.push(format!("{}x{}", cfg.word_size, cfg.num_words));
+            row.push(cfg.write_vt.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()));
+            row.push(report::mhz(ch.eval.perf.f_op_hz));
+            row.push(report::gbps(ch.eval.perf.bandwidth_bps));
+            row.push(report::um2(ch.eval.area_um2));
+            row.push(format!("{:.1}", ch.eval.perf.leakage_w * 1e9));
+            row.push(format!("{:.1}", ch.freq_margin));
+            // SRAM retention is infinite; cap the printed margin so the
+            // column stays narrow (the CSV carries the raw value)
+            row.push(format!("{:.0}", ch.retention_margin.min(9999.0)));
+        }
+    }
+    row.push(s.feasible.to_string());
+    row.push(s.front.to_string());
+    row
+}
+
+/// Machine-readable CSV of the composition (raw values, no rounding of
+/// the demand columns).
+pub fn csv(c: &Composition) -> String {
+    let mut rows = Vec::new();
+    for s in c.per_demand.iter().chain(c.per_level.iter()) {
+        let d = &s.demand;
+        let mut row = vec![
+            c.machine.to_string(),
+            format!("{:?}", d.level),
+            d.task.name.to_string(),
+            (s.envelope as u8).to_string(),
+            report::sci(d.read_freq_hz),
+            report::sci(d.lifetime_s),
+        ];
+        match &s.choice {
+            None => row.extend(std::iter::repeat(String::new()).take(11)),
+            Some(ch) => {
+                let cfg = &ch.eval.config;
+                row.push(crate::cli::flavor_name(cfg.flavor).to_string());
+                row.push(cfg.word_size.to_string());
+                row.push(cfg.num_words.to_string());
+                row.push(cfg.write_vt.map(|v| format!("{v}")).unwrap_or_default());
+                row.push(report::sci(ch.eval.perf.f_op_hz));
+                row.push(report::gbps(ch.eval.perf.bandwidth_bps));
+                row.push(report::um2(ch.eval.area_um2));
+                row.push(report::sci(ch.eval.perf.leakage_w));
+                row.push(report::sci(ch.freq_margin));
+                row.push(report::sci(ch.retention_margin));
+                row.push(report::sci(ch.cost));
+            }
+        }
+        row.push(s.feasible.to_string());
+        row.push(s.front.to_string());
+        rows.push(row);
+    }
+    report::csv(
+        &[
+            "machine", "level", "task", "envelope", "demand_hz", "lifetime_s", "flavor",
+            "word", "words", "vt", "f_op_hz", "bw_gbps", "area_um2", "leak_w",
+            "freq_margin", "retention_margin", "cost", "feasible", "front",
+        ],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::characterize::BankPerf;
+    use crate::tech::sg40;
+
+    fn fake(flavor: CellFlavor, f: f64, ret: f64, area: f64, leak: f64) -> Evaluated {
+        Evaluated {
+            config: Config::new(32, 32, flavor),
+            perf: BankPerf {
+                f_read_hz: f,
+                f_write_hz: f,
+                f_op_hz: f,
+                bandwidth_bps: 64.0 * f,
+                retention_s: ret,
+                leakage_w: leak,
+                e_read_j: 1e-12,
+                t_decoder_s: 1e-10,
+                t_cell_read_s: 1e-10,
+                stored_one_v: 0.6,
+                functional: true,
+            },
+            area_um2: area,
+        }
+    }
+
+    fn demand(f: f64, life: f64) -> Demand {
+        Demand {
+            task: workloads::TASKS[0],
+            level: CacheLevel::L1,
+            machine: "test",
+            read_freq_hz: f,
+            lifetime_s: life,
+        }
+    }
+
+    #[test]
+    fn design_grid_covers_all_flavors_without_duplicates() {
+        let grid = design_grid();
+        let keys: HashSet<_> = grid.iter().map(|c| c.key()).collect();
+        assert_eq!(keys.len(), grid.len(), "duplicate design points");
+        for f in FLAVORS {
+            assert!(grid.iter().any(|c| c.flavor == f), "{f:?} missing");
+        }
+        // SRAM has no write transistor, so no VT axis
+        assert!(grid
+            .iter()
+            .filter(|c| c.flavor == CellFlavor::Sram6t)
+            .all(|c| c.write_vt.is_none()));
+        let transient = grid.iter().filter(|c| c.flavor.is_gc()).count();
+        assert_eq!(transient, 75, "3 GC flavors x 5 sizes x 5 VTs");
+        assert_eq!(grid.len() - transient, 5, "SRAM sweeps sizes only");
+    }
+
+    #[test]
+    fn plan_packs_cross_flavor_retention_into_one_shared_batch() {
+        let t = sg40();
+        // trim to the smallest size: the packing arithmetic is
+        // size-independent and 16x16 compiles keep the test fast
+        let grid: Vec<Config> =
+            design_grid().into_iter().filter(|c| c.word_size == 16).collect();
+        let p = plan(&t, &grid, characterize::DEFAULT_WINDOW_RESOLUTION, 256).unwrap();
+        assert_eq!(p.distinct, 16);
+        assert_eq!(p.transient, 15);
+        assert_eq!(p.transient_flavors, 3);
+        assert_eq!(p.retention_calls, 1, "one shared retention batch");
+        assert_eq!(p.retention_calls_per_flavor, 3, "per-flavor batching pays one per flavor");
+        assert!(p.write_groups >= 1 && p.write_groups <= p.transient);
+        assert!(p.read_groups >= 1 && p.read_groups <= p.transient);
+        // duplicated configs dedup before compiling
+        let doubled: Vec<Config> = grid.iter().chain(grid.iter()).cloned().collect();
+        let p2 = plan(&t, &doubled, characterize::DEFAULT_WINDOW_RESOLUTION, 256).unwrap();
+        assert_eq!(p2.distinct, p.distinct);
+        assert_eq!(p2.retention_calls, p.retention_calls);
+    }
+
+    #[test]
+    fn mock_coordinator_issues_grouped_ceiling() {
+        assert_eq!(mock_retention_calls(75, 256).unwrap(), 1);
+        assert_eq!(mock_retention_calls(300, 256).unwrap(), 2);
+        assert_eq!(mock_retention_calls(0, 256).unwrap(), 0);
+    }
+
+    #[test]
+    fn selection_picks_min_cost_on_the_feasible_front() {
+        let d = demand(1e9, 1e-4);
+        let mut dead = fake(CellFlavor::Sram6t, 3e9, f64::INFINITY, 2e3, 1e-8);
+        dead.perf.functional = false;
+        let evals = vec![
+            fake(CellFlavor::GcSiSiNp, 2e9, 1e-3, 1e4, 1e-6), // feasible
+            fake(CellFlavor::GcOsOs, 1.5e9, 1e-2, 5e3, 5e-7), // feasible, cheaper overall
+            fake(CellFlavor::GcSiSiNn, 0.5e9, 1e-3, 1e3, 1e-7), // too slow
+            dead, // would dominate everything, but non-functional
+        ];
+        let s = select_for(&evals, &d, 1.0, 0.5, 0.5);
+        assert_eq!(s.feasible, 2);
+        assert!(s.front >= 1 && s.front <= s.feasible);
+        let ch = s.choice.expect("two feasible points");
+        assert_eq!(ch.eval.config.flavor, CellFlavor::GcOsOs, "min-cost point");
+        assert!(ch.freq_margin >= 1.0 && ch.retention_margin >= 1.0);
+        assert!(ch.cost.is_finite());
+        // an unservable demand yields an empty selection, not a panic
+        let none = select_for(&evals, &demand(1e12, 1.0), 1.0, 0.5, 0.5);
+        assert_eq!((none.feasible, none.front), (0, 0));
+        assert!(none.choice.is_none());
+    }
+
+    #[test]
+    fn totals_need_every_level_served() {
+        let d = demand(1e9, 1e-4);
+        let chosen = Selection {
+            demand: d,
+            envelope: true,
+            feasible: 1,
+            front: 1,
+            choice: Some(Chosen {
+                eval: fake(CellFlavor::GcSiSiNp, 2e9, 1e-3, 1e4, 1e-6),
+                cost: 1.0,
+                freq_margin: 2.0,
+                retention_margin: 10.0,
+            }),
+        };
+        let empty = Selection { demand: d, envelope: true, feasible: 0, front: 0, choice: None };
+        let c = Composition {
+            machine: "test",
+            per_demand: vec![],
+            per_level: vec![chosen.clone(), empty],
+            distinct: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+        };
+        assert!(c.total_area_um2().is_none());
+        assert!(c.total_leakage_w().is_none());
+        let c2 = Composition { per_level: vec![chosen.clone(), chosen], ..c };
+        assert_eq!(c2.total_area_um2(), Some(2e4));
+        assert!((c2.total_leakage_w().unwrap() - 2e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn table_and_csv_render_selection_and_empty_rows() {
+        let d = demand(1e9, 1e-4);
+        let sel = select_for(
+            &[fake(CellFlavor::GcOsOs, 2e9, 1e-2, 5e3, 5e-7)],
+            &d,
+            1.0,
+            0.5,
+            0.5,
+        );
+        let none = select_for(&[], &d, 1.0, 0.5, 0.5);
+        let mut env = none.clone();
+        env.envelope = true;
+        let c = Composition {
+            machine: "test",
+            per_demand: vec![sel, none],
+            per_level: vec![env.clone(), env],
+            distinct: 1,
+            cache_hits: 0,
+            cache_misses: 1,
+        };
+        let t = table(&c);
+        assert!(t.contains("os"), "{t}");
+        assert!(t.contains("(all tasks)"), "{t}");
+        // header + separator + 4 rows
+        assert_eq!(t.lines().count(), 6, "{t}");
+        let s = csv(&c);
+        assert_eq!(s.lines().count(), 5, "{s}");
+        assert!(s.starts_with("machine,level,task,envelope"), "{s}");
+        // every row has the full column count, selected or not
+        let cols = s.lines().next().unwrap().split(',').count();
+        for line in s.lines() {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
+    }
+}

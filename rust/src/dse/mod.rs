@@ -161,9 +161,10 @@ where
 }
 
 /// Scoped work-stealing parallel map; results keep input order.  The
-/// fan-out primitive under [`evaluate_all`] and the parallel compile
-/// stage of [`evaluate_all_batched_cached`].
-fn par_map<T: Sync, R: Send>(items: &[T], workers: usize, f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+/// fan-out primitive under [`evaluate_all`], the parallel compile
+/// stage of [`evaluate_all_batched_cached`], and the composition
+/// engine's plan compiler ([`crate::compose`]).
+pub(crate) fn par_map<T: Sync, R: Send>(items: &[T], workers: usize, f: impl Fn(&T) -> R + Sync) -> Vec<R> {
     let n = items.len();
     if n == 0 {
         return Vec::new();
@@ -332,20 +333,80 @@ pub fn fig10_configs(flavor: CellFlavor) -> Vec<Config> {
         .collect()
 }
 
-/// Pareto front (maximize f_op, maximize retention, minimize area).
-pub fn pareto(points: &[Evaluated]) -> Vec<usize> {
-    let dominates = |a: &Evaluated, b: &Evaluated| {
-        let ge = a.perf.f_op_hz >= b.perf.f_op_hz
-            && a.perf.retention_s >= b.perf.retention_s
-            && a.area_um2 <= b.area_um2;
-        let gt = a.perf.f_op_hz > b.perf.f_op_hz
-            || a.perf.retention_s > b.perf.retention_s
-            || a.area_um2 < b.area_um2;
-        ge && gt
+/// Named objective accessors for [`crate::dse::pareto_front`].  Every
+/// objective is *minimized*; maximized quantities are negated.
+pub mod objectives {
+    use super::Evaluated;
+
+    /// Maximize operating frequency.
+    pub fn neg_f_op(e: &Evaluated) -> f64 {
+        -e.perf.f_op_hz
+    }
+    /// Maximize retention.
+    pub fn neg_retention(e: &Evaluated) -> f64 {
+        -e.perf.retention_s
+    }
+    /// Minimize bank area.
+    pub fn area(e: &Evaluated) -> f64 {
+        e.area_um2
+    }
+    /// Minimize leakage power.
+    pub fn leakage(e: &Evaluated) -> f64 {
+        e.perf.leakage_w
+    }
+}
+
+/// Multi-objective Pareto front over `points`: indices of the points
+/// no other point dominates.  `objs` map a point to values to
+/// *minimize* (see [`objectives`]).
+///
+/// Feasibility guard (regression): electrically non-functional points
+/// (`functional == false`) and points with a NaN objective are
+/// **excluded from the front and never dominate** — a non-functional
+/// point's finite fields still compare, so it used to both survive on
+/// the front and evict real designs; NaN fields compare false
+/// everywhere, so a NaN point used to survive unconditionally.  The
+/// composition layer ([`crate::compose`]) selects from this front, so
+/// an infeasible survivor would propagate into chosen hardware.
+pub fn pareto_front(points: &[Evaluated], objs: &[fn(&Evaluated) -> f64]) -> Vec<usize> {
+    let keys: Vec<Option<Vec<f64>>> = points
+        .iter()
+        .map(|e| {
+            if !e.perf.functional {
+                return None;
+            }
+            let k: Vec<f64> = objs.iter().map(|f| f(e)).collect();
+            if k.iter().any(|v| v.is_nan()) {
+                None
+            } else {
+                Some(k)
+            }
+        })
+        .collect();
+    let dominates = |a: &Vec<f64>, b: &Vec<f64>| {
+        a.iter().zip(b.iter()).all(|(x, y)| x <= y) && a.iter().zip(b.iter()).any(|(x, y)| x < y)
     };
     (0..points.len())
-        .filter(|&i| !points.iter().enumerate().any(|(j, p)| j != i && dominates(p, &points[i])))
+        .filter(|&i| {
+            let ki = match &keys[i] {
+                Some(k) => k,
+                None => return false,
+            };
+            !keys
+                .iter()
+                .enumerate()
+                .any(|(j, kj)| j != i && kj.as_ref().map_or(false, |kj| dominates(kj, ki)))
+        })
         .collect()
+}
+
+/// The classic DSE front (maximize f_op, maximize retention, minimize
+/// area) — see [`pareto_front`] for the functional/NaN exclusions.
+pub fn pareto(points: &[Evaluated]) -> Vec<usize> {
+    pareto_front(
+        points,
+        &[objectives::neg_f_op, objectives::neg_retention, objectives::area],
+    )
 }
 
 /// Co-optimization target (paper §VI: "area-delay-power co-optimization
@@ -427,6 +488,21 @@ fn opt_config(flavor: CellFlavor, si: usize, vi: usize) -> Config {
     let mut c = Config::new(OPT_SIZES[si], OPT_SIZES[si], flavor);
     c.write_vt = OPT_VTS[vi];
     c
+}
+
+/// The co-optimizer's full (square size x write-VT) grid for one
+/// flavor, row-major over `OPT_SIZES` x `OPT_VTS` — 25 configs in
+/// deterministic order.  This is the per-flavor scenario axis the
+/// composition engine ([`crate::compose`]) sweeps; sharing
+/// `opt_config` keeps it aligned with the coordinate-descent walk.
+pub fn grid_configs(flavor: CellFlavor) -> Vec<Config> {
+    let mut out = Vec::with_capacity(OPT_SIZES.len() * OPT_VTS.len());
+    for si in 0..OPT_SIZES.len() {
+        for vi in 0..OPT_VTS.len() {
+            out.push(opt_config(flavor, si, vi));
+        }
+    }
+    out
 }
 
 /// In-bounds single-step neighbor moves in the order both optimizers
@@ -546,6 +622,56 @@ mod tests {
         assert!(front.contains(&0));
         assert!(!front.contains(&1));
         assert!(front.contains(&2));
+    }
+
+    #[test]
+    fn pareto_excludes_nonfunctional_points() {
+        // regression: a non-functional point's finite fields still
+        // compare, so it used to stay on the front AND evict the real
+        // design it numerically dominated
+        let mut broken = fake(10e9, 1.0, 1.0);
+        broken.perf.functional = false;
+        let real = fake(1e9, 1e-3, 1e4);
+        assert_eq!(pareto(&[broken, real]), vec![1]);
+    }
+
+    #[test]
+    fn pareto_nan_fields_never_dominate() {
+        // regression: NaN comparisons are false everywhere, so a
+        // NaN-fielded point could neither be dominated nor filtered —
+        // it survived on the front unconditionally
+        let real = fake(1e9, 1e-3, 1e4);
+        let nan_freq = fake(f64::NAN, 1e-3, 1.0);
+        assert_eq!(pareto(&[nan_freq, real.clone()]), vec![1]);
+        let mut nan_area = fake(10e9, 1.0, 1.0);
+        nan_area.area_um2 = f64::NAN;
+        assert_eq!(pareto(&[nan_area, real]), vec![1]);
+    }
+
+    #[test]
+    fn pareto_front_handles_custom_objectives() {
+        // the composition front: minimize area + leakage, maximize f_op
+        let mut a = fake(1e9, 1e-3, 1e4);
+        a.perf.leakage_w = 1e-6;
+        let mut b = fake(1e9, 1e-3, 2e4); // dominated by a on all three
+        b.perf.leakage_w = 2e-6;
+        let mut c = fake(2e9, 1e-3, 2e4); // larger/leakier but faster
+        c.perf.leakage_w = 2e-6;
+        let front = pareto_front(
+            &[a, b, c],
+            &[objectives::area, objectives::leakage, objectives::neg_f_op],
+        );
+        assert_eq!(front, vec![0, 2]);
+    }
+
+    #[test]
+    fn grid_configs_is_the_full_5x5() {
+        let g = grid_configs(CellFlavor::GcSiSiNp);
+        assert_eq!(g.len(), 25);
+        let keys: std::collections::HashSet<_> = g.iter().map(|c| c.key()).collect();
+        assert_eq!(keys.len(), 25, "grid points must be distinct");
+        assert!(g.iter().all(|c| c.word_size == c.num_words));
+        assert!(g.iter().any(|c| c.write_vt.is_none()), "the no-override VT point is on the grid");
     }
 
     #[test]

@@ -29,11 +29,17 @@
 //!   into shared padded artifact batches through the coordinator.
 //! * [`workloads`] — GainSight-like AI workload profiler (Table I).
 //! * [`dse`] — sweeps, shmoo plots, Pareto fronts, co-optimization.
+//! * [`compose`] — workload-driven heterogeneous composition: one
+//!   cross-flavor mega-sweep, per-demand feasibility/Pareto/min-cost
+//!   selection, per-level bank portfolio.
 //! * [`report`] — table/CSV renderers for the paper's figures.
+//! * [`cli`] — strict flag parsing shared by the `opengcram` binary.
 //! * [`util`] — JSON parsing, PRNG, timing (offline-registry stand-ins).
 
 pub mod characterize;
+pub mod cli;
 pub mod compiler;
+pub mod compose;
 pub mod coordinator;
 pub mod drc;
 pub mod dse;

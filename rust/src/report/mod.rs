@@ -63,8 +63,12 @@ pub fn mhz(f_hz: f64) -> String {
     format!("{:.1}", f_hz / 1e6)
 }
 
+/// Bandwidth in **gigabits** per second.  The `bandwidth_bps` figures
+/// are bits/s and every table labels this column Gb/s (regression: the
+/// divisor was `8e9` — gigabytes — which is why all call sites had
+/// bypassed the helper with an inline `/ 1e9`).
 pub fn gbps(bps: f64) -> String {
-    format!("{:.2}", bps / 8e9)
+    format!("{:.2}", bps / 1e9)
 }
 
 pub fn um2(a: f64) -> String {
@@ -92,6 +96,13 @@ mod tests {
         assert!(s.lines().count() == 4);
         let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
         assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn gbps_is_gigabits_not_gigabytes() {
+        // 64e9 bits/s is 64 Gb/s, not 8 "Gb/s"-labeled gigabytes
+        assert_eq!(gbps(64e9), "64.00");
+        assert_eq!(gbps(1.5e9), "1.50");
     }
 
     #[test]

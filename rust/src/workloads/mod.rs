@@ -105,7 +105,11 @@ pub fn profile(task: &Task, level: CacheLevel, m: &Machine) -> Demand {
                 level,
                 machine: m.name,
                 read_freq_hz: total / m.l2_banks as f64 * m.cache_pressure,
-                lifetime_s: task.l2_lifetime_s * (1.8e9 / m.clock_hz),
+                // Table I records L2 residence in seconds *at the H100
+                // clock*; other machines rescale by clock ratio.  The
+                // reference clock is the machine model's, not a
+                // literal, so retuning H100 cannot silently skew it.
+                lifetime_s: task.l2_lifetime_s * (H100.clock_hz / m.clock_hz),
             }
         }
     }
@@ -117,6 +121,27 @@ pub fn all_demands(m: &Machine) -> Vec<Demand> {
     for t in &TASKS {
         out.push(profile(t, CacheLevel::L1, m));
         out.push(profile(t, CacheLevel::L2, m));
+    }
+    out
+}
+
+/// The strictest demand a *single* bank must meet to serve **every**
+/// Table-I task at `level` on `m`: the maximum required read frequency
+/// and the maximum required lifetime over all tasks.  The composition
+/// layer ([`crate::compose`]) sizes one bank per cache level against
+/// this envelope.  `task` records the frequency-critical task (the
+/// lifetime maximum may come from a different one — e.g. on H100 L2
+/// the frequency is set by a conv kernel while the lifetime outlier is
+/// stable-diffusion).
+pub fn envelope(level: CacheLevel, m: &Machine) -> Demand {
+    let mut out = profile(&TASKS[0], level, m);
+    for t in &TASKS[1..] {
+        let d = profile(t, level, m);
+        if d.read_freq_hz > out.read_freq_hz {
+            out.task = d.task;
+            out.read_freq_hz = d.read_freq_hz;
+        }
+        out.lifetime_s = out.lifetime_s.max(d.lifetime_s);
     }
     out
 }
@@ -168,6 +193,50 @@ mod tests {
             assert!(sd.lifetime_s > 5.0 * d.lifetime_s, "{}", t.name);
         }
         assert!(sd.lifetime_s > 1e-4);
+    }
+
+    #[test]
+    fn l2_lifetime_rescale_tracks_the_machine_model() {
+        // regression: the rescale used the literal `1.8e9`, so retuning
+        // H100.clock_hz would have silently skewed every machine's L2
+        // lifetimes.  The law: lifetime scales as H100.clock / m.clock.
+        let half = Machine {
+            name: "half-clock",
+            sms: 4,
+            clock_hz: H100.clock_hz / 2.0,
+            l2_banks: 2,
+            cache_pressure: 0.5,
+        };
+        for t in &TASKS {
+            let d = profile(t, CacheLevel::L2, &half);
+            assert_eq!(d.lifetime_s.to_bits(), (t.l2_lifetime_s * 2.0).to_bits(), "{}", t.name);
+            // and at the H100 itself, Table I is reproduced exactly
+            let h = profile(t, CacheLevel::L2, &H100);
+            assert_eq!(h.lifetime_s.to_bits(), t.l2_lifetime_s.to_bits(), "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn envelope_is_the_per_level_maximum() {
+        for m in [&H100, &GT520M] {
+            for lvl in [CacheLevel::L1, CacheLevel::L2] {
+                let env = envelope(lvl, m);
+                let mut max_f: f64 = 0.0;
+                let mut max_l: f64 = 0.0;
+                for t in &TASKS {
+                    let d = profile(t, lvl, m);
+                    max_f = max_f.max(d.read_freq_hz);
+                    max_l = max_l.max(d.lifetime_s);
+                }
+                assert_eq!(env.read_freq_hz, max_f, "{} {lvl:?}", m.name);
+                assert_eq!(env.lifetime_s, max_l, "{} {lvl:?}", m.name);
+                assert_eq!(env.level, lvl);
+                assert_eq!(env.machine, m.name);
+            }
+        }
+        // the H100 L2 lifetime envelope is the stable-diffusion outlier
+        let env = envelope(CacheLevel::L2, &H100);
+        assert_eq!(env.lifetime_s, profile(&TASKS[6], CacheLevel::L2, &H100).lifetime_s);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::runtime::{engines, Runtime, SharedRuntime};
 use opengcram::tech::sg40;
-use opengcram::{characterize, dse, lvs, sim, workloads};
+use opengcram::{characterize, compose, dse, lvs, sim, workloads};
 use std::path::PathBuf;
 use std::sync::OnceLock;
 
@@ -370,6 +370,81 @@ fn window_quantization_packs_size_axis_within_deviation_bound() {
         assert!((q.stored_one_v - e.stored_one_v).abs() < 0.02, "{what}: stored1 {} vs {}", q.stored_one_v, e.stored_one_v);
         assert_eq!(e.functional, q.functional, "{what}: functional verdict flipped");
     }
+}
+
+#[test]
+fn compose_selection_is_deterministic_at_resolution_zero() {
+    // the composition contract: at window resolution 0 the mega-sweep
+    // is bitwise-reproducible, so two independent compositions (fresh
+    // caches, parallel compile fan-out) select identical hardware with
+    // bit-identical costs
+    let t = sg40();
+    let mut spec = compose::ComposeSpec::new(&workloads::H100);
+    spec.window_resolution = 0.0;
+    let a = compose::compose(&t, shared(), &spec).unwrap();
+    let b = compose::compose(&t, shared(), &spec).unwrap();
+    assert_eq!(a.per_demand.len(), b.per_demand.len());
+    assert_eq!(a.per_level.len(), b.per_level.len());
+    for (x, y) in a.per_demand.iter().zip(&b.per_demand).chain(a.per_level.iter().zip(&b.per_level)) {
+        let what = format!("{:?} {}", x.demand.level, x.demand.task.name);
+        assert_eq!(x.feasible, y.feasible, "{what}: feasible count diverged");
+        assert_eq!(x.front, y.front, "{what}: front size diverged");
+        match (&x.choice, &y.choice) {
+            (None, None) => {}
+            (Some(cx), Some(cy)) => {
+                assert_eq!(cx.eval.config.key(), cy.eval.config.key(), "{what}: choice diverged");
+                assert_eq!(cx.cost.to_bits(), cy.cost.to_bits(), "{what}: cost diverged");
+                assert_eq!(
+                    cx.freq_margin.to_bits(),
+                    cy.freq_margin.to_bits(),
+                    "{what}: margin diverged"
+                );
+            }
+            _ => panic!("{what}: choice presence diverged"),
+        }
+    }
+    // the sweep must have found someone to serve
+    assert!(a.per_demand.iter().any(|s| s.choice.is_some()), "no demand found a feasible bank");
+}
+
+#[test]
+fn compose_choices_meet_their_demands() {
+    let t = sg40();
+    let spec = compose::ComposeSpec::new(&workloads::GT520M);
+    let c = compose::compose(&t, shared(), &spec).unwrap();
+    assert_eq!(c.per_demand.len(), 2 * workloads::TASKS.len());
+    assert_eq!(c.per_level.len(), 2);
+    assert_eq!(c.distinct, compose::design_grid().len(), "sweep must cover the whole grid");
+    let grid = compose::design_grid();
+    for s in c.per_demand.iter().chain(c.per_level.iter()) {
+        assert!(s.front <= s.feasible);
+        match &s.choice {
+            Some(ch) => {
+                assert!(s.feasible > 0 && s.front > 0);
+                assert!(ch.eval.perf.functional);
+                assert!(
+                    ch.freq_margin >= 1.0 && ch.retention_margin >= 1.0,
+                    "{}: infeasible choice (xf {}, xr {})",
+                    s.demand.task.name,
+                    ch.freq_margin,
+                    ch.retention_margin
+                );
+                assert!(ch.cost.is_finite());
+                // the choice really is a grid point
+                assert!(grid.iter().any(|g| g.key() == ch.eval.config.key()));
+            }
+            None => assert_eq!(s.feasible, 0, "feasible points but no selection"),
+        }
+    }
+    // GT520M is light enough that every L1 demand finds a bank (the
+    // SRAM baseline alone serves them: infinite retention, fast)
+    assert!(
+        c.per_demand
+            .iter()
+            .filter(|s| s.demand.level == workloads::CacheLevel::L1)
+            .all(|s| s.choice.is_some()),
+        "every GT520M L1 demand should be served"
+    );
 }
 
 #[test]
