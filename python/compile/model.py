@@ -154,8 +154,9 @@ def read_op(v0, amp, params, cinv, wave, dwave, dt):
 def retention(v0, amp, params, cinv, wave, dwave, dt):
     """Hold-state decay on a log time grid (Fig. 8b/c/e).
 
-    dt grows geometrically (set by the Rust side), covering ~1 ns..10^4 s
-    in T steps.  Returns:
+    dt grows geometrically (set by the Rust side: sub-steps from ~1 ps,
+    1.082x per step, spanning ~1e5 s over T steps with K substeps).
+    Returns:
       times_ds (T/DS,), trace_ds (T/DS,B,NF) with node [sn]
       t_retain (B,)  time SN decays below the hold threshold
                      (0.5 * initial SN); BIG_TIME if it never does

@@ -11,7 +11,8 @@ use std::path::Path;
 
 fn main() {
     let tech = sg40();
-    let rt = SharedRuntime::load(Path::new("artifacts")).expect("make artifacts");
+    let rt = SharedRuntime::auto(Path::new("artifacts"));
+    println!("# execution backend: {}", rt.backend_name());
     let banks: Vec<_> = [(16usize, 16usize), (32, 32), (64, 64), (128, 128)]
         .iter()
         .map(|&(w, n)| compile(&tech, &Config::new(w, n, CellFlavor::GcSiSiNp)).unwrap())

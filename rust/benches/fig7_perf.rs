@@ -11,7 +11,8 @@ use std::path::Path;
 
 fn main() {
     let tech = sg40();
-    let rt = SharedRuntime::load(Path::new("artifacts")).expect("make artifacts");
+    let rt = SharedRuntime::auto(Path::new("artifacts"));
+    println!("# execution backend: {}", rt.backend_name());
     let mut labels: Vec<(String, &'static str, usize)> = Vec::new();
     let mut banks = Vec::new();
     for (w, n, label) in [

@@ -1,13 +1,15 @@
 //! Fig. 8 regenerator: Id-Vg + retention modulation, and throughput of
-//! the batched retention artifact (design points per second).
-use opengcram::runtime::{engines, Runtime};
+//! the batched retention engine (design points per second) on whichever
+//! backend is available (PJRT artifacts, else the native solver).
+use opengcram::runtime::{engines, SharedRuntime};
 use opengcram::tech::sg40;
 use opengcram::util::bench;
 use std::path::Path;
 
 fn main() {
     let tech = sg40();
-    let rt = Runtime::load(Path::new("artifacts")).expect("make artifacts");
+    let rt = SharedRuntime::auto(Path::new("artifacts"));
+    println!("# execution backend: {}", rt.backend_name());
     println!("vt,si_retention_s");
     let pts: Vec<_> = (0..12)
         .map(|i| engines::RetentionPoint {
@@ -20,14 +22,14 @@ fn main() {
             vth: 0.3,
         })
         .collect();
-    let res = engines::retention(&rt, &pts).unwrap();
+    let res = rt.with(|r| engines::retention(r, &pts)).unwrap();
     for (i, r) in res.iter().enumerate() {
         println!("{:.2},{:.4e}", 0.35 + 0.03 * i as f64, r.t_retain);
     }
     println!("material,retention_s");
     for (card, gl) in [("os_nmos", 1e-17), ("os_nmos_hvt", 1e-17)] {
-        let r = engines::retention(
-            &rt,
+        let r = rt.with(|rt| engines::retention(
+            rt,
             &[engines::RetentionPoint {
                 write_card: *tech.card(card),
                 write_wl: 1.2,
@@ -37,7 +39,7 @@ fn main() {
                 v0: 0.6,
                 vth: 0.3,
             }],
-        )
+        ))
         .unwrap();
         println!("{card},{:.4e}", r[0].t_retain);
     }
@@ -53,6 +55,8 @@ fn main() {
             vth: 0.3,
         })
         .collect();
-    let s = bench::run("retention_batch_256", 3.0, || engines::retention(&rt, &full).unwrap());
+    let s = bench::run("retention_batch_256", 3.0, || {
+        rt.with(|r| engines::retention(r, &full)).unwrap()
+    });
     println!("design_points_per_sec,{:.0}", 256.0 / s.median_s);
 }

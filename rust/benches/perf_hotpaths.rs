@@ -1,16 +1,22 @@
 //! Performance pass (EXPERIMENTS.md, Hot paths): hot-path throughput of
 //! every layer the request path touches — L3 compiler / flatten / DRC
-//! (flat + hierarchical) / DSE, the PJRT execution path per artifact,
+//! (flat + hierarchical) / DSE, the per-artifact transient execution
+//! path on a real backend (native EKV solver or PJRT artifacts — the
+//! grouped-ceiling KPIs are asserted against its real call counters),
 //! and the native sim baseline.
 //!
 //! Emits `BENCH_perf.json` (name, median_s, throughput) so the perf
 //! trajectory is tracked across PRs.
 //!
 //! Env knobs:
-//! * `PERF_SMOKE=1` — CI smoke: 32x32 bank, short targets, geometry
-//!   paths only (no artifacts needed).
+//! * `PERF_SMOKE=1` — CI smoke: 32x32 bank, short targets, geometry +
+//!   packing paths (no artifacts needed).
 //! * `PERF_BANK=N`  — override the square bank size (default 128,
 //!   32 under smoke).
+//! * `PERF_BACKEND=native|pjrt|auto|none` — execution backend for the
+//!   transient benches (default: auto outside smoke, none under
+//!   smoke; the CI end-to-end step runs `PERF_SMOKE=1
+//!   PERF_BACKEND=native`).
 use opengcram::characterize::batch;
 use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::coordinator::{BatchExec, Coordinator};
@@ -158,14 +164,37 @@ fn main() {
     // ---- cross-flavor composition plan (runtime-free; runs in CI smoke) -
     compose_packing_records(&tech, smoke, &mut records);
 
-    // ---- L1/L2 via PJRT + native sim baseline (skipped in smoke) --------
-    if smoke {
-        println!("# PERF_SMOKE: skipping XLA and native-sim benches");
-    } else {
-        match SharedRuntime::load(Path::new("artifacts")) {
-            Ok(rt) => xla_benches(&tech, &rt, &mut records),
-            Err(e) => println!("# skipping XLA benches ({e})"),
+    // ---- transient engine benches over a real execution backend ---------
+    // PERF_BACKEND=native|pjrt|auto|none picks the backend for the
+    // grouped-ceiling KPI asserts (real per-artifact call counters, not
+    // a counting mock).  Default: auto outside smoke — artifacts when
+    // they load, the native solver otherwise, so there is no
+    // "skipping: no artifacts" branch anymore — and none under smoke
+    // (the CI end-to-end step sets PERF_BACKEND=native explicitly).
+    let backend = std::env::var("PERF_BACKEND").ok();
+    let rt = match backend.as_deref() {
+        Some("none") => None,
+        Some("native") => Some(SharedRuntime::native()),
+        Some("pjrt") => match SharedRuntime::load(Path::new("artifacts")) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                println!("# PERF_BACKEND=pjrt unavailable ({e}); skipping transient benches");
+                None
+            }
+        },
+        Some("auto") => Some(SharedRuntime::auto(Path::new("artifacts"))),
+        Some(other) => panic!("unknown PERF_BACKEND '{other}' (expected native|pjrt|auto|none)"),
+        None if smoke => {
+            println!("# PERF_SMOKE: transient benches skipped (set PERF_BACKEND=native to run them)");
+            None
         }
+        None => Some(SharedRuntime::auto(Path::new("artifacts"))),
+    };
+    if let Some(rt) = &rt {
+        println!("# execution backend: {}", rt.backend_name());
+        transient_benches(&tech, rt, smoke, &mut records);
+    }
+    if !smoke {
         native_sim_bench(&tech, &mut records);
     }
 
@@ -325,13 +354,18 @@ fn compose_packing_records(
     records.push((s, plan.transient as f64 / plan.retention_calls.max(1) as f64));
 }
 
-fn xla_benches(
+fn transient_benches(
     tech: &opengcram::tech::Tech,
     rt: &SharedRuntime,
+    smoke: bool,
     records: &mut Vec<(bench::Sample, f64)>,
 ) {
+    // short targets under smoke: the KPI asserts are the point there,
+    // the timing series comes from full runs
+    let t_eng = if smoke { 0.2 } else { 3.0 };
     // batched artifact executions (per-design cost)
-    let ret_pts: Vec<_> = (0..256)
+    let cap256 = rt.batch_cap("retention").unwrap();
+    let ret_pts: Vec<_> = (0..cap256)
         .map(|i| engines::RetentionPoint {
             write_card: tech.card("si_nmos").with_vt(0.35 + 0.001 * i as f64),
             write_wl: 2.5,
@@ -342,16 +376,16 @@ fn xla_benches(
             vth: 0.3,
         })
         .collect();
-    let s = bench::run("xla_retention_batch256", 3.0, || {
+    let s = bench::run("engine_retention_full_batch", t_eng, || {
         rt.with(|r| engines::retention(r, &ret_pts)).unwrap()
     });
-    println!("retention_points_per_sec,{:.0}", 256.0 / s.median_s);
-    records.push((s.clone(), 256.0 / s.median_s));
+    println!("retention_points_per_sec,{:.0}", cap256 as f64 / s.median_s);
+    records.push((s.clone(), cap256 as f64 / s.median_s));
     let one = vec![ret_pts[0].clone()];
-    let s1 = bench::run("xla_retention_batch1_padded", 3.0, || {
+    let s1 = bench::run("engine_retention_batch1_padded", t_eng, || {
         rt.with(|r| engines::retention(r, &one)).unwrap()
     });
-    println!("batch_amortization,{:.1}x", s1.median_s * 256.0 / s.median_s);
+    println!("batch_amortization,{:.1}x", s1.median_s * cap256 as f64 / s.median_s);
     records.push((s1.clone(), 1.0 / s1.median_s));
 
     // ---- batch-first transient sweep over real artifacts ----------------
@@ -380,7 +414,7 @@ fn xla_benches(
         banks.len()
     );
     println!("char_batched_retention_calls,{ret_calls}");
-    let s = bench::run("char_batched_vt_axis_5designs", 3.0, || {
+    let s = bench::run("char_batched_vt_axis_5designs", t_eng, || {
         characterize::characterize_all(tech, rt, &banks, res).unwrap()
     });
     records.push((s.clone(), banks.len() as f64 / s.median_s));
@@ -416,7 +450,7 @@ fn xla_benches(
     );
     println!("char_sizeaxis_write_calls,{wr_calls}");
     println!("char_sizeaxis_read_calls,{rd_calls}");
-    let s = bench::run("char_batched_size_axis_5designs", 3.0, || {
+    let s = bench::run("char_batched_size_axis_5designs", t_eng, || {
         characterize::characterize_all(tech, rt, &size_banks, res).unwrap()
     });
     records.push((s.clone(), size_banks.len() as f64 / s.median_s));

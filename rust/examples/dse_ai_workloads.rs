@@ -16,7 +16,8 @@ use std::time::Instant;
 
 fn main() -> opengcram::Result<()> {
     let tech = sg40();
-    let rt = SharedRuntime::load(Path::new("artifacts"))?;
+    let rt = SharedRuntime::auto(Path::new("artifacts"));
+    println!("execution backend: {}", rt.backend_name());
     let t0 = Instant::now();
 
     println!("== profiling Table-I workloads (GainSight-style) ==");

@@ -1,5 +1,7 @@
-//! Quickstart: compile a 32x32 GCRAM bank, characterize it on the AOT
-//! artifacts, export SPICE + GDS.  Run: cargo run --release --example quickstart
+//! Quickstart: compile a 32x32 GCRAM bank, characterize it on whichever
+//! execution backend is available (AOT artifacts via PJRT, else the
+//! native in-process solver), export SPICE + GDS.
+//! Run: cargo run --release --example quickstart
 use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
@@ -21,7 +23,8 @@ fn main() -> opengcram::Result<()> {
     opengcram::layout::gds::write_file(&bank.library, &tech, "opengcram", Path::new("/tmp/gcram_bank.gds"))?;
     println!("wrote /tmp/gcram_bank.sp and /tmp/gcram_bank.gds");
 
-    let rt = SharedRuntime::load(Path::new("artifacts"))?;
+    let rt = SharedRuntime::auto(Path::new("artifacts"));
+    println!("execution backend: {}", rt.backend_name());
     // characterize_all packs designs into shared artifact batches; a
     // singleton list at window resolution 0 bitwise-matches the
     // single-design path (sweeps pass DEFAULT_WINDOW_RESOLUTION to

@@ -1,13 +1,14 @@
 //! Fig. 8 explorer: Id-Vg curves and retention modulation across write
 //! transistor VT and channel material, via the batched XLA artifacts.
-use opengcram::runtime::{engines, Runtime};
+use opengcram::runtime::{engines, SharedRuntime};
 use opengcram::tech::sg40;
 use opengcram::util::eng;
 use std::path::Path;
 
 fn main() -> opengcram::Result<()> {
     let tech = sg40();
-    let rt = Runtime::load(Path::new("artifacts"))?;
+    let rt = SharedRuntime::auto(Path::new("artifacts"));
+    println!("execution backend: {}", rt.backend_name());
 
     println!("== Fig. 8a/d: Id-Vg (|VDS| = 1.1 V) ==");
     let cards = vec![
@@ -16,7 +17,7 @@ fn main() -> opengcram::Result<()> {
         (*tech.card("os_nmos"), 1.5),
         (*tech.card("os_nmos_hvt"), 1.5),
     ];
-    let (vg, rows) = engines::idvg(&rt, &cards, -0.2, 1.2, 1.1)?;
+    let (vg, rows) = rt.with(|r| engines::idvg(r, &cards, -0.2, 1.2, 1.1))?;
     let names = ["si_nmos", "si_pmos", "os_nmos", "os_nmos_hvt"];
     print!("{:>8}", "vg");
     for n in names {
@@ -69,7 +70,7 @@ fn main() -> opengcram::Result<()> {
         });
         labels.push(label.into());
     }
-    let res = engines::retention(&rt, &pts)?;
+    let res = rt.with(|r| engines::retention(r, &pts))?;
     for (l, r) in labels.iter().zip(&res) {
         println!("  {l:24} retention = {:>12}", eng(r.t_retain, "s"));
     }

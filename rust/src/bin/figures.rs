@@ -1,11 +1,16 @@
 //! Regenerate every table/figure of the paper's evaluation in one run
 //! (EXPERIMENTS.md is produced from this output).
 //!
-//!   cargo run --release --bin figures
+//!   cargo run --release --bin figures [-- --backend native|pjrt|auto]
+//!
+//! The default `auto` backend executes the AOT artifacts when they
+//! load and the native in-process solver otherwise, so the full figure
+//! set regenerates on a clean checkout.
 
+use opengcram::cli;
 use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::layout::{cells, Library};
-use opengcram::runtime::{engines, SharedRuntime};
+use opengcram::runtime::engines;
 use opengcram::tech::{sg40, LayerRole};
 use opengcram::util::eng;
 use opengcram::{characterize, compose, dse, report, workloads};
@@ -13,7 +18,9 @@ use std::path::Path;
 
 fn main() -> opengcram::Result<()> {
     let tech = sg40();
-    let rt = SharedRuntime::load(Path::new("artifacts"))?;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rt = cli::parse_backend(&args)?.load(Path::new("artifacts"))?;
+    println!("# execution backend: {}", rt.backend_name());
 
     // ---- Fig. 3: cell areas ------------------------------------------------
     println!("== Fig. 3: bitcell areas (logic rules) ==");

@@ -5,8 +5,9 @@
 //! distinction:
 //! * [`analytical`] — logical-effort + RC estimates only (GEMTOO-class,
 //!   fast, no simulation);
-//! * [`characterize`] — cell-level transients executed on the AOT XLA
-//!   artifacts through the PJRT runtime (HSPICE-class for the critical
+//! * [`characterize`] — cell-level transients executed on an
+//!   [`ExecBackend`] (the native in-process EKV solver, or the AOT XLA
+//!   artifacts through the PJRT runtime; HSPICE-class for the critical
 //!   path) combined with analytical periphery delays.
 //!
 //! Characterization is *batch-first*: a [`CharPlan`] decomposes one
@@ -61,7 +62,7 @@ pub use batch::calls_for;
 
 use crate::compiler::{Bank, CellFlavor, Config};
 use crate::coordinator;
-use crate::runtime::{engines, Runtime, SharedRuntime};
+use crate::runtime::{engines, ExecBackend, SharedRuntime};
 use crate::sim;
 use crate::tech::{DeviceCard, Tech};
 use crate::util::ceil_log2;
@@ -477,11 +478,12 @@ impl CharPlan {
     }
 }
 
-/// Full characterization: write + read + retention transients on the
-/// XLA artifacts, analytical periphery, delay-chain quantization.
+/// Full characterization: write + read + retention transients on any
+/// execution backend (native solver or XLA artifacts), analytical
+/// periphery, delay-chain quantization.
 /// Runs one [`CharPlan`] with singleton batches; sweeps should prefer
 /// [`characterize_all`], which packs the same jobs across designs.
-pub fn characterize(tech: &Tech, rt: &Runtime, bank: &Bank) -> crate::Result<BankPerf> {
+pub fn characterize(tech: &Tech, rt: &dyn ExecBackend, bank: &Bank) -> crate::Result<BankPerf> {
     let mut plan = CharPlan::new(tech, bank);
     let wj = plan.write_jobs();
     if wj.is_empty() {

@@ -13,7 +13,9 @@
 //! helpers, so new flags inherit the strictness for free.
 
 use crate::compiler::CellFlavor;
+use crate::runtime::SharedRuntime;
 use crate::workloads::{self, CacheLevel, Machine};
+use std::path::Path;
 
 /// The value following `name`, if the flag is present.
 pub fn flag_value(args: &[String], name: &str) -> Option<String> {
@@ -86,6 +88,39 @@ pub fn parse_level(args: &[String]) -> crate::Result<CacheLevel> {
         None | Some("l1") => Ok(CacheLevel::L1),
         Some("l2") => Ok(CacheLevel::L2),
         Some(other) => anyhow::bail!("unknown --level '{other}' (expected l1|l2)"),
+    }
+}
+
+/// Execution-backend selection (`--backend native|pjrt|auto`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// PJRT when artifacts load, native otherwise (the default).
+    Auto,
+    /// The in-process EKV solver; needs nothing on disk.
+    Native,
+    /// The PJRT artifact executor; errors without `artifacts/` and the
+    /// linked `xla` crate.
+    Pjrt,
+}
+
+impl Backend {
+    /// Resolve the choice against an artifact directory.
+    pub fn load(self, dir: &Path) -> crate::Result<SharedRuntime> {
+        match self {
+            Backend::Auto => Ok(SharedRuntime::auto(dir)),
+            Backend::Native => Ok(SharedRuntime::native()),
+            Backend::Pjrt => SharedRuntime::load(dir),
+        }
+    }
+}
+
+/// The `--backend` flag (default `auto`); unknown names error.
+pub fn parse_backend(args: &[String]) -> crate::Result<Backend> {
+    match flag_value(args, "--backend").as_deref() {
+        None | Some("auto") => Ok(Backend::Auto),
+        Some("native") => Ok(Backend::Native),
+        Some("pjrt") => Ok(Backend::Pjrt),
+        Some(other) => anyhow::bail!("unknown --backend '{other}' (expected native|pjrt|auto)"),
     }
 }
 
@@ -171,6 +206,22 @@ mod tests {
         let err = parse_weights(&a(&["--weights", "2,x,3"]), (1.0, 0.5, 0.5)).unwrap_err();
         assert!(err.to_string().contains('x'), "{err}");
         assert!(parse_weights(&a(&["--weights", "1,2"]), (1.0, 0.5, 0.5)).is_err());
+    }
+
+    #[test]
+    fn backend_parsing_is_strict_and_native_loads_anywhere() {
+        assert_eq!(parse_backend(&a(&[])).unwrap(), Backend::Auto);
+        assert_eq!(parse_backend(&a(&["--backend", "auto"])).unwrap(), Backend::Auto);
+        assert_eq!(parse_backend(&a(&["--backend", "native"])).unwrap(), Backend::Native);
+        assert_eq!(parse_backend(&a(&["--backend", "pjrt"])).unwrap(), Backend::Pjrt);
+        let err = parse_backend(&a(&["--backend", "cuda"])).unwrap_err();
+        assert!(err.to_string().contains("cuda"), "{err}");
+        // native and auto resolve with no artifacts on disk; explicit
+        // pjrt fails cleanly there
+        let nowhere = Path::new("/nonexistent-artifacts");
+        assert_eq!(Backend::Native.load(nowhere).unwrap().backend_name(), "native");
+        assert_eq!(Backend::Auto.load(nowhere).unwrap().backend_name(), "native");
+        assert!(Backend::Pjrt.load(nowhere).is_err());
     }
 
     #[test]

@@ -142,10 +142,10 @@ impl EvalCache {
     }
 }
 
-/// Default DSE fan-out width: one worker per available core.
-pub fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-}
+/// Default DSE fan-out width: one worker per available core
+/// (re-exported from [`crate::util`], which also serves the native
+/// backend's row chunking).
+pub use crate::util::default_workers;
 
 /// Evaluate every config concurrently over `std::thread::scope`
 /// workers (work-stealing index, so uneven per-config costs balance).
@@ -160,39 +160,9 @@ where
     par_map(configs, workers, |c| eval(c)).into_iter().collect()
 }
 
-/// Scoped work-stealing parallel map; results keep input order.  The
-/// fan-out primitive under [`evaluate_all`], the parallel compile
-/// stage of [`evaluate_all_batched_cached`], and the composition
-/// engine's plan compiler ([`crate::compose`]).
-pub(crate) fn par_map<T: Sync, R: Send>(items: &[T], workers: usize, f: impl Fn(&T) -> R + Sync) -> Vec<R> {
-    let n = items.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = workers.clamp(1, n);
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(r);
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .unwrap_or_else(|p| p.into_inner())
-                .expect("worker filled every slot")
-        })
-        .collect()
-}
+/// Scoped work-stealing parallel map (see [`crate::util::par_map`],
+/// where it now lives so the native backend can share it).
+pub(crate) use crate::util::par_map;
 
 /// [`evaluate_all`] through a shared [`EvalCache`]: repeated configs
 /// (shmoo axes overlapping optimizer walks, re-runs across workloads)

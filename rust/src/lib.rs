@@ -10,7 +10,8 @@
 //! characterization via AOT-compiled XLA artifacts executed through
 //! PJRT), and the **design-space explorer** driven by an AI-workload
 //! profiler.  Python/JAX runs only at build time (`make artifacts`);
-//! every request served by this crate executes pre-compiled HLO.
+//! requests execute either the native in-process EKV solver (default,
+//! nothing on disk) or the pre-compiled HLO artifacts through PJRT.
 //!
 //! Module map (see DESIGN.md §3 for the full inventory):
 //!
@@ -20,7 +21,11 @@
 //! * [`drc`] — design-rule checker.
 //! * [`lvs`] — layout-vs-schematic (extraction + graph compare).
 //! * [`sim`] — native MNA transient simulator (HSPICE stand-in).
-//! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`.
+//! * [`runtime`] — pluggable execution backends behind
+//!   [`runtime::ExecBackend`]: the native batched EKV solver
+//!   ([`runtime::native`], always available) and the PJRT
+//!   loader/executor for `artifacts/*.hlo.txt` (optional
+//!   acceleration).
 //! * [`coordinator`] — batched DSE job execution over the runtime.
 //! * [`compiler`] — the GCRAM bank compiler (the paper's contribution).
 //! * [`characterize`] — area/delay/power/retention characterization,

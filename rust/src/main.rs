@@ -3,15 +3,21 @@
 //!
 //!   opengcram compile  --word 32 --words 32 [--flavor gc-np|gc-nn|os|sram]
 //!                      [--wwlls] [--gds out.gds] [--spice out.sp]
-//!   opengcram char     ... (adds transient characterization; needs artifacts/)
+//!   opengcram char     ... (adds transient characterization)
 //!   opengcram dse      --level l1|l2 --machine h100|gt520m [--window-res 0.1]
 //!   opengcram compose  --machine h100|gt520m [--window-res 0.1]
 //!                      [--weights delay,area,power] [--csv out.csv]
 //!                      [--plan [--cap 256]]
 //!
+//! Every transient-backed subcommand takes `--backend native|pjrt|auto`
+//! (default `auto`): `native` runs the in-process EKV solver — no
+//! `artifacts/` directory, no external toolchain — while `pjrt`
+//! demands the AOT XLA artifacts; `auto` prefers pjrt when the
+//! artifacts load and falls back to native.
+//!
 //! Flag values parse **strictly** through `opengcram::cli`: an unparseable
-//! number or an unknown flavor/machine/level is a hard error naming
-//! the offending string, never a silent fallback to a default.
+//! number or an unknown flavor/machine/level/backend is a hard error
+//! naming the offending string, never a silent fallback to a default.
 //!
 //! `--window-res` sets the transient window-quantization resolution
 //! (bucket step) of the batched sweeps: larger packs mixed-geometry
@@ -27,7 +33,6 @@
 
 use opengcram::cli;
 use opengcram::compiler::{compile, CellFlavor, Config};
-use opengcram::runtime::{Runtime, SharedRuntime};
 use opengcram::tech::sg40;
 use opengcram::util::eng;
 use opengcram::{characterize, compose, dse, report, workloads};
@@ -80,10 +85,11 @@ fn run() -> opengcram::Result<()> {
                 eng(a.leakage_w, "W")
             );
             if cmd == "char" {
-                let rt = Runtime::load(Path::new("artifacts"))?;
-                let c = characterize::characterize(&tech, &rt, &bank)?;
+                let rt = cli::parse_backend(&args)?.load(Path::new("artifacts"))?;
+                let c = rt.with(|b| characterize::characterize(&tech, b, &bank))?;
                 println!(
-                    "transient:  f_op {}  retention {}  stored1 {:.3} V  functional {}",
+                    "transient ({}):  f_op {}  retention {}  stored1 {:.3} V  functional {}",
+                    rt.backend_name(),
                     eng(c.f_op_hz, "Hz"),
                     eng(c.retention_s, "s"),
                     c.stored_one_v,
@@ -96,7 +102,7 @@ fn run() -> opengcram::Result<()> {
             let level = cli::parse_level(&args)?;
             let window_res: f64 =
                 cli::parse_or(&args, "--window-res", characterize::DEFAULT_WINDOW_RESOLUTION)?;
-            let rt = SharedRuntime::load(Path::new("artifacts"))?;
+            let rt = cli::parse_backend(&args)?.load(Path::new("artifacts"))?;
             let mut table = report::Table::new(&["task", "demand MHz", "16", "32", "64", "96", "128"]);
             // batch-first sweep: compile in parallel, characterize in
             // shared padded artifact batches via the coordinator
@@ -116,7 +122,12 @@ fn run() -> opengcram::Result<()> {
                 table.row(&row);
             }
             println!("{}", table.render());
-            println!("P=pass f=too slow r=retention x=no margin (Fig. 10, {} {:?})", machine.name, level);
+            println!(
+                "P=pass f=too slow r=retention x=no margin (Fig. 10, {} {:?}, {} backend)",
+                machine.name,
+                level,
+                rt.backend_name()
+            );
         }
         "compose" => {
             let machine = cli::parse_machine(&args)?;
@@ -171,7 +182,8 @@ fn run() -> opengcram::Result<()> {
                 );
                 return Ok(());
             }
-            let rt = SharedRuntime::load(Path::new("artifacts"))?;
+            let rt = cli::parse_backend(&args)?.load(Path::new("artifacts"))?;
+            println!("# {} backend", rt.backend_name());
             let mut spec = compose::ComposeSpec::new(machine);
             spec.window_resolution = window_res;
             spec.w_delay = w_delay;

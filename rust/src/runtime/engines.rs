@@ -1,12 +1,15 @@
-//! Typed batched entry points over the AOT artifacts.
+//! Typed batched entry points over any [`ExecBackend`] — the AOT XLA
+//! artifacts and the native in-process solver alike.
 //!
 //! Each function pads the design-point list to the artifact batch size,
 //! assembles the input tensors per the manifest's param/stim/node
 //! layouts (column names, never hard-coded indices) and parses the
-//! output tuple back into per-design results.
+//! output tuple back into per-design results.  Both backends expose the
+//! same manifest layout ([`super::native::native_manifest`] mirrors
+//! `python/compile/aot.py`), so this module is backend-agnostic.
 
 use super::stimulus as st;
-use super::{Runtime, Tensor};
+use super::{ExecBackend, Tensor};
 use crate::tech::DeviceCard;
 
 /// One write-path design point.
@@ -40,8 +43,8 @@ pub struct WriteResult {
 }
 
 /// Run the write artifact over design points (padded to batch).
-pub fn write_op(rt: &Runtime, pts: &[WritePoint], window_s: f64) -> crate::Result<Vec<WriteResult>> {
-    let meta = rt.manifest.get("write")?.clone();
+pub fn write_op(rt: &dyn ExecBackend, pts: &[WritePoint], window_s: f64) -> crate::Result<Vec<WriteResult>> {
+    let meta = rt.manifest().get("write")?.clone();
     let (b, nf, ns, np, steps) = (meta.batch, meta.nf(), meta.ns(), meta.npar(), meta.steps);
     anyhow::ensure!(pts.len() <= b, "batch overflow: {} > {b}", pts.len());
 
@@ -148,8 +151,8 @@ pub struct ReadResult {
     pub sn_final: f64,
 }
 
-pub fn read_op(rt: &Runtime, pts: &[ReadPoint], window_s: f64) -> crate::Result<Vec<ReadResult>> {
-    let meta = rt.manifest.get("read")?.clone();
+pub fn read_op(rt: &dyn ExecBackend, pts: &[ReadPoint], window_s: f64) -> crate::Result<Vec<ReadResult>> {
+    let meta = rt.manifest().get("read")?.clone();
     let (b, nf, ns, np, steps) = (meta.batch, meta.nf(), meta.ns(), meta.npar(), meta.steps);
     anyhow::ensure!(pts.len() <= b, "batch overflow");
 
@@ -255,8 +258,8 @@ pub struct RetentionResult {
     pub sn_final: f64,
 }
 
-pub fn retention(rt: &Runtime, pts: &[RetentionPoint]) -> crate::Result<Vec<RetentionResult>> {
-    let meta = rt.manifest.get("retention")?.clone();
+pub fn retention(rt: &dyn ExecBackend, pts: &[RetentionPoint]) -> crate::Result<Vec<RetentionResult>> {
+    let meta = rt.manifest().get("retention")?.clone();
     let (b, nf, ns, np, steps) = (meta.batch, meta.nf(), meta.ns(), meta.npar(), meta.steps);
     anyhow::ensure!(pts.len() <= b, "batch overflow");
 
@@ -285,7 +288,13 @@ pub fn retention(rt: &Runtime, pts: &[RetentionPoint]) -> crate::Result<Vec<Rete
         cinv.set2(i, n_sn, 1e15);
     }
 
-    // log-time grid ~1 ns .. 1e4 s
+    // The retention log-time grid contract: sub-steps start at 1 ps
+    // (dt0 = 1e-12 — NOT ~1 ns; the old comment drifted) and grow by
+    // 1.082x per scan step, so with the artifact's 448 steps and
+    // k_substeps = 4 the simulated span reaches ~1e5 s.  The dt tensor
+    // is a runtime *input*: both backends (PJRT artifact and
+    // runtime::native) integrate exactly this caller-authored grid and
+    // interpolate t_retain on it — see the native module docs.
     let dt = st::log_dt(steps, 1e-12, 1.082);
     let wave = st::zeros(steps, ns);
 
@@ -312,13 +321,13 @@ pub fn retention(rt: &Runtime, pts: &[RetentionPoint]) -> crate::Result<Vec<Rete
 
 /// Id-Vg surfaces: cards (<=batch) x gate grid; returns (vg, ids rows).
 pub fn idvg(
-    rt: &Runtime,
+    rt: &dyn ExecBackend,
     cards: &[(DeviceCard, f64)],
     vg_lo: f64,
     vg_hi: f64,
     vds: f64,
 ) -> crate::Result<(Vec<f64>, Vec<Vec<f64>>)> {
-    let (b, g) = rt.manifest.idvg.unwrap_or((128, 64));
+    let (b, g) = rt.manifest().idvg.unwrap_or((128, 64));
     anyhow::ensure!(cards.len() <= b, "batch overflow");
     let mut card_t = Tensor::zeros(vec![b as i64, 6]);
     let mut vds_t = Tensor::zeros(vec![b as i64, 1]);

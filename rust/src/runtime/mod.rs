@@ -1,15 +1,34 @@
-//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
-//! `python/compile/aot.py` and execute them from the rust hot path.
+//! Execution runtimes for the transient hot path.
 //!
-//! Python never runs at request time: `make artifacts` emits HLO *text*
-//! (see aot.py — serialized protos from jax>=0.5 are rejected by
-//! xla_extension 0.5.1) plus `manifest.json`; this module parses the
-//! manifest ([`Manifest`]), compiles each artifact once on the PJRT CPU
-//! client ([`Engine`]), and exposes typed batched entry points
-//! ([`engines`]) that the characterizer and DSE coordinator call.
+//! The characterizer and DSE coordinator speak to an [`ExecBackend`]: a
+//! named batched executor (`execute(name, &[Tensor]) -> Vec<Tensor>`)
+//! whose input/output layout is described by a [`Manifest`].  Two
+//! implementations exist:
+//!
+//! * [`native::NativeBackend`] — the in-process EKV solver
+//!   ([`crate::sim`]) batched over a synthesized manifest with the same
+//!   param/stim/free-node column layout the XLA artifacts use, so the
+//!   typed entry points ([`engines`]) work unchanged.  Always
+//!   available; genuinely `Send + Sync` (no serializing lock).
+//! * [`Runtime`] — the PJRT executor for the AOT-compiled HLO artifacts
+//!   produced by `python/compile/aot.py`.  Python never runs at request
+//!   time: `make artifacts` emits HLO *text* (see aot.py — serialized
+//!   protos from jax>=0.5 are rejected by xla_extension 0.5.1) plus
+//!   `manifest.json`; this module parses the manifest ([`Manifest`])
+//!   and compiles each artifact once on the PJRT CPU client
+//!   ([`Engine`]).  Optional acceleration: it needs `artifacts/` on
+//!   disk and the vendored `xla` crate linked (`--features pjrt`).
+//!
+//! [`SharedRuntime`] is the thread-shareable selection of the two —
+//! see [`SharedRuntime::native`] / [`SharedRuntime::load`] /
+//! [`SharedRuntime::auto`] and the CLI's `--backend` flag
+//! ([`crate::cli::parse_backend`]).
 
 pub mod engines;
+pub mod native;
 pub mod stimulus;
+
+pub use native::NativeBackend;
 
 // With `--features pjrt` the `xla::` paths below resolve to the real
 // vendored crate; without it this API-compatible stub compiles in and
@@ -143,9 +162,28 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// Build a tensor, validating that the shape covers the buffer —
+    /// the fallible twin of [`Tensor::new`] for callers assembling
+    /// shapes from external data (manifest entries, parsed files).
+    pub fn checked(dims: Vec<i64>, data: Vec<f32>) -> crate::Result<Tensor> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(
+            dims.iter().all(|&d| d >= 0) && n as usize == data.len(),
+            "tensor shape {dims:?} describes {n} elements but the buffer holds {}",
+            data.len()
+        );
+        Ok(Tensor { dims, data })
+    }
+
+    /// Build a tensor; panics if the shape does not cover the buffer.
+    /// (This used to be a `debug_assert`, so a bad reshape in a release
+    /// build silently mis-indexed row-major order; see
+    /// [`Tensor::checked`] for the error-returning variant.)
     pub fn new(dims: Vec<i64>, data: Vec<f32>) -> Tensor {
-        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
-        Tensor { dims, data }
+        match Tensor::checked(dims, data) {
+            Ok(t) => t,
+            Err(e) => panic!("{e}"),
+        }
     }
 
     pub fn zeros(dims: Vec<i64>) -> Tensor {
@@ -153,12 +191,72 @@ impl Tensor {
         Tensor { dims, data: vec![0.0; n] }
     }
 
+    /// Row-major index into a rank-2 view; bounds/rank are
+    /// `debug_assert`ed (the hot loops stay branch-free in release).
+    fn idx2(&self, i: usize, j: usize) -> usize {
+        debug_assert!(
+            self.dims.len() == 2,
+            "at2/set2 on a rank-{} tensor {:?}",
+            self.dims.len(),
+            self.dims
+        );
+        debug_assert!(
+            i < self.dims[0] as usize && j < self.dims[1] as usize,
+            "index ({i}, {j}) out of bounds for shape {:?}",
+            self.dims
+        );
+        i * self.dims[1] as usize + j
+    }
+
     pub fn at2(&self, i: usize, j: usize) -> f32 {
-        self.data[i * self.dims[1] as usize + j]
+        self.data[self.idx2(i, j)]
     }
 
     pub fn set2(&mut self, i: usize, j: usize, v: f32) {
-        self.data[i * self.dims[1] as usize + j] = v;
+        let k = self.idx2(i, j);
+        self.data[k] = v;
+    }
+}
+
+/// A named batched executor: the interface the typed entry points
+/// ([`engines`]) and everything above them (characterizer, DSE
+/// coordinator, composition) are written against.
+///
+/// The contract, shared by both implementations:
+///
+/// * [`Self::manifest`] describes every artifact's batch size, step
+///   count and param/stim/free-node *column layout*; callers resolve
+///   columns by name through [`ArtifactMeta`], never by hard-coded
+///   index.
+/// * [`Self::execute`] runs artifact `name` over a full padded batch of
+///   input tensors and returns its output tuple.
+/// * [`Self::call_count`] / [`Self::call_counts`] count executions per
+///   artifact since construction — the batching KPI: a batch-first
+///   sweep pays `O(points / batch)` executions, not `O(points)`, and
+///   the benches assert that against these real counters.
+pub trait ExecBackend {
+    /// The artifact layout table this backend executes against.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute artifact `name` with the given inputs; returns the tuple
+    /// of output tensors.
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> crate::Result<Vec<Tensor>>;
+
+    /// Executions issued against artifact `name` since construction
+    /// (0 for unknown names).
+    fn call_count(&self, name: &str) -> u64;
+
+    /// Per-artifact execution counts — the DSE batching KPI recorded by
+    /// the benches (`BENCH_perf.json`).
+    fn call_counts(&self) -> BTreeMap<String, u64>;
+
+    /// Human-readable execution platform (e.g. `cpu` for PJRT,
+    /// `native-ekv` for the in-process solver).
+    fn platform(&self) -> String;
+
+    /// Batch capacity of artifact `name` from the manifest.
+    fn batch_cap(&self, name: &str) -> crate::Result<usize> {
+        self.manifest().get(name).map(|m| m.batch)
     }
 }
 
@@ -182,17 +280,28 @@ impl Runtime {
     /// Load and compile every artifact in the manifest directory.
     pub fn load(dir: &Path) -> crate::Result<Runtime> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e:?}"))?;
-        let mut engines = BTreeMap::new();
         let mut names: Vec<(String, String)> = manifest
             .entries
             .iter()
             .map(|(k, v)| (k.clone(), v.file.clone()))
             .collect();
         names.push(("idvg".into(), "idvg.hlo.txt".into()));
+        // resolve paths up front: the xla loader takes &str, so a
+        // non-UTF8 artifact path is a load error (it used to panic on
+        // `to_str().unwrap()` mid-compile)
+        let mut files: Vec<(String, String, String)> = Vec::with_capacity(names.len());
         for (name, file) in names {
             let path = dir.join(&file);
-            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("artifact path {path:?} is not valid UTF-8"))?
+                .to_string();
+            files.push((name, file, path_str));
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e:?}"))?;
+        let mut engines = BTreeMap::new();
+        for (name, file, path_str) in files {
+            let proto = xla::HloModuleProto::from_text_file(&path_str)
                 .map_err(|e| anyhow::anyhow!("loading {file}: {e:?}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
@@ -266,40 +375,121 @@ impl Runtime {
     }
 }
 
-/// Thread-shareable wrapper: the xla PJRT client is not Send/Sync
-/// (internal Rc), but the CPU client is safe to drive from one thread
-/// at a time — SharedRuntime serializes access behind a mutex so tests
-/// and the coordinator can share one compiled runtime.
-pub struct SharedRuntime(std::sync::Mutex<Runtime>);
+impl ExecBackend for Runtime {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        Runtime::execute(self, name, inputs)
+    }
+    fn call_count(&self, name: &str) -> u64 {
+        Runtime::call_count(self, name)
+    }
+    fn call_counts(&self) -> BTreeMap<String, u64> {
+        Runtime::call_counts(self)
+    }
+    fn platform(&self) -> String {
+        Runtime::platform(self)
+    }
+}
+
+/// The PJRT variant of [`SharedRuntime`]: the xla PJRT client is not
+/// Send/Sync (internal Rc), but the CPU client is safe to drive from
+/// one thread at a time — access is serialized behind a mutex.
+pub struct PjrtShared(std::sync::Mutex<Runtime>);
 
 // SAFETY: all access is serialized by the mutex; the CPU PJRT client
 // performs no thread-local magic between calls.
-unsafe impl Send for SharedRuntime {}
-unsafe impl Sync for SharedRuntime {}
+unsafe impl Send for PjrtShared {}
+unsafe impl Sync for PjrtShared {}
+
+/// Thread-shareable execution backend handed to the coordinator, the
+/// batched sweeps and the benches.
+///
+/// * [`SharedRuntime::Native`] wraps the in-process solver, which is
+///   genuinely `Send + Sync` — [`SharedRuntime::with`] hands the
+///   backend out with **no lock**, so coordinator executors and tests
+///   sharing one runtime never serialize on a mutex (the old
+///   whole-runtime `unsafe impl Send/Sync` now applies only to the
+///   PJRT variant, where it is actually needed).
+/// * [`SharedRuntime::Pjrt`] serializes the non-`Send` PJRT client
+///   behind [`PjrtShared`]'s mutex, exactly as before.
+pub enum SharedRuntime {
+    Native(NativeBackend),
+    Pjrt(PjrtShared),
+}
 
 impl SharedRuntime {
+    /// Load the PJRT backend from an artifact directory (fails cleanly
+    /// when artifacts or the linked `xla` crate are absent — see
+    /// [`SharedRuntime::auto`] for the fallback policy).
     pub fn load(dir: &Path) -> crate::Result<SharedRuntime> {
-        Ok(SharedRuntime(std::sync::Mutex::new(Runtime::load(dir)?)))
+        Ok(SharedRuntime::Pjrt(PjrtShared(std::sync::Mutex::new(Runtime::load(dir)?))))
     }
 
-    pub fn with<R>(&self, f: impl FnOnce(&Runtime) -> R) -> R {
-        let guard = self.0.lock().unwrap_or_else(|p| p.into_inner());
-        f(&guard)
+    /// The native in-process backend (always available, no artifacts).
+    pub fn native() -> SharedRuntime {
+        SharedRuntime::Native(NativeBackend::new())
     }
 
-    /// See [`Runtime::call_count`].
+    /// PJRT when `dir` holds loadable artifacts and the `xla` crate is
+    /// linked; the native backend otherwise.  The `--backend auto`
+    /// policy of the CLI, benches and examples.
+    ///
+    /// A missing artifact directory falls back silently (the normal
+    /// clean-checkout case); artifacts that are *present but fail to
+    /// load* are reported on stderr before falling back, so a broken
+    /// `make artifacts` output cannot masquerade as a deliberate
+    /// native run — pass `--backend pjrt` to make that case a hard
+    /// error instead.
+    pub fn auto(dir: &Path) -> SharedRuntime {
+        match SharedRuntime::load(dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                if dir.join("manifest.json").exists() {
+                    eprintln!(
+                        "warning: artifacts in {dir:?} present but PJRT load failed ({e:#}); \
+                         falling back to the native backend"
+                    );
+                }
+                SharedRuntime::native()
+            }
+        }
+    }
+
+    /// Which backend this is: `"native"` or `"pjrt"`.
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            SharedRuntime::Native(_) => "native",
+            SharedRuntime::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Run `f` against the backend.  Native: direct call, no lock;
+    /// PJRT: serialized behind the mutex.
+    pub fn with<R>(&self, f: impl FnOnce(&dyn ExecBackend) -> R) -> R {
+        match self {
+            SharedRuntime::Native(b) => f(b),
+            SharedRuntime::Pjrt(p) => {
+                let guard = p.0.lock().unwrap_or_else(|e| e.into_inner());
+                f(&*guard)
+            }
+        }
+    }
+
+    /// See [`ExecBackend::call_count`].
     pub fn call_count(&self, name: &str) -> u64 {
         self.with(|r| r.call_count(name))
     }
 
-    /// See [`Runtime::call_counts`].
+    /// See [`ExecBackend::call_counts`].
     pub fn call_counts(&self) -> BTreeMap<String, u64> {
         self.with(|r| r.call_counts())
     }
 
     /// Batch capacity of artifact `name` from the manifest.
     pub fn batch_cap(&self, name: &str) -> crate::Result<usize> {
-        self.with(|r| r.manifest.get(name).map(|m| m.batch))
+        self.with(|r| r.batch_cap(name))
     }
 }
 
@@ -341,5 +531,54 @@ mod tests {
         t.set2(1, 2, 5.0);
         assert_eq!(t.at2(1, 2), 5.0);
         assert_eq!(t.at2(0, 0), 0.0);
+    }
+
+    #[test]
+    fn tensor_shape_is_checked() {
+        assert!(Tensor::checked(vec![2, 3], vec![0.0; 6]).is_ok());
+        // short buffer: checked errors (and new panics) instead of
+        // silently mis-indexing row-major order
+        let err = Tensor::checked(vec![2, 3], vec![0.0; 5]).unwrap_err();
+        assert!(format!("{err}").contains("[2, 3]"), "{err}");
+        assert!(Tensor::checked(vec![-2, 3], vec![0.0; 6]).is_err(), "negative dim");
+    }
+
+    #[test]
+    #[should_panic(expected = "tensor shape")]
+    fn tensor_new_panics_on_bad_reshape() {
+        let _ = Tensor::new(vec![4, 4], vec![0.0; 6]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)] // the bounds check compiles out in --release
+    #[should_panic(expected = "out of bounds")]
+    fn tensor_at2_bounds_are_debug_asserted() {
+        // an out-of-range column must not alias into the next row
+        let t = Tensor::zeros(vec![2, 3]);
+        let _ = t.at2(0, 3);
+    }
+
+    #[test]
+    // linux only: macOS APFS rejects non-UTF8 filenames at creation
+    #[cfg(target_os = "linux")]
+    fn non_utf8_artifact_path_is_an_error_not_a_panic() {
+        use std::ffi::OsString;
+        use std::os::unix::ffi::OsStringExt;
+        // a real manifest inside a non-UTF8 directory: load must reach
+        // the artifact-path step and return a proper error (it used to
+        // panic on `path.to_str().unwrap()`); per-process dir name so
+        // concurrent checkouts' test runs cannot clobber each other
+        let mut name = format!("gcram-{}-", std::process::id()).into_bytes();
+        name.extend_from_slice(b"\xff-artifacts");
+        let dir = std::env::temp_dir().join(OsString::from_vec(name));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"write": {"file": "write.hlo.txt", "free_nodes": ["sn"], "stim_nodes": ["wwl"], "params": ["mwr.kp"], "outputs": ["sn_final"]}}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", Runtime::load(&dir).unwrap_err());
+        assert!(err.contains("not valid UTF-8"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

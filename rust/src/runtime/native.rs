@@ -1,0 +1,572 @@
+//! Native batched execution backend: the in-process EKV solver
+//! ([`crate::sim`]) promoted to a first-class [`ExecBackend`].
+//!
+//! The backend synthesizes a [`Manifest`] with the **same artifact
+//! names, shapes and param/stim/free-node column layouts** the AOT XLA
+//! artifacts use (single source of truth: `python/compile/circuits.py`
+//! / `aot.py`, mirrored 1:1 by the [`crate::sim`] templates), so the
+//! typed entry points in [`crate::runtime::engines`] assemble and parse
+//! exactly the same tensors against either backend.  Measurement
+//! semantics mirror `python/compile/model.py`: threshold crossings with
+//! linear interpolation ([`sim::cross_time`]), `big_time` as the
+//! "never crossed" sentinel, and the same per-op output tuples.
+//!
+//! # Execution model
+//!
+//! [`ExecBackend::execute`] evaluates the whole padded batch: each
+//! row is an independent [`sim::transient`] over the shared stimulus
+//! schedule, chunked across threads with [`crate::util::par_map`].
+//! Rows whose parameter columns are **all zero** (the engines'
+//! zero-padding) are short-circuited to a constant `v0` trace — exactly
+//! what integrating them would produce, since every stamp's current
+//! scales with a parameter (`kp`, `C`, `G`, `I`); the measurements
+//! still run so the output tensors are fully populated.
+//!
+//! # Determinism and parity
+//!
+//! All arithmetic runs in `f64` on values decoded from the `f32` input
+//! tensors (exact widening) and is rounded to `f32` only at the output
+//! boundary.  Per-row work never depends on batch position or thread
+//! chunking, so a batched execution is **bitwise identical** to
+//! per-point singletons — `tests/parity.rs` pins this against direct
+//! `sim::transient` runs for all three transient ops.
+//!
+//! # Time grids
+//!
+//! The dt schedule is a runtime *input* (per the manifest contract), so
+//! the backend integrates whatever grid the caller authors.  In
+//! particular [`engines::retention`](crate::runtime::engines::retention)
+//! hands both backends the geometric grid
+//! `log_dt(steps, 1e-12, 1.082)` — starting at ~1 **ps** (not ~1 ns)
+//! and spanning ~1e5 s after `k_substeps` scaling — and the native
+//! backend must reproduce crossings on that grid, not substitute its
+//! own.
+
+use super::{ArtifactMeta, ExecBackend, Manifest, Tensor};
+use crate::sim;
+use crate::util;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Transient batch capacity (matches the AOT artifacts' `BATCH`).
+pub const NATIVE_BATCH: usize = 256;
+/// Id-Vg batch / gate-grid sizes (match `aot.py`).
+pub const IDVG_BATCH: usize = 128;
+pub const IDVG_GRID: usize = 64;
+
+const T_WRITE: usize = 384;
+const T_READ: usize = 384;
+const T_RETENTION: usize = 448;
+const K_SUBSTEPS: usize = 4;
+const TRACE_DS: usize = 4;
+/// "Never crossed" sentinel (mirror of model.BIG_TIME).
+pub const BIG_TIME: f64 = 1e12;
+
+/// The synthesized manifest: byte-for-byte the column layout
+/// `python/compile/aot.py` writes for the XLA artifacts, so both
+/// backends are interchangeable behind [`ExecBackend`].
+pub fn native_manifest() -> Manifest {
+    fn card_cols(tag: &str) -> Vec<String> {
+        ["kp", "vt", "n", "lam", "wl", "sign"].iter().map(|c| format!("{tag}.{c}")).collect()
+    }
+    fn strs(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+    fn entry(
+        steps: usize,
+        integrator: &str,
+        free: &[&str],
+        stim: &[&str],
+        params: Vec<String>,
+        outputs: &[&str],
+    ) -> ArtifactMeta {
+        ArtifactMeta {
+            file: "<native>".into(),
+            batch: NATIVE_BATCH,
+            steps,
+            k_substeps: K_SUBSTEPS,
+            trace_ds: TRACE_DS,
+            big_time: BIG_TIME,
+            integrator: integrator.into(),
+            free_nodes: strs(free),
+            stim_nodes: strs(stim),
+            params,
+            outputs: strs(outputs),
+        }
+    }
+    let mut entries = BTreeMap::new();
+    // write: driver inverter -> WBL -> write tx -> SN (circuits.py)
+    let mut p = card_cols("mwr");
+    p.extend(card_cols("mdrvp"));
+    p.extend(card_cols("mdrvn"));
+    p.push("cwwl_sn.c".into());
+    p.push("gwbl.g".into());
+    entries.insert(
+        "write".to_string(),
+        entry(
+            T_WRITE,
+            "heun",
+            &["sn", "wbl"],
+            &["wwl", "dinb", "vdd", "gnd"],
+            p,
+            &["times_ds", "trace_ds", "sn_final", "t_wr", "sn_peak"],
+        ),
+    );
+    // read: read tx (source on RWL, gate on SN) drives RBL
+    let mut p = card_cols("mrd");
+    p.extend(card_cols("mrbl_leak"));
+    p.push("crwl_sn.c".into());
+    p.push("grbl.g".into());
+    entries.insert(
+        "read".to_string(),
+        entry(
+            T_READ,
+            "heun",
+            &["sn", "rbl"],
+            &["rwl", "rwl_idle", "snu", "gnd"],
+            p,
+            &["times_ds", "trace_ds", "t_rise", "t_fall", "rbl_final", "sn_final"],
+        ),
+    );
+    // retention: SN decay through write-tx subthreshold + gate leak
+    let mut p = card_cols("mwr");
+    p.push("gleak.g".into());
+    p.push("idist.i".into());
+    entries.insert(
+        "retention".to_string(),
+        entry(
+            T_RETENTION,
+            "expdecay",
+            &["sn"],
+            &["wwl", "wbl", "gnd", "vth"],
+            p,
+            &["times_ds", "trace_ds", "t_retain", "sn_final"],
+        ),
+    );
+    Manifest {
+        dir: PathBuf::from("<native>"),
+        entries,
+        idvg: Some((IDVG_BATCH, IDVG_GRID)),
+    }
+}
+
+/// The native backend: synthesized manifest + per-artifact execution
+/// counters.  `Send + Sync` for real (plain data and atomics), so
+/// [`super::SharedRuntime::Native`] hands it out without a lock.
+pub struct NativeBackend {
+    manifest: Manifest,
+    calls: BTreeMap<String, AtomicU64>,
+    workers: usize,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        let manifest = native_manifest();
+        let mut calls: BTreeMap<String, AtomicU64> =
+            manifest.entries.keys().map(|k| (k.clone(), AtomicU64::new(0))).collect();
+        calls.insert("idvg".into(), AtomicU64::new(0));
+        NativeBackend { manifest, calls, workers: util::default_workers() }
+    }
+
+    /// Override the row-chunking fan-out (default: one per core).
+    pub fn with_workers(mut self, workers: usize) -> NativeBackend {
+        self.workers = workers.max(1);
+        self
+    }
+
+    fn transient(&self, op: TransientOp, inputs: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        let meta = self.manifest.get(op.name())?;
+        let (b, nf, ns, np, steps) = (meta.batch, meta.nf(), meta.ns(), meta.npar(), meta.steps);
+        anyhow::ensure!(inputs.len() == 7, "{}: expected 7 inputs, got {}", op.name(), inputs.len());
+        let shapes: [Vec<i64>; 7] = [
+            vec![b as i64, nf as i64],
+            vec![b as i64, ns as i64],
+            vec![b as i64, np as i64],
+            vec![b as i64, nf as i64],
+            vec![steps as i64, ns as i64],
+            vec![steps as i64, ns as i64],
+            vec![steps as i64],
+        ];
+        for (i, want) in shapes.iter().enumerate() {
+            anyhow::ensure!(
+                &inputs[i].dims == want,
+                "{}: input {i} has shape {:?}, expected {:?}",
+                op.name(),
+                inputs[i].dims,
+                want
+            );
+        }
+        let (v0, amp, params, cinv) = (&inputs[0], &inputs[1], &inputs[2], &inputs[3]);
+        let wave: Vec<Vec<f64>> = rows_f64(&inputs[4], steps, ns);
+        let dwave: Vec<Vec<f64>> = rows_f64(&inputs[5], steps, ns);
+        let dt: Vec<f64> = inputs[6].data.iter().map(|&v| v as f64).collect();
+        let times = super::stimulus::times_from_dt(&dt, meta.k_substeps);
+        let cols = op.columns(meta)?;
+        let tmpl = op.template();
+        let mode = op.integrator();
+
+        // one independent transient per row, chunked across threads;
+        // zero-param (padding) rows short-circuit to a constant trace
+        let rows: Vec<usize> = (0..b).collect();
+        let per_row: Vec<RowOut> = util::par_map(&rows, self.workers, |&i| {
+            let v0r = row_f64(v0, i, nf);
+            let ampr = row_f64(amp, i, ns);
+            let pr = row_f64(params, i, np);
+            let cinvr = row_f64(cinv, i, nf);
+            let trace = if pr.iter().any(|&p| p != 0.0) {
+                let (_, trace) = sim::transient(
+                    &tmpl,
+                    mode,
+                    meta.k_substeps,
+                    &v0r,
+                    &ampr,
+                    &pr,
+                    &cinvr,
+                    &wave,
+                    &dwave,
+                    &dt,
+                );
+                trace
+            } else {
+                vec![v0r.clone(); steps]
+            };
+            let scalars = op.measure(&cols, meta.big_time, &times, &trace, &v0r, &ampr);
+            let ds: Vec<f32> = trace
+                .iter()
+                .step_by(meta.trace_ds.max(1))
+                .flat_map(|r| r.iter().map(|&v| v as f32))
+                .collect();
+            RowOut { ds, scalars }
+        });
+
+        // assemble the output tuple: times_ds, trace_ds, then the
+        // per-op scalar outputs (outputs[2..] in the manifest)
+        let t_ds = times.iter().step_by(meta.trace_ds.max(1)).count();
+        let times_ds: Vec<f32> =
+            times.iter().step_by(meta.trace_ds.max(1)).map(|&t| t as f32).collect();
+        let mut trace_ds = vec![0.0f32; t_ds * b * nf];
+        for (i, r) in per_row.iter().enumerate() {
+            for ti in 0..t_ds {
+                for k in 0..nf {
+                    trace_ds[(ti * b + i) * nf + k] = r.ds[ti * nf + k];
+                }
+            }
+        }
+        let n_scalars = meta.outputs.len().saturating_sub(2);
+        let mut out = vec![
+            Tensor::new(vec![t_ds as i64], times_ds),
+            Tensor::new(vec![t_ds as i64, b as i64, nf as i64], trace_ds),
+        ];
+        for s in 0..n_scalars {
+            out.push(Tensor::new(
+                vec![b as i64],
+                per_row.iter().map(|r| r.scalars[s] as f32).collect(),
+            ));
+        }
+        Ok(out)
+    }
+
+    fn idvg(&self, inputs: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        let (b, g) = self.manifest.idvg.unwrap_or((IDVG_BATCH, IDVG_GRID));
+        anyhow::ensure!(inputs.len() == 3, "idvg: expected 3 inputs, got {}", inputs.len());
+        anyhow::ensure!(
+            inputs[0].dims == [b as i64, 6]
+                && inputs[1].dims == [g as i64]
+                && inputs[2].dims == [b as i64, 1],
+            "idvg: bad input shapes {:?}",
+            inputs.iter().map(|t| t.dims.clone()).collect::<Vec<_>>()
+        );
+        let vg: Vec<f64> = inputs[1].data.iter().map(|&v| v as f64).collect();
+        let rows: Vec<usize> = (0..b).collect();
+        let ids: Vec<Vec<f32>> = util::par_map(&rows, self.workers, |&i| {
+            let c = row_f64(&inputs[0], i, 6);
+            let vds = inputs[2].data[i] as f64;
+            vg.iter()
+                .map(|&v| sim::mos_ids(vds, v, 0.0, c[0], c[1], c[2], c[3], c[4], c[5]) as f32)
+                .collect()
+        });
+        Ok(vec![Tensor::new(
+            vec![b as i64, g as i64],
+            ids.into_iter().flatten().collect(),
+        )])
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        let counter = self
+            .calls
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("engine '{name}' not loaded"))?;
+        counter.fetch_add(1, Ordering::Relaxed);
+        match name {
+            "write" => self.transient(TransientOp::Write, inputs),
+            "read" => self.transient(TransientOp::Read, inputs),
+            "retention" => self.transient(TransientOp::Retention, inputs),
+            "idvg" => self.idvg(inputs),
+            other => anyhow::bail!("engine '{other}' not loaded"),
+        }
+    }
+
+    fn call_count(&self, name: &str) -> u64 {
+        self.calls.get(name).map(|c| c.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    fn call_counts(&self) -> BTreeMap<String, u64> {
+        self.calls.iter().map(|(k, c)| (k.clone(), c.load(Ordering::Relaxed))).collect()
+    }
+
+    fn platform(&self) -> String {
+        "native-ekv".to_string()
+    }
+}
+
+struct RowOut {
+    /// Downsampled trace, row-major (t_ds x nf).
+    ds: Vec<f32>,
+    /// Per-op scalar outputs (manifest `outputs[2..]` order).
+    scalars: Vec<f64>,
+}
+
+/// Column indices a transient op's measurements need, resolved from the
+/// manifest by name (never hard-coded).
+struct Columns {
+    n_sn: usize,
+    /// `rbl` for read; unused otherwise.
+    n_rbl: usize,
+    /// (`rwl`, `rwl_idle`) for read, (`vth`, 0) for retention.
+    s_a: usize,
+    s_b: usize,
+}
+
+#[derive(Clone, Copy)]
+enum TransientOp {
+    Write,
+    Read,
+    Retention,
+}
+
+impl TransientOp {
+    fn name(self) -> &'static str {
+        match self {
+            TransientOp::Write => "write",
+            TransientOp::Read => "read",
+            TransientOp::Retention => "retention",
+        }
+    }
+
+    fn template(self) -> sim::Template {
+        match self {
+            TransientOp::Write => sim::write_template(),
+            TransientOp::Read => sim::read_template(),
+            TransientOp::Retention => sim::retention_template(),
+        }
+    }
+
+    fn integrator(self) -> sim::Integrator {
+        match self {
+            TransientOp::Retention => sim::Integrator::ExpDecay,
+            _ => sim::Integrator::Heun,
+        }
+    }
+
+    fn columns(self, meta: &ArtifactMeta) -> crate::Result<Columns> {
+        Ok(match self {
+            TransientOp::Write => Columns { n_sn: meta.free("sn")?, n_rbl: 0, s_a: 0, s_b: 0 },
+            TransientOp::Read => Columns {
+                n_sn: meta.free("sn")?,
+                n_rbl: meta.free("rbl")?,
+                s_a: meta.stim("rwl")?,
+                s_b: meta.stim("rwl_idle")?,
+            },
+            TransientOp::Retention => {
+                Columns { n_sn: meta.free("sn")?, n_rbl: 0, s_a: meta.stim("vth")?, s_b: 0 }
+            }
+        })
+    }
+
+    /// The model.py measurement block for one row, on the full-rate
+    /// trace.  Returns the scalar outputs in manifest order.
+    fn measure(
+        self,
+        cols: &Columns,
+        big: f64,
+        times: &[f64],
+        trace: &[Vec<f64>],
+        v0r: &[f64],
+        ampr: &[f64],
+    ) -> Vec<f64> {
+        let node = |k: usize| -> Vec<f64> { trace.iter().map(|r| r[k]).collect() };
+        match self {
+            TransientOp::Write => {
+                // sn_final, t_wr (90 %-of-peak rising / 10 %-of-initial
+                // falling), sn_peak
+                let sn = node(cols.n_sn);
+                let sn0 = v0r[cols.n_sn];
+                let sn_peak = sn.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let t_rise = sim::cross_time(times, &sn, 0.9 * sn_peak, true).unwrap_or(big);
+                let t_fall =
+                    sim::cross_time(times, &sn, 0.1 * sn0.max(1e-3), false).unwrap_or(big);
+                let t_wr = if sn_peak <= sn0 + 0.05 { t_fall } else { t_rise };
+                vec![*sn.last().unwrap_or(&sn0), t_wr, sn_peak]
+            }
+            TransientOp::Read => {
+                // vref = 0.5 * max(amp[rwl], amp[rwl_idle]) == VDD/2 for
+                // every flavor (predischarge swings RWL to VDD,
+                // precharge idles the rail at VDD)
+                let rbl = node(cols.n_rbl);
+                let sn = node(cols.n_sn);
+                let vref = 0.5 * ampr[cols.s_a].max(ampr[cols.s_b]);
+                let t_rise = sim::cross_time(times, &rbl, vref, true).unwrap_or(big);
+                let t_fall = sim::cross_time(times, &rbl, vref, false).unwrap_or(big);
+                vec![
+                    t_rise,
+                    t_fall,
+                    *rbl.last().unwrap_or(&0.0),
+                    *sn.last().unwrap_or(&0.0),
+                ]
+            }
+            TransientOp::Retention => {
+                // hold threshold: amp[vth] if positive, else 0.5 * v0
+                let sn = node(cols.n_sn);
+                let vth_abs = ampr[cols.s_a];
+                let vhold = if vth_abs > 0.0 { vth_abs } else { 0.5 * v0r[cols.n_sn] };
+                let t_ret = sim::cross_time(times, &sn, vhold, false).unwrap_or(big);
+                vec![t_ret, *sn.last().unwrap_or(&v0r[cols.n_sn])]
+            }
+        }
+    }
+}
+
+/// One tensor row, widened to f64 (exact).
+fn row_f64(t: &Tensor, i: usize, w: usize) -> Vec<f64> {
+    t.data[i * w..(i + 1) * w].iter().map(|&v| v as f64).collect()
+}
+
+/// All rows of a (rows x w) tensor, widened to f64.
+fn rows_f64(t: &Tensor, rows: usize, w: usize) -> Vec<Vec<f64>> {
+    (0..rows).map(|i| row_f64(t, i, w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_mirrors_the_sim_templates() {
+        let m = native_manifest();
+        for (name, tmpl) in [
+            ("write", sim::write_template()),
+            ("read", sim::read_template()),
+            ("retention", sim::retention_template()),
+        ] {
+            let e = m.get(name).unwrap();
+            assert_eq!(e.nf(), tmpl.nf, "{name}: free-node count");
+            assert_eq!(e.ns(), tmpl.ns, "{name}: stimulus count");
+            assert_eq!(e.npar(), tmpl.npar, "{name}: param count");
+            assert_eq!(e.batch, NATIVE_BATCH);
+        }
+        // the column names the engines resolve must all exist
+        let w = m.get("write").unwrap();
+        for p in ["mwr.kp", "mdrvp.kp", "mdrvn.kp", "cwwl_sn.c", "gwbl.g"] {
+            w.pcol(p).unwrap();
+        }
+        for s in ["wwl", "dinb", "vdd"] {
+            w.stim(s).unwrap();
+        }
+        let r = m.get("read").unwrap();
+        for p in ["mrd.kp", "mrbl_leak.kp", "crwl_sn.c", "grbl.g"] {
+            r.pcol(p).unwrap();
+        }
+        for s in ["rwl", "rwl_idle", "snu"] {
+            r.stim(s).unwrap();
+        }
+        let ret = m.get("retention").unwrap();
+        for p in ["mwr.kp", "gleak.g", "idist.i"] {
+            ret.pcol(p).unwrap();
+        }
+        ret.stim("vth").unwrap();
+        assert_eq!(ret.integrator, "expdecay");
+        assert_eq!(m.idvg, Some((IDVG_BATCH, IDVG_GRID)));
+    }
+
+    #[test]
+    fn counters_count_per_artifact_and_unknown_names_error() {
+        let b = NativeBackend::new();
+        assert_eq!(b.call_count("retention"), 0);
+        let err = b.execute("nonesuch", &[]).unwrap_err();
+        assert!(format!("{err}").contains("nonesuch"), "{err}");
+        assert_eq!(b.call_count("nonesuch"), 0);
+        // a malformed call still counts as an issued execution (the
+        // PJRT side bumps before executing too)
+        assert!(b.execute("retention", &[]).is_err());
+        assert_eq!(b.call_count("retention"), 1);
+        assert_eq!(b.call_counts().get("retention"), Some(&1));
+    }
+
+    #[test]
+    fn shape_validation_rejects_malformed_batches() {
+        let b = NativeBackend::new();
+        let m = b.manifest().get("retention").unwrap().clone();
+        let (bt, nf, ns, np, steps) =
+            (m.batch as i64, m.nf() as i64, m.ns() as i64, m.npar() as i64, m.steps as i64);
+        let good = vec![
+            Tensor::zeros(vec![bt, nf]),
+            Tensor::zeros(vec![bt, ns]),
+            Tensor::zeros(vec![bt, np]),
+            Tensor::zeros(vec![bt, nf]),
+            Tensor::zeros(vec![steps, ns]),
+            Tensor::zeros(vec![steps, ns]),
+            Tensor::zeros(vec![steps]),
+        ];
+        assert!(b.execute("retention", &good).is_ok());
+        let mut bad = good;
+        bad[2] = Tensor::zeros(vec![bt, np + 1]);
+        let err = b.execute("retention", &bad).unwrap_err();
+        assert!(format!("{err}").contains("input 2"), "{err}");
+    }
+
+    #[test]
+    fn zero_param_rows_short_circuit_to_their_initial_state() {
+        // an all-zero padded batch: every row's trace is constant v0,
+        // t_retain = 0 for v0 = 0 rows (already below the relative
+        // threshold) — and crucially execute() fills the full tuple
+        let b = NativeBackend::new();
+        let m = b.manifest().get("retention").unwrap().clone();
+        let (bt, nf, ns, np, steps) = (m.batch, m.nf(), m.ns(), m.npar(), m.steps);
+        let mut v0 = Tensor::zeros(vec![bt as i64, nf as i64]);
+        v0.set2(3, 0, 0.6); // one pinned row holds its level
+        let mut cinv = Tensor::zeros(vec![bt as i64, nf as i64]);
+        for i in 0..bt {
+            cinv.set2(i, 0, 1e15);
+        }
+        let inputs = vec![
+            v0,
+            Tensor::zeros(vec![bt as i64, ns as i64]),
+            Tensor::zeros(vec![bt as i64, np as i64]),
+            cinv,
+            Tensor::zeros(vec![steps as i64, ns as i64]),
+            Tensor::zeros(vec![steps as i64, ns as i64]),
+            Tensor::new(vec![steps as i64], vec![1e-12; steps]),
+        ];
+        let out = b.execute("retention", &inputs).unwrap();
+        assert_eq!(out.len(), 4, "times_ds, trace_ds, t_retain, sn_final");
+        let sn_final = &out[3];
+        assert_eq!(sn_final.data[3], 0.6, "constant trace keeps v0");
+        assert_eq!(sn_final.data[0], 0.0);
+        let t_retain = &out[2];
+        // a constant 0.6 level never crosses its 0.3 relative threshold
+        assert_eq!(t_retain.data[3], BIG_TIME as f32);
+    }
+}

@@ -8,6 +8,54 @@ pub mod bench;
 pub mod json;
 pub mod rng;
 
+/// Default fan-out width for the parallel helpers: one worker per
+/// available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Scoped work-stealing parallel map; results keep input order.  The
+/// fan-out primitive under the DSE sweeps ([`crate::dse::evaluate_all`]
+/// and the parallel compile stage of the batched sweeps), the
+/// composition engine's plan compiler ([`crate::compose`]), and the
+/// native backend's row-chunked batch execution
+/// ([`crate::runtime::native`]).
+pub fn par_map<T: Sync, R: Send>(
+    items: &[T],
+    workers: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(|p| p.into_inner())
+                .expect("worker filled every slot")
+        })
+        .collect()
+}
+
 /// Round up to the next power of two (min 1).
 pub fn next_pow2(x: usize) -> usize {
     x.max(1).next_power_of_two()

@@ -1,11 +1,14 @@
-//! End-to-end integration: AOT artifacts -> PJRT runtime -> compiler ->
+//! End-to-end integration: execution backend -> compiler ->
 //! characterization, plus cross-language model parity and full-flow
 //! (netlist + layout + DRC + LVS + GDS) checks.
 //!
-//! Requires `make artifacts` (artifacts/ is gitignored).
+//! Runs against whichever backend `SharedRuntime::auto` resolves: the
+//! PJRT artifacts when `make artifacts` has been run, the native
+//! in-process solver otherwise — so the whole suite passes on a clean
+//! checkout (backend-equivalence itself is pinned by `tests/parity.rs`).
 
 use opengcram::compiler::{compile, CellFlavor, Config};
-use opengcram::runtime::{engines, Runtime, SharedRuntime};
+use opengcram::runtime::{engines, ExecBackend, SharedRuntime};
 use opengcram::tech::sg40;
 use opengcram::{characterize, compose, dse, lvs, sim, workloads};
 use std::path::PathBuf;
@@ -17,18 +20,26 @@ fn artifacts_dir() -> PathBuf {
 
 fn shared() -> &'static SharedRuntime {
     static RT: OnceLock<SharedRuntime> = OnceLock::new();
-    RT.get_or_init(|| SharedRuntime::load(&artifacts_dir()).expect("run `make artifacts` first"))
+    RT.get_or_init(|| SharedRuntime::auto(&artifacts_dir()))
 }
 
-/// Run a closure against the shared runtime (serialized).
-fn with_rt<R>(f: impl FnOnce(&Runtime) -> R) -> R {
+/// A private runtime of the same backend kind as [`shared`] (the
+/// call-count-delta tests must not see executions from concurrently
+/// running tests, and bitwise comparisons need like-for-like backends).
+fn private_rt() -> SharedRuntime {
+    SharedRuntime::auto(&artifacts_dir())
+}
+
+/// Run a closure against the shared runtime.
+fn with_rt<R>(f: impl FnOnce(&dyn ExecBackend) -> R) -> R {
     shared().with(f)
 }
 
 #[test]
 fn runtime_loads_and_reports_platform() {
     with_rt(|rt| {
-        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        let p = rt.platform().to_lowercase();
+        assert!(p.contains("cpu") || p.contains("native"), "unexpected platform {p}");
     });
 }
 
@@ -273,7 +284,7 @@ fn mixed_flavor_batch_splits_reads_and_packs_retention() {
     let banks: Vec<_> = cfgs.iter().map(|c| compile(&t, c).unwrap()).collect();
     // a private runtime: the call-count deltas below must not see
     // artifact executions from concurrently running tests
-    let rt = SharedRuntime::load(&artifacts_dir()).expect("run `make artifacts` first");
+    let rt = private_rt();
     let read_before = rt.call_count("read");
     let ret_before = rt.call_count("retention");
     let batched = characterize::characterize_all(&t, &rt, &banks, 0.0).unwrap();
@@ -335,7 +346,7 @@ fn window_quantization_packs_size_axis_within_deviation_bound() {
         .collect();
     // a private runtime: the call-count deltas below must not see
     // artifact executions from concurrently running tests
-    let rt = SharedRuntime::load(&artifacts_dir()).expect("run `make artifacts` first");
+    let rt = private_rt();
     let wr0 = rt.call_count("write");
     let rd0 = rt.call_count("read");
     let exact = characterize::characterize_all(&t, &rt, &banks, 0.0).unwrap();
@@ -462,7 +473,7 @@ fn coordinator_batches_retention_jobs_over_the_runtime() {
             self.cap
         }
     }
-    let cap = with_rt(|rt| rt.manifest.get("retention").unwrap().batch);
+    let cap = with_rt(|rt| rt.manifest().get("retention").unwrap().batch);
     let t = sg40();
     let c = Coordinator::spawn(RetExec { rt: shared(), cap });
     let jobs: Vec<_> = (0..20)

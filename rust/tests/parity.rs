@@ -1,0 +1,386 @@
+//! Backend-equivalence parity for the native execution backend.
+//!
+//! Three layers of pinning, none of which needs artifacts on disk:
+//!
+//! 1. **Batched == singleton** through the public engine entry points:
+//!    a padded multi-point execution returns bit-identical results to
+//!    running each point alone (batching, padding and thread chunking
+//!    are invisible).
+//! 2. **Engine == direct `sim::transient`**: for each transient op the
+//!    test re-assembles the inputs independently — f32-rounded exactly
+//!    as the tensor boundary rounds them — runs the raw solver, applies
+//!    the `model.py` measurement block by hand, and demands bitwise
+//!    equality with what the engine returned.  This is the same role
+//!    the Python test suite plays against the XLA artifacts: an
+//!    independent implementation agreeing to the last bit.
+//! 3. **`characterize_all` == `characterize`** on the native backend
+//!    for every cell flavor (including the analytical SRAM path), plus
+//!    grouped-ceiling call-count KPIs against the backend's *real*
+//!    per-artifact counters.
+
+use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::runtime::stimulus as st;
+use opengcram::runtime::{engines, ExecBackend, NativeBackend, SharedRuntime};
+use opengcram::tech::sg40;
+use opengcram::{characterize, sim};
+
+/// Round through the f32 tensor boundary (what every input value pays).
+fn f32r(x: f64) -> f64 {
+    x as f32 as f64
+}
+
+/// Round a waveform matrix through f32, mirroring `stimulus::flatten`
+/// followed by the backend's widening.
+fn roundtrip(w: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    w.iter().map(|r| r.iter().map(|&v| f32r(v)).collect()).collect()
+}
+
+fn write_points(t: &opengcram::tech::Tech) -> Vec<engines::WritePoint> {
+    [(0.45, 1.1, true, 0.0), (0.55, 1.5, true, 0.0), (0.38, 1.1, false, 0.62)]
+        .iter()
+        .map(|&(vt, v_wwl, one, sn0)| engines::WritePoint {
+            write_card: t.card("si_nmos").with_vt(vt),
+            write_wl: 2.5,
+            drv_p: (*t.card("si_pmos"), 8.0),
+            drv_n: (*t.card("si_nmos"), 4.0),
+            c_sn: 1.2e-15,
+            c_wbl: 20e-15,
+            c_wwl_sn: 0.15e-15,
+            g_wbl_leak: 1e-9,
+            vdd: 1.1,
+            v_wwl,
+            one,
+            sn0,
+        })
+        .collect()
+}
+
+fn read_points(t: &opengcram::tech::Tech, pull_up: bool) -> Vec<engines::ReadPoint> {
+    let card = if pull_up { *t.card("si_pmos_hvt") } else { *t.card("si_nmos") };
+    [0.05, 0.62]
+        .iter()
+        .map(|&sn0| engines::ReadPoint {
+            read_card: card,
+            read_wl: 3.5,
+            sn0,
+            sn_unsel: if pull_up { 0.62 } else { 0.0 },
+            rows: 32,
+            c_sn: 1.2e-15,
+            c_rbl: 20e-15,
+            c_rwl_sn: 0.1e-15,
+            g_rbl_leak: 1e-9,
+            vdd: 1.1,
+            pull_up,
+        })
+        .collect()
+}
+
+fn retention_points(t: &opengcram::tech::Tech) -> Vec<engines::RetentionPoint> {
+    [("si_nmos", 1e-16, 0.3), ("os_nmos", 1e-17, 0.3), ("si_nmos", 1e-16, 0.0)]
+        .iter()
+        .map(|&(card, gl, vth)| engines::RetentionPoint {
+            write_card: *t.card(card),
+            write_wl: 2.5,
+            c_sn: 1.2e-15,
+            g_gate_leak: gl,
+            i_disturb: 0.0,
+            v0: 0.6,
+            vth,
+        })
+        .collect()
+}
+
+#[test]
+fn batched_execution_is_bitwise_equal_to_singletons() {
+    let t = sg40();
+    let b = NativeBackend::new();
+
+    let wpts = write_points(&t);
+    let window = 6e-9;
+    let batched = engines::write_op(&b, &wpts, window).unwrap();
+    for (pt, want) in wpts.iter().zip(&batched) {
+        let single = engines::write_op(&b, std::slice::from_ref(pt), window).unwrap();
+        assert_eq!(single[0].sn_final.to_bits(), want.sn_final.to_bits(), "write sn_final");
+        assert_eq!(single[0].t_wr.to_bits(), want.t_wr.to_bits(), "write t_wr");
+        assert_eq!(single[0].sn_peak.to_bits(), want.sn_peak.to_bits(), "write sn_peak");
+    }
+
+    for pull_up in [true, false] {
+        let rpts = read_points(&t, pull_up);
+        let batched = engines::read_op(&b, &rpts, 8e-9).unwrap();
+        for (pt, want) in rpts.iter().zip(&batched) {
+            let single = engines::read_op(&b, std::slice::from_ref(pt), 8e-9).unwrap();
+            assert_eq!(single[0].t_rise.to_bits(), want.t_rise.to_bits(), "read t_rise");
+            assert_eq!(single[0].t_fall.to_bits(), want.t_fall.to_bits(), "read t_fall");
+            assert_eq!(single[0].rbl_final.to_bits(), want.rbl_final.to_bits(), "read rbl");
+            assert_eq!(single[0].sn_final.to_bits(), want.sn_final.to_bits(), "read sn");
+        }
+    }
+
+    let tpts = retention_points(&t);
+    let batched = engines::retention(&b, &tpts).unwrap();
+    for (pt, want) in tpts.iter().zip(&batched) {
+        let single = engines::retention(&b, std::slice::from_ref(pt)).unwrap();
+        assert_eq!(single[0].t_retain.to_bits(), want.t_retain.to_bits(), "retention t");
+        assert_eq!(single[0].sn_final.to_bits(), want.sn_final.to_bits(), "retention sn");
+    }
+}
+
+#[test]
+fn native_retention_matches_direct_sim_transient() {
+    let t = sg40();
+    let b = NativeBackend::new();
+    let meta = b.manifest().get("retention").unwrap().clone();
+    let pts = retention_points(&t);
+    let got = engines::retention(&b, &pts).unwrap();
+
+    // independent reconstruction: same column layout as circuits.py,
+    // every input rounded through the f32 tensor boundary
+    let tmpl = sim::retention_template();
+    for (pt, got) in pts.iter().zip(&got) {
+        let mut p = vec![0.0f64; tmpl.npar];
+        for (k, v) in pt.write_card.to_row(pt.write_wl).iter().enumerate() {
+            p[k] = *v as f64;
+        }
+        p[6] = f32r(pt.g_gate_leak);
+        p[7] = f32r(pt.i_disturb);
+        let dt: Vec<f64> = st::log_dt(meta.steps, 1e-12, 1.082).iter().map(|&d| f32r(d)).collect();
+        let wave = st::zeros(meta.steps, tmpl.ns);
+        let amp = [0.0, 0.0, 0.0, f32r(pt.vth)]; // [wwl, wbl, gnd, vth]
+        let (times, trace) = sim::transient(
+            &tmpl,
+            sim::Integrator::ExpDecay,
+            meta.k_substeps,
+            &[f32r(pt.v0)],
+            &amp,
+            &p,
+            &[f32r(1.0 / pt.c_sn)],
+            &wave,
+            &wave,
+            &dt,
+        );
+        let sn: Vec<f64> = trace.iter().map(|r| r[0]).collect();
+        let vhold = if f32r(pt.vth) > 0.0 { f32r(pt.vth) } else { 0.5 * f32r(pt.v0) };
+        let want_t = sim::cross_time(&times, &sn, vhold, false).unwrap_or(meta.big_time);
+        assert_eq!(got.t_retain.to_bits(), f32r(want_t).to_bits(), "t_retain diverged");
+        assert_eq!(got.sn_final.to_bits(), f32r(*sn.last().unwrap()).to_bits(), "sn_final");
+    }
+}
+
+#[test]
+fn native_write_matches_direct_sim_transient() {
+    let t = sg40();
+    let b = NativeBackend::new();
+    let meta = b.manifest().get("write").unwrap().clone();
+    let pts = write_points(&t);
+    let window = 6e-9;
+    let got = engines::write_op(&b, &pts, window).unwrap();
+
+    let tmpl = sim::write_template();
+    let steps = meta.steps;
+    // the engine authors the waveform from the *unrounded* f64 grid,
+    // then it crosses the tensor boundary; mirror both steps
+    let dt64 = st::uniform_dt(steps, window / (steps as f64 * meta.k_substeps as f64));
+    let wave_times = st::times_from_dt(&dt64, meta.k_substeps);
+    let mut wave = st::zeros(steps, tmpl.ns);
+    let mut dwave = st::zeros(steps, tmpl.ns);
+    st::pulse(&mut wave, &mut dwave, &wave_times, 0, 0.05 * window, 0.75 * window, 0.05 * window);
+    st::constant(&mut wave, 2, 1.0); // vdd
+    st::constant(&mut wave, 1, 1.0); // dinb (amplitude carries the data)
+    let wave = roundtrip(&wave);
+    let dwave = roundtrip(&dwave);
+    let dt: Vec<f64> = dt64.iter().map(|&d| f32r(d)).collect();
+
+    for (pt, got) in pts.iter().zip(&got) {
+        let mut p = vec![0.0f64; tmpl.npar];
+        for (k, v) in pt.write_card.to_row(pt.write_wl).iter().enumerate() {
+            p[k] = *v as f64;
+        }
+        for (k, v) in pt.drv_p.0.to_row(pt.drv_p.1).iter().enumerate() {
+            p[6 + k] = *v as f64;
+        }
+        for (k, v) in pt.drv_n.0.to_row(pt.drv_n.1).iter().enumerate() {
+            p[12 + k] = *v as f64;
+        }
+        p[18] = f32r(pt.c_wwl_sn);
+        p[19] = f32r(pt.g_wbl_leak);
+        let amp = [
+            f32r(pt.v_wwl),
+            if pt.one { 0.0 } else { f32r(pt.vdd) },
+            f32r(pt.vdd),
+            0.0,
+        ];
+        let v0 = [f32r(pt.sn0), 0.0];
+        let cinv = [f32r(1.0 / pt.c_sn), f32r(1.0 / pt.c_wbl)];
+        let (times, trace) = sim::transient(
+            &tmpl,
+            sim::Integrator::Heun,
+            meta.k_substeps,
+            &v0,
+            &amp,
+            &p,
+            &cinv,
+            &wave,
+            &dwave,
+            &dt,
+        );
+        let sn: Vec<f64> = trace.iter().map(|r| r[0]).collect();
+        let sn_peak = sn.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let t_rise = sim::cross_time(&times, &sn, 0.9 * sn_peak, true).unwrap_or(meta.big_time);
+        let t_fall =
+            sim::cross_time(&times, &sn, 0.1 * v0[0].max(1e-3), false).unwrap_or(meta.big_time);
+        let want_t_wr = if sn_peak <= v0[0] + 0.05 { t_fall } else { t_rise };
+        assert_eq!(got.sn_final.to_bits(), f32r(*sn.last().unwrap()).to_bits(), "sn_final");
+        assert_eq!(got.t_wr.to_bits(), f32r(want_t_wr).to_bits(), "t_wr");
+        assert_eq!(got.sn_peak.to_bits(), f32r(sn_peak).to_bits(), "sn_peak");
+    }
+}
+
+#[test]
+fn native_read_matches_direct_sim_transient_both_polarities() {
+    let t = sg40();
+    let b = NativeBackend::new();
+    let meta = b.manifest().get("read").unwrap().clone();
+    let window = 8e-9;
+    let tmpl = sim::read_template();
+    let steps = meta.steps;
+
+    for pull_up in [true, false] {
+        let pts = read_points(&t, pull_up);
+        let got = engines::read_op(&b, &pts, window).unwrap();
+
+        let dt64 = st::uniform_dt(steps, window / (steps as f64 * meta.k_substeps as f64));
+        let wave_times = st::times_from_dt(&dt64, meta.k_substeps);
+        let mut wave = st::zeros(steps, tmpl.ns);
+        let mut dwave = st::zeros(steps, tmpl.ns);
+        if pull_up {
+            st::pulse(&mut wave, &mut dwave, &wave_times, 0, 0.05 * window, 10.0 * window, 0.03 * window);
+        } else {
+            st::fall(&mut wave, &mut dwave, &wave_times, 0, 0.05 * window, 0.03 * window);
+            st::constant(&mut wave, 1, 1.0); // rwl_idle
+        }
+        st::constant(&mut wave, 2, 1.0); // snu
+        let wave = roundtrip(&wave);
+        let dwave = roundtrip(&dwave);
+        let dt: Vec<f64> = dt64.iter().map(|&d| f32r(d)).collect();
+
+        for (pt, got) in pts.iter().zip(&got) {
+            let mut p = vec![0.0f64; tmpl.npar];
+            for (k, v) in pt.read_card.to_row(pt.read_wl).iter().enumerate() {
+                p[k] = *v as f64;
+            }
+            let leak_wl = pt.read_wl * (pt.rows - 1) as f64;
+            for (k, v) in pt.read_card.to_row(leak_wl).iter().enumerate() {
+                p[6 + k] = *v as f64;
+            }
+            p[12] = f32r(pt.c_rwl_sn);
+            p[13] = f32r(pt.g_rbl_leak);
+            let amp = [
+                f32r(pt.vdd),
+                if pull_up { 0.0 } else { f32r(pt.vdd) },
+                f32r(pt.sn_unsel),
+                0.0,
+            ];
+            let v0 = [f32r(pt.sn0), if pull_up { 0.0 } else { f32r(pt.vdd) }];
+            let cinv = [f32r(1.0 / pt.c_sn), f32r(1.0 / pt.c_rbl)];
+            let (times, trace) = sim::transient(
+                &tmpl,
+                sim::Integrator::Heun,
+                meta.k_substeps,
+                &v0,
+                &amp,
+                &p,
+                &cinv,
+                &wave,
+                &dwave,
+                &dt,
+            );
+            let rbl: Vec<f64> = trace.iter().map(|r| r[1]).collect();
+            let sn: Vec<f64> = trace.iter().map(|r| r[0]).collect();
+            let vref = 0.5 * amp[0].max(amp[1]);
+            let want_rise = sim::cross_time(&times, &rbl, vref, true).unwrap_or(meta.big_time);
+            let want_fall = sim::cross_time(&times, &rbl, vref, false).unwrap_or(meta.big_time);
+            let what = format!("pull_up={pull_up} sn0={}", pt.sn0);
+            assert_eq!(got.t_rise.to_bits(), f32r(want_rise).to_bits(), "{what}: t_rise");
+            assert_eq!(got.t_fall.to_bits(), f32r(want_fall).to_bits(), "{what}: t_fall");
+            assert_eq!(got.rbl_final.to_bits(), f32r(*rbl.last().unwrap()).to_bits(), "{what}: rbl");
+            assert_eq!(got.sn_final.to_bits(), f32r(*sn.last().unwrap()).to_bits(), "{what}: sn");
+        }
+    }
+}
+
+/// Field-by-field bitwise comparison (same contract as the integration
+/// suite: batched-vs-single equivalence is exact, not approximate).
+fn assert_perf_bits_eq(a: &characterize::BankPerf, b: &characterize::BankPerf, what: &str) {
+    let fields = [
+        ("f_read_hz", a.f_read_hz, b.f_read_hz),
+        ("f_write_hz", a.f_write_hz, b.f_write_hz),
+        ("f_op_hz", a.f_op_hz, b.f_op_hz),
+        ("bandwidth_bps", a.bandwidth_bps, b.bandwidth_bps),
+        ("retention_s", a.retention_s, b.retention_s),
+        ("leakage_w", a.leakage_w, b.leakage_w),
+        ("e_read_j", a.e_read_j, b.e_read_j),
+        ("t_decoder_s", a.t_decoder_s, b.t_decoder_s),
+        ("t_cell_read_s", a.t_cell_read_s, b.t_cell_read_s),
+        ("stored_one_v", a.stored_one_v, b.stored_one_v),
+    ];
+    for (name, x, y) in fields {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {name} diverged ({x} vs {y})");
+    }
+    assert_eq!(a.functional, b.functional, "{what}: functional verdict diverged");
+}
+
+#[test]
+fn characterize_on_native_backend_matches_singleton_path_per_flavor() {
+    let t = sg40();
+    let rt = SharedRuntime::native();
+    assert_eq!(rt.backend_name(), "native");
+    for flavor in [
+        CellFlavor::Sram6t,
+        CellFlavor::GcSiSiNp,
+        CellFlavor::GcSiSiNn,
+        CellFlavor::GcOsOs,
+    ] {
+        let bank = compile(&t, &Config::new(32, 32, flavor)).unwrap();
+        let single = rt.with(|b| characterize::characterize(&t, b, &bank)).unwrap();
+        let batched =
+            characterize::characterize_all(&t, &rt, std::slice::from_ref(&bank), 0.0).unwrap();
+        assert_eq!(batched.len(), 1);
+        assert_perf_bits_eq(&single, &batched[0], &format!("{flavor:?}"));
+        // native physics must still discriminate on the paper's
+        // workhorse flavor (the integration suite pins the same claim
+        // end-to-end); every GC flavor gets a positive retention figure
+        if flavor == CellFlavor::GcSiSiNp {
+            assert!(single.functional, "{flavor:?} non-functional: {single:?}");
+        }
+        if flavor != CellFlavor::Sram6t {
+            assert!(single.retention_s > 0.0, "{flavor:?}: {}", single.retention_s);
+        }
+    }
+}
+
+#[test]
+fn native_counters_record_grouped_ceiling_executions() {
+    // the KPI contract on the *real* native counters (not a counting
+    // mock): a same-geometry write-VT axis shares one write window and
+    // one pull-up read group, and retention always packs — so the whole
+    // sweep pays exactly one execution per engine
+    let t = sg40();
+    let rt = SharedRuntime::native();
+    let banks: Vec<_> = [None, Some(0.40), Some(0.45), Some(0.50), Some(0.55)]
+        .iter()
+        .map(|&vt| {
+            let mut cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
+            cfg.write_vt = vt;
+            compile(&t, &cfg).unwrap()
+        })
+        .collect();
+    let perfs = characterize::characterize_all(&t, &rt, &banks, 0.0).unwrap();
+    assert_eq!(perfs.len(), banks.len());
+    assert_eq!(rt.call_count("write"), 1, "VT axis shares one write window");
+    assert_eq!(rt.call_count("read"), 1, "same-geometry NP reads share one group");
+    assert_eq!(rt.call_count("retention"), 1, "retention always packs");
+    let counts = rt.call_counts();
+    assert_eq!(counts.get("write"), Some(&1));
+    assert_eq!(counts.get("idvg"), Some(&0));
+}
