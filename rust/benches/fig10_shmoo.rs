@@ -155,16 +155,27 @@ fn main() {
         SharedRuntime::Native(_) => {
             SharedRuntime::Native(opengcram::runtime::NativeBackend::new().with_workers(1))
         }
-        // PJRT is known to load here (the primary rt did); a failed
-        // second load must not silently swap this series onto a
-        // full-parallelism native backend
-        SharedRuntime::Pjrt(_) => SharedRuntime::load(Path::new("artifacts"))
-            .expect("second PJRT load for the legacy arm"),
+        // PJRT is known to load here (the primary rt did; auto wraps it
+        // in the failover breaker); a failed second load must not
+        // silently swap this series onto a full-parallelism native
+        // backend
+        SharedRuntime::Pjrt(_) | SharedRuntime::Failover(_) => {
+            SharedRuntime::load(Path::new("artifacts"))
+                .expect("second PJRT load for the legacy arm")
+        }
+        SharedRuntime::Fault(_) => {
+            unreachable!("the bench never wraps its runtime in fault injection")
+        }
     };
     let legacy_eval = |cfg: &Config| -> opengcram::Result<dse::Evaluated> {
         let bank = compile(&tech, cfg)?;
         let perf = legacy_rt.with(|r| characterize::characterize(&tech, r, &bank))?;
-        Ok(dse::Evaluated { config: cfg.clone(), perf, area_um2: bank.layout.total_area_um2() })
+        Ok(dse::Evaluated {
+            config: cfg.clone(),
+            perf,
+            area_um2: bank.layout.total_area_um2(),
+            quarantine: None,
+        })
     };
     let s_legacy = bench::run("dse_shmoo_axis_legacy_mutex", 3.0, || {
         dse::evaluate_all(&configs, workers, legacy_eval).unwrap()

@@ -104,6 +104,7 @@ fn main() {
             config: cfg.clone(),
             perf: characterize::analytical(&tech, &b),
             area_um2: b.layout.total_area_um2(),
+            quarantine: None,
         })
     };
     let workers = dse::default_workers();

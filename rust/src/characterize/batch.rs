@@ -121,7 +121,10 @@ fn run_grouped<J, R: Clone>(
     Ok(out.into_iter().map(|r| r.expect("grouping covers every job")).collect())
 }
 
-/// Write-engine executor: one `write_op` per (window, cap-chunk).
+/// Write-engine executor: one `write_rows` per (window, cap-chunk).
+/// Results are per-row [`engines::RowResult`]s — degenerate or
+/// NaN-poisoned rows come back as `Err(RowFault)` without failing the
+/// co-batched rows.
 pub struct WriteExec<'rt> {
     rt: &'rt SharedRuntime,
     cap: usize,
@@ -133,11 +136,14 @@ impl<'rt> WriteExec<'rt> {
     }
 }
 
-impl BatchExec<WriteJob, engines::WriteResult> for WriteExec<'_> {
-    fn run(&mut self, jobs: &[WriteJob]) -> crate::Result<Vec<engines::WriteResult>> {
+impl BatchExec<WriteJob, engines::RowResult<engines::WriteResult>> for WriteExec<'_> {
+    fn run(
+        &mut self,
+        jobs: &[WriteJob],
+    ) -> crate::Result<Vec<engines::RowResult<engines::WriteResult>>> {
         run_grouped(jobs, self.cap, write_key, |chunk| {
             let pts: Vec<engines::WritePoint> = chunk.iter().map(|&i| jobs[i].pt.clone()).collect();
-            self.rt.with(|r| engines::write_op(r, &pts, jobs[chunk[0]].window_s))
+            self.rt.with(|r| engines::write_rows(r, &pts, jobs[chunk[0]].window_s))
         })
     }
     fn max_batch(&self) -> usize {
@@ -159,11 +165,14 @@ impl<'rt> ReadExec<'rt> {
     }
 }
 
-impl BatchExec<ReadJob, engines::ReadResult> for ReadExec<'_> {
-    fn run(&mut self, jobs: &[ReadJob]) -> crate::Result<Vec<engines::ReadResult>> {
+impl BatchExec<ReadJob, engines::RowResult<engines::ReadResult>> for ReadExec<'_> {
+    fn run(
+        &mut self,
+        jobs: &[ReadJob],
+    ) -> crate::Result<Vec<engines::RowResult<engines::ReadResult>>> {
         run_grouped(jobs, self.cap, read_key, |chunk| {
             let pts: Vec<engines::ReadPoint> = chunk.iter().map(|&i| jobs[i].pt.clone()).collect();
-            self.rt.with(|r| engines::read_op(r, &pts, jobs[chunk[0]].window_s))
+            self.rt.with(|r| engines::read_rows(r, &pts, jobs[chunk[0]].window_s))
         })
     }
     fn max_batch(&self) -> usize {
@@ -183,12 +192,15 @@ impl<'rt> RetentionExec<'rt> {
     }
 }
 
-impl BatchExec<RetentionJob, engines::RetentionResult> for RetentionExec<'_> {
-    fn run(&mut self, jobs: &[RetentionJob]) -> crate::Result<Vec<engines::RetentionResult>> {
+impl BatchExec<RetentionJob, engines::RowResult<engines::RetentionResult>> for RetentionExec<'_> {
+    fn run(
+        &mut self,
+        jobs: &[RetentionJob],
+    ) -> crate::Result<Vec<engines::RowResult<engines::RetentionResult>>> {
         run_grouped(jobs, self.cap, |_| 0, |chunk| {
             let pts: Vec<engines::RetentionPoint> =
                 chunk.iter().map(|&i| jobs[i].pt.clone()).collect();
-            self.rt.with(|r| engines::retention(r, &pts))
+            self.rt.with(|r| engines::retention_rows(r, &pts))
         })
     }
     fn max_batch(&self) -> usize {

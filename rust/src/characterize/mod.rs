@@ -62,7 +62,7 @@ pub use batch::calls_for;
 
 use crate::compiler::{Bank, CellFlavor, Config};
 use crate::coordinator;
-use crate::runtime::{engines, ExecBackend, SharedRuntime};
+use crate::runtime::{engines, ExecBackend, QuarantinedPoint, RunHealth, SharedRuntime};
 use crate::sim;
 use crate::tech::{DeviceCard, Tech};
 use crate::util::ceil_log2;
@@ -139,6 +139,28 @@ pub struct BankPerf {
     pub stored_one_v: f64,
     /// true if the stored levels/sense margins resolve (shmoo pass).
     pub functional: bool,
+}
+
+impl BankPerf {
+    /// Placeholder perf for a quarantined design: every figure is NaN
+    /// and the design is non-functional, so it can ride through
+    /// Pareto/shmoo plumbing (which treats it as infeasible) without
+    /// masquerading as a real measurement.
+    pub fn quarantined() -> BankPerf {
+        BankPerf {
+            f_read_hz: f64::NAN,
+            f_write_hz: f64::NAN,
+            f_op_hz: f64::NAN,
+            bandwidth_bps: f64::NAN,
+            retention_s: f64::NAN,
+            leakage_w: f64::NAN,
+            e_read_j: f64::NAN,
+            t_decoder_s: f64::NAN,
+            t_cell_read_s: f64::NAN,
+            stored_one_v: f64::NAN,
+            functional: false,
+        }
+    }
 }
 
 /// GEMTOO-class analytical estimate (no simulation).  The ablation
@@ -524,16 +546,87 @@ pub fn characterize(tech: &Tech, rt: &dyn ExecBackend, bank: &Bank) -> crate::Re
 ///   bitwise-match the single-design path (`tests/integration.rs`
 ///   asserts this per flavor); at nonzero resolution the deviation is
 ///   bounded by the module-level quantization contract.
+/// * Strict failure semantics: any quarantined design (degenerate
+///   input, NaN/Inf output, coordinator quarantine) fails the whole
+///   call with the design index, stage and reason.  Sweeps that want
+///   to keep the healthy designs use [`characterize_all_health`].
 pub fn characterize_all(
     tech: &Tech,
     rt: &SharedRuntime,
     banks: &[Bank],
     window_resolution: f64,
 ) -> crate::Result<Vec<BankPerf>> {
+    let (res, _health) = characterize_all_health(tech, rt, banks, window_resolution)?;
+    res.into_iter()
+        .enumerate()
+        .map(|(i, r)| {
+            r.map_err(|q| {
+                anyhow::anyhow!("design {i} quarantined at {} stage: {}", q.stage, q.reason)
+            })
+        })
+        .collect()
+}
+
+/// Why one design was quarantined: the characterization stage that
+/// rejected it and the per-point cause (degenerate input, non-finite
+/// output, or a coordinator-level bisection/worker-death error).
+#[derive(Debug, Clone)]
+pub struct Quarantine {
+    pub stage: &'static str,
+    pub reason: String,
+}
+
+/// Short human label for a design — what [`QuarantinedPoint::design`]
+/// carries in the `RunHealth` report.
+pub fn design_label(bank: &Bank) -> String {
+    format!(
+        "{}x{} {:?}",
+        bank.config.word_size, bank.config.num_words, bank.config.flavor
+    )
+}
+
+/// Flatten one design's span of per-row results: the first faulted row
+/// (engine-level `RowFault` or coordinator-level error) quarantines the
+/// design at `stage`; a fault-free span yields the plain results.
+fn flatten_span<T: Copy>(
+    stage: &'static str,
+    span: &[crate::Result<engines::RowResult<T>>],
+) -> Result<Vec<T>, Quarantine> {
+    span.iter()
+        .map(|r| match r {
+            Ok(Ok(v)) => Ok(*v),
+            Ok(Err(f)) => Err(Quarantine { stage, reason: f.reason.clone() }),
+            Err(e) => Err(Quarantine { stage, reason: format!("{e:#}") }),
+        })
+        .collect()
+}
+
+/// [`characterize_all`] with per-design fault isolation and a
+/// [`RunHealth`] report.
+///
+/// Healthy designs get their [`BankPerf`] exactly as before — on a
+/// fault-free run the emitted artifact calls (and hence the results)
+/// are identical to [`characterize_all`]'s, bitwise.  A design whose
+/// rows are rejected (degenerate input, NaN/Inf output, coordinator
+/// bisection quarantine, worker death) comes back as
+/// `Err(`[`Quarantine`]`)` instead of failing the whole sweep; its
+/// later-stage jobs are simply not emitted.  The report aggregates the
+/// coordinator's retry/bisection counters across all three stage
+/// workers, the runtime's pjrt→native failover delta, and one
+/// [`QuarantinedPoint`] per rejected design.
+pub fn characterize_all_health(
+    tech: &Tech,
+    rt: &SharedRuntime,
+    banks: &[Bank],
+    window_resolution: f64,
+) -> crate::Result<(Vec<Result<BankPerf, Quarantine>>, RunHealth)> {
+    let failovers_before = rt.failovers();
+    let health = std::sync::Arc::new(coordinator::CoordHealth::default());
     let mut plans: Vec<CharPlan> = banks
         .iter()
         .map(|b| CharPlan::with_resolution(tech, b, window_resolution))
         .collect();
+    let mut quarantine: Vec<Option<Quarantine>> = vec![None; plans.len()];
 
     // ---- stage 1: write transients, packed across designs ------------
     let mut wr_jobs: Vec<batch::WriteJob> = Vec::new();
@@ -544,20 +637,32 @@ pub fn characterize_all(
         wr_jobs.extend(jobs);
     }
     let wr_res = run_packed(wr_jobs, batch::write_key, |groups| {
-        coordinator::scope(batch::WriteExec::new(rt)?, |sub| sub.run_grouped(groups))
+        coordinator::scope_with_health(batch::WriteExec::new(rt)?, health.clone(), |sub| {
+            sub.run_grouped_each(groups)
+        })
     })?;
     let mut off = 0;
-    for (p, &n) in plans.iter_mut().zip(&wr_span) {
-        p.absorb_writes(&wr_res[off..off + n])?;
+    for (i, (p, &n)) in plans.iter_mut().zip(&wr_span).enumerate() {
+        let span = &wr_res[off..off + n];
         off += n;
+        match flatten_span("write", span) {
+            Ok(wr) => p.absorb_writes(&wr)?,
+            Err(q) => quarantine[i] = Some(q),
+        }
     }
 
     // ---- stage 2: read + retention, packed across designs ------------
+    // (quarantined designs emit no further jobs: zero-length spans)
     let mut rd_jobs: Vec<batch::ReadJob> = Vec::new();
     let mut rd_span: Vec<usize> = Vec::with_capacity(plans.len());
     let mut ret_jobs: Vec<batch::RetentionJob> = Vec::new();
     let mut ret_span: Vec<usize> = Vec::with_capacity(plans.len());
-    for p in &plans {
+    for (i, p) in plans.iter().enumerate() {
+        if quarantine[i].is_some() {
+            rd_span.push(0);
+            ret_span.push(0);
+            continue;
+        }
         let jobs = p.read_jobs()?;
         rd_span.push(jobs.len());
         rd_jobs.extend(jobs);
@@ -566,21 +671,54 @@ pub fn characterize_all(
         ret_jobs.extend(jobs);
     }
     let rd_res = run_packed(rd_jobs, batch::read_key, |groups| {
-        coordinator::scope(batch::ReadExec::new(rt)?, |sub| sub.run_grouped(groups))
+        coordinator::scope_with_health(batch::ReadExec::new(rt)?, health.clone(), |sub| {
+            sub.run_grouped_each(groups)
+        })
     })?;
     let ret_res = run_packed(ret_jobs, |_| 0, |groups| {
-        coordinator::scope(batch::RetentionExec::new(rt)?, |sub| sub.run_grouped(groups))
+        coordinator::scope_with_health(batch::RetentionExec::new(rt)?, health.clone(), |sub| {
+            sub.run_grouped_each(groups)
+        })
     })?;
 
     // ---- finish -------------------------------------------------------
     let (mut ro, mut to) = (0usize, 0usize);
-    let mut out = Vec::with_capacity(plans.len());
-    for ((p, &nr), &nt) in plans.iter().zip(&rd_span).zip(&ret_span) {
-        out.push(p.finish(&rd_res[ro..ro + nr], &ret_res[to..to + nt])?);
+    let mut out: Vec<Result<BankPerf, Quarantine>> = Vec::with_capacity(plans.len());
+    for (i, ((p, &nr), &nt)) in plans.iter().zip(&rd_span).zip(&ret_span).enumerate() {
+        let rspan = &rd_res[ro..ro + nr];
         ro += nr;
+        let tspan = &ret_res[to..to + nt];
         to += nt;
+        if let Some(q) = quarantine[i].take() {
+            out.push(Err(q));
+            continue;
+        }
+        let staged = flatten_span("read", rspan)
+            .and_then(|rd| flatten_span("retention", tspan).map(|ret| (rd, ret)));
+        match staged {
+            Ok((rd, ret)) => out.push(Ok(p.finish(&rd, &ret)?)),
+            Err(q) => out.push(Err(q)),
+        }
     }
-    Ok(out)
+
+    let report = RunHealth {
+        retries: health.retries(),
+        bisect_execs: health.bisect_execs(),
+        failovers: rt.failovers().saturating_sub(failovers_before),
+        quarantined: out
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| {
+                r.as_ref().err().map(|q| QuarantinedPoint {
+                    index: i,
+                    design: design_label(&banks[i]),
+                    stage: q.stage,
+                    reason: q.reason.clone(),
+                })
+            })
+            .collect(),
+    };
+    Ok((out, report))
 }
 
 /// The pinned-mux fine rows axis the quantization KPI benches and

@@ -104,13 +104,22 @@ pub enum Backend {
 }
 
 impl Backend {
-    /// Resolve the choice against an artifact directory.
+    /// Resolve the choice against an artifact directory.  When the
+    /// `OPENGCRAM_FAULTS` environment variable holds a fault plan
+    /// (see [`crate::runtime::fault::FaultPlan::parse`] for the spec
+    /// grammar), the loaded backend is additionally wrapped in
+    /// deterministic fault injection — the CI chaos mode; a malformed
+    /// spec is a hard error, never silently ignored.
     pub fn load(self, dir: &Path) -> crate::Result<SharedRuntime> {
-        match self {
-            Backend::Auto => Ok(SharedRuntime::auto(dir)),
-            Backend::Native => Ok(SharedRuntime::native()),
-            Backend::Pjrt => SharedRuntime::load(dir),
-        }
+        let rt = match self {
+            Backend::Auto => SharedRuntime::auto(dir),
+            Backend::Native => SharedRuntime::native(),
+            Backend::Pjrt => SharedRuntime::load(dir)?,
+        };
+        Ok(match crate::runtime::fault::FaultPlan::from_env()? {
+            Some(plan) => rt.with_faults(plan),
+            None => rt,
+        })
     }
 }
 

@@ -54,7 +54,7 @@ use crate::compiler::{compile, CellFlavor, Config, ConfigKey};
 use crate::coordinator::{BatchExec, Coordinator};
 use crate::dse::{self, CostWeights, EvalCache, Evaluated};
 use crate::report;
-use crate::runtime::SharedRuntime;
+use crate::runtime::{RunHealth, SharedRuntime};
 use crate::tech::Tech;
 use crate::util::eng;
 use crate::workloads::{self, CacheLevel, Demand, Machine};
@@ -160,6 +160,10 @@ pub struct Composition {
     /// composition (a second composition over a shared cache pays 0).
     pub cache_hits: usize,
     pub cache_misses: usize,
+    /// Fault-isolation report of the mega-sweep this composition paid
+    /// (clean when fully served from a shared cache).  Quarantined
+    /// design points are simply infeasible for every demand.
+    pub health: RunHealth,
 }
 
 impl Composition {
@@ -253,7 +257,7 @@ pub fn compose_cached(
 ) -> crate::Result<Composition> {
     let configs = design_grid();
     let (h0, m0) = cache.stats();
-    let evals = dse::evaluate_all_batched_cached(
+    let (evals, health) = dse::evaluate_all_batched_cached_health(
         tech,
         rt,
         &configs,
@@ -280,6 +284,7 @@ pub fn compose_cached(
         distinct: cache.len(),
         cache_hits: h1 - h0,
         cache_misses: m1 - m0,
+        health,
     })
 }
 
@@ -494,6 +499,7 @@ mod tests {
                 functional: true,
             },
             area_um2: area,
+            quarantine: None,
         }
     }
 
@@ -601,6 +607,7 @@ mod tests {
             distinct: 0,
             cache_hits: 0,
             cache_misses: 0,
+            health: RunHealth::default(),
         };
         assert!(c.total_area_um2().is_none());
         assert!(c.total_leakage_w().is_none());
@@ -629,6 +636,7 @@ mod tests {
             distinct: 1,
             cache_hits: 0,
             cache_misses: 1,
+            health: RunHealth::default(),
         };
         let t = table(&c);
         assert!(t.contains("os"), "{t}");

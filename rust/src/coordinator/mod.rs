@@ -33,27 +33,95 @@
 //!   [`crate::characterize::characterize_all`] executors borrow the
 //!   shared runtime), joined when the closure returns.
 //!
-//! Failure semantics: an executor `Err` is recoverable — every
-//! submitter of the failed batch receives the executor's own error and
-//! the worker keeps serving.  An executor *panic* is fatal: the panic
-//! payload is recorded as the worker's epitaph, in-flight submitters
-//! get it as an error, and later [`Submitter::submit`] calls fail fast
+//! Failure semantics (fault isolation): an executor `Err` is
+//! recoverable.  The worker first **retries** the whole batch under the
+//! executor's bounded [`RetryPolicy`] (transient faults heal invisibly
+//! — co-batched submitters never see them), then **bisects** the
+//! still-failing batch to quarantine the poisoned job(s): healthy
+//! co-batched jobs still receive their results and only culprit jobs
+//! get per-job errors carrying the executor's own cause.  Bisection
+//! costs at most `2·ceil(log2 batch)` extra executions per poisoned
+//! row, and a clean run pays **zero** extra executions (retry and
+//! bisection only engage on `Err`), so the grouped-ceiling occupancy
+//! model is unchanged when no faults fire.  [`CoordHealth`] counts
+//! retries and bisect executions for the `RunHealth` report.
+//!
+//! An executor *panic* stays fatal: the panic payload is recorded as
+//! the worker's epitaph, in-flight submitters get it as an error, and
+//! later [`Submitter::submit`] / [`Submitter::flush`] calls fail fast
 //! with the same underlying cause instead of handing out a receiver
 //! that can only ever report a bare "worker died".
 
 use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
+
+/// Bounded retry/backoff applied by the worker before a failing batch
+/// is bisected: up to `max_retries` re-runs, sleeping
+/// `backoff × attempt` (linear) between attempts.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub max_retries: usize,
+    pub backoff: std::time::Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2, backoff: std::time::Duration::from_millis(5) }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries: a failing batch goes straight to bisection.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_retries: 0, backoff: std::time::Duration::ZERO }
+    }
+}
+
+/// Fault-isolation counters for one worker (shared across the scoped
+/// stage workers of a sweep via `Arc`).  All-zero on a clean run.
+#[derive(Debug, Default)]
+pub struct CoordHealth {
+    retries: AtomicU64,
+    bisect_execs: AtomicU64,
+}
+
+impl CoordHealth {
+    /// Batch retry attempts made (transient faults healed).
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Extra executor runs spent bisecting failing batches.
+    pub fn bisect_execs(&self) -> u64 {
+        self.bisect_execs.load(Ordering::Relaxed)
+    }
+}
 
 /// A batch executor: runs a slice of jobs, returns one result per job
 /// in order.  The PJRT-backed implementations wrap runtime::engines
 /// (see [`crate::characterize::batch`]); an executor may subdivide the
 /// handed batch internally (e.g. by transient window or read flavor)
 /// as long as results come back positionally.
+///
+/// Positional results are also what makes fault isolation composable:
+/// the worker may re-run any contiguous sub-slice of a handed batch
+/// (retry, bisection) and results still land on the right jobs, while
+/// the executor's internal grouping keeps each sub-run on the normal
+/// grouped-ceiling cost model.
 pub trait BatchExec<J, R>: Send {
     fn run(&mut self, jobs: &[J]) -> crate::Result<Vec<R>>;
     fn max_batch(&self) -> usize;
+
+    /// Retry/backoff bounds the worker applies before bisecting a
+    /// failing batch.  Default-implemented so existing executors keep
+    /// the grouped-ceiling occupancy model untouched on healthy runs;
+    /// override (e.g. with [`RetryPolicy::none`]) to tune.
+    fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy::default()
+    }
 }
 
 enum Msg<J, R> {
@@ -99,9 +167,15 @@ impl<J: Send, R: Send> Submitter<J, R> {
         Ok(rrx)
     }
 
-    /// Force the pending partial batch to execute.
-    pub fn flush(&self) {
-        let _ = self.tx.send(Msg::Flush);
+    /// Force the pending partial batch to execute.  Fails fast —
+    /// carrying the worker's recorded failure cause — when the flush
+    /// cannot be delivered because the worker is gone (it used to be
+    /// silently swallowed, leaving callers to hang on `recv` semantics
+    /// alone).
+    pub fn flush(&self) -> crate::Result<()> {
+        self.tx
+            .send(Msg::Flush)
+            .map_err(|_| self.death_error("coordinator worker is gone, flush undeliverable"))
     }
 
     /// Submit many jobs and wait for all results (flushes).
@@ -115,42 +189,79 @@ impl<J: Send, R: Send> Submitter<J, R> {
     /// different groups can never share an artifact execution anyway
     /// (different window/waveform), so this costs nothing and makes the
     /// execution count exactly `sum(ceil(group_len / cap))`.
+    ///
+    /// Fails on the **first** per-job error; for per-job fault
+    /// isolation (quarantined jobs reported individually while healthy
+    /// jobs keep their results) use [`Submitter::run_grouped_each`].
     pub fn run_grouped(
         &self,
         groups: impl IntoIterator<Item = Vec<J>>,
     ) -> crate::Result<Vec<R>> {
+        self.run_grouped_each(groups)?.into_iter().collect()
+    }
+
+    /// [`Submitter::run_grouped`] with per-job fault isolation: the
+    /// outer `Err` fires only when submission itself fails fast (worker
+    /// gone before all jobs were delivered); otherwise every job gets
+    /// its own `Result` in submission order — quarantined jobs carry
+    /// their per-job cause, jobs orphaned by worker death carry the
+    /// epitaph, healthy co-batched jobs keep their results.
+    pub fn run_grouped_each(
+        &self,
+        groups: impl IntoIterator<Item = Vec<J>>,
+    ) -> crate::Result<Vec<crate::Result<R>>> {
         let mut rxs = Vec::new();
         for group in groups {
             for j in group {
                 rxs.push(self.submit(j)?);
             }
-            self.flush();
+            self.flush()?;
         }
-        rxs.into_iter()
-            .map(|rx| rx.recv().map_err(|_| self.death_error("coordinator worker died"))?)
-            .collect()
+        Ok(rxs
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .unwrap_or_else(|_| Err(self.death_error("coordinator worker died")))
+            })
+            .collect())
     }
 }
 
 /// Handle owning a detached worker thread (joined on drop).
 pub struct Coordinator<J, R> {
     sub: Submitter<J, R>,
+    health: Arc<CoordHealth>,
     worker: Option<thread::JoinHandle<()>>,
 }
 
 impl<J: Send + 'static, R: Send + 'static> Coordinator<J, R> {
     /// Spawn the worker owning the executor.
     pub fn spawn<E: BatchExec<J, R> + 'static>(exec: E) -> Coordinator<J, R> {
+        Self::spawn_with_health(exec, Arc::new(CoordHealth::default()))
+    }
+
+    /// [`Coordinator::spawn`] recording fault-isolation counters into a
+    /// caller-provided [`CoordHealth`] (shared across workers).
+    pub fn spawn_with_health<E: BatchExec<J, R> + 'static>(
+        exec: E,
+        health: Arc<CoordHealth>,
+    ) -> Coordinator<J, R> {
         let (tx, rx) = mpsc::channel::<Msg<J, R>>();
         let epitaph: Epitaph = Arc::new(Mutex::new(None));
         let ep = epitaph.clone();
-        let worker = thread::spawn(move || worker_loop(exec, rx, ep));
-        Coordinator { sub: Submitter { tx, epitaph }, worker: Some(worker) }
+        let h = health.clone();
+        let worker = thread::spawn(move || worker_loop(exec, rx, ep, h));
+        Coordinator { sub: Submitter { tx, epitaph }, health, worker: Some(worker) }
     }
 
     /// A clonable [`Submitter`] for concurrent submission threads.
     pub fn handle(&self) -> Submitter<J, R> {
         self.sub.clone()
+    }
+
+    /// Fault-isolation counters of this worker.
+    pub fn health(&self) -> &Arc<CoordHealth> {
+        &self.health
     }
 
     /// See [`Submitter::submit`].
@@ -159,7 +270,7 @@ impl<J: Send + 'static, R: Send + 'static> Coordinator<J, R> {
     }
 
     /// See [`Submitter::flush`].
-    pub fn flush(&self) {
+    pub fn flush(&self) -> crate::Result<()> {
         self.sub.flush()
     }
 
@@ -186,11 +297,22 @@ pub fn scope<J: Send, R: Send, E: BatchExec<J, R>, T>(
     exec: E,
     f: impl FnOnce(&Submitter<J, R>) -> T,
 ) -> T {
+    scope_with_health(exec, Arc::new(CoordHealth::default()), f)
+}
+
+/// [`scope`] recording fault-isolation counters into a caller-provided
+/// [`CoordHealth`] — how `characterize_all` shares one counter set
+/// across its per-stage workers.
+pub fn scope_with_health<J: Send, R: Send, E: BatchExec<J, R>, T>(
+    exec: E,
+    health: Arc<CoordHealth>,
+    f: impl FnOnce(&Submitter<J, R>) -> T,
+) -> T {
     let (tx, rx) = mpsc::channel::<Msg<J, R>>();
     let epitaph: Epitaph = Arc::new(Mutex::new(None));
     let sub = Submitter { tx, epitaph: epitaph.clone() };
     thread::scope(|s| {
-        s.spawn(move || worker_loop(exec, rx, epitaph));
+        s.spawn(move || worker_loop(exec, rx, epitaph, health));
         struct StopGuard<J, R>(mpsc::Sender<Msg<J, R>>);
         impl<J, R> Drop for StopGuard<J, R> {
             fn drop(&mut self) {
@@ -206,6 +328,7 @@ fn worker_loop<J, R, E: BatchExec<J, R>>(
     mut exec: E,
     rx: mpsc::Receiver<Msg<J, R>>,
     epitaph: Epitaph,
+    health: Arc<CoordHealth>,
 ) {
     let cap = exec.max_batch().max(1);
     let mut jobs: Vec<J> = Vec::new();
@@ -216,80 +339,159 @@ fn worker_loop<J, R, E: BatchExec<J, R>>(
                 jobs.push(j);
                 replies.push(reply);
                 if jobs.len() >= cap
-                    && flush_batch(&mut exec, &mut jobs, &mut replies, &epitaph).is_err()
+                    && flush_batch(&mut exec, &mut jobs, &mut replies, &epitaph, &health)
+                        .is_err()
                 {
                     return;
                 }
             }
             Ok(Msg::Flush) => {
-                if flush_batch(&mut exec, &mut jobs, &mut replies, &epitaph).is_err() {
+                if flush_batch(&mut exec, &mut jobs, &mut replies, &epitaph, &health).is_err() {
                     return;
                 }
             }
             Ok(Msg::Stop) | Err(_) => {
-                let _ = flush_batch(&mut exec, &mut jobs, &mut replies, &epitaph);
+                let _ = flush_batch(&mut exec, &mut jobs, &mut replies, &epitaph, &health);
                 return;
             }
         }
     }
 }
 
-/// Run the pending batch.  `Err(())` means the executor panicked and
-/// the worker must stop (its state may be inconsistent); the panic
-/// payload is recorded as the epitaph first so every later submitter
-/// sees the underlying failure, not a bare "worker died".
+fn panic_message(payload: Box<dyn std::any::Any + Send>, n: usize) -> String {
+    let what = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into());
+    format!("executor panicked on a batch of {n}: {what}")
+}
+
+/// Run the pending batch with fault isolation.  `Err(())` means the
+/// executor panicked and the worker must stop (its state may be
+/// inconsistent); the panic payload is recorded as the epitaph first so
+/// every later submitter sees the underlying failure, not a bare
+/// "worker died".
+///
+/// On executor `Err` the batch is retried under the executor's
+/// [`RetryPolicy`] (transient faults heal with no submitter-visible
+/// effect), then bisected ([`bisect`]) so only culprit jobs carry
+/// errors.  The happy path is untouched: one `run`, no extra work.
 fn flush_batch<J, R, E: BatchExec<J, R>>(
     exec: &mut E,
     jobs: &mut Vec<J>,
     replies: &mut Vec<mpsc::Sender<crate::Result<R>>>,
     epitaph: &Epitaph,
+    health: &CoordHealth,
 ) -> Result<(), ()> {
     if jobs.is_empty() {
         return Ok(());
     }
     let n = jobs.len();
-    match std::panic::catch_unwind(AssertUnwindSafe(|| exec.run(jobs))) {
-        Ok(Ok(results)) if results.len() == n => {
-            for (r, tx) in results.into_iter().zip(replies.drain(..)) {
-                let _ = tx.send(Ok(r));
+    let policy = exec.retry_policy();
+    let mut attempt = 0usize;
+    let root = loop {
+        match std::panic::catch_unwind(AssertUnwindSafe(|| exec.run(jobs))) {
+            Ok(Ok(results)) if results.len() == n => {
+                for (r, tx) in results.into_iter().zip(replies.drain(..)) {
+                    let _ = tx.send(Ok(r));
+                }
+                jobs.clear();
+                return Ok(());
             }
-            jobs.clear();
-            Ok(())
+            Ok(Ok(results)) => {
+                // a miscounting executor loses the job<->result
+                // bijection — a contract violation, not a transient:
+                // fail the whole batch rather than misroute results
+                for tx in replies.drain(..) {
+                    let _ = tx.send(Err(anyhow::anyhow!(
+                        "executor returned {} results for {n} jobs",
+                        results.len()
+                    )));
+                }
+                jobs.clear();
+                return Ok(());
+            }
+            Ok(Err(e)) => {
+                if attempt < policy.max_retries {
+                    attempt += 1;
+                    health.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(policy.backoff * attempt as u32);
+                    continue;
+                }
+                break e;
+            }
+            Err(payload) => {
+                let msg = panic_message(payload, n);
+                *epitaph.lock().unwrap_or_else(|p| p.into_inner()) = Some(msg.clone());
+                for tx in replies.drain(..) {
+                    let _ = tx.send(Err(anyhow::anyhow!("{msg}")));
+                }
+                jobs.clear();
+                return Err(());
+            }
         }
-        Ok(Ok(results)) => {
-            // a miscounting executor loses the job<->result bijection;
-            // fail the whole batch rather than misroute results
-            for tx in replies.drain(..) {
-                let _ = tx.send(Err(anyhow::anyhow!(
-                    "executor returned {} results for {n} jobs",
-                    results.len()
-                )));
-            }
-            jobs.clear();
-            Ok(())
+    };
+    // Retries exhausted: quarantine the culprit(s) by bisection so
+    // healthy co-batched jobs still get their results.
+    let bjobs = std::mem::take(jobs);
+    let breplies = std::mem::take(replies);
+    bisect(exec, &bjobs, &breplies, &root, epitaph, health)
+}
+
+/// Deliver results for a batch that failed as a whole: split it in
+/// halves, run each, recurse into failing halves.  A still-failing
+/// singleton is the culprit and gets a per-job error carrying the
+/// executor's own cause; healthy jobs get their results.  Sub-runs are
+/// **not** retried (the whole batch already was), bounding the extra
+/// cost at `2·ceil(log2 n)` executions per poisoned job.
+fn bisect<J, R, E: BatchExec<J, R>>(
+    exec: &mut E,
+    jobs: &[J],
+    replies: &[mpsc::Sender<crate::Result<R>>],
+    err: &anyhow::Error,
+    epitaph: &Epitaph,
+    health: &CoordHealth,
+) -> Result<(), ()> {
+    if jobs.len() <= 1 {
+        if let Some(tx) = replies.first() {
+            let _ = tx.send(Err(anyhow::anyhow!("job quarantined by batch bisection: {err:#}")));
         }
-        Ok(Err(e)) => {
-            for tx in replies.drain(..) {
-                let _ = tx.send(Err(anyhow::anyhow!("batch of {n} failed: {e:#}")));
+        return Ok(());
+    }
+    let mid = jobs.len() / 2;
+    for (j, r) in [(&jobs[..mid], &replies[..mid]), (&jobs[mid..], &replies[mid..])] {
+        health.bisect_execs.fetch_add(1, Ordering::Relaxed);
+        match std::panic::catch_unwind(AssertUnwindSafe(|| exec.run(j))) {
+            Ok(Ok(results)) if results.len() == j.len() => {
+                for (res, tx) in results.into_iter().zip(r) {
+                    let _ = tx.send(Ok(res));
+                }
             }
-            jobs.clear();
-            Ok(())
-        }
-        Err(payload) => {
-            let what = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "non-string panic payload".into());
-            let msg = format!("executor panicked on a batch of {n}: {what}");
-            *epitaph.lock().unwrap_or_else(|p| p.into_inner()) = Some(msg.clone());
-            for tx in replies.drain(..) {
-                let _ = tx.send(Err(anyhow::anyhow!("{msg}")));
+            Ok(Ok(results)) => {
+                for tx in r {
+                    let _ = tx.send(Err(anyhow::anyhow!(
+                        "executor returned {} results for {} jobs",
+                        results.len(),
+                        j.len()
+                    )));
+                }
             }
-            jobs.clear();
-            Err(())
+            Ok(Err(e)) => bisect(exec, j, r, &e, epitaph, health)?,
+            Err(payload) => {
+                // fatal as ever: record the epitaph, fail this half's
+                // jobs; the other half's submitters see the epitaph
+                // through their dead receivers
+                let msg = panic_message(payload, j.len());
+                *epitaph.lock().unwrap_or_else(|p| p.into_inner()) = Some(msg.clone());
+                for tx in r {
+                    let _ = tx.send(Err(anyhow::anyhow!("{msg}")));
+                }
+                return Err(());
+            }
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -530,5 +732,219 @@ mod tests {
             sub.run_all(vec![1, 2, 3, 4, 5]).unwrap()
         });
         assert_eq!(out, vec![101, 102, 103, 104, 105]);
+    }
+
+    /// Mock with one poisoned job value: any batch containing it fails
+    /// (persistently — retries don't help), everything else succeeds.
+    struct PoisonedMock {
+        poison: u64,
+        runs: Arc<AtomicUsize>,
+    }
+    impl BatchExec<u64, u64> for PoisonedMock {
+        fn run(&mut self, jobs: &[u64]) -> crate::Result<Vec<u64>> {
+            self.runs.fetch_add(1, Ordering::SeqCst);
+            anyhow::ensure!(!jobs.contains(&self.poison), "poisoned job {}", self.poison);
+            Ok(jobs.iter().map(|j| j * 10).collect())
+        }
+        fn max_batch(&self) -> usize {
+            64
+        }
+        fn retry_policy(&self) -> RetryPolicy {
+            RetryPolicy::none()
+        }
+    }
+
+    #[test]
+    fn bisection_quarantines_the_culprit_and_heals_cobatched_jobs() {
+        let runs = Arc::new(AtomicUsize::new(0));
+        let health = Arc::new(CoordHealth::default());
+        let c = Coordinator::spawn_with_health(
+            PoisonedMock { poison: 13, runs: runs.clone() },
+            health.clone(),
+        );
+        let jobs: Vec<u64> = (0..32).collect();
+        let results = c.handle().run_grouped_each(vec![jobs.clone()]).unwrap();
+        assert_eq!(results.len(), 32);
+        for (i, r) in results.iter().enumerate() {
+            if i == 13 {
+                let e = format!("{:#}", r.as_ref().unwrap_err());
+                assert!(e.contains("quarantined"), "{e}");
+                assert!(e.contains("poisoned job 13"), "culprit cause lost: {e}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i as u64 * 10, "healthy job {i} lost");
+            }
+        }
+        // cost bound: 1 failing full run + ≤ 2·ceil(log2 32) bisection runs
+        let bisects = health.bisect_execs();
+        assert!(bisects >= 2 && bisects <= 10, "bisect cost {bisects} out of bound");
+        assert_eq!(runs.load(Ordering::SeqCst) as u64, 1 + bisects);
+        assert_eq!(health.retries(), 0, "RetryPolicy::none must skip retries");
+    }
+
+    /// Mock that fails its first N run attempts, then succeeds — the
+    /// transient-fault shape retries are for.
+    struct TransientMock {
+        failures_left: usize,
+        runs: Arc<AtomicUsize>,
+    }
+    impl BatchExec<u64, u64> for TransientMock {
+        fn run(&mut self, jobs: &[u64]) -> crate::Result<Vec<u64>> {
+            self.runs.fetch_add(1, Ordering::SeqCst);
+            if self.failures_left > 0 {
+                self.failures_left -= 1;
+                anyhow::bail!("transient hiccup");
+            }
+            Ok(jobs.iter().map(|j| j * 10).collect())
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+    }
+
+    #[test]
+    fn transient_failures_heal_invisibly_under_retry() {
+        let runs = Arc::new(AtomicUsize::new(0));
+        let health = Arc::new(CoordHealth::default());
+        let c = Coordinator::spawn_with_health(
+            TransientMock { failures_left: 1, runs: runs.clone() },
+            health.clone(),
+        );
+        // submitters never see the transient: plain Ok results
+        assert_eq!(c.run_all(vec![1, 2, 3]).unwrap(), vec![10, 20, 30]);
+        assert_eq!(health.retries(), 1);
+        assert_eq!(health.bisect_execs(), 0);
+        assert_eq!(runs.load(Ordering::SeqCst), 2);
+        // and a healthy follow-up batch pays exactly one run
+        assert_eq!(c.run_all(vec![4]).unwrap(), vec![40]);
+        assert_eq!(runs.load(Ordering::SeqCst), 3);
+        assert_eq!(health.retries(), 1, "no retries on the healthy batch");
+    }
+
+    #[test]
+    fn flush_to_a_dead_worker_fails_fast_with_the_epitaph() {
+        // regression: flush() used to swallow the send error, so
+        // run_grouped on a dead worker relied on recv semantics alone
+        let c = Coordinator::spawn(PanickingMock);
+        let _ = c.run_all(vec![1, 2]); // kills the worker
+        let sub = c.handle();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            // the empty group exercises the boundary flush alone (no
+            // submits), the path the old code silently swallowed
+            match sub.run_grouped(vec![Vec::new()]) {
+                Err(e) => {
+                    let e = format!("{e:#}");
+                    assert!(e.contains("blew up on purpose"), "flush lost the epitaph: {e}");
+                    break;
+                }
+                Ok(r) => assert!(r.is_empty(), "results from a dead worker"),
+            }
+            assert!(std::time::Instant::now() < deadline, "worker never died");
+            std::thread::yield_now();
+        }
+    }
+
+    /// Mock that succeeds on its first batch and panics on the second.
+    struct SecondBatchPanicMock {
+        batches: usize,
+    }
+    impl BatchExec<u64, u64> for SecondBatchPanicMock {
+        fn run(&mut self, jobs: &[u64]) -> crate::Result<Vec<u64>> {
+            self.batches += 1;
+            if self.batches >= 2 {
+                panic!("second batch blew up");
+            }
+            Ok(jobs.iter().map(|j| j * 10).collect())
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+    }
+
+    #[test]
+    fn panic_after_partial_flush_preserves_delivered_results() {
+        let c = Coordinator::spawn(SecondBatchPanicMock { batches: 0 });
+        let sub = c.handle();
+        // group 1: submitted, flushed and delivered before the panic
+        let first: Vec<_> = (0..3u64).map(|j| sub.submit(j).unwrap()).collect();
+        sub.flush().unwrap();
+        for (i, rx) in first.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), i as u64 * 10, "first group's results lost");
+        }
+        // group 2: the executor panics — in-flight submitters get the
+        // epitaph as their error
+        let rx4 = sub.submit(4).unwrap();
+        let rx5 = sub.submit(5).unwrap();
+        let _ = sub.flush(); // may or may not outrace the worker's death
+        for rx in [rx4, rx5] {
+            let got = rx.recv();
+            let e = match got {
+                Ok(r) => format!("{:#}", r.unwrap_err()),
+                // sender dropped without a reply: the submitter-side
+                // death_error path reports the epitaph instead
+                Err(_) => format!("{:#}", sub.death_error("worker died")),
+            };
+            assert!(e.contains("second batch blew up"), "in-flight job lost the cause: {e}");
+        }
+        // late submits fail fast with the same cause
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            match sub.submit(9) {
+                Err(e) => {
+                    assert!(
+                        format!("{e:#}").contains("second batch blew up"),
+                        "late submit lost the cause: {e:#}"
+                    );
+                    break;
+                }
+                Ok(rx) => {
+                    let got = rx.recv();
+                    assert!(got.map(|r| r.is_err()).unwrap_or(true));
+                }
+            }
+            assert!(std::time::Instant::now() < deadline, "worker never died");
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn bisection_isolates_multiple_poisoned_jobs() {
+        // property: for random batch sizes and up to 3 poisoned values,
+        // exactly the poisoned jobs error and all others succeed
+        check("multi-poison bisection", 10, |rng: &mut Rng| {
+            let n = 2 + rng.below(60);
+            let poisons: std::collections::HashSet<u64> =
+                (0..1 + rng.below(3)).map(|_| rng.below(n) as u64).collect();
+            struct MultiPoison {
+                poisons: std::collections::HashSet<u64>,
+            }
+            impl BatchExec<u64, u64> for MultiPoison {
+                fn run(&mut self, jobs: &[u64]) -> crate::Result<Vec<u64>> {
+                    anyhow::ensure!(
+                        !jobs.iter().any(|j| self.poisons.contains(j)),
+                        "poisoned"
+                    );
+                    Ok(jobs.iter().map(|j| j * 10).collect())
+                }
+                fn max_batch(&self) -> usize {
+                    64
+                }
+                fn retry_policy(&self) -> RetryPolicy {
+                    RetryPolicy::none()
+                }
+            }
+            let c = Coordinator::spawn(MultiPoison { poisons: poisons.clone() });
+            let results = c
+                .handle()
+                .run_grouped_each(vec![(0..n as u64).collect::<Vec<_>>()])
+                .unwrap();
+            for (i, r) in results.iter().enumerate() {
+                if poisons.contains(&(i as u64)) {
+                    assert!(r.is_err(), "poisoned job {i} not quarantined");
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), i as u64 * 10);
+                }
+            }
+        });
     }
 }

@@ -4,7 +4,7 @@
 
 use crate::characterize::{self, BankPerf};
 use crate::compiler::{compile, Bank, CellFlavor, Config, ConfigKey};
-use crate::runtime::SharedRuntime;
+use crate::runtime::{RunHealth, SharedRuntime};
 use crate::tech::Tech;
 use crate::workloads::Demand;
 use std::collections::HashMap;
@@ -17,6 +17,13 @@ pub struct Evaluated {
     pub config: Config,
     pub perf: BankPerf,
     pub area_um2: f64,
+    /// `Some(reason)` when the point was quarantined by the
+    /// fault-isolation machinery (degenerate input, non-finite output,
+    /// bisected poisoned batch) instead of measured; `perf` is then the
+    /// all-NaN [`BankPerf::quarantined`] placeholder.  Quarantined
+    /// points are infeasible-with-reason: the shmoo verdict is
+    /// [`Verdict::Quarantined`] and the Pareto front excludes them.
+    pub quarantine: Option<String>,
 }
 
 /// Thread-safe (config -> evaluation) memo keyed on
@@ -207,6 +214,27 @@ pub fn evaluate_all_batched_cached(
     cache: &EvalCache,
     window_resolution: f64,
 ) -> crate::Result<Vec<Evaluated>> {
+    let (evals, _health) =
+        evaluate_all_batched_cached_health(tech, rt, configs, workers, cache, window_resolution)?;
+    Ok(evals)
+}
+
+/// [`evaluate_all_batched_cached`] returning the [`RunHealth`] report
+/// alongside the evaluations.  Quarantined design points come back as
+/// [`Evaluated`] entries with `quarantine: Some(reason)` and the
+/// all-NaN placeholder perf (infeasible-with-reason) instead of
+/// failing the sweep; they are cached like any other result, so a
+/// repeat sweep does not re-pay their (failing) evaluation.  The
+/// health report covers only the *miss* evaluations this call paid —
+/// a fully cached sweep reports clean.
+pub fn evaluate_all_batched_cached_health(
+    tech: &Tech,
+    rt: &SharedRuntime,
+    configs: &[Config],
+    workers: usize,
+    cache: &EvalCache,
+    window_resolution: f64,
+) -> crate::Result<(Vec<Evaluated>, RunHealth)> {
     cache.bind_resolution(window_resolution)?;
     // distinct configs not yet cached, in first-appearance order
     let mut seen: std::collections::HashSet<ConfigKey> = std::collections::HashSet::new();
@@ -223,24 +251,34 @@ pub fn evaluate_all_batched_cached(
     let banks: Vec<Bank> = par_map(&miss_cfgs, workers, |cfg| compile(tech, cfg))
         .into_iter()
         .collect::<crate::Result<Vec<_>>>()?;
-    let perfs = characterize::characterize_all(tech, rt, &banks, window_resolution)?;
+    let (perfs, health) =
+        characterize::characterize_all_health(tech, rt, &banks, window_resolution)?;
     for (bank, perf) in banks.iter().zip(perfs) {
+        let (perf, quarantine) = match perf {
+            Ok(p) => (p, None),
+            Err(q) => (
+                BankPerf::quarantined(),
+                Some(format!("{} stage: {}", q.stage, q.reason)),
+            ),
+        };
         cache.insert(Evaluated {
             config: bank.config.clone(),
             perf,
             area_um2: bank.layout.total_area_um2(),
+            quarantine,
         });
     }
     // order-preserving resolution: every key is cached now (uncounted
     // lookup — these reads are bookkeeping, not cache hits)
-    configs
+    let evals = configs
         .iter()
         .map(|cfg| {
             cache
                 .lookup(&cfg.key())
                 .ok_or_else(|| anyhow::anyhow!("config missing from cache after batch evaluation"))
         })
-        .collect()
+        .collect::<crate::Result<Vec<Evaluated>>>()?;
+    Ok((evals, health))
 }
 
 /// [`evaluate_all_batched_cached`] with a throwaway cache (the
@@ -256,6 +294,25 @@ pub fn evaluate_all_batched(
     evaluate_all_batched_cached(tech, rt, configs, workers, &EvalCache::new(), window_resolution)
 }
 
+/// [`evaluate_all_batched`] returning the [`RunHealth`] report — the
+/// entry point the `dse` CLI prints its health summary from.
+pub fn evaluate_all_batched_health(
+    tech: &Tech,
+    rt: &SharedRuntime,
+    configs: &[Config],
+    workers: usize,
+    window_resolution: f64,
+) -> crate::Result<(Vec<Evaluated>, RunHealth)> {
+    evaluate_all_batched_cached_health(
+        tech,
+        rt,
+        configs,
+        workers,
+        &EvalCache::new(),
+        window_resolution,
+    )
+}
+
 /// Shmoo verdict for (config, demand).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Verdict {
@@ -266,6 +323,9 @@ pub enum Verdict {
     FailRetention,
     /// Electrically non-functional (no sense margin).
     FailMargin,
+    /// Quarantined by fault isolation — never measured (see
+    /// [`Evaluated::quarantine`] for the reason).
+    Quarantined,
 }
 
 impl Verdict {
@@ -278,13 +338,16 @@ impl Verdict {
             Verdict::FailFreq => 'f',
             Verdict::FailRetention => 'r',
             Verdict::FailMargin => 'x',
+            Verdict::Quarantined => 'q',
         }
     }
 }
 
 /// Evaluate one (design, demand) pair — the Fig. 10 cell.
 pub fn shmoo_verdict(e: &Evaluated, d: &Demand) -> Verdict {
-    if !e.perf.functional {
+    if e.quarantine.is_some() {
+        Verdict::Quarantined
+    } else if !e.perf.functional {
         Verdict::FailMargin
     } else if e.perf.f_op_hz < d.read_freq_hz {
         Verdict::FailFreq
@@ -566,7 +629,23 @@ mod tests {
                 functional: true,
             },
             area_um2: area,
+            quarantine: None,
         }
+    }
+
+    #[test]
+    fn quarantined_points_are_infeasible_with_reason() {
+        use crate::workloads::{profile, CacheLevel, H100, TASKS};
+        let d = profile(&TASKS[0], CacheLevel::L1, &H100);
+        let mut q = fake(1e9, 1.0, 1e4);
+        q.perf = BankPerf::quarantined();
+        q.quarantine = Some("write stage: degenerate write input: c_sn = 0".to_string());
+        assert_eq!(shmoo_verdict(&q, &d), Verdict::Quarantined);
+        assert_eq!(shmoo_verdict(&q, &d).glyph(), 'q');
+        assert!(!shmoo_verdict(&q, &d).pass());
+        // all-NaN perf + functional=false: the Pareto front drops it
+        let real = fake(1e9, 1e-3, 1e4);
+        assert_eq!(pareto(&[q, real]), vec![1]);
     }
 
     #[test]

@@ -23,10 +23,13 @@
 //! * [`sim`] — native MNA transient simulator (HSPICE stand-in).
 //! * [`runtime`] — pluggable execution backends behind
 //!   [`runtime::ExecBackend`]: the native batched EKV solver
-//!   ([`runtime::native`], always available) and the PJRT
+//!   ([`runtime::native`], always available), the PJRT
 //!   loader/executor for `artifacts/*.hlo.txt` (optional
-//!   acceleration).
-//! * [`coordinator`] — batched DSE job execution over the runtime.
+//!   acceleration, armed with a pjrt→native failover breaker under
+//!   `auto`), and deterministic fault injection for chaos runs
+//!   ([`runtime::fault`]).
+//! * [`coordinator`] — batched DSE job execution over the runtime,
+//!   with retry/backoff and batch-bisection fault quarantine.
 //! * [`compiler`] — the GCRAM bank compiler (the paper's contribution).
 //! * [`characterize`] — area/delay/power/retention characterization,
 //!   batch-first: `CharPlan` plan/finish decomposition plus

@@ -106,7 +106,7 @@ fn run() -> opengcram::Result<()> {
             let mut table = report::Table::new(&["task", "demand MHz", "16", "32", "64", "96", "128"]);
             // batch-first sweep: compile in parallel, characterize in
             // shared padded artifact batches via the coordinator
-            let evals = dse::evaluate_all_batched(
+            let (evals, health) = dse::evaluate_all_batched_health(
                 &tech,
                 &rt,
                 &dse::fig10_configs(CellFlavor::GcSiSiNp),
@@ -123,11 +123,15 @@ fn run() -> opengcram::Result<()> {
             }
             println!("{}", table.render());
             println!(
-                "P=pass f=too slow r=retention x=no margin (Fig. 10, {} {:?}, {} backend)",
+                "P=pass f=too slow r=retention x=no margin q=quarantined (Fig. 10, {} {:?}, {} backend)",
                 machine.name,
                 level,
                 rt.backend_name()
             );
+            println!("run health: {}", health.summary());
+            for q in &health.quarantined {
+                println!("  quarantined [{}] {} — {} stage: {}", q.index, q.design, q.stage, q.reason);
+            }
         }
         "compose" => {
             let machine = cli::parse_machine(&args)?;
@@ -203,6 +207,10 @@ fn run() -> opengcram::Result<()> {
                 "sweep: {} distinct design points, {} pipeline evaluations, {} cache hits",
                 c.distinct, c.cache_misses, c.cache_hits
             );
+            println!("run health: {}", c.health.summary());
+            for q in &c.health.quarantined {
+                println!("  quarantined [{}] {} — {} stage: {}", q.index, q.design, q.stage, q.reason);
+            }
             if let Some(path) = cli::flag_value(&args, "--csv") {
                 std::fs::write(&path, compose::csv(&c))?;
                 println!("wrote {path}");

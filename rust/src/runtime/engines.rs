@@ -12,6 +12,67 @@ use super::stimulus as st;
 use super::{ExecBackend, Tensor};
 use crate::tech::DeviceCard;
 
+/// Why one design point's row was rejected — a degenerate input caught
+/// before execution (e.g. `c_sn <= 0`, which would otherwise become a
+/// silent `1/0` in the inverse-capacitance tensor) or a non-finite
+/// solver output caught by the per-row NaN/Inf scan — while the rest of
+/// its batch stayed healthy.
+#[derive(Debug, Clone)]
+pub struct RowFault {
+    pub reason: String,
+}
+
+/// Per-row result of a batched op: healthy rows carry the op's result,
+/// degenerate/poisoned rows carry a [`RowFault`].  The `*_rows` entry
+/// points return these so one bad design point quarantines itself
+/// instead of failing its whole shared batch.
+pub type RowResult<T> = Result<T, RowFault>;
+
+fn require_pos(name: &str, v: f64) -> Result<(), String> {
+    if v.is_finite() && v > 0.0 {
+        Ok(())
+    } else {
+        Err(format!("{name} = {v} (must be finite and > 0)"))
+    }
+}
+
+fn require_finite(name: &str, v: f64) -> Result<(), String> {
+    if v.is_finite() {
+        Ok(())
+    } else {
+        Err(format!("{name} = {v} (must be finite)"))
+    }
+}
+
+fn input_fault(op: &str, checks: impl IntoIterator<Item = Result<(), String>>) -> Option<RowFault> {
+    for c in checks {
+        if let Err(why) = c {
+            return Some(RowFault { reason: format!("degenerate {op} input: {why}") });
+        }
+    }
+    None
+}
+
+/// Per-row output scan: any NaN/Inf scalar quarantines the row (the
+/// `big_time` "never crossed" sentinel is finite and passes).
+fn output_fault(op: &str, fields: &[(&str, f64)]) -> Option<RowFault> {
+    for (name, v) in fields {
+        if !v.is_finite() {
+            return Some(RowFault { reason: format!("non-finite {op} output: {name} = {v}") });
+        }
+    }
+    None
+}
+
+/// Collapse per-row results into the legacy all-or-nothing form: the
+/// first faulted row fails the call with its index and reason.
+fn collect_rows<T>(op: &str, rows: Vec<RowResult<T>>) -> crate::Result<Vec<T>> {
+    rows.into_iter()
+        .enumerate()
+        .map(|(i, r)| r.map_err(|f| anyhow::anyhow!("{op} point {i}: {}", f.reason)))
+        .collect()
+}
+
 /// One write-path design point.
 #[derive(Debug, Clone)]
 pub struct WritePoint {
@@ -42,11 +103,45 @@ pub struct WriteResult {
     pub sn_peak: f64,
 }
 
-/// Run the write artifact over design points (padded to batch).
+/// Run the write artifact over design points (padded to batch),
+/// failing on the first degenerate/poisoned row — see
+/// [`write_rows`] for the fault-isolating per-row form.
 pub fn write_op(rt: &dyn ExecBackend, pts: &[WritePoint], window_s: f64) -> crate::Result<Vec<WriteResult>> {
+    collect_rows("write", write_rows(rt, pts, window_s)?)
+}
+
+/// Run the write artifact over design points (padded to batch) with
+/// per-row fault isolation: degenerate inputs and non-finite outputs
+/// quarantine their own row only.
+pub fn write_rows(
+    rt: &dyn ExecBackend,
+    pts: &[WritePoint],
+    window_s: f64,
+) -> crate::Result<Vec<RowResult<WriteResult>>> {
     let meta = rt.manifest().get("write")?.clone();
     let (b, nf, ns, np, steps) = (meta.batch, meta.nf(), meta.ns(), meta.npar(), meta.steps);
-    anyhow::ensure!(pts.len() <= b, "batch overflow: {} > {b}", pts.len());
+    anyhow::ensure!(
+        pts.len() <= b,
+        "write: batch overflow: {} points > artifact batch cap {b}",
+        pts.len()
+    );
+    let faults: Vec<Option<RowFault>> = pts
+        .iter()
+        .map(|pt| {
+            input_fault(
+                "write",
+                [
+                    require_pos("c_sn", pt.c_sn),
+                    require_pos("c_wbl", pt.c_wbl),
+                    require_finite("c_wwl_sn", pt.c_wwl_sn),
+                    require_finite("g_wbl_leak", pt.g_wbl_leak),
+                    require_finite("vdd", pt.vdd),
+                    require_finite("v_wwl", pt.v_wwl),
+                    require_finite("sn0", pt.sn0),
+                ],
+            )
+        })
+        .collect();
 
     let mut params = Tensor::zeros(vec![b as i64, np as i64]);
     let mut cinv = Tensor::zeros(vec![b as i64, nf as i64]);
@@ -67,6 +162,9 @@ pub fn write_op(rt: &dyn ExecBackend, pts: &[WritePoint], window_s: f64) -> crat
     let (n_sn, n_wbl) = (meta.free("sn")?, meta.free("wbl")?);
 
     for (i, pt) in pts.iter().enumerate() {
+        if faults[i].is_some() {
+            continue; // degenerate row rides along as padding
+        }
         set_card(&mut params, i, p_mwr, &pt.write_card, pt.write_wl);
         set_card(&mut params, i, p_drvp, &pt.drv_p.0, pt.drv_p.1);
         set_card(&mut params, i, p_drvn, &pt.drv_n.0, pt.drv_n.1);
@@ -79,10 +177,12 @@ pub fn write_op(rt: &dyn ExecBackend, pts: &[WritePoint], window_s: f64) -> crat
         amp.set2(i, s_vdd, pt.vdd as f32);
         v0.set2(i, n_sn, pt.sn0 as f32);
     }
-    // pad rows keep zero cinv=0 -> pinned; harmless
-    for i in pts.len()..b {
-        cinv.set2(i, n_sn, 1e15);
-        cinv.set2(i, n_wbl, 1e14);
+    // pad rows (and quarantined rows) keep zero params -> pinned; harmless
+    for i in 0..b {
+        if i >= pts.len() || faults[i].is_some() {
+            cinv.set2(i, n_sn, 1e15);
+            cinv.set2(i, n_wbl, 1e14);
+        }
     }
 
     // schedule: wwl rises at 5 % of the window, falls at 75 %
@@ -112,10 +212,22 @@ pub fn write_op(rt: &dyn ExecBackend, pts: &[WritePoint], window_s: f64) -> crat
     let t_wr = &out[3];
     let sn_peak = &out[4];
     Ok((0..pts.len())
-        .map(|i| WriteResult {
-            sn_final: sn_final.data[i] as f64,
-            t_wr: t_wr.data[i] as f64,
-            sn_peak: sn_peak.data[i] as f64,
+        .map(|i| {
+            if let Some(f) = &faults[i] {
+                return Err(f.clone());
+            }
+            let r = WriteResult {
+                sn_final: sn_final.data[i] as f64,
+                t_wr: t_wr.data[i] as f64,
+                sn_peak: sn_peak.data[i] as f64,
+            };
+            match output_fault(
+                "write",
+                &[("sn_final", r.sn_final), ("t_wr", r.t_wr), ("sn_peak", r.sn_peak)],
+            ) {
+                Some(f) => Err(f),
+                None => Ok(r),
+            }
         })
         .collect())
 }
@@ -151,10 +263,44 @@ pub struct ReadResult {
     pub sn_final: f64,
 }
 
+/// Run the read artifact over design points, failing on the first
+/// degenerate/poisoned row — see [`read_rows`] for the fault-isolating
+/// per-row form.
 pub fn read_op(rt: &dyn ExecBackend, pts: &[ReadPoint], window_s: f64) -> crate::Result<Vec<ReadResult>> {
+    collect_rows("read", read_rows(rt, pts, window_s)?)
+}
+
+/// Run the read artifact over design points (padded to batch) with
+/// per-row fault isolation.
+pub fn read_rows(
+    rt: &dyn ExecBackend,
+    pts: &[ReadPoint],
+    window_s: f64,
+) -> crate::Result<Vec<RowResult<ReadResult>>> {
     let meta = rt.manifest().get("read")?.clone();
     let (b, nf, ns, np, steps) = (meta.batch, meta.nf(), meta.ns(), meta.npar(), meta.steps);
-    anyhow::ensure!(pts.len() <= b, "batch overflow");
+    anyhow::ensure!(
+        pts.len() <= b,
+        "read: batch overflow: {} points > artifact batch cap {b}",
+        pts.len()
+    );
+    let faults: Vec<Option<RowFault>> = pts
+        .iter()
+        .map(|pt| {
+            input_fault(
+                "read",
+                [
+                    require_pos("c_sn", pt.c_sn),
+                    require_pos("c_rbl", pt.c_rbl),
+                    require_finite("c_rwl_sn", pt.c_rwl_sn),
+                    require_finite("g_rbl_leak", pt.g_rbl_leak),
+                    require_finite("vdd", pt.vdd),
+                    require_finite("sn0", pt.sn0),
+                    require_finite("sn_unsel", pt.sn_unsel),
+                ],
+            )
+        })
+        .collect();
 
     let mut params = Tensor::zeros(vec![b as i64, np as i64]);
     let mut cinv = Tensor::zeros(vec![b as i64, nf as i64]);
@@ -182,6 +328,9 @@ pub fn read_op(rt: &dyn ExecBackend, pts: &[ReadPoint], window_s: f64) -> crate:
         }
     };
     for (i, pt) in pts.iter().enumerate() {
+        if faults[i].is_some() {
+            continue; // degenerate row rides along as padding
+        }
         set_card(&mut params, i, p_mrd, &pt.read_card, pt.read_wl);
         set_card(&mut params, i, p_leak, &pt.read_card, pt.read_wl * (pt.rows.saturating_sub(1)) as f64);
         params.set2(i, p_cc, pt.c_rwl_sn as f32);
@@ -194,9 +343,11 @@ pub fn read_op(rt: &dyn ExecBackend, pts: &[ReadPoint], window_s: f64) -> crate:
         amp.set2(i, s_idle, if pull_up { 0.0 } else { pt.vdd as f32 });
         amp.set2(i, s_snu, pt.sn_unsel as f32);
     }
-    for i in pts.len()..b {
-        cinv.set2(i, n_sn, 1e15);
-        cinv.set2(i, n_rbl, 1e14);
+    for i in 0..b {
+        if i >= pts.len() || faults[i].is_some() {
+            cinv.set2(i, n_sn, 1e15);
+            cinv.set2(i, n_rbl, 1e14);
+        }
     }
 
     let dt_step = window_s / (steps as f64 * meta.k_substeps as f64);
@@ -226,11 +377,28 @@ pub fn read_op(rt: &dyn ExecBackend, pts: &[ReadPoint], window_s: f64) -> crate:
     )?;
     // outputs: times_ds, trace_ds, t_rise, t_fall, rbl_final, sn_final
     Ok((0..pts.len())
-        .map(|i| ReadResult {
-            t_rise: out[2].data[i] as f64,
-            t_fall: out[3].data[i] as f64,
-            rbl_final: out[4].data[i] as f64,
-            sn_final: out[5].data[i] as f64,
+        .map(|i| {
+            if let Some(f) = &faults[i] {
+                return Err(f.clone());
+            }
+            let r = ReadResult {
+                t_rise: out[2].data[i] as f64,
+                t_fall: out[3].data[i] as f64,
+                rbl_final: out[4].data[i] as f64,
+                sn_final: out[5].data[i] as f64,
+            };
+            match output_fault(
+                "read",
+                &[
+                    ("t_rise", r.t_rise),
+                    ("t_fall", r.t_fall),
+                    ("rbl_final", r.rbl_final),
+                    ("sn_final", r.sn_final),
+                ],
+            ) {
+                Some(f) => Err(f),
+                None => Ok(r),
+            }
         })
         .collect())
 }
@@ -258,10 +426,41 @@ pub struct RetentionResult {
     pub sn_final: f64,
 }
 
+/// Run the retention artifact over design points, failing on the first
+/// degenerate/poisoned row — see [`retention_rows`] for the
+/// fault-isolating per-row form.
 pub fn retention(rt: &dyn ExecBackend, pts: &[RetentionPoint]) -> crate::Result<Vec<RetentionResult>> {
+    collect_rows("retention", retention_rows(rt, pts)?)
+}
+
+/// Run the retention artifact over design points (padded to batch)
+/// with per-row fault isolation.
+pub fn retention_rows(
+    rt: &dyn ExecBackend,
+    pts: &[RetentionPoint],
+) -> crate::Result<Vec<RowResult<RetentionResult>>> {
     let meta = rt.manifest().get("retention")?.clone();
     let (b, nf, ns, np, steps) = (meta.batch, meta.nf(), meta.ns(), meta.npar(), meta.steps);
-    anyhow::ensure!(pts.len() <= b, "batch overflow");
+    anyhow::ensure!(
+        pts.len() <= b,
+        "retention: batch overflow: {} points > artifact batch cap {b}",
+        pts.len()
+    );
+    let faults: Vec<Option<RowFault>> = pts
+        .iter()
+        .map(|pt| {
+            input_fault(
+                "retention",
+                [
+                    require_pos("c_sn", pt.c_sn),
+                    require_finite("g_gate_leak", pt.g_gate_leak),
+                    require_finite("i_disturb", pt.i_disturb),
+                    require_finite("v0", pt.v0),
+                    require_finite("vth", pt.vth),
+                ],
+            )
+        })
+        .collect();
 
     let mut params = Tensor::zeros(vec![b as i64, np as i64]);
     let mut cinv = Tensor::zeros(vec![b as i64, nf as i64]);
@@ -275,6 +474,9 @@ pub fn retention(rt: &dyn ExecBackend, pts: &[RetentionPoint]) -> crate::Result<
     let n_sn = meta.free("sn")?;
 
     for (i, pt) in pts.iter().enumerate() {
+        if faults[i].is_some() {
+            continue; // degenerate row rides along as padding
+        }
         for (k, v) in pt.write_card.to_row(pt.write_wl).iter().enumerate() {
             params.set2(i, p_mwr + k, *v);
         }
@@ -284,8 +486,10 @@ pub fn retention(rt: &dyn ExecBackend, pts: &[RetentionPoint]) -> crate::Result<
         v0.set2(i, n_sn, pt.v0 as f32);
         amp.set2(i, s_vth, pt.vth as f32);
     }
-    for i in pts.len()..b {
-        cinv.set2(i, n_sn, 1e15);
+    for i in 0..b {
+        if i >= pts.len() || faults[i].is_some() {
+            cinv.set2(i, n_sn, 1e15);
+        }
     }
 
     // The retention log-time grid contract: sub-steps start at 1 ps
@@ -312,9 +516,21 @@ pub fn retention(rt: &dyn ExecBackend, pts: &[RetentionPoint]) -> crate::Result<
     )?;
     // outputs: times_ds, trace_ds, t_retain, sn_final
     Ok((0..pts.len())
-        .map(|i| RetentionResult {
-            t_retain: out[2].data[i] as f64,
-            sn_final: out[3].data[i] as f64,
+        .map(|i| {
+            if let Some(f) = &faults[i] {
+                return Err(f.clone());
+            }
+            let r = RetentionResult {
+                t_retain: out[2].data[i] as f64,
+                sn_final: out[3].data[i] as f64,
+            };
+            match output_fault(
+                "retention",
+                &[("t_retain", r.t_retain), ("sn_final", r.sn_final)],
+            ) {
+                Some(f) => Err(f),
+                None => Ok(r),
+            }
         })
         .collect())
 }
@@ -328,7 +544,11 @@ pub fn idvg(
     vds: f64,
 ) -> crate::Result<(Vec<f64>, Vec<Vec<f64>>)> {
     let (b, g) = rt.manifest().idvg.unwrap_or((128, 64));
-    anyhow::ensure!(cards.len() <= b, "batch overflow");
+    anyhow::ensure!(
+        cards.len() <= b,
+        "idvg: batch overflow: {} cards > artifact batch cap {b}",
+        cards.len()
+    );
     let mut card_t = Tensor::zeros(vec![b as i64, 6]);
     let mut vds_t = Tensor::zeros(vec![b as i64, 1]);
     for (i, (c, wl)) in cards.iter().enumerate() {

@@ -1,0 +1,375 @@
+//! Deterministic fault injection for the execution pipeline.
+//!
+//! [`FaultBackend`] wraps any [`ExecBackend`] and injects faults from a
+//! [`FaultPlan`]: an executor error on the Nth execute of a named
+//! artifact, an executor panic, or NaN poisoning of one batch row of
+//! the output tuple.  Every recovery path above the runtime — the
+//! coordinator's retry/backoff and batch bisection
+//! ([`crate::coordinator`]), the engines' per-row output quarantine
+//! ([`super::engines`]), and the pjrt→native failover
+//! ([`super::FailoverBackend`]) — is exercised in CI against this
+//! wrapper instead of waiting for real hardware flakes.
+//!
+//! Plans are deterministic: a fault fires on an exact per-artifact
+//! attempt ordinal (1-based, counted on the wrapper), so a fixed plan
+//! over a fixed job stream reproduces bit-identical failures.  Plans
+//! come from three places:
+//!
+//! * builders ([`FaultPlan::error_on`] / [`FaultPlan::panic_on`] /
+//!   [`FaultPlan::poison_row`]) for tests,
+//! * [`FaultPlan::seeded`] for randomized-but-replayable chaos runs
+//!   (driven by [`crate::util::rng`]),
+//! * the `OPENGCRAM_FAULTS` environment variable
+//!   ([`FaultPlan::from_env`]) for CLI runs, parsed strictly in the
+//!   [`crate::cli`] style.
+//!
+//! An injected *error* attempt never reaches the inner backend, so the
+//! inner call counters keep counting **real executions only**: with an
+//! empty plan the wrapper is execution-count-transparent (the chaos
+//! parity pin in `tests/fault.rs` asserts this).
+
+use super::{ExecBackend, Manifest, Tensor};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// What a fault does when it fires.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// The execute attempt returns `Err` without running the inner
+    /// backend.  Because it is pinned to one attempt ordinal, the
+    /// coordinator's next retry lands on the following ordinal and
+    /// succeeds — i.e. this is a *transient-then-recover* fault.
+    Error,
+    /// The execute attempt panics (as a flaky executor or poisoned FFI
+    /// call would), exercising the coordinator's epitaph path.
+    Panic,
+    /// The inner backend runs normally, then row `row` of every
+    /// batch-length rank-1 output tensor is overwritten with NaN —
+    /// a solver blowup confined to one design point.
+    PoisonRow { row: usize },
+}
+
+/// One planned fault: fire `kind` on the `nth` (1-based) execute
+/// attempt of `artifact`, counted on the wrapper since construction.
+#[derive(Debug, Clone)]
+pub struct Fault {
+    pub artifact: String,
+    pub nth: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic set of [`Fault`]s.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// The empty plan (injects nothing; the wrapper is transparent).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Inject a transient executor error on the `nth` execute of
+    /// `artifact`.
+    pub fn error_on(mut self, artifact: &str, nth: u64) -> FaultPlan {
+        self.faults.push(Fault { artifact: artifact.into(), nth, kind: FaultKind::Error });
+        self
+    }
+
+    /// Inject an executor panic on the `nth` execute of `artifact`.
+    pub fn panic_on(mut self, artifact: &str, nth: u64) -> FaultPlan {
+        self.faults.push(Fault { artifact: artifact.into(), nth, kind: FaultKind::Panic });
+        self
+    }
+
+    /// Poison row `row` of the output tuple of the `nth` execute of
+    /// `artifact` with NaN.
+    pub fn poison_row(mut self, artifact: &str, nth: u64, row: usize) -> FaultPlan {
+        self.faults.push(Fault {
+            artifact: artifact.into(),
+            nth,
+            kind: FaultKind::PoisonRow { row },
+        });
+        self
+    }
+
+    /// A seeded random plan over `artifacts`: `n` faults, each a
+    /// transient error or a row poison (never a panic — seeded chaos
+    /// runs should exercise recovery, not worker death), with attempt
+    /// ordinals in `[1, within_attempts]` and poison rows in
+    /// `[0, rows)`.  Same seed ⇒ same plan.
+    pub fn seeded(seed: u64, artifacts: &[&str], n: usize, within_attempts: u64, rows: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let mut plan = FaultPlan::new();
+        for _ in 0..n {
+            let artifact = artifacts[rng.below(artifacts.len().max(1))];
+            let nth = 1 + rng.next_u64() % within_attempts.max(1);
+            plan = if rng.chance(0.5) {
+                plan.error_on(artifact, nth)
+            } else {
+                plan.poison_row(artifact, nth, rng.below(rows.max(1)))
+            };
+        }
+        plan
+    }
+
+    /// Parse the `OPENGCRAM_FAULTS` environment variable.  Returns
+    /// `Ok(None)` when unset or empty; a set-but-malformed spec is a
+    /// hard error (strict-parsing policy of [`crate::cli`]).
+    pub fn from_env() -> crate::Result<Option<FaultPlan>> {
+        match std::env::var("OPENGCRAM_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => FaultPlan::parse(&s).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// Parse a fault spec: comma-separated `artifact:kind@nth` entries
+    /// where `kind` is `err`, `panic` or `nan:<row>` — e.g.
+    /// `write:nan:0@1,retention:err@2`.
+    pub fn parse(spec: &str) -> crate::Result<FaultPlan> {
+        let mut plan = FaultPlan::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (head, nth) = entry.rsplit_once('@').ok_or_else(|| {
+                anyhow::anyhow!("fault spec '{entry}': expected 'artifact:kind@nth'")
+            })?;
+            let nth: u64 = nth
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault spec '{entry}': bad attempt ordinal '{nth}'"))?;
+            anyhow::ensure!(nth >= 1, "fault spec '{entry}': attempt ordinal is 1-based");
+            let mut parts = head.split(':');
+            let artifact = parts.next().unwrap_or("");
+            anyhow::ensure!(!artifact.is_empty(), "fault spec '{entry}': empty artifact name");
+            let kind = match (parts.next(), parts.next(), parts.next()) {
+                (Some("err"), None, _) => FaultKind::Error,
+                (Some("panic"), None, _) => FaultKind::Panic,
+                (Some("nan"), Some(row), None) => FaultKind::PoisonRow {
+                    row: row.parse().map_err(|_| {
+                        anyhow::anyhow!("fault spec '{entry}': bad poison row '{row}'")
+                    })?,
+                },
+                _ => anyhow::bail!(
+                    "fault spec '{entry}': kind must be 'err', 'panic' or 'nan:<row>'"
+                ),
+            };
+            plan.faults.push(Fault { artifact: artifact.into(), nth, kind });
+        }
+        anyhow::ensure!(!plan.faults.is_empty(), "fault spec '{spec}': no faults");
+        Ok(plan)
+    }
+
+    /// The planned faults (for reporting).
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    fn matching(&self, artifact: &str, attempt: u64) -> impl Iterator<Item = &Fault> {
+        self.faults
+            .iter()
+            .filter(move |f| f.artifact == artifact && f.nth == attempt)
+    }
+}
+
+/// An [`ExecBackend`] wrapper that injects faults from a [`FaultPlan`].
+///
+/// Attempt ordinals are counted per artifact *on the wrapper*; injected
+/// `Error`/`Panic` attempts never reach the inner backend, so the inner
+/// call counters stay a census of real executions.
+pub struct FaultBackend {
+    inner: Box<dyn ExecBackend + Send + Sync>,
+    plan: FaultPlan,
+    attempts: Mutex<BTreeMap<String, u64>>,
+    injected: AtomicU64,
+}
+
+impl FaultBackend {
+    pub fn new(inner: Box<dyn ExecBackend + Send + Sync>, plan: FaultPlan) -> FaultBackend {
+        FaultBackend {
+            inner,
+            plan,
+            attempts: Mutex::new(BTreeMap::new()),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Faults fired so far (errors + panics + poisoned rows).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Execute attempts seen per artifact (includes faulted attempts).
+    pub fn attempts(&self, name: &str) -> u64 {
+        let g = self.attempts.lock().unwrap_or_else(|e| e.into_inner());
+        g.get(name).copied().unwrap_or(0)
+    }
+}
+
+impl ExecBackend for FaultBackend {
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        let attempt = {
+            let mut g = self.attempts.lock().unwrap_or_else(|e| e.into_inner());
+            let c = g.entry(name.to_string()).or_insert(0);
+            *c += 1;
+            *c
+        };
+        let mut poison_rows: Vec<usize> = Vec::new();
+        for fault in self.plan.matching(name, attempt) {
+            match fault.kind {
+                FaultKind::Error => {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    anyhow::bail!(
+                        "injected fault: artifact '{name}' execute attempt #{attempt}"
+                    );
+                }
+                FaultKind::Panic => {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    panic!("injected panic: artifact '{name}' execute attempt #{attempt}");
+                }
+                FaultKind::PoisonRow { row } => poison_rows.push(row),
+            }
+        }
+        let mut out = self.inner.execute(name, inputs)?;
+        if !poison_rows.is_empty() {
+            let batch = self.inner.manifest().get(name).map(|m| m.batch).unwrap_or(0);
+            for t in &mut out {
+                // poison only the per-row scalar outputs (rank-1,
+                // batch-length) — the ones the engines scan per row
+                if t.dims.len() == 1 && t.dims[0] as usize == batch {
+                    for &row in &poison_rows {
+                        if row < t.data.len() {
+                            t.data[row] = f32::NAN;
+                        }
+                    }
+                }
+            }
+            self.injected.fetch_add(poison_rows.len() as u64, Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+
+    fn call_count(&self, name: &str) -> u64 {
+        self.inner.call_count(name)
+    }
+
+    fn call_counts(&self) -> BTreeMap<String, u64> {
+        self.inner.call_counts()
+    }
+
+    fn platform(&self) -> String {
+        format!("{}+faults", self.inner.platform())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn wrap(plan: FaultPlan) -> FaultBackend {
+        FaultBackend::new(Box::new(NativeBackend::new().with_workers(1)), plan)
+    }
+
+    fn write_inputs(b: &FaultBackend) -> Vec<Tensor> {
+        let m = b.manifest().get("write").unwrap();
+        let (batch, steps, nf, ns, np) =
+            (m.batch as i64, m.steps as i64, m.nf() as i64, m.ns() as i64, m.npar() as i64);
+        vec![
+            Tensor::zeros(vec![batch, nf]),              // v0
+            Tensor::zeros(vec![batch, ns]),              // amp
+            Tensor::zeros(vec![batch, np]),              // params (all-pad)
+            Tensor::zeros(vec![batch, nf]),              // cinv
+            Tensor::zeros(vec![steps, ns]),              // wave
+            Tensor::zeros(vec![steps, ns]),              // dwave
+            Tensor::new(vec![steps], vec![1e-12; m.steps]), // dt
+        ]
+    }
+
+    #[test]
+    fn error_fires_only_on_its_ordinal_and_skips_the_inner_backend() {
+        let b = wrap(FaultPlan::new().error_on("write", 2));
+        let inputs = write_inputs(&b);
+        assert!(b.execute("write", &inputs).is_ok());
+        let err = b.execute("write", &inputs).unwrap_err();
+        assert!(format!("{err}").contains("attempt #2"), "{err}");
+        // transient: the next attempt recovers
+        assert!(b.execute("write", &inputs).is_ok());
+        assert_eq!(b.attempts("write"), 3);
+        // the faulted attempt never reached the inner backend
+        assert_eq!(b.call_count("write"), 2);
+        assert_eq!(b.injected(), 1);
+    }
+
+    #[test]
+    fn poison_row_nans_exactly_the_planned_row_of_scalar_outputs() {
+        let b = wrap(FaultPlan::new().poison_row("write", 1, 3));
+        let out = b.execute("write", &write_inputs(&b)).unwrap();
+        let batch = b.manifest().get("write").unwrap().batch;
+        for t in &out[2..] {
+            assert_eq!(t.dims, vec![batch as i64]);
+            assert!(t.data[3].is_nan(), "row 3 should be poisoned");
+            assert!(t.data[2].is_finite() && t.data[4].is_finite());
+        }
+        // the big trace tensors are untouched
+        assert!(out[1].data.iter().all(|v| v.is_finite()));
+        assert_eq!(b.injected(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "injected panic")]
+    fn panic_fault_panics() {
+        let b = wrap(FaultPlan::new().panic_on("write", 1));
+        let _ = b.execute("write", &write_inputs(&b));
+    }
+
+    #[test]
+    fn empty_plan_is_transparent() {
+        let b = wrap(FaultPlan::new());
+        assert!(b.execute("write", &write_inputs(&b)).is_ok());
+        assert_eq!(b.injected(), 0);
+        assert_eq!(b.call_count("write"), 1);
+    }
+
+    #[test]
+    fn spec_parses_strictly() {
+        let plan = FaultPlan::parse("write:nan:0@1, retention:err@2,read:panic@3").unwrap();
+        assert_eq!(plan.faults().len(), 3);
+        assert_eq!(plan.faults()[0].kind, FaultKind::PoisonRow { row: 0 });
+        assert_eq!(plan.faults()[1].kind, FaultKind::Error);
+        assert_eq!(plan.faults()[1].nth, 2);
+        assert_eq!(plan.faults()[2].kind, FaultKind::Panic);
+        for bad in [
+            "write",            // no @nth
+            "write:err@0",      // 0 is not a valid 1-based ordinal
+            "write:err@x",      // bad ordinal
+            ":err@1",           // empty artifact
+            "write:nan@1",      // nan without a row
+            "write:frob@1",     // unknown kind
+            "",                 // no faults at all
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec '{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        let a = FaultPlan::seeded(42, &["write", "read"], 4, 8, 256);
+        let b = FaultPlan::seeded(42, &["write", "read"], 4, 8, 256);
+        assert_eq!(a.faults().len(), 4);
+        for (x, y) in a.faults().iter().zip(b.faults()) {
+            assert_eq!(x.artifact, y.artifact);
+            assert_eq!(x.nth, y.nth);
+            assert_eq!(x.kind, y.kind);
+        }
+        assert!(a.faults().iter().all(|f| f.kind != FaultKind::Panic));
+    }
+}

@@ -25,6 +25,7 @@
 //! ([`crate::cli::parse_backend`]).
 
 pub mod engines;
+pub mod fault;
 pub mod native;
 pub mod stimulus;
 
@@ -395,13 +396,218 @@ impl ExecBackend for Runtime {
 
 /// The PJRT variant of [`SharedRuntime`]: the xla PJRT client is not
 /// Send/Sync (internal Rc), but the CPU client is safe to drive from
-/// one thread at a time — access is serialized behind a mutex.
-pub struct PjrtShared(std::sync::Mutex<Runtime>);
+/// one thread at a time — access is serialized behind a mutex.  The
+/// manifest is kept outside the mutex (it is immutable after load) so
+/// [`ExecBackend::manifest`] can hand out a plain reference.
+pub struct PjrtShared {
+    manifest: Manifest,
+    inner: std::sync::Mutex<Runtime>,
+}
 
 // SAFETY: all access is serialized by the mutex; the CPU PJRT client
 // performs no thread-local magic between calls.
 unsafe impl Send for PjrtShared {}
 unsafe impl Sync for PjrtShared {}
+
+impl PjrtShared {
+    fn new(rt: Runtime) -> PjrtShared {
+        PjrtShared { manifest: rt.manifest.clone(), inner: std::sync::Mutex::new(rt) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Runtime> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl ExecBackend for PjrtShared {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        self.lock().execute(name, inputs)
+    }
+    fn call_count(&self, name: &str) -> u64 {
+        self.lock().call_count(name)
+    }
+    fn call_counts(&self) -> BTreeMap<String, u64> {
+        self.lock().call_counts()
+    }
+    fn platform(&self) -> String {
+        self.lock().platform()
+    }
+}
+
+/// Graceful degradation: a primary backend (PJRT) backed by the
+/// parity-pinned [`NativeBackend`].  The first `Err` from a primary
+/// execute trips the breaker — that request and **all remaining work**
+/// are served by the native fallback, with the downgrade logged once on
+/// stderr.  [`SharedRuntime::auto`] wraps a successful PJRT load in
+/// this, so a backend that dies mid-sweep degrades a run instead of
+/// killing it.
+///
+/// Failover is only armed when the primary's manifest is
+/// shape-compatible with the native one (same batch/steps/node/param
+/// layout for every artifact the native solver implements); otherwise
+/// primary errors propagate unchanged.
+pub struct FailoverBackend {
+    primary: Box<dyn ExecBackend + Send + Sync>,
+    fallback: NativeBackend,
+    armed: bool,
+    tripped: std::sync::atomic::AtomicBool,
+    failovers: AtomicU64,
+}
+
+impl FailoverBackend {
+    pub fn new(primary: Box<dyn ExecBackend + Send + Sync>) -> FailoverBackend {
+        let fallback = NativeBackend::new();
+        let armed = Self::compatible(primary.manifest(), fallback.manifest());
+        FailoverBackend {
+            primary,
+            fallback,
+            armed,
+            tripped: std::sync::atomic::AtomicBool::new(false),
+            failovers: AtomicU64::new(0),
+        }
+    }
+
+    /// Every artifact the native solver implements must agree on batch
+    /// size and column layout, or a failed-over batch would be
+    /// mis-shaped for the fallback.
+    fn compatible(primary: &Manifest, native: &Manifest) -> bool {
+        native.entries.iter().all(|(name, n)| match primary.entries.get(name) {
+            Some(p) => {
+                p.batch == n.batch
+                    && p.steps == n.steps
+                    && p.free_nodes == n.free_nodes
+                    && p.stim_nodes == n.stim_nodes
+                    && p.params == n.params
+            }
+            None => false,
+        })
+    }
+
+    /// Has the breaker tripped (all work now served natively)?
+    pub fn tripped(&self) -> bool {
+        self.tripped.load(Ordering::Relaxed)
+    }
+
+    /// Number of failover transitions (0 or 1).
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+}
+
+impl ExecBackend for FailoverBackend {
+    fn manifest(&self) -> &Manifest {
+        if self.tripped() {
+            self.fallback.manifest()
+        } else {
+            self.primary.manifest()
+        }
+    }
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        if self.tripped() {
+            return self.fallback.execute(name, inputs);
+        }
+        match self.primary.execute(name, inputs) {
+            Ok(out) => Ok(out),
+            Err(e) if self.armed => {
+                if !self.tripped.swap(true, Ordering::SeqCst) {
+                    self.failovers.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "warning: {} backend failed executing '{name}' ({e:#}); \
+                         failing over remaining work to the native backend",
+                        self.primary.platform()
+                    );
+                }
+                self.fallback.execute(name, inputs)
+            }
+            Err(e) => Err(e),
+        }
+    }
+    fn call_count(&self, name: &str) -> u64 {
+        self.primary.call_count(name) + self.fallback.call_count(name)
+    }
+    fn call_counts(&self) -> BTreeMap<String, u64> {
+        let mut counts = self.primary.call_counts();
+        for (k, v) in self.fallback.call_counts() {
+            *counts.entry(k).or_insert(0) += v;
+        }
+        counts
+    }
+    fn platform(&self) -> String {
+        if self.tripped() {
+            format!("{} (failed over from {})", self.fallback.platform(), self.primary.platform())
+        } else {
+            self.primary.platform()
+        }
+    }
+}
+
+/// One quarantined design point in a [`RunHealth`] report.
+#[derive(Debug, Clone)]
+pub struct QuarantinedPoint {
+    /// Index of the design in the order it entered the sweep.
+    pub index: usize,
+    /// Human-readable design label (size/flavor).
+    pub design: String,
+    /// Characterization stage that rejected it (`write`/`read`/`retention`).
+    pub stage: &'static str,
+    /// Why the point was quarantined.
+    pub reason: String,
+}
+
+/// Health report for one batched characterization run: what the
+/// fault-isolation machinery did on the way to the results.  Threaded
+/// through `characterize_all` / `evaluate_all_batched` and printed by
+/// the `dse`/`compose` CLI.  All-zero on a clean run (and a clean run
+/// pays **zero** extra executions — retry and bisection only engage on
+/// executor errors).
+#[derive(Debug, Clone, Default)]
+pub struct RunHealth {
+    /// Batch retry attempts (transient faults healed invisibly).
+    pub retries: u64,
+    /// Extra executor runs spent bisecting failing batches
+    /// (≤ 2·ceil(log2 batch) per poisoned row).
+    pub bisect_execs: u64,
+    /// pjrt→native failover transitions.
+    pub failovers: u64,
+    /// Design points rejected with per-point reasons.
+    pub quarantined: Vec<QuarantinedPoint>,
+}
+
+impl RunHealth {
+    /// No faults fired and nothing was quarantined.
+    pub fn is_clean(&self) -> bool {
+        self.retries == 0
+            && self.bisect_execs == 0
+            && self.failovers == 0
+            && self.quarantined.is_empty()
+    }
+
+    /// Fold another report into this one (multi-stage sweeps).
+    pub fn merge(&mut self, other: RunHealth) {
+        self.retries += other.retries;
+        self.bisect_execs += other.bisect_execs;
+        self.failovers += other.failovers;
+        self.quarantined.extend(other.quarantined);
+    }
+
+    /// One-line summary for the CLI.
+    pub fn summary(&self) -> String {
+        if self.is_clean() {
+            "clean (no retries, no bisection, no failovers, no quarantined points)".to_string()
+        } else {
+            format!(
+                "{} retries, {} bisect executions, {} failovers, {} quarantined",
+                self.retries,
+                self.bisect_execs,
+                self.failovers,
+                self.quarantined.len()
+            )
+        }
+    }
+}
 
 /// Thread-shareable execution backend handed to the coordinator, the
 /// batched sweeps and the benches.
@@ -414,9 +620,18 @@ unsafe impl Sync for PjrtShared {}
 ///   PJRT variant, where it is actually needed).
 /// * [`SharedRuntime::Pjrt`] serializes the non-`Send` PJRT client
 ///   behind [`PjrtShared`]'s mutex, exactly as before.
+/// * [`SharedRuntime::Failover`] is PJRT with a native circuit breaker
+///   ([`FailoverBackend`]) — what [`SharedRuntime::auto`] now returns
+///   when artifacts load.
+/// * [`SharedRuntime::Fault`] wraps any of the above in deterministic
+///   fault injection ([`fault::FaultBackend`]), enabled by the
+///   `OPENGCRAM_FAULTS` environment variable or
+///   [`SharedRuntime::with_faults`].
 pub enum SharedRuntime {
     Native(NativeBackend),
     Pjrt(PjrtShared),
+    Failover(FailoverBackend),
+    Fault(fault::FaultBackend),
 }
 
 impl SharedRuntime {
@@ -424,12 +639,24 @@ impl SharedRuntime {
     /// when artifacts or the linked `xla` crate are absent — see
     /// [`SharedRuntime::auto`] for the fallback policy).
     pub fn load(dir: &Path) -> crate::Result<SharedRuntime> {
-        Ok(SharedRuntime::Pjrt(PjrtShared(std::sync::Mutex::new(Runtime::load(dir)?))))
+        Ok(SharedRuntime::Pjrt(PjrtShared::new(Runtime::load(dir)?)))
     }
 
     /// The native in-process backend (always available, no artifacts).
     pub fn native() -> SharedRuntime {
         SharedRuntime::Native(NativeBackend::new())
+    }
+
+    /// Wrap this runtime in deterministic fault injection: every
+    /// execute passes through the plan first (see [`fault`]).
+    pub fn with_faults(self, plan: fault::FaultPlan) -> SharedRuntime {
+        let inner: Box<dyn ExecBackend + Send + Sync> = match self {
+            SharedRuntime::Native(b) => Box::new(b),
+            SharedRuntime::Pjrt(p) => Box::new(p),
+            SharedRuntime::Failover(f) => Box::new(f),
+            SharedRuntime::Fault(f) => Box::new(f),
+        };
+        SharedRuntime::Fault(fault::FaultBackend::new(inner, plan))
     }
 
     /// PJRT when `dir` holds loadable artifacts and the `xla` crate is
@@ -442,8 +669,16 @@ impl SharedRuntime {
     /// `make artifacts` output cannot masquerade as a deliberate
     /// native run — pass `--backend pjrt` to make that case a hard
     /// error instead.
+    ///
+    /// A successful PJRT load is additionally armed with the native
+    /// failover breaker ([`FailoverBackend`]): if PJRT later fails an
+    /// execute, remaining work degrades to the native backend with a
+    /// logged downgrade instead of killing the sweep.
     pub fn auto(dir: &Path) -> SharedRuntime {
         match SharedRuntime::load(dir) {
+            Ok(SharedRuntime::Pjrt(p)) => {
+                SharedRuntime::Failover(FailoverBackend::new(Box::new(p)))
+            }
             Ok(rt) => rt,
             Err(e) => {
                 if dir.join("manifest.json").exists() {
@@ -457,23 +692,45 @@ impl SharedRuntime {
         }
     }
 
-    /// Which backend this is: `"native"` or `"pjrt"`.
+    /// Which backend this is: `"native"`, `"pjrt"` (possibly armed with
+    /// failover), or `"fault"` (fault-injection wrapper).
     pub fn backend_name(&self) -> &'static str {
         match self {
             SharedRuntime::Native(_) => "native",
             SharedRuntime::Pjrt(_) => "pjrt",
+            SharedRuntime::Failover(f) => {
+                if f.tripped() {
+                    "native"
+                } else {
+                    "pjrt"
+                }
+            }
+            SharedRuntime::Fault(_) => "fault",
         }
     }
 
-    /// Run `f` against the backend.  Native: direct call, no lock;
-    /// PJRT: serialized behind the mutex.
+    /// Run `f` against the backend.  Native/failover/fault: direct
+    /// call, no lock; PJRT: serialized behind [`PjrtShared`]'s mutex
+    /// (held per `execute`, inside its `ExecBackend` impl).
     pub fn with<R>(&self, f: impl FnOnce(&dyn ExecBackend) -> R) -> R {
         match self {
             SharedRuntime::Native(b) => f(b),
-            SharedRuntime::Pjrt(p) => {
-                let guard = p.0.lock().unwrap_or_else(|e| e.into_inner());
-                f(&*guard)
-            }
+            SharedRuntime::Pjrt(p) => f(p),
+            SharedRuntime::Failover(b) => f(b),
+            SharedRuntime::Fault(b) => f(b),
+        }
+    }
+
+    /// pjrt→native failover transitions so far (0 when the backend has
+    /// no failover breaker).
+    pub fn failovers(&self) -> u64 {
+        match self {
+            SharedRuntime::Native(_) | SharedRuntime::Pjrt(_) => 0,
+            SharedRuntime::Failover(f) => f.failovers(),
+            // the fault wrapper type-erases its inner backend, so a
+            // breaker below it (fault injection over auto()) is not
+            // observable here; chaos runs inject over native anyway
+            SharedRuntime::Fault(_) => 0,
         }
     }
 

@@ -1,0 +1,228 @@
+//! Chaos suite: the fault-isolating execution pipeline under
+//! deterministic fault injection ([`opengcram::runtime::fault`]).
+//!
+//! The acceptance pin lives here: a seeded plan injecting one poisoned
+//! output row and one transient executor error into a five-design
+//! cross-flavor sweep must (a) quarantine exactly one design point with
+//! a reason, (b) leave every healthy design's `BankPerf`
+//! bitwise-identical to the fault-free run, and (c) with an empty plan
+//! the wrapper must be execution-count-transparent — zero faults means
+//! zero extra artifact executions.
+//!
+//! Every test is `fault_`-prefixed so CI's chaos step
+//! (`cargo test --release fault`) selects the whole suite by filter.
+
+use opengcram::compiler::{CellFlavor, Config};
+use opengcram::runtime::engines;
+use opengcram::runtime::fault::{FaultBackend, FaultPlan};
+use opengcram::runtime::{FailoverBackend, NativeBackend, SharedRuntime};
+use opengcram::tech::sg40;
+use opengcram::{compose, dse, workloads};
+
+/// The cross-flavor sweep of the chaos parity pin: five transient GC
+/// designs spanning all three gain-cell flavors and two geometries.
+fn chaos_configs() -> Vec<Config> {
+    vec![
+        Config::new(32, 32, CellFlavor::GcSiSiNp),
+        Config::new(32, 32, CellFlavor::GcOsOs),
+        Config::new(32, 32, CellFlavor::GcSiSiNn),
+        Config::new(16, 16, CellFlavor::GcSiSiNp),
+        Config::new(16, 16, CellFlavor::GcOsOs),
+    ]
+}
+
+fn perf_bits_eq(a: &opengcram::characterize::BankPerf, b: &opengcram::characterize::BankPerf, what: &str) {
+    let fields = [
+        ("f_read_hz", a.f_read_hz, b.f_read_hz),
+        ("f_write_hz", a.f_write_hz, b.f_write_hz),
+        ("f_op_hz", a.f_op_hz, b.f_op_hz),
+        ("bandwidth_bps", a.bandwidth_bps, b.bandwidth_bps),
+        ("retention_s", a.retention_s, b.retention_s),
+        ("leakage_w", a.leakage_w, b.leakage_w),
+        ("e_read_j", a.e_read_j, b.e_read_j),
+        ("t_decoder_s", a.t_decoder_s, b.t_decoder_s),
+        ("t_cell_read_s", a.t_cell_read_s, b.t_cell_read_s),
+        ("stored_one_v", a.stored_one_v, b.stored_one_v),
+    ];
+    for (name, x, y) in fields {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {name} diverged ({x} vs {y})");
+    }
+    assert_eq!(a.functional, b.functional, "{what}: functional verdict diverged");
+}
+
+#[test]
+fn fault_chaos_parity_pin() {
+    // the PR's acceptance criterion, end to end over the real pipeline
+    let t = sg40();
+    let cfgs = chaos_configs();
+    let workers = 2;
+
+    // fault-free baseline on a private native runtime
+    let base_rt = SharedRuntime::native();
+    let (base, base_health) =
+        dse::evaluate_all_batched_health(&t, &base_rt, &cfgs, workers, 0.0).unwrap();
+    assert!(base_health.is_clean(), "baseline not clean: {}", base_health.summary());
+    assert!(base.iter().all(|e| e.quarantine.is_none()));
+
+    // chaos run: NaN-poison row 0 of the first write execution (a solver
+    // blowup confined to one design point) plus a transient executor
+    // error on the first retention execution (healed by retry)
+    let plan = FaultPlan::new().poison_row("write", 1, 0).error_on("retention", 1);
+    let rt = SharedRuntime::native().with_faults(plan);
+    assert_eq!(rt.backend_name(), "fault");
+    let (evals, health) = dse::evaluate_all_batched_health(&t, &rt, &cfgs, workers, 0.0).unwrap();
+    assert_eq!(evals.len(), cfgs.len());
+
+    // (a) exactly one quarantined point, with stage and reason
+    assert_eq!(health.quarantined.len(), 1, "health: {}", health.summary());
+    let q = &health.quarantined[0];
+    assert_eq!(q.stage, "write");
+    assert!(q.reason.contains("non-finite write output"), "{}", q.reason);
+    assert!(!q.design.is_empty());
+    let quarantined: Vec<usize> =
+        (0..evals.len()).filter(|&i| evals[i].quarantine.is_some()).collect();
+    assert_eq!(quarantined, vec![q.index], "health report and evals disagree");
+    let bad = &evals[q.index];
+    assert!(bad.quarantine.as_deref().unwrap().contains("write"));
+    assert!(!bad.perf.functional);
+
+    // quarantined points are infeasible-with-reason in the shmoo
+    let d = workloads::profile(&workloads::TASKS[0], workloads::CacheLevel::L1, &workloads::GT520M);
+    let v = dse::shmoo_verdict(bad, &d);
+    assert_eq!(v.glyph(), 'q');
+    assert!(!v.pass());
+
+    // (b) healthy designs are bitwise identical to the fault-free run
+    for (i, (e, b)) in evals.iter().zip(&base).enumerate() {
+        assert_eq!(e.config.key(), b.config.key(), "sweep order diverged");
+        if i != q.index {
+            assert!(e.quarantine.is_none());
+            perf_bits_eq(&e.perf, &b.perf, &format!("design {i} {:?}", e.config));
+        }
+    }
+
+    // the transient retention error healed through retry, not bisection
+    assert!(health.retries >= 1, "transient error should cost a retry: {}", health.summary());
+    assert_eq!(health.bisect_execs, 0, "no Err-batch should have needed bisection");
+    assert_eq!(health.failovers, 0);
+    // the faulted retention attempt never reached the inner backend, so
+    // real retention executions match the baseline exactly
+    assert_eq!(rt.call_count("retention"), base_rt.call_count("retention"));
+    assert_eq!(rt.call_count("write"), base_rt.call_count("write"));
+    // quarantining can only ever shrink downstream batches
+    assert!(rt.call_count("read") <= base_rt.call_count("read"));
+}
+
+#[test]
+fn fault_empty_plan_is_execution_count_transparent() {
+    // (c) zero faults => zero extra executions, identical results
+    let t = sg40();
+    let cfgs = chaos_configs();
+    let base_rt = SharedRuntime::native();
+    let (base, _) = dse::evaluate_all_batched_health(&t, &base_rt, &cfgs, 2, 0.0).unwrap();
+    let rt = SharedRuntime::native().with_faults(FaultPlan::new());
+    let (evals, health) = dse::evaluate_all_batched_health(&t, &rt, &cfgs, 2, 0.0).unwrap();
+    assert!(health.is_clean(), "{}", health.summary());
+    assert_eq!(
+        rt.call_counts(),
+        base_rt.call_counts(),
+        "an empty fault plan must not change the artifact call census"
+    );
+    for (e, b) in evals.iter().zip(&base) {
+        assert!(e.quarantine.is_none());
+        perf_bits_eq(&e.perf, &b.perf, &format!("{:?}", e.config));
+    }
+}
+
+#[test]
+fn fault_degenerate_input_quarantines_its_row_only() {
+    // a non-physical design point (c_sn <= 0) is rejected per row with
+    // a reason; healthy co-batched rows still resolve
+    let t = sg40();
+    let mk = |c_sn: f64| engines::WritePoint {
+        write_card: *t.card("si_nmos"),
+        write_wl: 2.5,
+        drv_p: (*t.card("si_pmos"), 8.0),
+        drv_n: (*t.card("si_nmos"), 4.0),
+        c_sn,
+        c_wbl: 20e-15,
+        c_wwl_sn: 0.15e-15,
+        g_wbl_leak: 1e-9,
+        vdd: 1.1,
+        v_wwl: 1.5,
+        one: true,
+        sn0: 0.0,
+    };
+    let rt = SharedRuntime::native();
+    let pts = [mk(1.2e-15), mk(0.0), mk(-1.0e-15)];
+    let rows = rt.with(|r| engines::write_rows(r, &pts, 6e-9)).unwrap();
+    assert_eq!(rows.len(), 3);
+    let good = rows[0].as_ref().expect("healthy row must survive its neighbors");
+    assert!(good.sn_final.is_finite() && good.t_wr.is_finite());
+    for bad in [&rows[1], &rows[2]] {
+        let f = bad.as_ref().expect_err("c_sn <= 0 must be quarantined");
+        assert!(f.reason.contains("degenerate write input"), "{}", f.reason);
+        assert!(f.reason.contains("c_sn"), "{}", f.reason);
+    }
+    // the strict all-or-nothing wrapper names the offending point
+    let err = rt.with(|r| engines::write_op(r, &pts, 6e-9)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("write point 1"), "{msg}");
+    assert!(msg.contains("c_sn"), "{msg}");
+}
+
+#[test]
+fn fault_failover_serves_failed_request_from_native_fallback() {
+    // a terminal primary failure trips the breaker: the very request
+    // that failed is served from the native fallback, and so is all
+    // remaining work — with exactly one logged failover transition
+    let t = sg40();
+    let pts = [engines::RetentionPoint {
+        write_card: *t.card("si_nmos"),
+        write_wl: 2.5,
+        c_sn: 1.2e-15,
+        g_gate_leak: 1e-16,
+        i_disturb: 0.0,
+        v0: 0.6,
+        vth: 0.3,
+    }];
+    let plain = NativeBackend::new();
+    let want = engines::retention(&plain, &pts).unwrap();
+    // primary = native wrapped in a hard error on its first execution
+    let primary =
+        FaultBackend::new(Box::new(NativeBackend::new()), FaultPlan::new().error_on("retention", 1));
+    let fo = FailoverBackend::new(Box::new(primary));
+    assert!(!fo.tripped());
+    let got = engines::retention(&fo, &pts).unwrap();
+    assert!(fo.tripped(), "primary error must trip the breaker");
+    assert_eq!(fo.failovers(), 1);
+    assert_eq!(got[0].t_retain.to_bits(), want[0].t_retain.to_bits());
+    assert_eq!(got[0].sn_final.to_bits(), want[0].sn_final.to_bits());
+    // later work stays on the fallback without re-tripping
+    let again = engines::retention(&fo, &pts).unwrap();
+    assert_eq!(again[0].t_retain.to_bits(), want[0].t_retain.to_bits());
+    assert_eq!(fo.failovers(), 1);
+}
+
+#[test]
+fn fault_compose_treats_quarantined_points_as_infeasible() {
+    // the composition engine rides the same health-threaded sweep: a
+    // poisoned row quarantines one grid point, the report says so, and
+    // the selection simply routes around it
+    let t = sg40();
+    let rt = SharedRuntime::native().with_faults(FaultPlan::new().poison_row("write", 1, 0));
+    let mut spec = compose::ComposeSpec::new(&workloads::GT520M);
+    spec.window_resolution = 0.0;
+    let c = compose::compose(&t, &rt, &spec).unwrap();
+    assert_eq!(c.health.quarantined.len(), 1, "{}", c.health.summary());
+    assert_eq!(c.health.quarantined[0].stage, "write");
+    assert!(!c.health.is_clean());
+    // demands are still served by healthy grid points
+    assert!(c.per_demand.iter().any(|s| s.choice.is_some()));
+    for s in c.per_demand.iter().chain(c.per_level.iter()) {
+        if let Some(ch) = &s.choice {
+            assert!(ch.eval.quarantine.is_none(), "selected a quarantined design");
+            assert!(ch.eval.perf.functional);
+        }
+    }
+}

@@ -179,7 +179,12 @@ fn shmoo_has_passes_and_failures() {
     let cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
     let bank = compile(&t, &cfg).unwrap();
     let perf = with_rt(|rt| characterize::characterize(&t, rt, &bank)).unwrap();
-    let e = dse::Evaluated { config: cfg, perf, area_um2: bank.layout.total_area_um2() };
+    let e = dse::Evaluated {
+        config: cfg,
+        perf,
+        area_um2: bank.layout.total_area_um2(),
+        quarantine: None,
+    };
     for task in &workloads::TASKS {
         let l1 = workloads::profile(task, workloads::CacheLevel::L1, &workloads::GT520M);
         let l2 = workloads::profile(task, workloads::CacheLevel::L2, &workloads::H100);
