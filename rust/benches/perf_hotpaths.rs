@@ -14,14 +14,19 @@
 //! * `PERF_BANK=N`  — override the square bank size (default 128,
 //!   32 under smoke).
 //! * `PERF_BACKEND=native|pjrt|auto|none` — execution backend for the
-//!   transient benches (default: auto outside smoke, none under
-//!   smoke; the CI end-to-end step runs `PERF_SMOKE=1
-//!   PERF_BACKEND=native`).
+//!   transient benches (default: auto outside smoke, native under
+//!   smoke — a short native transient tier so CI exercises the real
+//!   solver; the CI end-to-end step runs `PERF_SMOKE=1
+//!   PERF_BACKEND=native` explicitly).
+//! * `PERF_MIN_SOA_SPEEDUP=X` — minimum SoA-vs-scalar-reference
+//!   speedup the transient solver must show on at least one op
+//!   (default 1.5; the rows/sec series for both modes land in
+//!   `BENCH_perf.json` regardless).
 use opengcram::characterize::batch;
 use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::coordinator::{BatchExec, Coordinator};
 use opengcram::layout::{cells, FlattenCache, Library};
-use opengcram::runtime::{engines, SharedRuntime};
+use opengcram::runtime::{engines, ExecBackend, NativeBackend, SharedRuntime};
 use opengcram::tech::sg40;
 use opengcram::util::bench;
 use opengcram::{characterize, drc, dse, sim};
@@ -170,8 +175,8 @@ fn main() {
     // grouped-ceiling KPI asserts (real per-artifact call counters, not
     // a counting mock).  Default: auto outside smoke — artifacts when
     // they load, the native solver otherwise, so there is no
-    // "skipping: no artifacts" branch anymore — and none under smoke
-    // (the CI end-to-end step sets PERF_BACKEND=native explicitly).
+    // "skipping: no artifacts" branch anymore — and native under smoke
+    // (a short transient tier; smoke used to skip transients entirely).
     let backend = std::env::var("PERF_BACKEND").ok();
     let rt = match backend.as_deref() {
         Some("none") => None,
@@ -186,14 +191,15 @@ fn main() {
         Some("auto") => Some(SharedRuntime::auto(Path::new("artifacts"))),
         Some(other) => panic!("unknown PERF_BACKEND '{other}' (expected native|pjrt|auto|none)"),
         None if smoke => {
-            println!("# PERF_SMOKE: transient benches skipped (set PERF_BACKEND=native to run them)");
-            None
+            println!("# PERF_SMOKE: native transient tier (set PERF_BACKEND=none to skip)");
+            Some(SharedRuntime::native())
         }
         None => Some(SharedRuntime::auto(Path::new("artifacts"))),
     };
     if let Some(rt) = &rt {
         println!("# execution backend: {}", rt.backend_name());
         transient_benches(&tech, rt, smoke, &mut records);
+        soa_speedup_records(&tech, smoke, &mut records);
     }
     if !smoke {
         native_sim_bench(&tech, &mut records);
@@ -455,6 +461,129 @@ fn transient_benches(
         characterize::characterize_all(tech, rt, &size_banks, res).unwrap()
     });
     records.push((s.clone(), size_banks.len() as f64 / s.median_s));
+}
+
+/// Time one transient op in both native execution modes and record the
+/// rows/sec series for each; returns the SoA-over-scalar speedup.
+fn soa_pair<A, B>(
+    op: &str,
+    n: usize,
+    t_eng: f64,
+    records: &mut Vec<(bench::Sample, f64)>,
+    scalar_f: impl FnMut() -> A,
+    soa_f: impl FnMut() -> B,
+) -> f64 {
+    let s = bench::run(&format!("soa_{op}_scalar_reference"), t_eng, scalar_f);
+    let rps_scalar = n as f64 / s.median_s;
+    records.push((s, rps_scalar));
+    let s = bench::run(&format!("soa_{op}_batched"), t_eng, soa_f);
+    let rps_soa = n as f64 / s.median_s;
+    records.push((s, rps_soa));
+    let speedup = rps_soa / rps_scalar.max(1e-12);
+    println!("soa_{op}_scalar_rows_per_sec,{rps_scalar:.0}");
+    println!("soa_{op}_rows_per_sec,{rps_soa:.0}");
+    println!("soa_{op}_speedup,{speedup:.2}x");
+    speedup
+}
+
+/// Tentpole KPI for the SoA transient solver (EXPERIMENTS.md, SoA
+/// execution model): scalar-reference vs SoA rows/sec on full-capacity
+/// batches of every transient op.  Both series land in
+/// `BENCH_perf.json`; the best per-op speedup is asserted against
+/// `PERF_MIN_SOA_SPEEDUP` (default 1.5 — a CI smoke floor, full runs
+/// land far higher).
+fn soa_speedup_records(
+    tech: &opengcram::tech::Tech,
+    smoke: bool,
+    records: &mut Vec<(bench::Sample, f64)>,
+) {
+    let t_eng = if smoke { 0.2 } else { 3.0 };
+    let min_speedup: f64 = std::env::var("PERF_MIN_SOA_SPEEDUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.5);
+    let scalar = NativeBackend::new().with_scalar_reference();
+    let soa = NativeBackend::new();
+    let cap = |op: &str| soa.manifest().get(op).unwrap().batch;
+
+    let n_ret = cap("retention");
+    let ret_pts: Vec<_> = (0..n_ret)
+        .map(|i| engines::RetentionPoint {
+            write_card: tech.card("si_nmos").with_vt(0.35 + 0.001 * i as f64),
+            write_wl: 2.5,
+            c_sn: 1.2e-15,
+            g_gate_leak: 1e-16,
+            i_disturb: 0.0,
+            v0: 0.6,
+            vth: 0.3,
+        })
+        .collect();
+    let su_ret = soa_pair(
+        "retention",
+        n_ret,
+        t_eng,
+        records,
+        || engines::retention(&scalar, &ret_pts).unwrap(),
+        || engines::retention(&soa, &ret_pts).unwrap(),
+    );
+
+    let n_wr = cap("write");
+    let wr_pts: Vec<_> = (0..n_wr)
+        .map(|i| engines::WritePoint {
+            write_card: tech.card("si_nmos").with_vt(0.35 + 0.001 * i as f64),
+            write_wl: 2.5,
+            drv_p: (*tech.card("si_pmos"), 8.0),
+            drv_n: (*tech.card("si_nmos"), 4.0),
+            c_sn: 1.2e-15,
+            c_wbl: 20e-15,
+            c_wwl_sn: 0.15e-15,
+            g_wbl_leak: 1e-9,
+            vdd: 1.1,
+            v_wwl: 1.5,
+            one: true,
+            sn0: 0.0,
+        })
+        .collect();
+    let su_wr = soa_pair(
+        "write",
+        n_wr,
+        t_eng,
+        records,
+        || engines::write_op(&scalar, &wr_pts, 6e-9).unwrap(),
+        || engines::write_op(&soa, &wr_pts, 6e-9).unwrap(),
+    );
+
+    let n_rd = cap("read");
+    let rd_pts: Vec<_> = (0..n_rd)
+        .map(|i| engines::ReadPoint {
+            read_card: tech.card("si_nmos").with_vt(0.35 + 0.001 * i as f64),
+            read_wl: 3.5,
+            sn0: 0.62,
+            sn_unsel: 0.0,
+            rows: 32,
+            c_sn: 1.2e-15,
+            c_rbl: 20e-15,
+            c_rwl_sn: 0.1e-15,
+            g_rbl_leak: 1e-9,
+            vdd: 1.1,
+            pull_up: false,
+        })
+        .collect();
+    let su_rd = soa_pair(
+        "read",
+        n_rd,
+        t_eng,
+        records,
+        || engines::read_op(&scalar, &rd_pts, 8e-9).unwrap(),
+        || engines::read_op(&soa, &rd_pts, 8e-9).unwrap(),
+    );
+
+    let best = su_ret.max(su_wr).max(su_rd);
+    assert!(
+        best >= min_speedup,
+        "SoA transient solver must beat the scalar reference by >= {min_speedup}x on at \
+         least one op (retention {su_ret:.2}x, write {su_wr:.2}x, read {su_rd:.2}x)"
+    );
 }
 
 fn native_sim_bench(tech: &opengcram::tech::Tech, records: &mut Vec<(bench::Sample, f64)>) {

@@ -9,7 +9,7 @@
 //! `python/compile/aot.py`), so this module is backend-agnostic.
 
 use super::stimulus as st;
-use super::{ExecBackend, Tensor};
+use super::{ArtifactMeta, ExecBackend, Tensor};
 use crate::tech::DeviceCard;
 
 /// Why one design point's row was rejected — a degenerate input caught
@@ -71,6 +71,30 @@ fn collect_rows<T>(op: &str, rows: Vec<RowResult<T>>) -> crate::Result<Vec<T>> {
         .enumerate()
         .map(|(i, r)| r.map_err(|f| anyhow::anyhow!("{op} point {i}: {}", f.reason)))
         .collect()
+}
+
+/// Resolve a named output tensor from an execute() tuple, validating
+/// the tuple length against the manifest — output positions follow the
+/// manifest's `outputs` list by name, never hard-coded indices.
+fn out_col<'a>(
+    op: &str,
+    meta: &ArtifactMeta,
+    out: &'a [Tensor],
+    name: &str,
+) -> crate::Result<&'a Tensor> {
+    anyhow::ensure!(
+        out.len() == meta.outputs.len(),
+        "{op}: backend returned {} outputs, manifest declares {} ({:?})",
+        out.len(),
+        meta.outputs.len(),
+        meta.outputs
+    );
+    let i = meta
+        .outputs
+        .iter()
+        .position(|o| o == name)
+        .ok_or_else(|| anyhow::anyhow!("{op}: output '{name}' not in manifest {:?}", meta.outputs))?;
+    Ok(&out[i])
 }
 
 /// One write-path design point.
@@ -207,10 +231,9 @@ pub fn write_rows(
             Tensor::new(vec![steps as i64], dt.iter().map(|&d| d as f32).collect()),
         ],
     )?;
-    // outputs: times_ds, trace_ds, sn_final, t_wr, sn_peak
-    let sn_final = &out[2];
-    let t_wr = &out[3];
-    let sn_peak = &out[4];
+    let sn_final = out_col("write", &meta, &out, "sn_final")?;
+    let t_wr = out_col("write", &meta, &out, "t_wr")?;
+    let sn_peak = out_col("write", &meta, &out, "sn_peak")?;
     Ok((0..pts.len())
         .map(|i| {
             if let Some(f) = &faults[i] {
@@ -375,17 +398,20 @@ pub fn read_rows(
             Tensor::new(vec![steps as i64], dt.iter().map(|&d| d as f32).collect()),
         ],
     )?;
-    // outputs: times_ds, trace_ds, t_rise, t_fall, rbl_final, sn_final
+    let t_rise = out_col("read", &meta, &out, "t_rise")?;
+    let t_fall = out_col("read", &meta, &out, "t_fall")?;
+    let rbl_final = out_col("read", &meta, &out, "rbl_final")?;
+    let sn_final = out_col("read", &meta, &out, "sn_final")?;
     Ok((0..pts.len())
         .map(|i| {
             if let Some(f) = &faults[i] {
                 return Err(f.clone());
             }
             let r = ReadResult {
-                t_rise: out[2].data[i] as f64,
-                t_fall: out[3].data[i] as f64,
-                rbl_final: out[4].data[i] as f64,
-                sn_final: out[5].data[i] as f64,
+                t_rise: t_rise.data[i] as f64,
+                t_fall: t_fall.data[i] as f64,
+                rbl_final: rbl_final.data[i] as f64,
+                sn_final: sn_final.data[i] as f64,
             };
             match output_fault(
                 "read",
@@ -514,15 +540,16 @@ pub fn retention_rows(
             Tensor::new(vec![steps as i64], dt.iter().map(|&d| d as f32).collect()),
         ],
     )?;
-    // outputs: times_ds, trace_ds, t_retain, sn_final
+    let t_retain = out_col("retention", &meta, &out, "t_retain")?;
+    let sn_final = out_col("retention", &meta, &out, "sn_final")?;
     Ok((0..pts.len())
         .map(|i| {
             if let Some(f) = &faults[i] {
                 return Err(f.clone());
             }
             let r = RetentionResult {
-                t_retain: out[2].data[i] as f64,
-                sn_final: out[3].data[i] as f64,
+                t_retain: t_retain.data[i] as f64,
+                sn_final: sn_final.data[i] as f64,
             };
             match output_fault(
                 "retention",

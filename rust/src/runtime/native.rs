@@ -13,23 +13,42 @@
 //!
 //! # Execution model
 //!
-//! [`ExecBackend::execute`] evaluates the whole padded batch: each
-//! row is an independent [`sim::transient`] over the shared stimulus
-//! schedule, chunked across threads with [`crate::util::par_map`].
-//! Rows whose parameter columns are **all zero** (the engines'
-//! zero-padding) are short-circuited to a constant `v0` trace — exactly
-//! what integrating them would produce, since every stamp's current
-//! scales with a parameter (`kp`, `C`, `G`, `I`); the measurements
-//! still run so the output tensors are fully populated.
+//! [`ExecBackend::execute`] evaluates the whole padded batch in
+//! [`SOA_BLOCK`]-row blocks on the structure-of-arrays stepper
+//! ([`sim::soa`]): node voltages, params, `cinv` and amplitudes live
+//! in contiguous column-major buffers and **all rows of a block
+//! advance per time step**, with blocks chunked across threads via
+//! [`crate::util::par_map`].  Early-exit masks retire rows that can no
+//! longer change the outputs: zero-param padding rows (pre-retired to
+//! their constant `v0`, since every stamp's current scales with a
+//! parameter), Heun rows at a bitwise per-step fixed point under
+//! constant stimulus ([`sim::soa::ExitPolicy::Settle`]), and retention
+//! tails that already crossed their hold threshold or whose rhs is
+//! exactly zero ([`sim::soa::ExitPolicy::FallingCross`]).  Measurements
+//! and the downsampled trace are read straight out of the SoA buffers
+//! through borrowed views — no per-row `Vec<Vec<f64>>` transpose.
+//!
+//! The original row-at-a-time path is retained as the **scalar
+//! reference** ([`NativeBackend::with_scalar_reference`], or env
+//! `OPENGCRAM_NATIVE_SCALAR=1`): one [`sim::transient`] per row on
+//! libm transcendentals, used by `tests/parity.rs` engine==direct-sim
+//! pins and as the baseline of the rows/sec KPI in `perf_hotpaths`.
 //!
 //! # Determinism and parity
 //!
 //! All arithmetic runs in `f64` on values decoded from the `f32` input
 //! tensors (exact widening) and is rounded to `f32` only at the output
-//! boundary.  Per-row work never depends on batch position or thread
-//! chunking, so a batched execution is **bitwise identical** to
-//! per-point singletons — `tests/parity.rs` pins this against direct
-//! `sim::transient` runs for all three transient ops.
+//! boundary.  Per-row work never depends on batch position, block
+//! composition, or thread chunking, so a batched execution is
+//! **bitwise identical** to per-point singletons *within either mode*
+//! — `tests/parity.rs` pins this for both.  Across modes the contract
+//! is a documented tolerance, not bitwise equality: the SoA path uses
+//! branch-free polynomial `exp`/`ln1p` kernels (~1e-15 relative, far
+//! below the f32 output quantization), and a retired retention row's
+//! `sn_final`/trace tail freeze at the crossing instead of decaying
+//! further (`t_retain` itself is preserved exactly; downstream
+//! consumers use only `t_retain`).  The scalar reference remains
+//! bitwise-pinned against direct `sim::transient` runs.
 //!
 //! # Time grids
 //!
@@ -44,6 +63,7 @@
 
 use super::{ArtifactMeta, ExecBackend, Manifest, Tensor};
 use crate::sim;
+use crate::sim::soa;
 use crate::util;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -54,6 +74,12 @@ pub const NATIVE_BATCH: usize = 256;
 /// Id-Vg batch / gate-grid sizes (match `aot.py`).
 pub const IDVG_BATCH: usize = 128;
 pub const IDVG_GRID: usize = 64;
+
+/// Rows per SoA block: small enough that a block's working set stays
+/// cache-resident, large enough to fill SIMD lanes and amortize the
+/// per-step stamp dispatch; 256/32 = 8 blocks fan out over
+/// [`crate::util::par_map`].
+pub const SOA_BLOCK: usize = 32;
 
 const T_WRITE: usize = 384;
 const T_READ: usize = 384;
@@ -158,6 +184,7 @@ pub struct NativeBackend {
     manifest: Manifest,
     calls: BTreeMap<String, AtomicU64>,
     workers: usize,
+    scalar_reference: bool,
 }
 
 impl Default for NativeBackend {
@@ -167,17 +194,29 @@ impl Default for NativeBackend {
 }
 
 impl NativeBackend {
+    /// A backend on the SoA hot path (or the scalar reference when the
+    /// `OPENGCRAM_NATIVE_SCALAR` env var is set to anything but `0`).
     pub fn new() -> NativeBackend {
         let manifest = native_manifest();
         let mut calls: BTreeMap<String, AtomicU64> =
             manifest.entries.keys().map(|k| (k.clone(), AtomicU64::new(0))).collect();
         calls.insert("idvg".into(), AtomicU64::new(0));
-        NativeBackend { manifest, calls, workers: util::default_workers() }
+        let scalar_reference =
+            std::env::var("OPENGCRAM_NATIVE_SCALAR").map(|v| v != "0").unwrap_or(false);
+        NativeBackend { manifest, calls, workers: util::default_workers(), scalar_reference }
     }
 
     /// Override the row-chunking fan-out (default: one per core).
     pub fn with_workers(mut self, workers: usize) -> NativeBackend {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Force the row-at-a-time scalar reference path (libm
+    /// transcendentals, no early exits): the baseline the SoA kernel
+    /// is measured and parity-pinned against.
+    pub fn with_scalar_reference(mut self) -> NativeBackend {
+        self.scalar_reference = true;
         self
     }
 
@@ -212,39 +251,96 @@ impl NativeBackend {
         let tmpl = op.template();
         let mode = op.integrator();
 
-        // one independent transient per row, chunked across threads;
-        // zero-param (padding) rows short-circuit to a constant trace
-        let rows: Vec<usize> = (0..b).collect();
-        let per_row: Vec<RowOut> = util::par_map(&rows, self.workers, |&i| {
-            let v0r = row_f64(v0, i, nf);
-            let ampr = row_f64(amp, i, ns);
-            let pr = row_f64(params, i, np);
-            let cinvr = row_f64(cinv, i, nf);
-            let trace = if pr.iter().any(|&p| p != 0.0) {
-                let (_, trace) = sim::transient(
-                    &tmpl,
-                    mode,
-                    meta.k_substeps,
-                    &v0r,
-                    &ampr,
-                    &pr,
-                    &cinvr,
-                    &wave,
-                    &dwave,
-                    &dt,
-                );
-                trace
-            } else {
-                vec![v0r.clone(); steps]
+        let stride = meta.trace_ds.max(1);
+        let per_row: Vec<RowOut> = if self.scalar_reference {
+            // scalar reference: one independent sim::transient per row,
+            // whole rows chunked across threads; zero-param (padding)
+            // rows measure straight off their constant v0 view
+            let rows: Vec<usize> = (0..b).collect();
+            util::par_map(&rows, self.workers, |&i| {
+                let v0r = row_f64(v0, i, nf);
+                let ampr = row_f64(amp, i, ns);
+                let pr = row_f64(params, i, np);
+                let cinvr = row_f64(cinv, i, nf);
+                if pr.iter().any(|&p| p != 0.0) {
+                    let (_, trace) = sim::transient(
+                        &tmpl,
+                        mode,
+                        meta.k_substeps,
+                        &v0r,
+                        &ampr,
+                        &pr,
+                        &cinvr,
+                        &wave,
+                        &dwave,
+                        &dt,
+                    );
+                    let view = TraceView::Rows(&trace);
+                    row_out(op, &cols, meta.big_time, &times, &view, &v0r, &ampr, nf, stride)
+                } else {
+                    let view = TraceView::Const { v0: &v0r, steps };
+                    row_out(op, &cols, meta.big_time, &times, &view, &v0r, &ampr, nf, stride)
+                }
+            })
+        } else {
+            // SoA hot path: SOA_BLOCK-row blocks advance all rows per
+            // time step; blocks (not rows) are the par_map work items
+            let sched = soa::Schedule::new(&wave, &dwave, &dt);
+            let exit = match op {
+                TransientOp::Retention => soa::ExitPolicy::FallingCross { node: cols.n_sn },
+                _ => soa::ExitPolicy::Settle,
             };
-            let scalars = op.measure(&cols, meta.big_time, &times, &trace, &v0r, &ampr);
-            let ds: Vec<f32> = trace
-                .iter()
-                .step_by(meta.trace_ds.max(1))
-                .flat_map(|r| r.iter().map(|&v| v as f32))
-                .collect();
-            RowOut { ds, scalars }
-        });
+            let blocks: Vec<(usize, usize)> =
+                (0..b).step_by(SOA_BLOCK).map(|r0| (r0, SOA_BLOCK.min(b - r0))).collect();
+            let outs: Vec<Vec<RowOut>> = util::par_map(&blocks, self.workers, |&(r0, n)| {
+                let mut blk = soa::Block::new(n, nf, ns, np);
+                let mut any_live = false;
+                for j in 0..n {
+                    let i = r0 + j;
+                    for k in 0..nf {
+                        blk.v[k * n + j] = v0.data[i * nf + k] as f64;
+                        blk.cinv[k * n + j] = cinv.data[i * nf + k] as f64;
+                    }
+                    for s in 0..ns {
+                        blk.amp[s * n + j] = amp.data[i * ns + s] as f64;
+                    }
+                    let mut live = false;
+                    for c in 0..np {
+                        let pv = params.data[i * np + c] as f64;
+                        blk.p[c * n + j] = pv;
+                        live |= pv != 0.0;
+                    }
+                    blk.retired[j] = !live;
+                    any_live |= live;
+                    if matches!(op, TransientOp::Retention) {
+                        // hold threshold, mirroring measure(): amp[vth]
+                        // if positive, else half the initial level
+                        let vth_abs = blk.amp[cols.s_a * n + j];
+                        blk.thresh[j] =
+                            if vth_abs > 0.0 { vth_abs } else { 0.5 * blk.v[cols.n_sn * n + j] };
+                    }
+                }
+                let trace = if any_live {
+                    Some(soa::run_block(&tmpl, mode, meta.k_substeps, &sched, &mut blk, exit))
+                } else {
+                    None // all-padding block: never integrate it
+                };
+                (0..n)
+                    .map(|j| {
+                        let v0r = row_f64(v0, r0 + j, nf);
+                        let ampr = row_f64(amp, r0 + j, ns);
+                        let view = match &trace {
+                            Some(buf) => {
+                                TraceView::Soa { buf: buf.as_slice(), nf, rows: n, j, steps }
+                            }
+                            None => TraceView::Const { v0: &v0r, steps },
+                        };
+                        row_out(op, &cols, meta.big_time, &times, &view, &v0r, &ampr, nf, stride)
+                    })
+                    .collect()
+            });
+            outs.into_iter().flatten().collect()
+        };
 
         // assemble the output tuple: times_ds, trace_ds, then the
         // per-op scalar outputs (outputs[2..] in the manifest)
@@ -397,56 +493,124 @@ impl TransientOp {
     }
 
     /// The model.py measurement block for one row, on the full-rate
-    /// trace.  Returns the scalar outputs in manifest order.
+    /// trace **view** — columns are read in place through
+    /// [`sim::cross_time_at`], never copied into a fresh `Vec`.
+    /// Returns the scalar outputs in manifest order.
     fn measure(
         self,
         cols: &Columns,
         big: f64,
         times: &[f64],
-        trace: &[Vec<f64>],
+        trace: &TraceView,
         v0r: &[f64],
         ampr: &[f64],
     ) -> Vec<f64> {
-        let node = |k: usize| -> Vec<f64> { trace.iter().map(|r| r[k]).collect() };
+        let n = trace.steps();
         match self {
             TransientOp::Write => {
                 // sn_final, t_wr (90 %-of-peak rising / 10 %-of-initial
                 // falling), sn_peak
-                let sn = node(cols.n_sn);
-                let sn0 = v0r[cols.n_sn];
-                let sn_peak = sn.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                let t_rise = sim::cross_time(times, &sn, 0.9 * sn_peak, true).unwrap_or(big);
+                let sn = cols.n_sn;
+                let sn0 = v0r[sn];
+                let mut sn_peak = f64::NEG_INFINITY;
+                for s in 0..n {
+                    sn_peak = sn_peak.max(trace.at(s, sn));
+                }
+                let t_rise = sim::cross_time_at(times, n, |s| trace.at(s, sn), 0.9 * sn_peak, true)
+                    .unwrap_or(big);
                 let t_fall =
-                    sim::cross_time(times, &sn, 0.1 * sn0.max(1e-3), false).unwrap_or(big);
+                    sim::cross_time_at(times, n, |s| trace.at(s, sn), 0.1 * sn0.max(1e-3), false)
+                        .unwrap_or(big);
                 let t_wr = if sn_peak <= sn0 + 0.05 { t_fall } else { t_rise };
-                vec![*sn.last().unwrap_or(&sn0), t_wr, sn_peak]
+                vec![trace.last_or(sn, sn0), t_wr, sn_peak]
             }
             TransientOp::Read => {
                 // vref = 0.5 * max(amp[rwl], amp[rwl_idle]) == VDD/2 for
                 // every flavor (predischarge swings RWL to VDD,
                 // precharge idles the rail at VDD)
-                let rbl = node(cols.n_rbl);
-                let sn = node(cols.n_sn);
+                let (rbl, sn) = (cols.n_rbl, cols.n_sn);
                 let vref = 0.5 * ampr[cols.s_a].max(ampr[cols.s_b]);
-                let t_rise = sim::cross_time(times, &rbl, vref, true).unwrap_or(big);
-                let t_fall = sim::cross_time(times, &rbl, vref, false).unwrap_or(big);
-                vec![
-                    t_rise,
-                    t_fall,
-                    *rbl.last().unwrap_or(&0.0),
-                    *sn.last().unwrap_or(&0.0),
-                ]
+                let t_rise =
+                    sim::cross_time_at(times, n, |s| trace.at(s, rbl), vref, true).unwrap_or(big);
+                let t_fall =
+                    sim::cross_time_at(times, n, |s| trace.at(s, rbl), vref, false).unwrap_or(big);
+                vec![t_rise, t_fall, trace.last_or(rbl, 0.0), trace.last_or(sn, 0.0)]
             }
             TransientOp::Retention => {
                 // hold threshold: amp[vth] if positive, else 0.5 * v0
-                let sn = node(cols.n_sn);
+                let sn = cols.n_sn;
                 let vth_abs = ampr[cols.s_a];
-                let vhold = if vth_abs > 0.0 { vth_abs } else { 0.5 * v0r[cols.n_sn] };
-                let t_ret = sim::cross_time(times, &sn, vhold, false).unwrap_or(big);
-                vec![t_ret, *sn.last().unwrap_or(&v0r[cols.n_sn])]
+                let vhold = if vth_abs > 0.0 { vth_abs } else { 0.5 * v0r[sn] };
+                let t_ret =
+                    sim::cross_time_at(times, n, |s| trace.at(s, sn), vhold, false).unwrap_or(big);
+                vec![t_ret, trace.last_or(sn, v0r[sn])]
             }
         }
     }
+}
+
+/// A borrowed, zero-copy view of one row's full-rate trace, uniform
+/// over the three storage layouts the backend produces.
+enum TraceView<'a> {
+    /// Per-step rows from the scalar reference ([`sim::transient`]).
+    Rows(&'a [Vec<f64>]),
+    /// A constant-`v0` row (zero-param padding): sample `s` of node
+    /// `k` is `v0[k]` for all `steps` steps, never materialized.
+    Const { v0: &'a [f64], steps: usize },
+    /// Row `j` of an SoA block trace laid out `(s*nf + k)*rows + j`.
+    Soa { buf: &'a [f64], nf: usize, rows: usize, j: usize, steps: usize },
+}
+
+impl TraceView<'_> {
+    fn steps(&self) -> usize {
+        match *self {
+            TraceView::Rows(t) => t.len(),
+            TraceView::Const { steps, .. } => steps,
+            TraceView::Soa { steps, .. } => steps,
+        }
+    }
+
+    /// Sample `s` of free node `k`.
+    #[inline]
+    fn at(&self, s: usize, k: usize) -> f64 {
+        match *self {
+            TraceView::Rows(t) => t[s][k],
+            TraceView::Const { v0, .. } => v0[k],
+            TraceView::Soa { buf, nf, rows, j, .. } => buf[(s * nf + k) * rows + j],
+        }
+    }
+
+    /// Last sample of node `k`, or `default` on an empty trace.
+    fn last_or(&self, k: usize, default: f64) -> f64 {
+        let n = self.steps();
+        if n == 0 { default } else { self.at(n - 1, k) }
+    }
+}
+
+/// Measure one row and downsample its trace, straight off the view.
+#[allow(clippy::too_many_arguments)]
+fn row_out(
+    op: TransientOp,
+    cols: &Columns,
+    big: f64,
+    times: &[f64],
+    view: &TraceView,
+    v0r: &[f64],
+    ampr: &[f64],
+    nf: usize,
+    stride: usize,
+) -> RowOut {
+    let scalars = op.measure(cols, big, times, view, v0r, ampr);
+    let steps = view.steps();
+    let mut ds = Vec::with_capacity(steps.div_ceil(stride) * nf);
+    let mut s = 0;
+    while s < steps {
+        for k in 0..nf {
+            ds.push(view.at(s, k) as f32);
+        }
+        s += stride;
+    }
+    RowOut { ds, scalars }
 }
 
 /// One tensor row, widened to f64 (exact).
@@ -568,5 +732,16 @@ mod tests {
         let t_retain = &out[2];
         // a constant 0.6 level never crosses its 0.3 relative threshold
         assert_eq!(t_retain.data[3], BIG_TIME as f32);
+
+        // padding rows take the same constant-v0 view in both modes,
+        // so the scalar reference agrees bitwise on this batch
+        let s = NativeBackend::new().with_scalar_reference();
+        let sout = s.execute("retention", &inputs).unwrap();
+        for (a, b) in out.iter().zip(&sout) {
+            assert_eq!(a.dims, b.dims);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 }

@@ -7,8 +7,16 @@
 //! implementation (`tests/parity.rs`), and so single design points can
 //! be simulated without the PJRT runtime (leakage sums, spot checks,
 //! the GEMTOO-style analytical-vs-transient ablation bench).
+//!
+//! This module is the **scalar reference**: one row at a time, libm
+//! transcendentals, allocation-free inner loops (via [`StepScratch`]).
+//! The batched production hot path lives in [`soa`], which advances a
+//! whole row-block per time step over the same templates and is pinned
+//! against this implementation by `tests/parity.rs`.
 
 use crate::tech::DeviceCard;
+
+pub mod soa;
 
 /// Thermal voltage at 300 K (mirror of device.PHI_T).
 pub const PHI_T: f64 = 0.02585;
@@ -123,6 +131,23 @@ pub enum Integrator {
     ExpDecay,
 }
 
+/// Reusable scratch buffers for [`step`]: the `i1`/`i2`/`v1` work
+/// vectors, hoisted out of the per-step hot path so callers allocate
+/// them once per transient instead of three times per time step.
+#[derive(Debug, Clone)]
+pub struct StepScratch {
+    i1: Vec<f64>,
+    i2: Vec<f64>,
+    v1: Vec<f64>,
+}
+
+impl StepScratch {
+    /// Scratch sized for a template with `nf` free nodes.
+    pub fn new(nf: usize) -> StepScratch {
+        StepScratch { i1: vec![0.0; nf], i2: vec![0.0; nf], v1: vec![0.0; nf] }
+    }
+}
+
 /// One K-substep integration step in place.
 #[allow(clippy::too_many_arguments)]
 pub fn step(
@@ -135,19 +160,18 @@ pub fn step(
     p: &[f64],
     cinv: &[f64],
     dt: f64,
+    scratch: &mut StepScratch,
 ) {
     let nf = t.nf;
-    let mut i1 = vec![0.0; nf];
-    let mut i2 = vec![0.0; nf];
-    let mut v1 = vec![0.0; nf];
+    let StepScratch { i1, i2, v1 } = scratch;
     for _ in 0..k_substeps {
         match mode {
             Integrator::Heun => {
-                t.rhs(v, vs, dvs, p, &mut i1);
+                t.rhs(v, vs, dvs, p, i1);
                 for k in 0..nf {
                     v1[k] = if cinv[k] == 0.0 { v[k] } else { v[k] + dt * i1[k] * cinv[k] };
                 }
-                t.rhs(&v1, vs, dvs, p, &mut i2);
+                t.rhs(v1, vs, dvs, p, i2);
                 for k in 0..nf {
                     if cinv[k] != 0.0 {
                         v[k] += 0.5 * dt * (i1[k] + i2[k]) * cinv[k];
@@ -155,7 +179,7 @@ pub fn step(
                 }
             }
             Integrator::ExpDecay => {
-                t.rhs(v, vs, dvs, p, &mut i1);
+                t.rhs(v, vs, dvs, p, i1);
                 for k in 0..nf {
                     if cinv[k] == 0.0 {
                         continue;
@@ -195,12 +219,13 @@ pub fn transient(
     let mut tacc = 0.0;
     let mut vs = vec![0.0; t.ns];
     let mut dvs = vec![0.0; t.ns];
+    let mut scratch = StepScratch::new(t.nf);
     for (i, &dti) in dt.iter().enumerate() {
         for s in 0..t.ns {
             vs[s] = wave[i][s] * amp[s];
             dvs[s] = dwave[i][s] * amp[s];
         }
-        step(t, mode, k_substeps, &mut v, &vs, &dvs, p, cinv, dti);
+        step(t, mode, k_substeps, &mut v, &vs, &dvs, p, cinv, dti, &mut scratch);
         tacc += dti * k_substeps as f64;
         times.push(tacc);
         trace.push(v.clone());
@@ -211,13 +236,29 @@ pub fn transient(
 /// First threshold crossing with linear interpolation (mirror of
 /// model._cross_time); `None` if never crossed.
 pub fn cross_time(times: &[f64], sig: &[f64], thresh: f64, rising: bool) -> Option<f64> {
-    for i in 0..sig.len() {
-        let above = if rising { sig[i] >= thresh } else { sig[i] <= thresh };
+    cross_time_at(times, sig.len(), |i| sig[i], thresh, rising)
+}
+
+/// [`cross_time`] over an indexed signal view: `at(i)` yields sample
+/// `i` of `n`.  The SoA measurement path reads strided trace columns
+/// through this without copying them into a `Vec` first; keeping one
+/// implementation guarantees the interpolation arithmetic is bitwise
+/// identical across both layouts.
+pub fn cross_time_at(
+    times: &[f64],
+    n: usize,
+    at: impl Fn(usize) -> f64,
+    thresh: f64,
+    rising: bool,
+) -> Option<f64> {
+    for i in 0..n {
+        let si = at(i);
+        let above = if rising { si >= thresh } else { si <= thresh };
         if above {
             if i == 0 {
                 return Some(0.0);
             }
-            let (v0, v1) = (sig[i - 1], sig[i]);
+            let (v0, v1) = (at(i - 1), si);
             let frac = if (v1 - v0).abs() > 1e-12 { ((thresh - v0) / (v1 - v0)).clamp(0.0, 1.0) } else { 1.0 };
             return Some(times[i - 1] + frac * (times[i] - times[i - 1]));
         }

@@ -1,0 +1,760 @@
+//! Structure-of-arrays batched EKV transient stepper: the production
+//! hot path behind [`crate::runtime::NativeBackend`].
+//!
+//! Where [`super::transient`] advances one row through all time steps,
+//! this module advances **all rows of a block per time step**.  Node
+//! voltages, parameters, `cinv`, and stimulus amplitudes live in
+//! contiguous column-major buffers (`buf[col * rows + j]` for row `j`),
+//! so every inner loop is a flat, branch-light pass over `rows`
+//! consecutive `f64`s that LLVM can autovectorize on the SSE2 baseline.
+//!
+//! # Fast transcendentals
+//!
+//! The scalar reference calls libm (`exp`, `ln_1p`) per device per
+//! substep; those calls do not vectorize.  [`exp_fast`] /
+//! [`sl_fast`] replace them with branch-free polynomial kernels
+//! (magic-shift range reduction + degree-12 Taylor for `exp`,
+//! `atanh`-form odd series for `ln(1+e)`), accurate to ~1e-15 relative
+//! — far below the f32 output quantization, but **not bitwise equal**
+//! to libm.  This is the one arithmetic difference between the SoA path
+//! and the scalar reference; `tests/parity.rs` pins it to a documented
+//! tolerance while batched-vs-singleton and engine-vs-direct-sim pins
+//! stay bitwise *within* each path.
+//!
+//! # Early-exit masks
+//!
+//! Rows retire (their `v` freezes, via real selects — never arithmetic
+//! masking, which would launder NaN) under three sound conditions:
+//!
+//! * **zero-param padding rows** are pre-retired by the caller: every
+//!   stamp's current scales with a parameter, so their trace is
+//!   constant `v0` exactly;
+//! * **[`ExitPolicy::Settle`]** (Heun, uniform grids): a row whose `v`
+//!   is a bitwise fixed point across a whole step from
+//!   [`Schedule::fixed_from`] onward repeats that step verbatim
+//!   forever, so freezing is bitwise-identical to integrating on;
+//! * **[`ExitPolicy::FallingCross`]** (retention tails): a row retires
+//!   once its watched node samples at or below the row threshold — the
+//!   first crossing is already in the recorded trace, and a frozen
+//!   tail can only add crossings *after* it — or once the rhs is
+//!   exactly zero at every node under constant stimulus (an identity
+//!   step for any dt).
+//!
+//! When every row of a block has retired the block exits the time loop
+//! and forward-fills the remaining trace with the frozen state.
+
+use super::{Integrator, Stamp, Template, PHI_T};
+
+const LOG2E: f64 = 1.4426950408889634;
+// ln(2) split hi + lo so `a - k*ln2` stays exact to the last bit.
+const LN2_HI: f64 = 0.6931471803691238;
+const LN2_LO: f64 = 1.9082149292705877e-10;
+// 1.5 * 2^52: adding it rounds |x| < 2^51 to the nearest integer in
+// the mantissa field (the classic magic-shift; avoids `f64::round`,
+// which lowers to a libm call on the SSE2 baseline and kills
+// vectorization).
+const SHIFT: f64 = 6755399441055744.0;
+
+/// Vectorizable `e^a` for `a <= 0` (clamped below at -708, where the
+/// result underflows anyway).  Magic-shift range reduction to
+/// `a = k*ln2 + r`, `|r| <= ln2/2`, degree-12 Taylor for `e^r`
+/// (remainder ~1.8e-16), then an exponent-field rebuild for `2^k`.
+/// No branches, no libm, no f64->i64 packed casts (AVX-512 only).
+#[inline(always)]
+pub fn exp_fast(a: f64) -> f64 {
+    let a = a.max(-708.0);
+    let kf = a * LOG2E;
+    let kshift = kf + SHIFT;
+    let k = kshift - SHIFT; // nearest integer to kf, exactly, as f64
+    let r = (a - k * LN2_HI) - k * LN2_LO;
+    let p = 1.0 / 479001600.0;
+    let p = p * r + 1.0 / 39916800.0;
+    let p = p * r + 1.0 / 3628800.0;
+    let p = p * r + 1.0 / 362880.0;
+    let p = p * r + 1.0 / 40320.0;
+    let p = p * r + 1.0 / 5040.0;
+    let p = p * r + 1.0 / 720.0;
+    let p = p * r + 1.0 / 120.0;
+    let p = p * r + 1.0 / 24.0;
+    let p = p * r + 1.0 / 6.0;
+    let p = p * r + 0.5;
+    let p = p * r + 1.0;
+    let p = p * r + 1.0;
+    // kshift's low mantissa bits hold 2^51 + k; rebuild 2^k directly
+    // in the exponent field (k in [-1022, 0] keeps the bias positive).
+    let m = (kshift.to_bits() & 0x000F_FFFF_FFFF_FFFF) as i64;
+    let k_int = m - (1i64 << 51);
+    let scale = f64::from_bits(((1023 + k_int) as u64) << 52);
+    p * scale
+}
+
+/// Vectorizable `ln(1 + e)` for `e` in `[0, 1]`, via the `atanh` form
+/// `2*atanh(e/(e+2))`: the argument `w <= 1/3` makes the odd series in
+/// `u = w^2 <= 1/9` converge with truncation ~1.5e-17 at the `u^16`
+/// term.
+#[inline(always)]
+fn ln1p_atanh(e: f64) -> f64 {
+    let w = e / (e + 2.0);
+    let u = w * w;
+    let s = 1.0 / 33.0;
+    let s = s * u + 1.0 / 31.0;
+    let s = s * u + 1.0 / 29.0;
+    let s = s * u + 1.0 / 27.0;
+    let s = s * u + 1.0 / 25.0;
+    let s = s * u + 1.0 / 23.0;
+    let s = s * u + 1.0 / 21.0;
+    let s = s * u + 1.0 / 19.0;
+    let s = s * u + 1.0 / 17.0;
+    let s = s * u + 1.0 / 15.0;
+    let s = s * u + 1.0 / 13.0;
+    let s = s * u + 1.0 / 11.0;
+    let s = s * u + 1.0 / 9.0;
+    let s = s * u + 1.0 / 7.0;
+    let s = s * u + 1.0 / 5.0;
+    let s = s * u + 1.0 / 3.0;
+    let s = s * u + 1.0;
+    2.0 * w * s
+}
+
+/// Vectorizable `ln(1 + e^x)` (the EKV soft clamp): `max(x, 0) +
+/// ln(1 + e^{-|x|})`.  Same laundering of NaN inputs as the scalar
+/// path's clamps: `max`/`min` return the non-NaN operand, so a NaN
+/// `vp` (zero-param rows, `n = 0`) yields the same finite value for
+/// both the forward and reverse channels and their difference is an
+/// exact zero.
+#[inline(always)]
+pub fn sl_fast(x: f64) -> f64 {
+    x.max(0.0) + ln1p_atanh(exp_fast(-x.abs()))
+}
+
+/// EKV drain current on the fast kernels; mirrors [`super::mos_ids`]
+/// term for term with [`sl_fast`] in place of the libm soft clamp.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+pub fn mos_ids_fast(
+    vd: f64,
+    vg: f64,
+    vs: f64,
+    kp: f64,
+    vt: f64,
+    n: f64,
+    lam: f64,
+    w_over_l: f64,
+    sign: f64,
+) -> f64 {
+    let (vd_, vg_, vs_) = (sign * vd, sign * vg, sign * vs);
+    let vp = (vg_ - vt) / n;
+    let f = sl_fast((vp - vs_) / (2.0 * PHI_T));
+    let r = sl_fast((vp - vd_) / (2.0 * PHI_T));
+    let i_spec = 2.0 * n * kp * w_over_l * PHI_T * PHI_T;
+    let clm = 1.0 + lam * (vd_ - vs_).abs();
+    sign * i_spec * (f * f - r * r) * clm
+}
+
+/// The shared stimulus schedule plus two precomputed early-exit
+/// horizons (backward bitwise scans, done once per execute).
+pub struct Schedule<'a> {
+    /// Per-step stimulus waveform rows (`steps x ns`).
+    pub wave: &'a [Vec<f64>],
+    /// Per-step stimulus slew rows (`steps x ns`).
+    pub dwave: &'a [Vec<f64>],
+    /// Per-step substep durations.
+    pub dt: &'a [f64],
+    /// First step index from which `wave` and `dwave` are bitwise
+    /// constant through the end (stimulus quiescence; rhs==0 exits are
+    /// only sound from here on).
+    pub stim_const_from: usize,
+    /// Like [`Self::stim_const_from`] but additionally requiring `dt`
+    /// constant — the horizon from which a bitwise fixed point of `v`
+    /// repeats forever ([`ExitPolicy::Settle`]'s validity domain).
+    /// On growing grids (retention's geometric dt) this is the last
+    /// step, correctly disabling settle checks there.
+    pub fixed_from: usize,
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+impl<'a> Schedule<'a> {
+    /// Precompute the exit horizons for a stimulus schedule.
+    pub fn new(wave: &'a [Vec<f64>], dwave: &'a [Vec<f64>], dt: &'a [f64]) -> Schedule<'a> {
+        let steps = dt.len();
+        let mut sc = steps.saturating_sub(1);
+        while sc > 0 && bits_eq(&wave[sc - 1], &wave[sc]) && bits_eq(&dwave[sc - 1], &dwave[sc]) {
+            sc -= 1;
+        }
+        let mut fx = steps.saturating_sub(1);
+        while fx > 0 && dt[fx - 1].to_bits() == dt[fx].to_bits() {
+            fx -= 1;
+        }
+        Schedule { wave, dwave, dt, stim_const_from: sc, fixed_from: fx.max(sc) }
+    }
+}
+
+/// Row-retirement policy for [`run_block`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitPolicy {
+    /// Integrate every live row through every step.
+    None,
+    /// Retire rows at bitwise per-step fixed points of `v`, valid from
+    /// [`Schedule::fixed_from`] (Heun ops on uniform grids).  Output
+    /// traces are bitwise identical to [`ExitPolicy::None`].
+    Settle,
+    /// Retire rows whose free node `node` samples at or below the
+    /// row's `thresh`, or whose rhs is exactly zero under constant
+    /// stimulus (retention tails).  First-crossing times and never-
+    /// crossed sentinels are preserved exactly; only the post-crossing
+    /// tail of the trace (and thus the final node value) deviates.
+    FallingCross {
+        /// Watched free-node index.
+        node: usize,
+    },
+}
+
+/// One block of rows in SoA layout: every buffer is column-major,
+/// `buf[col * rows + j]` for row `j`.
+pub struct Block {
+    /// Rows in this block.
+    pub rows: usize,
+    /// Free-node voltages (`nf x rows`), advanced in place.
+    pub v: Vec<f64>,
+    /// Inverse capacitances (`nf x rows`); a zero entry pins the node.
+    pub cinv: Vec<f64>,
+    /// Parameter columns (`npar x rows`).
+    pub p: Vec<f64>,
+    /// Stimulus amplitudes (`ns x rows`).
+    pub amp: Vec<f64>,
+    /// Per-row threshold for [`ExitPolicy::FallingCross`].
+    pub thresh: Vec<f64>,
+    /// Retirement mask; pre-set entries (zero-param padding) freeze a
+    /// row from step 0.
+    pub retired: Vec<bool>,
+    /// Step index at which each row retired (meaningful where
+    /// `retired`; pre-retired rows keep 0).
+    pub retire_step: Vec<usize>,
+}
+
+impl Block {
+    /// A zero-filled block for a template geometry.
+    pub fn new(rows: usize, nf: usize, ns: usize, npar: usize) -> Block {
+        Block {
+            rows,
+            v: vec![0.0; nf * rows],
+            cinv: vec![0.0; nf * rows],
+            p: vec![0.0; npar * rows],
+            amp: vec![0.0; ns * rows],
+            thresh: vec![0.0; rows],
+            retired: vec![false; rows],
+            retire_step: vec![0; rows],
+        }
+    }
+}
+
+/// One stimulus or free-node column as a `rows`-long slice.
+#[inline(always)]
+fn node_col<'a>(v: &'a [f64], vs: &'a [f64], nf: usize, rows: usize, c: usize) -> &'a [f64] {
+    if c < nf { &v[c * rows..(c + 1) * rows] } else { &vs[(c - nf) * rows..(c - nf + 1) * rows] }
+}
+
+/// Net current into each free node for all rows at once: the SoA
+/// counterpart of [`Template::rhs`], one flat row loop per stamp.
+fn rhs_soa(
+    t: &Template,
+    rows: usize,
+    v: &[f64],
+    vs: &[f64],
+    dvs: &[f64],
+    p: &[f64],
+    ist: &mut [f64],
+    out: &mut [f64],
+) {
+    let nf = t.nf;
+    out.fill(0.0);
+    for st in &t.stamps {
+        match *st {
+            Stamp::Mos { d, g, s, p0 } => {
+                let kp = &p[p0 * rows..(p0 + 1) * rows];
+                let vt = &p[(p0 + 1) * rows..(p0 + 2) * rows];
+                let nn = &p[(p0 + 2) * rows..(p0 + 3) * rows];
+                let lam = &p[(p0 + 3) * rows..(p0 + 4) * rows];
+                let wl = &p[(p0 + 4) * rows..(p0 + 5) * rows];
+                let sg = &p[(p0 + 5) * rows..(p0 + 6) * rows];
+                let vd = node_col(v, vs, nf, rows, d);
+                let vg = node_col(v, vs, nf, rows, g);
+                let vsr = node_col(v, vs, nf, rows, s);
+                for j in 0..rows {
+                    ist[j] = mos_ids_fast(
+                        vd[j], vg[j], vsr[j], kp[j], vt[j], nn[j], lam[j], wl[j], sg[j],
+                    );
+                }
+                if d < nf {
+                    let o = &mut out[d * rows..(d + 1) * rows];
+                    for j in 0..rows {
+                        o[j] -= ist[j];
+                    }
+                }
+                if s < nf {
+                    let o = &mut out[s * rows..(s + 1) * rows];
+                    for j in 0..rows {
+                        o[j] += ist[j];
+                    }
+                }
+            }
+            Stamp::CapC { src, dst, p0 } => {
+                let c = &p[p0 * rows..(p0 + 1) * rows];
+                let dv = &dvs[src * rows..(src + 1) * rows];
+                let o = &mut out[dst * rows..(dst + 1) * rows];
+                for j in 0..rows {
+                    o[j] += c[j] * dv[j];
+                }
+            }
+            Stamp::Res { a, b, p0 } => {
+                let g = &p[p0 * rows..(p0 + 1) * rows];
+                let va = node_col(v, vs, nf, rows, a);
+                let vb = node_col(v, vs, nf, rows, b);
+                for j in 0..rows {
+                    ist[j] = g[j] * (va[j] - vb[j]);
+                }
+                if a < nf {
+                    let o = &mut out[a * rows..(a + 1) * rows];
+                    for j in 0..rows {
+                        o[j] -= ist[j];
+                    }
+                }
+                if b < nf {
+                    let o = &mut out[b * rows..(b + 1) * rows];
+                    for j in 0..rows {
+                        o[j] += ist[j];
+                    }
+                }
+            }
+            Stamp::Isrc { dst, p0 } => {
+                let i = &p[p0 * rows..(p0 + 1) * rows];
+                let o = &mut out[dst * rows..(dst + 1) * rows];
+                for j in 0..rows {
+                    o[j] += i[j];
+                }
+            }
+        }
+    }
+}
+
+/// Advance a whole block through the schedule and return the full-rate
+/// trace, laid out `trace[(s * nf + k) * rows + j]`.  `block.v` holds
+/// the final (or frozen) state afterward; `block.retired` /
+/// `block.retire_step` report which rows exited early and when.
+pub fn run_block(
+    t: &Template,
+    mode: Integrator,
+    k_substeps: usize,
+    sched: &Schedule,
+    block: &mut Block,
+    exit: ExitPolicy,
+) -> Vec<f64> {
+    let rows = block.rows;
+    let (nf, ns) = (t.nf, t.ns);
+    let steps = sched.dt.len();
+    let v = &mut block.v;
+    let cinv = &block.cinv;
+    let p = &block.p;
+    let amp = &block.amp;
+    let thresh = &block.thresh;
+    let retired = &mut block.retired;
+    let retire_step = &mut block.retire_step;
+
+    let mut trace = vec![0.0; steps * nf * rows];
+    let mut i1 = vec![0.0; nf * rows];
+    let mut i2 = vec![0.0; nf * rows];
+    let mut v1 = vec![0.0; nf * rows];
+    let mut vs = vec![0.0; ns * rows];
+    let mut dvs = vec![0.0; ns * rows];
+    let mut ist = vec![0.0; rows];
+    let mut vprev = vec![0.0; nf * rows];
+    let mut live = retired.iter().filter(|r| !**r).count();
+
+    for s in 0..steps {
+        // stimulus columns change until quiescence, then stay cached
+        if s <= sched.stim_const_from {
+            for sc in 0..ns {
+                let w = sched.wave[s][sc];
+                let dw = sched.dwave[s][sc];
+                let a = &amp[sc * rows..(sc + 1) * rows];
+                let vsd = &mut vs[sc * rows..(sc + 1) * rows];
+                let dvd = &mut dvs[sc * rows..(sc + 1) * rows];
+                for j in 0..rows {
+                    vsd[j] = w * a[j];
+                    dvd[j] = dw * a[j];
+                }
+            }
+        }
+        let check_settle = exit == ExitPolicy::Settle && s >= sched.fixed_from && live > 0;
+        if check_settle {
+            vprev.copy_from_slice(v);
+        }
+        let dt = sched.dt[s];
+        for _ in 0..k_substeps {
+            match mode {
+                Integrator::Heun => {
+                    rhs_soa(t, rows, v, &vs, &dvs, p, &mut ist, &mut i1);
+                    for k in 0..nf {
+                        let vk = &v[k * rows..(k + 1) * rows];
+                        let ck = &cinv[k * rows..(k + 1) * rows];
+                        let ik = &i1[k * rows..(k + 1) * rows];
+                        let v1k = &mut v1[k * rows..(k + 1) * rows];
+                        for j in 0..rows {
+                            let upd = vk[j] + dt * ik[j] * ck[j];
+                            v1k[j] = if ck[j] == 0.0 { vk[j] } else { upd };
+                        }
+                    }
+                    rhs_soa(t, rows, &v1, &vs, &dvs, p, &mut ist, &mut i2);
+                    for k in 0..nf {
+                        let vk = &mut v[k * rows..(k + 1) * rows];
+                        let ck = &cinv[k * rows..(k + 1) * rows];
+                        let ak = &i1[k * rows..(k + 1) * rows];
+                        let bk = &i2[k * rows..(k + 1) * rows];
+                        for j in 0..rows {
+                            let upd = vk[j] + 0.5 * dt * (ak[j] + bk[j]) * ck[j];
+                            let keep = ck[j] == 0.0 || retired[j];
+                            vk[j] = if keep { vk[j] } else { upd };
+                        }
+                    }
+                }
+                Integrator::ExpDecay => {
+                    rhs_soa(t, rows, v, &vs, &dvs, p, &mut ist, &mut i1);
+                    // pass 1 (vectorizable): dv and the decay factor;
+                    // the exp argument is clamped to <= 0 so the factor
+                    // is well-formed even where the branch won't use it
+                    for k in 0..nf {
+                        let vk = &v[k * rows..(k + 1) * rows];
+                        let ck = &cinv[k * rows..(k + 1) * rows];
+                        let ik = &i1[k * rows..(k + 1) * rows];
+                        let dvk = &mut v1[k * rows..(k + 1) * rows];
+                        let ek = &mut i2[k * rows..(k + 1) * rows];
+                        for j in 0..rows {
+                            let dv = dt * ik[j] * ck[j];
+                            dvk[j] = dv;
+                            ek[j] = exp_fast((dv / vk[j].max(1e-6)).min(0.0));
+                        }
+                    }
+                    // pass 2: the same branch structure as the scalar
+                    // integrator, as selects over precomputed values
+                    for k in 0..nf {
+                        let vk = &mut v[k * rows..(k + 1) * rows];
+                        let ck = &cinv[k * rows..(k + 1) * rows];
+                        let dvk = &v1[k * rows..(k + 1) * rows];
+                        let ek = &i2[k * rows..(k + 1) * rows];
+                        for j in 0..rows {
+                            let vj = vk[j];
+                            let dv = dvk[j];
+                            let vnew = if dv < 0.0 && vj > 0.0 {
+                                vj * ek[j]
+                            } else if vj <= 0.0 {
+                                (vj + dv).max(vj).min(0.0)
+                            } else {
+                                vj + dv
+                            };
+                            let keep = ck[j] == 0.0 || retired[j];
+                            vk[j] = if keep { vj } else { vnew };
+                        }
+                    }
+                }
+            }
+        }
+        let base = s * nf * rows;
+        trace[base..base + nf * rows].copy_from_slice(v);
+        match exit {
+            ExitPolicy::None => {}
+            ExitPolicy::Settle => {
+                if check_settle {
+                    for j in 0..rows {
+                        if !retired[j]
+                            && (0..nf)
+                                .all(|k| v[k * rows + j].to_bits() == vprev[k * rows + j].to_bits())
+                        {
+                            retired[j] = true;
+                            retire_step[j] = s;
+                            live -= 1;
+                        }
+                    }
+                }
+            }
+            ExitPolicy::FallingCross { node } => {
+                for j in 0..rows {
+                    if retired[j] {
+                        continue;
+                    }
+                    let crossed = v[node * rows + j] <= thresh[j];
+                    let quiesced = s >= sched.stim_const_from
+                        && (0..nf).all(|k| i1[k * rows + j] == 0.0);
+                    if crossed || quiesced {
+                        retired[j] = true;
+                        retire_step[j] = s;
+                        live -= 1;
+                    }
+                }
+            }
+        }
+        if live == 0 && s + 1 < steps {
+            // whole block retired: forward-fill the frozen state
+            for s2 in s + 1..steps {
+                trace.copy_within(base..base + nf * rows, s2 * nf * rows);
+            }
+            break;
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim;
+    use crate::tech::cards::sg40;
+
+    #[test]
+    fn exp_fast_tracks_libm() {
+        let mut x = -707.5;
+        while x < 0.0 {
+            let (got, want) = (exp_fast(x), x.exp());
+            assert!(
+                (got - want).abs() <= 1e-13 * want,
+                "exp_fast({x}) = {got}, libm = {want}"
+            );
+            x += 0.373;
+        }
+        assert_eq!(exp_fast(0.0), 1.0);
+        // below the clamp the true value has underflowed anyway
+        assert!(exp_fast(-800.0) < 1e-307);
+    }
+
+    #[test]
+    fn sl_fast_tracks_scalar_soft_clamp() {
+        // includes the scalar's +/-30 clamp region, where the scalar
+        // itself truncates by ~e^-30 — the fast kernel is the *more*
+        // accurate of the two there
+        let mut x = -40.0;
+        while x < 40.0 {
+            let got = sl_fast(x);
+            let want = x.exp().ln_1p();
+            assert!(
+                (got - want).abs() <= 1e-12 * want,
+                "sl_fast({x}) = {got}, ref = {want}"
+            );
+            x += 0.217;
+        }
+    }
+
+    #[test]
+    fn mos_ids_fast_matches_scalar_ekv_closely() {
+        let c = sg40::SI_NMOS;
+        for &(vd, vg, vs) in &[
+            (0.7, 0.9, 0.2),
+            (1.1, 1.1, 0.0),
+            (1.1, 0.0, 0.0),
+            (0.05, 0.45, 0.0),
+            (0.0, 0.0, 0.0),
+        ] {
+            let a = mos_ids_fast(vd, vg, vs, c.kp, c.vt, c.n, c.lam, 2.0, 1.0);
+            let b = sim::mos_ids(vd, vg, vs, c.kp, c.vt, c.n, c.lam, 2.0, 1.0);
+            assert!(
+                (a - b).abs() <= 1e-9 * b.abs().max(1e-30),
+                "ids({vd},{vg},{vs}): fast {a} vs scalar {b}"
+            );
+        }
+        // zero-param (padding) rows produce an exact zero even though
+        // vp is NaN internally
+        let z = mos_ids_fast(0.6, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+        assert_eq!(z, 0.0);
+    }
+
+    #[test]
+    fn schedule_horizons_from_backward_scans() {
+        // wave rows 0..=3 ramp, rows 4.. are identical: quiescent from 4
+        let mut wave = vec![vec![0.0, 1.0]; 10];
+        let dwave = vec![vec![0.0, 0.0]; 10];
+        for (i, w) in wave.iter_mut().enumerate().take(4) {
+            w[0] = 1.0 + i as f64;
+        }
+        let dt_uniform = vec![1e-12; 10];
+        let s = Schedule::new(&wave, &dwave, &dt_uniform);
+        assert_eq!(s.stim_const_from, 4);
+        assert_eq!(s.fixed_from, 4);
+        let dt_log: Vec<f64> = (0..10).map(|i| 1e-12 * 1.082f64.powi(i)).collect();
+        let s = Schedule::new(&wave, &dwave, &dt_log);
+        assert_eq!(s.stim_const_from, 4);
+        assert_eq!(s.fixed_from, 9, "growing dt must disable settle checks");
+        let zeros = vec![vec![0.0, 0.0]; 10];
+        let s = Schedule::new(&zeros, &zeros, &dt_log);
+        assert_eq!(s.stim_const_from, 0, "all-quiet stimulus is constant from step 0");
+    }
+
+    /// A retention block over `n` (vt, v0) points on the real Si card.
+    fn retention_block(pts: &[(f64, f64)]) -> (Template, Block) {
+        let t = sim::retention_template();
+        let rows = pts.len();
+        let mut b = Block::new(rows, t.nf, t.ns, t.npar);
+        let si = sg40::SI_NMOS;
+        for (j, &(vt, v0)) in pts.iter().enumerate() {
+            for (c, val) in [si.kp, vt, si.n, si.lam, 2.0, 1.0, 1e-16, 0.0].iter().enumerate() {
+                b.p[c * rows + j] = *val;
+            }
+            b.v[j] = v0;
+            b.cinv[j] = 1.0 / 1.2e-15;
+            b.thresh[j] = 0.3;
+        }
+        (t, b)
+    }
+
+    fn retention_grid(steps: usize) -> Vec<f64> {
+        let mut dt = Vec::with_capacity(steps);
+        let mut d = 1e-12;
+        for _ in 0..steps {
+            dt.push(d);
+            d *= 1.082;
+        }
+        dt
+    }
+
+    #[test]
+    fn batched_block_is_bitwise_equal_to_single_row_blocks() {
+        let pts = [(0.35, 0.6), (0.45, 0.6), (0.55, 0.5), (0.38, 0.7)];
+        let dt = retention_grid(448);
+        let wave = vec![vec![0.0; 4]; dt.len()];
+        let sched = Schedule::new(&wave, &wave, &dt);
+        let (t, mut all) = retention_block(&pts);
+        let trace = run_block(&t, Integrator::ExpDecay, 4, &sched, &mut all, ExitPolicy::None);
+        for (j, &pt) in pts.iter().enumerate() {
+            let (_, mut one) = retention_block(&[pt]);
+            let tr1 = run_block(&t, Integrator::ExpDecay, 4, &sched, &mut one, ExitPolicy::None);
+            for s in 0..dt.len() {
+                assert_eq!(
+                    trace[s * pts.len() + j].to_bits(),
+                    tr1[s].to_bits(),
+                    "row {j} step {s} diverged between batch sizes"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn falling_cross_exit_keeps_exact_crossings_and_sentinels() {
+        // rows 0..3 cross 0.3; the last row watches an unreachable
+        // threshold and must stay live (BIG_TIME-style sentinel)
+        let pts = [(0.35, 0.6), (0.45, 0.6), (0.55, 0.5), (0.38, 0.7)];
+        let dt = retention_grid(448);
+        let wave = vec![vec![0.0; 4]; dt.len()];
+        let sched = Schedule::new(&wave, &wave, &dt);
+        let times: Vec<f64> = dt
+            .iter()
+            .scan(0.0, |acc, &d| {
+                *acc += d * 4.0;
+                Some(*acc)
+            })
+            .collect();
+        let (t, mut free) = retention_block(&pts);
+        let full = run_block(&t, Integrator::ExpDecay, 4, &sched, &mut free, ExitPolicy::None);
+        let (_, mut gated) = retention_block(&pts);
+        gated.thresh[3] = -1.0; // unreachable: the row never retires by crossing
+        let rows = pts.len();
+        let masked = run_block(
+            &t,
+            Integrator::ExpDecay,
+            4,
+            &sched,
+            &mut gated,
+            ExitPolicy::FallingCross { node: 0 },
+        );
+        for j in 0..rows {
+            let want = sim::cross_time_at(&times, dt.len(), |s| full[s * rows + j], 0.3, false);
+            let got = sim::cross_time_at(&times, dt.len(), |s| masked[s * rows + j], 0.3, false);
+            match (want, got) {
+                (Some(a), Some(b)) => assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "row {j}: frozen tail moved the first crossing"
+                ),
+                (None, None) => {}
+                other => panic!("row {j}: crossing disagreement {other:?}"),
+            }
+        }
+        assert!(gated.retired[0] && gated.retired[1] && gated.retired[2]);
+        assert!(!gated.retired[3], "unreachable threshold must not retire");
+        // the retiring rows exited well before the end of the grid
+        assert!(gated.retire_step[0] < dt.len() - 1);
+    }
+
+    #[test]
+    fn settle_exit_is_bitwise_identical_on_uniform_grids() {
+        // a write-template block driven to steady state: settle
+        // retirement at bitwise fixed points must not change one bit of
+        // the trace
+        let t = sim::write_template();
+        let rows = 3;
+        let steps = 384;
+        let si_n = sg40::SI_NMOS;
+        let si_p = sg40::SI_PMOS;
+        let mk = || {
+            let mut b = Block::new(rows, t.nf, t.ns, t.npar);
+            for j in 0..rows {
+                let vt = 0.4 + 0.05 * j as f64;
+                let cols = [
+                    si_n.kp, vt, si_n.n, si_n.lam, 2.0, 1.0, // mwr
+                    si_p.kp, si_p.vt, si_p.n, si_p.lam, 8.0, -1.0, // mdrvp
+                    si_n.kp, si_n.vt, si_n.n, si_n.lam, 4.0, 1.0, // mdrvn
+                    0.15e-15, 1e-9, // cwwl_sn.c, gwbl.g
+                ];
+                for (c, val) in cols.iter().enumerate() {
+                    b.p[c * rows + j] = *val;
+                }
+                b.cinv[j] = 1.0 / 1.2e-15;
+                b.cinv[rows + j] = 1.0 / 20e-15;
+                for (sc, a) in [1.1, 0.0, 1.1, 0.0].iter().enumerate() {
+                    b.amp[sc * rows + j] = *a;
+                }
+            }
+            b
+        };
+        let dt = vec![6e-9 / (steps as f64 * 4.0); steps];
+        let mut wave = vec![vec![0.0, 1.0, 1.0, 0.0]; steps];
+        let mut dwave = vec![vec![0.0; 4]; steps];
+        for (i, (w, dw)) in wave.iter_mut().zip(dwave.iter_mut()).enumerate() {
+            if i >= 20 {
+                w[0] = 1.0;
+            } else if i >= 10 {
+                w[0] = (i - 10) as f64 / 10.0;
+                dw[0] = 1.0 / (10.0 * 4.0 * dt[0]);
+            }
+        }
+        let sched = Schedule::new(&wave, &dwave, &dt);
+        assert!(sched.fixed_from < steps - 1, "pulse must quiesce for the test to bite");
+        let mut plain = mk();
+        let full = run_block(&t, Integrator::Heun, 4, &sched, &mut plain, ExitPolicy::None);
+        let mut gated = mk();
+        let masked = run_block(&t, Integrator::Heun, 4, &sched, &mut gated, ExitPolicy::Settle);
+        assert_eq!(full.len(), masked.len());
+        for (i, (a, b)) in full.iter().zip(&masked).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "sample {i} diverged under settle exit");
+        }
+    }
+
+    #[test]
+    fn pre_retired_rows_hold_v0_exactly() {
+        // a mixed block: one live row, one zero-param padding row
+        let pts = [(0.45, 0.6), (0.0, 0.6)];
+        let dt = retention_grid(64);
+        let wave = vec![vec![0.0; 4]; dt.len()];
+        let sched = Schedule::new(&wave, &wave, &dt);
+        let (t, mut b) = retention_block(&pts);
+        let rows = pts.len();
+        for c in 0..t.npar {
+            b.p[c * rows + 1] = 0.0;
+        }
+        b.retired[1] = true;
+        let trace = run_block(&t, Integrator::ExpDecay, 4, &sched, &mut b, ExitPolicy::None);
+        for s in 0..dt.len() {
+            assert_eq!(trace[s * rows + 1].to_bits(), 0.6f64.to_bits(), "padding row moved");
+        }
+        assert!(trace[(dt.len() - 1) * rows] < 0.6, "live row must still decay");
+    }
+}

@@ -172,6 +172,41 @@ fn fault_degenerate_input_quarantines_its_row_only() {
 }
 
 #[test]
+fn fault_poison_row_on_soa_path_quarantines_that_row_only() {
+    // PoisonRow semantics survive the SoA rewrite: poisoning one output
+    // row of a retention execution quarantines exactly that design
+    // point, and its co-batched (same SoA block) neighbors stay bitwise
+    // identical to the fault-free run
+    let t = sg40();
+    let mk = |gl: f64| engines::RetentionPoint {
+        write_card: *t.card("si_nmos"),
+        write_wl: 2.5,
+        c_sn: 1.2e-15,
+        g_gate_leak: gl,
+        i_disturb: 0.0,
+        v0: 0.6,
+        vth: 0.3,
+    };
+    let pts = [mk(1e-16), mk(2e-16), mk(3e-16)];
+    let clean = NativeBackend::new();
+    let want = engines::retention_rows(&clean, &pts).unwrap();
+    let fb = FaultBackend::new(
+        Box::new(NativeBackend::new()),
+        FaultPlan::new().poison_row("retention", 1, 1),
+    );
+    let rows = engines::retention_rows(&fb, &pts).unwrap();
+    assert_eq!(rows.len(), 3);
+    let bad = rows[1].as_ref().expect_err("poisoned row must quarantine");
+    assert!(bad.reason.contains("non-finite retention output"), "{}", bad.reason);
+    for i in [0, 2] {
+        let a = rows[i].as_ref().expect("healthy neighbor row must survive");
+        let b = want[i].as_ref().unwrap();
+        assert_eq!(a.t_retain.to_bits(), b.t_retain.to_bits(), "row {i}: t_retain");
+        assert_eq!(a.sn_final.to_bits(), b.sn_final.to_bits(), "row {i}: sn_final");
+    }
+}
+
+#[test]
 fn fault_failover_serves_failed_request_from_native_fallback() {
     // a terminal primary failure trips the breaker: the very request
     // that failed is served from the native fallback, and so is all
