@@ -29,6 +29,7 @@ use opengcram::layout::{cells, FlattenCache, Library};
 use opengcram::runtime::{engines, ExecBackend, NativeBackend, SharedRuntime};
 use opengcram::tech::sg40;
 use opengcram::util::bench;
+use opengcram::variation::{self, VariationModel};
 use opengcram::{characterize, drc, dse, sim};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -199,6 +200,7 @@ fn main() {
     if let Some(rt) = &rt {
         println!("# execution backend: {}", rt.backend_name());
         transient_benches(&tech, rt, smoke, &mut records);
+        mc_yield_records(&tech, rt, smoke, &mut records);
         soa_speedup_records(&tech, smoke, &mut records);
     }
     if !smoke {
@@ -461,6 +463,63 @@ fn transient_benches(
         characterize::characterize_all(tech, rt, &size_banks, res).unwrap()
     });
     records.push((s.clone(), size_banks.len() as f64 / s.median_s));
+}
+
+/// Tentpole KPI for the Monte-Carlo variation mega-batch (EXPERIMENTS.md,
+/// Yield sweep): `K x D` sampled variants through one packed sweep must
+/// pay exactly the grouped-ceiling execution counts that
+/// [`variation::plan_call_counts`] predicts — asserted against the
+/// backend's *real* per-artifact counters, never one execution per
+/// variant per engine.  The `mc_yield_rows_per_sec` series (sampled
+/// variant rows per second, nominal included) lands in
+/// `BENCH_perf.json` so the MC throughput trajectory is tracked.
+fn mc_yield_records(
+    tech: &opengcram::tech::Tech,
+    rt: &SharedRuntime,
+    smoke: bool,
+    records: &mut Vec<(bench::Sample, f64)>,
+) {
+    let t_eng = if smoke { 0.2 } else { 2.0 };
+    let k = if smoke { 8 } else { 32 };
+    // rows >= 180 (mux 1): windows sit above the floor clamps, so each
+    // variant's exact windows genuinely differ and the quantizer (not
+    // the clamp) earns the packing
+    let cfgs = characterize::quantization_axis(3, 180, 8);
+    let model = VariationModel::from_tech(tech, k, variation::DEFAULT_SEED);
+    let res = characterize::DEFAULT_WINDOW_RESOLUTION;
+    let caps = (
+        rt.batch_cap("write").unwrap(),
+        rt.batch_cap("read").unwrap(),
+        rt.batch_cap("retention").unwrap(),
+    );
+    let (want_w, want_r, want_t) =
+        variation::plan_call_counts(tech, &cfgs, &model, res, caps.0, caps.1, caps.2).unwrap();
+    let variants = cfgs.len() * (k + 1);
+    assert_eq!(want_t, batch::calls_for(variants, caps.2), "retention must always pack");
+
+    let before = (rt.call_count("write"), rt.call_count("read"), rt.call_count("retention"));
+    let (dys, health) = variation::yield_sweep_health(tech, rt, &cfgs, &model, 2, res).unwrap();
+    assert!(health.is_clean(), "{}", health.summary());
+    assert_eq!(dys.len(), cfgs.len());
+    let got_w = (rt.call_count("write") - before.0) as usize;
+    let got_r = (rt.call_count("read") - before.1) as usize;
+    let got_t = (rt.call_count("retention") - before.2) as usize;
+    assert_eq!(got_w, want_w, "MC write occupancy model diverged from real counters");
+    assert_eq!(got_r, want_r, "MC read occupancy model diverged from real counters");
+    assert_eq!(got_t, want_t, "MC retention occupancy model diverged from real counters");
+    assert!(
+        got_w < variants,
+        "mega-batch paid {got_w} write executions for {variants} variant plans"
+    );
+    println!("mc_write_calls_{variants}variants,{got_w}");
+    println!("mc_read_calls_{variants}variants,{got_r}");
+    println!("mc_retention_calls_{variants}variants,{got_t}");
+
+    let s = bench::run(&format!("mc_yield_sweep_{}designs_k{k}", cfgs.len()), t_eng, || {
+        variation::yield_sweep_health(tech, rt, &cfgs, &model, 2, res).unwrap()
+    });
+    println!("mc_yield_rows_per_sec,{:.0}", variants as f64 / s.median_s);
+    records.push((s.clone(), variants as f64 / s.median_s));
 }
 
 /// Time one transient op in both native execution modes and record the

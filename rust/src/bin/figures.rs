@@ -13,7 +13,7 @@ use opengcram::layout::{cells, Library};
 use opengcram::runtime::engines;
 use opengcram::tech::{sg40, LayerRole};
 use opengcram::util::eng;
-use opengcram::{characterize, compose, dse, report, workloads};
+use opengcram::{characterize, compose, dse, report, variation, workloads};
 use std::path::Path;
 
 fn main() -> opengcram::Result<()> {
@@ -191,6 +191,52 @@ fn main() -> opengcram::Result<()> {
         println!("-- {:?} on {} --\n{}", level, machine.name, t10.render());
     }
     println!("P=pass f=frequency r=retention x=margin");
+
+    // ---- Monte-Carlo variation: sigma bands + yield shmoo ---------------------
+    // small K keeps figure regeneration fast; the variants still ride
+    // one mega-batch (grouped-ceiling executions, visible in the KPI
+    // counter dump at the bottom of this run)
+    println!("\n== Monte-Carlo variation: retention/f_op sigma bands (K=24) ==");
+    let model = variation::VariationModel::from_tech(&tech, 24, variation::DEFAULT_SEED);
+    let (dys, mc_health) = variation::yield_sweep_health(
+        &tech,
+        &rt,
+        &dse::fig10_configs(CellFlavor::GcSiSiNp),
+        &model,
+        dse::default_workers(),
+        0.0,
+    )?;
+    let mut tmc = report::Table::new(&[
+        "design", "yield", "95% CI", "f_op", "retention", "ret q05..q95", "nominal ret",
+    ]);
+    for dy in &dys {
+        let s = &dy.stats;
+        tmc.row(&[
+            format!("{}x{}", dy.config.word_size, dy.config.num_words),
+            report::pct(s.functional.p),
+            format!("[{}, {}]", report::pct(s.functional.lo), report::pct(s.functional.hi)),
+            report::band(s.f_op_hz.mean, s.f_op_hz.sigma, "Hz"),
+            report::band(s.retention_s.mean, s.retention_s.sigma, "s"),
+            format!("{}..{}", eng(s.retention_s.q05, "s"), eng(s.retention_s.q95, "s")),
+            eng(dy.nominal.perf.retention_s, "s"),
+        ]);
+    }
+    println!("{}", tmc.render());
+    let mut ty = report::Table::new(&["demand", "16x16", "32x32", "64x64", "96x96", "128x128"]);
+    for (level, machine) in [
+        (workloads::CacheLevel::L1, &workloads::GT520M),
+        (workloads::CacheLevel::L2, &workloads::H100),
+    ] {
+        let env = workloads::envelope(level, machine);
+        let mut row = vec![format!("{:?} {} envelope", level, machine.name)];
+        for dy in &dys {
+            row.push(dy.yield_verdict(&env, 0.99).glyph().to_string());
+        }
+        ty.row(&row);
+    }
+    println!("{}", ty.render());
+    println!("P=yield>=0.99 f=frequency r=retention x=margin q=quarantined");
+    println!("mc health: {}", mc_health.summary());
 
     // ---- heterogeneous composition (GainSight follow-on) ---------------------
     println!("\n== Composition: workload-driven heterogeneous bank selection ==");

@@ -279,6 +279,50 @@ struct TransientPlan {
     wr: Option<engines::WriteResult>,
 }
 
+/// One sampled per-instance perturbation applied on top of a design's
+/// nominal plan by [`CharPlan::with_variation`] (the Monte-Carlo
+/// variation subsystem, [`crate::variation`]).  Shifts act on the
+/// *cell* transients only — the write/read cell transistors, the
+/// storage/bitline capacitances and the local supply — while the
+/// analytical periphery terms (decoder, wordline RC, leakage) stay
+/// nominal: mismatch is a minimum-size-device effect that averages out
+/// over the wide periphery gates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Perturb {
+    /// Additive VT shift on the write transistor (V) — the paper's
+    /// retention-critical device.
+    pub vt_shift_wr: f64,
+    /// Additive VT shift on the read transistor (V).
+    pub vt_shift_rd: f64,
+    /// Multiplier on the cell cards' `kp` (process speed / temperature
+    /// proxy, carries the corner's `kp_scale`).
+    pub kp_scale: f64,
+    /// Multiplier on the cell capacitances (geometry delta:
+    /// line-edge/thickness variation on `c_sn`, `c_wbl`, `c_rbl` and
+    /// the coupling caps).
+    pub c_scale: f64,
+    /// Multiplier on the supply seen by the cell (IR droop / corner
+    /// VDD).
+    pub vdd_scale: f64,
+}
+
+impl Perturb {
+    /// The identity perturbation.
+    pub const NONE: Perturb = Perturb {
+        vt_shift_wr: 0.0,
+        vt_shift_rd: 0.0,
+        kp_scale: 1.0,
+        c_scale: 1.0,
+        vdd_scale: 1.0,
+    };
+
+    /// True for the identity (f64 `==`, so a `-0.0` shift from a
+    /// zero-sigma draw still counts as identity).
+    pub fn is_identity(&self) -> bool {
+        *self == Perturb::NONE
+    }
+}
+
 impl CharPlan {
     /// Build the job plan for one bank (pure; no runtime access) with
     /// exact, unquantized transient windows — shorthand for
@@ -292,25 +336,66 @@ impl CharPlan {
     /// [`quantize_window`] and the module docs for the accuracy
     /// contract).  Resolution `0.0` keeps the exact windows bitwise.
     pub fn with_resolution(tech: &Tech, bank: &Bank, window_resolution: f64) -> CharPlan {
+        CharPlan::with_variation(tech, bank, window_resolution, &Perturb::NONE)
+    }
+
+    /// [`CharPlan::with_resolution`] with a sampled per-instance
+    /// [`Perturb`] folded into the cell-level plan: cell cards shift
+    /// (`vt + shift`, `kp * scale`), cell caps and the local supply
+    /// scale, and the transient windows are recomputed from the
+    /// perturbed values before quantization.  The identity perturbation
+    /// returns the nominal plan **bitwise** (it takes the exact same
+    /// construction path), which is what makes a zero-sigma Monte-Carlo
+    /// run bit-equal to the non-MC path.
+    pub fn with_variation(
+        tech: &Tech,
+        bank: &Bank,
+        window_resolution: f64,
+        perturb: &Perturb,
+    ) -> CharPlan {
         if bank.config.flavor == CellFlavor::Sram6t {
+            // the SRAM reference is analytical (no transient jobs); the
+            // cell-level perturbation has nothing to act on
             return CharPlan { kind: PlanKind::Analytical(analytical(tech, bank)) };
         }
-        let vdd = tech.vdd;
         let cfg = &bank.config;
         let p = &bank.parasitics;
         let flavor = cfg.flavor;
         let rows = cfg.rows();
-        let (wr_card, wr_wl) = write_card(tech, flavor, cfg.write_vt);
-        let (rd_card, rd_wl) = read_card(tech, flavor);
+        let (wr_base, wr_wl) = write_card(tech, flavor, cfg.write_vt);
+        let (rd_base, rd_wl) = read_card(tech, flavor);
+        let (vdd, wr_card, rd_card, c_sn, c_wbl, c_rbl, c_wwl_sn, c_rwl_sn) =
+            if perturb.is_identity() {
+                (tech.vdd, wr_base, rd_base, p.c_sn, p.c_wbl, p.c_rbl, p.c_wwl_sn, p.c_rwl_sn)
+            } else {
+                (
+                    tech.vdd * perturb.vdd_scale,
+                    DeviceCard {
+                        kp: wr_base.kp * perturb.kp_scale,
+                        vt: wr_base.vt + perturb.vt_shift_wr,
+                        ..wr_base
+                    },
+                    DeviceCard {
+                        kp: rd_base.kp * perturb.kp_scale,
+                        vt: rd_base.vt + perturb.vt_shift_rd,
+                        ..rd_base
+                    },
+                    p.c_sn * perturb.c_scale,
+                    p.c_wbl * perturb.c_scale,
+                    p.c_rbl * perturb.c_scale,
+                    p.c_wwl_sn * perturb.c_scale,
+                    p.c_rwl_sn * perturb.c_scale,
+                )
+            };
         let v_wwl = if cfg.wwlls { vdd + 0.4 } else { vdd };
         let wr_pt = engines::WritePoint {
             write_card: wr_card,
             write_wl: wr_wl,
             drv_p: (*tech.card("si_pmos"), 8.0),
             drv_n: (*tech.card("si_nmos"), 4.0),
-            c_sn: p.c_sn,
-            c_wbl: p.c_wbl,
-            c_wwl_sn: p.c_wwl_sn,
+            c_sn,
+            c_wbl,
+            c_wwl_sn,
             g_wbl_leak: 1e-9,
             vdd,
             v_wwl,
@@ -325,21 +410,21 @@ impl CharPlan {
                 rows,
                 vdd,
                 wr_window: quantize_window(
-                    (40.0 * p.c_wbl * vdd / sim::ion(&wr_card, 4.0, vdd)).max(4e-9),
+                    (40.0 * c_wbl * vdd / sim::ion(&wr_card, 4.0, vdd)).max(4e-9),
                     window_resolution,
                 ),
                 wr_pt,
                 rd_card,
                 rd_wl,
                 rd_window: quantize_window(
-                    (60.0 * p.c_rbl * 0.55 / sim::ion(&rd_card, rd_wl, vdd)).max(6e-9),
+                    (60.0 * c_rbl * 0.55 / sim::ion(&rd_card, rd_wl, vdd)).max(6e-9),
                     window_resolution,
                 ),
                 pull_up: flavor.pull_up_read(),
                 g_gate_leak: gate_leak(flavor),
-                c_sn: p.c_sn,
-                c_rbl: p.c_rbl,
-                c_rwl_sn: p.c_rwl_sn,
+                c_sn,
+                c_rbl,
+                c_rwl_sn,
                 t_dec: decoder_delay(tech, rows),
                 t_wl: 0.38 * p.r_wl * p.c_wl + 20e-12,
                 leakage_w: leakage(tech, bank),
@@ -506,7 +591,15 @@ impl CharPlan {
 /// Runs one [`CharPlan`] with singleton batches; sweeps should prefer
 /// [`characterize_all`], which packs the same jobs across designs.
 pub fn characterize(tech: &Tech, rt: &dyn ExecBackend, bank: &Bank) -> crate::Result<BankPerf> {
-    let mut plan = CharPlan::new(tech, bank);
+    characterize_plan(rt, CharPlan::new(tech, bank))
+}
+
+/// Run one prebuilt [`CharPlan`] with singleton batches.  This is the
+/// reference path the parity pins compare the packed runs against; the
+/// variation tests use it with [`CharPlan::with_variation`] plans to
+/// check that a sampled variant inside a mega-batch bitwise-matches its
+/// own singleton run.
+pub fn characterize_plan(rt: &dyn ExecBackend, mut plan: CharPlan) -> crate::Result<BankPerf> {
     let wj = plan.write_jobs();
     if wj.is_empty() {
         return plan.finish(&[], &[]);
@@ -620,12 +713,34 @@ pub fn characterize_all_health(
     banks: &[Bank],
     window_resolution: f64,
 ) -> crate::Result<(Vec<Result<BankPerf, Quarantine>>, RunHealth)> {
-    let failovers_before = rt.failovers();
-    let health = std::sync::Arc::new(coordinator::CoordHealth::default());
-    let mut plans: Vec<CharPlan> = banks
+    let plans: Vec<CharPlan> = banks
         .iter()
         .map(|b| CharPlan::with_resolution(tech, b, window_resolution))
         .collect();
+    let labels: Vec<String> = banks.iter().map(design_label).collect();
+    characterize_plans_health(rt, plans, labels)
+}
+
+/// The packed-run core shared by [`characterize_all_health`] and the
+/// Monte-Carlo variation sweep ([`crate::variation`]): run a list of
+/// prebuilt [`CharPlan`]s (any mix of nominal and
+/// [`CharPlan::with_variation`]-perturbed plans) through the
+/// coordinator with cross-plan batch packing and per-plan fault
+/// isolation.  `labels[i]` names plan `i` in the [`RunHealth`]
+/// quarantine report.
+pub fn characterize_plans_health(
+    rt: &SharedRuntime,
+    mut plans: Vec<CharPlan>,
+    labels: Vec<String>,
+) -> crate::Result<(Vec<Result<BankPerf, Quarantine>>, RunHealth)> {
+    anyhow::ensure!(
+        plans.len() == labels.len(),
+        "{} plans but {} labels",
+        plans.len(),
+        labels.len()
+    );
+    let failovers_before = rt.failovers();
+    let health = std::sync::Arc::new(coordinator::CoordHealth::default());
     let mut quarantine: Vec<Option<Quarantine>> = vec![None; plans.len()];
 
     // ---- stage 1: write transients, packed across designs ------------
@@ -711,7 +826,7 @@ pub fn characterize_all_health(
             .filter_map(|(i, r)| {
                 r.as_ref().err().map(|q| QuarantinedPoint {
                     index: i,
-                    design: design_label(&banks[i]),
+                    design: labels[i].clone(),
                     stage: q.stage,
                     reason: q.reason.clone(),
                 })

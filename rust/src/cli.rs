@@ -14,6 +14,8 @@
 
 use crate::compiler::CellFlavor;
 use crate::runtime::SharedRuntime;
+use crate::tech::Tech;
+use crate::variation::{self, VariationModel};
 use crate::workloads::{self, CacheLevel, Machine};
 use std::path::Path;
 
@@ -133,6 +135,67 @@ pub fn parse_backend(args: &[String]) -> crate::Result<Backend> {
     }
 }
 
+/// The Monte-Carlo flag family shared by `dse` and `compose`:
+/// `--mc [K]` enables variation sampling (K defaults to
+/// [`variation::DEFAULT_SAMPLES`]; a bare `--mc` directly followed by
+/// another flag keeps the default), `--mc-seed S` reseeds the
+/// substream root, `--sigma-vt V` overrides the per-instance VT sigma
+/// for **both** device classes, and `--corners tt,ss,..` mixes named
+/// tech corners into the samples.  Using any of the dependent flags
+/// (including `--yield`) without `--mc` is a hard error — MC knobs
+/// must never be silently inert.
+pub fn parse_mc(args: &[String], tech: &Tech) -> crate::Result<Option<VariationModel>> {
+    if !has_flag(args, "--mc") {
+        for f in ["--mc-seed", "--sigma-vt", "--corners", "--yield"] {
+            anyhow::ensure!(!has_flag(args, f), "{f} requires --mc");
+        }
+        return Ok(None);
+    }
+    let k = match flag_value(args, "--mc") {
+        Some(v) if !v.starts_with("--") => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --mc sample count '{v}'"))?,
+        _ => variation::DEFAULT_SAMPLES,
+    };
+    anyhow::ensure!(k >= 1, "--mc needs at least one sample");
+    let seed = parse_or(args, "--mc-seed", variation::DEFAULT_SEED)?;
+    let mut model = VariationModel::from_tech(tech, k, seed);
+    if let Some(v) = flag_value(args, "--sigma-vt") {
+        let s: f64 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --sigma-vt '{v}'"))?;
+        anyhow::ensure!(
+            s.is_finite() && s >= 0.0,
+            "--sigma-vt must be a finite non-negative voltage, got {s}"
+        );
+        model = model.with_sigma_vt(s);
+    }
+    if let Some(list) = flag_value(args, "--corners") {
+        let mut corners = Vec::new();
+        for name in list.split(',') {
+            let name = name.trim();
+            let c = tech.corner(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown --corners entry '{name}' (tech {} declares: {})",
+                    tech.name,
+                    tech.corners.iter().map(|c| c.name).collect::<Vec<_>>().join(", ")
+                )
+            })?;
+            corners.push(*c);
+        }
+        model.corners = corners;
+    }
+    Ok(Some(model))
+}
+
+/// The `--yield` feasibility target in `[0, 1]` (default
+/// [`variation::DEFAULT_YIELD_TARGET`]).
+pub fn parse_yield(args: &[String]) -> crate::Result<f64> {
+    let t: f64 = parse_or(args, "--yield", variation::DEFAULT_YIELD_TARGET)?;
+    anyhow::ensure!((0.0..=1.0).contains(&t), "--yield must be in [0, 1], got {t}");
+    Ok(t)
+}
+
 /// The `--weights delay,area,power` flag: three comma-separated
 /// numbers, each validated individually.
 pub fn parse_weights(
@@ -231,6 +294,44 @@ mod tests {
         assert_eq!(Backend::Native.load(nowhere).unwrap().backend_name(), "native");
         assert_eq!(Backend::Auto.load(nowhere).unwrap().backend_name(), "native");
         assert!(Backend::Pjrt.load(nowhere).is_err());
+    }
+
+    #[test]
+    fn mc_flags_parse_strictly() {
+        let t = crate::tech::sg40();
+        assert!(parse_mc(&a(&[]), &t).unwrap().is_none());
+        // MC-only knobs without --mc are hard errors, never inert
+        for f in [&["--sigma-vt", "0.02"][..], &["--yield", "0.9"][..], &["--corners", "ss"][..]] {
+            let err = parse_mc(&a(f), &t).unwrap_err();
+            assert!(err.to_string().contains("requires --mc"), "{err}");
+        }
+        let m = parse_mc(&a(&["--mc"]), &t).unwrap().unwrap();
+        assert_eq!(m.samples, variation::DEFAULT_SAMPLES);
+        assert_eq!(m.seed, variation::DEFAULT_SEED);
+        assert_eq!(m.corners.len(), 1, "typical corner only by default");
+        // bare --mc directly followed by another flag keeps the default K
+        let m = parse_mc(&a(&["--mc", "--backend"]), &t).unwrap().unwrap();
+        assert_eq!(m.samples, variation::DEFAULT_SAMPLES);
+        let m = parse_mc(
+            &a(&["--mc", "256", "--mc-seed", "7", "--sigma-vt", "0.05", "--corners", "tt, ss"]),
+            &t,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!((m.samples, m.seed), (256, 7));
+        assert_eq!(m.si.sigma_vt, 0.05);
+        assert_eq!(m.os.sigma_vt, 0.05, "--sigma-vt overrides both classes");
+        assert_eq!(m.corners.len(), 2);
+        assert_eq!(m.corners[1].name, "ss");
+        assert!(parse_mc(&a(&["--mc", "abc"]), &t).is_err());
+        assert!(parse_mc(&a(&["--mc", "0"]), &t).is_err());
+        assert!(parse_mc(&a(&["--mc", "8", "--sigma-vt", "-0.1"]), &t).is_err());
+        let err = parse_mc(&a(&["--mc", "8", "--corners", "fff"]), &t).unwrap_err();
+        assert!(err.to_string().contains("fff"), "{err}");
+        assert_eq!(parse_yield(&a(&[])).unwrap(), variation::DEFAULT_YIELD_TARGET);
+        assert_eq!(parse_yield(&a(&["--yield", "0.95"])).unwrap(), 0.95);
+        assert!(parse_yield(&a(&["--yield", "1.5"])).is_err());
+        assert!(parse_yield(&a(&["--yield", "two-nines"])).is_err());
     }
 
     #[test]

@@ -57,6 +57,7 @@ use crate::report;
 use crate::runtime::{RunHealth, SharedRuntime};
 use crate::tech::Tech;
 use crate::util::eng;
+use crate::variation;
 use crate::workloads::{self, CacheLevel, Demand, Machine};
 use std::collections::{BTreeMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -103,6 +104,15 @@ pub struct ComposeSpec {
     pub w_power: f64,
     /// Parallel-compile fan-out of the sweep.
     pub workers: usize,
+    /// `Some(model)` switches the sweep to Monte-Carlo mode: every
+    /// grid point expands into `model.samples` variants via
+    /// [`variation::yield_sweep_health`] and feasibility becomes
+    /// `yield >= yield_target` instead of the nominal shmoo verdict.
+    pub mc: Option<variation::VariationModel>,
+    /// Demand-joint yield a design must reach to count as feasible in
+    /// Monte-Carlo mode (point estimate; the Wilson interval is
+    /// reported, not gated on — see [`variation::DesignYield`]).
+    pub yield_target: f64,
 }
 
 impl ComposeSpec {
@@ -114,6 +124,8 @@ impl ComposeSpec {
             w_area: 0.5,
             w_power: 0.5,
             workers: dse::default_workers(),
+            mc: None,
+            yield_target: variation::DEFAULT_YIELD_TARGET,
         }
     }
 }
@@ -128,6 +140,9 @@ pub struct Chosen {
     pub freq_margin: f64,
     /// `retention / demanded lifetime` (>= 1; infinite for SRAM).
     pub retention_margin: f64,
+    /// Demand-joint yield point estimate of the chosen design
+    /// (Monte-Carlo selections only; `None` on the nominal path).
+    pub yield_p: Option<f64>,
 }
 
 /// Feasible-set / front / selection summary for one demand.
@@ -226,6 +241,65 @@ pub fn select_for(
                 retention_margin: e.perf.retention_s / d.lifetime_s,
                 cost: c,
                 eval: e,
+                yield_p: None,
+            }
+        });
+    Selection {
+        demand: *d,
+        envelope: false,
+        feasible: feasible.len(),
+        front: front.len(),
+        choice,
+    }
+}
+
+/// Statistical (Monte-Carlo) counterpart of [`select_for`]: a design
+/// is feasible iff its demand-joint yield point estimate
+/// ([`variation::DesignYield::yield_for`]) reaches `target` —
+/// quarantined variants already counted against that yield — and the
+/// front/cost ranking runs over the yield-adjusted points
+/// ([`variation::DesignYield::adjusted`]: per-metric means over
+/// functional samples), so selection optimizes the distribution's
+/// center, not the nominal's optimism.  A yield-adjusted mean can
+/// still miss a demand floor ([`dse::cost`] goes infinite); such a
+/// design stays in `feasible` but cannot be chosen.
+pub fn select_for_yield(
+    dys: &[variation::DesignYield],
+    d: &Demand,
+    w_delay: f64,
+    w_area: f64,
+    w_power: f64,
+    target: f64,
+) -> Selection {
+    let feasible: Vec<(f64, Evaluated)> = dys
+        .iter()
+        .filter_map(|dy| {
+            let est = dy.yield_for(d);
+            (est.p >= target).then(|| (est.p, dy.adjusted(target)))
+        })
+        .collect();
+    let evals: Vec<Evaluated> = feasible.iter().map(|(_, e)| e.clone()).collect();
+    let front = pareto_area_leak_fop(&evals);
+    let w = CostWeights {
+        w_delay,
+        w_area,
+        w_power,
+        f_min_hz: d.read_freq_hz,
+        t_retain_min_s: d.lifetime_s,
+    };
+    let choice = front
+        .iter()
+        .map(|&i| (i, dse::cost(&w, &evals[i])))
+        .filter(|(_, c)| c.is_finite())
+        .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite costs compare"))
+        .map(|(i, c)| {
+            let e = evals[i].clone();
+            Chosen {
+                freq_margin: e.perf.f_op_hz / d.read_freq_hz,
+                retention_margin: e.perf.retention_s / d.lifetime_s,
+                cost: c,
+                eval: e,
+                yield_p: Some(feasible[i].0),
             }
         });
     Selection {
@@ -255,6 +329,12 @@ pub fn compose_cached(
     spec: &ComposeSpec,
     cache: &EvalCache,
 ) -> crate::Result<Composition> {
+    if let Some(model) = &spec.mc {
+        // Monte-Carlo mode: sampled variants share their design's
+        // ConfigKey, so the point cache cannot distinguish them — the
+        // MC sweep bypasses it entirely (cache_hits reports 0).
+        return compose_mc(tech, rt, spec, model);
+    }
     let configs = design_grid();
     let (h0, m0) = cache.stats();
     let (evals, health) = dse::evaluate_all_batched_cached_health(
@@ -284,6 +364,65 @@ pub fn compose_cached(
         distinct: cache.len(),
         cache_hits: h1 - h0,
         cache_misses: m1 - m0,
+        health,
+    })
+}
+
+/// Yield-aware composition: expand the whole design grid into
+/// `model.samples` variants per design via one
+/// [`variation::yield_sweep_health`] mega-batch (grouped-ceiling
+/// execution counts across **all** `K x D` variants) and select
+/// per-demand / per-level banks with [`select_for_yield`] at
+/// `spec.yield_target`.  `cache_misses` reports the underlying
+/// pipeline evaluations paid (`distinct * (K + 1)`: nominal plus K
+/// samples per design); `cache_hits` is 0 by construction.
+pub fn compose_mc(
+    tech: &Tech,
+    rt: &SharedRuntime,
+    spec: &ComposeSpec,
+    model: &variation::VariationModel,
+) -> crate::Result<Composition> {
+    let configs = design_grid();
+    let (dys, health) = variation::yield_sweep_health(
+        tech,
+        rt,
+        &configs,
+        model,
+        spec.workers,
+        spec.window_resolution,
+    )?;
+    let mut per_demand = Vec::new();
+    for d in workloads::all_demands(spec.machine) {
+        per_demand.push(select_for_yield(
+            &dys,
+            &d,
+            spec.w_delay,
+            spec.w_area,
+            spec.w_power,
+            spec.yield_target,
+        ));
+    }
+    let mut per_level = Vec::new();
+    for level in [CacheLevel::L1, CacheLevel::L2] {
+        let env = workloads::envelope(level, spec.machine);
+        let mut s = select_for_yield(
+            &dys,
+            &env,
+            spec.w_delay,
+            spec.w_area,
+            spec.w_power,
+            spec.yield_target,
+        );
+        s.envelope = true;
+        per_level.push(s);
+    }
+    Ok(Composition {
+        machine: spec.machine.name,
+        per_demand,
+        per_level,
+        distinct: dys.len(),
+        cache_hits: 0,
+        cache_misses: dys.len() * (model.samples + 1),
         health,
     })
 }
@@ -584,6 +723,59 @@ mod tests {
         assert!(none.choice.is_none());
     }
 
+    fn fake_yield(flavor: CellFlavor, f: f64, ret: f64, area: f64, pass: usize, k: usize) -> variation::DesignYield {
+        // `pass` samples meet everything, the rest fail margin
+        let mut samples = Vec::new();
+        for i in 0..k {
+            let mut e = fake(flavor, f, ret, area, 1e-7);
+            if i >= pass {
+                e.perf.functional = false;
+            }
+            samples.push(e);
+        }
+        let functional = pass;
+        let stats = variation::YieldStats {
+            functional: variation::wilson(functional, k, variation::WILSON_Z),
+            f_op_hz: variation::metric_stats(&vec![f; pass.max(1)]),
+            retention_s: variation::metric_stats(&vec![ret; pass.max(1)]),
+            leakage_w: variation::metric_stats(&[1e-7]),
+            stored_one_v: variation::metric_stats(&[0.6]),
+            quarantined: Vec::new(),
+        };
+        variation::DesignYield {
+            config: Config::new(32, 32, flavor),
+            area_um2: area,
+            nominal: fake(flavor, f, ret, area, 1e-7),
+            samples,
+            stats,
+        }
+    }
+
+    #[test]
+    fn yield_selection_gates_on_target_and_ranks_adjusted_means() {
+        let d = demand(1e9, 1e-4);
+        let dys = vec![
+            fake_yield(CellFlavor::GcSiSiNp, 2e9, 1e-3, 1e4, 8, 8), // yield 1.0
+            fake_yield(CellFlavor::GcOsOs, 2e9, 1e-2, 5e3, 6, 8),   // yield 0.75
+        ];
+        // strict target: only the perfect design survives
+        let s = select_for_yield(&dys, &d, 1.0, 0.5, 0.5, 0.99);
+        assert_eq!(s.feasible, 1);
+        let ch = s.choice.expect("one yield-feasible design");
+        assert_eq!(ch.eval.config.flavor, CellFlavor::GcSiSiNp);
+        assert_eq!(ch.yield_p, Some(1.0));
+        // lax target: both survive, the smaller/cooler OS point wins
+        let s = select_for_yield(&dys, &d, 1.0, 0.5, 0.5, 0.5);
+        assert_eq!(s.feasible, 2);
+        let ch = s.choice.expect("both feasible");
+        assert_eq!(ch.eval.config.flavor, CellFlavor::GcOsOs);
+        assert_eq!(ch.yield_p, Some(0.75));
+        // nothing reaches an impossible demand
+        let s = select_for_yield(&dys, &demand(1e12, 1.0), 1.0, 0.5, 0.5, 0.5);
+        assert_eq!((s.feasible, s.front), (0, 0));
+        assert!(s.choice.is_none());
+    }
+
     #[test]
     fn totals_need_every_level_served() {
         let d = demand(1e9, 1e-4);
@@ -597,6 +789,7 @@ mod tests {
                 cost: 1.0,
                 freq_margin: 2.0,
                 retention_margin: 10.0,
+                yield_p: None,
             }),
         };
         let empty = Selection { demand: d, envelope: true, feasible: 0, front: 0, choice: None };

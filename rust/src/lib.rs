@@ -40,6 +40,9 @@
 //! * [`compose`] — workload-driven heterogeneous composition: one
 //!   cross-flavor mega-sweep, per-demand feasibility/Pareto/min-cost
 //!   selection, per-level bank portfolio.
+//! * [`variation`] — Monte-Carlo variation engine: sampled per-instance
+//!   perturbations ride the batched characterizer as one mega-batch and
+//!   reduce to Wilson-bounded yield estimates for yield-aware DSE.
 //! * [`report`] — table/CSV renderers for the paper's figures.
 //! * [`cli`] — strict flag parsing shared by the `opengcram` binary.
 //! * [`util`] — JSON parsing, PRNG, timing (offline-registry stand-ins).
@@ -59,6 +62,7 @@ pub mod runtime;
 pub mod sim;
 pub mod tech;
 pub mod util;
+pub mod variation;
 pub mod workloads;
 
 /// Crate-wide result type (anyhow is in the offline registry closure).

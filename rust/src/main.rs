@@ -5,9 +5,19 @@
 //!                      [--wwlls] [--gds out.gds] [--spice out.sp]
 //!   opengcram char     ... (adds transient characterization)
 //!   opengcram dse      --level l1|l2 --machine h100|gt520m [--window-res 0.1]
+//!                      [--mc [K] [--yield 0.99] [--mc-seed S]
+//!                       [--sigma-vt V] [--corners tt,ss]]
 //!   opengcram compose  --machine h100|gt520m [--window-res 0.1]
 //!                      [--weights delay,area,power] [--csv out.csv]
-//!                      [--plan [--cap 256]]
+//!                      [--plan [--cap 256]] [--mc [K] [--yield 0.99] ...]
+//!
+//! `--mc` switches `dse`/`compose` to Monte-Carlo mode: each design
+//! expands into K sampled per-instance variants (VT mismatch, geometry
+//! deltas, VDD droop, optional corner mix — `opengcram::variation`)
+//! riding the batched characterizer as one mega-batch, and feasibility
+//! becomes "demand-joint yield >= --yield" with Wilson 95 % intervals
+//! reported.  Same seed, same yields — regardless of worker count or
+//! batch order.
 //!
 //! Every transient-backed subcommand takes `--backend native|pjrt|auto`
 //! (default `auto`): `native` runs the in-process EKV solver — no
@@ -35,7 +45,7 @@ use opengcram::cli;
 use opengcram::compiler::{compile, CellFlavor, Config};
 use opengcram::tech::sg40;
 use opengcram::util::eng;
-use opengcram::{characterize, compose, dse, report, workloads};
+use opengcram::{characterize, compose, dse, report, variation, workloads};
 use std::path::Path;
 
 fn main() {
@@ -102,14 +112,80 @@ fn run() -> opengcram::Result<()> {
             let level = cli::parse_level(&args)?;
             let window_res: f64 =
                 cli::parse_or(&args, "--window-res", characterize::DEFAULT_WINDOW_RESOLUTION)?;
+            let mc = cli::parse_mc(&args, &tech)?;
             let rt = cli::parse_backend(&args)?.load(Path::new("artifacts"))?;
+            let configs = dse::fig10_configs(CellFlavor::GcSiSiNp);
+            if let Some(model) = mc {
+                // statistical mode: every size expands into K sampled
+                // variants riding one mega-batch; a cell passes when its
+                // demand-joint yield reaches the --yield target
+                let target = cli::parse_yield(&args)?;
+                let (dys, health) = variation::yield_sweep_health(
+                    &tech,
+                    &rt,
+                    &configs,
+                    &model,
+                    dse::default_workers(),
+                    window_res,
+                )?;
+                let mut table =
+                    report::Table::new(&["task", "demand MHz", "16", "32", "64", "96", "128"]);
+                for task in &workloads::TASKS {
+                    let d = workloads::profile(task, level, machine);
+                    let mut row = vec![task.name.to_string(), report::mhz(d.read_freq_hz)];
+                    for dy in &dys {
+                        row.push(dy.yield_verdict(&d, target).glyph().to_string());
+                    }
+                    table.row(&row);
+                }
+                println!("{}", table.render());
+                println!(
+                    "P=yield>={target} f=too slow r=retention x=no margin q=quarantined \
+                     (K={} seed={:#x}, {} {:?}, {} backend)",
+                    model.samples,
+                    model.seed,
+                    machine.name,
+                    level,
+                    rt.backend_name()
+                );
+                let mut yt = report::Table::new(&[
+                    "design", "functional", "95% CI", "f_op", "retention", "ret q05..q95",
+                ]);
+                for dy in &dys {
+                    let s = &dy.stats;
+                    yt.row(&[
+                        format!(
+                            "{}x{}",
+                            dy.config.word_size, dy.config.num_words
+                        ),
+                        format!("{}/{}", s.functional.passed, s.functional.samples),
+                        format!("[{:.3}, {:.3}]", s.functional.lo, s.functional.hi),
+                        report::band(s.f_op_hz.mean, s.f_op_hz.sigma, "Hz"),
+                        report::band(s.retention_s.mean, s.retention_s.sigma, "s"),
+                        format!(
+                            "{}..{}",
+                            eng(s.retention_s.q05, "s"),
+                            eng(s.retention_s.q95, "s")
+                        ),
+                    ]);
+                }
+                println!("{}", yt.render());
+                println!("run health: {}", health.summary());
+                for q in &health.quarantined {
+                    println!(
+                        "  quarantined [{}] {} — {} stage: {}",
+                        q.index, q.design, q.stage, q.reason
+                    );
+                }
+                return Ok(());
+            }
             let mut table = report::Table::new(&["task", "demand MHz", "16", "32", "64", "96", "128"]);
             // batch-first sweep: compile in parallel, characterize in
             // shared padded artifact batches via the coordinator
             let (evals, health) = dse::evaluate_all_batched_health(
                 &tech,
                 &rt,
-                &dse::fig10_configs(CellFlavor::GcSiSiNp),
+                &configs,
                 dse::default_workers(),
                 window_res,
             )?;
@@ -193,8 +269,30 @@ fn run() -> opengcram::Result<()> {
             spec.w_delay = w_delay;
             spec.w_area = w_area;
             spec.w_power = w_power;
+            spec.mc = cli::parse_mc(&args, &tech)?;
+            if spec.mc.is_some() {
+                spec.yield_target = cli::parse_yield(&args)?;
+            }
             let c = compose::compose(&tech, &rt, &spec)?;
             println!("{}", compose::table(&c));
+            if let Some(model) = &spec.mc {
+                println!(
+                    "yield-aware selection: K={} seed={:#x} target {}",
+                    model.samples, model.seed, spec.yield_target
+                );
+                for s in c.per_demand.iter().chain(c.per_level.iter()) {
+                    if let Some(ch) = &s.choice {
+                        if let Some(p) = ch.yield_p {
+                            let label = if s.envelope {
+                                format!("{:?} (all tasks)", s.demand.level)
+                            } else {
+                                format!("{:?} {}", s.demand.level, s.demand.task.name)
+                            };
+                            println!("  {label}: chosen yield {p:.4}");
+                        }
+                    }
+                }
+            }
             match (c.total_area_um2(), c.total_leakage_w()) {
                 (Some(area), Some(leak)) => println!(
                     "portfolio (per-level envelopes): {} um^2 total, {} leakage",

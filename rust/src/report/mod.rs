@@ -82,6 +82,30 @@ pub fn sci(v: f64) -> String {
     format!("{v:.3e}")
 }
 
+/// `mean ± sigma` engineering-notation band — the sigma-band cell the
+/// Monte-Carlo yield tables and `bin/figures` print.  A NaN mean (no
+/// functional samples) renders as a bare dash; a NaN or zero sigma
+/// collapses to the mean alone (e.g. SRAM's infinite retention, or a
+/// zero-sigma model).
+pub fn band(mean: f64, sigma: f64, unit: &str) -> String {
+    if mean.is_nan() {
+        return "-".into();
+    }
+    if sigma.is_nan() || sigma == 0.0 {
+        return crate::util::eng(mean, unit);
+    }
+    format!("{} ± {}", crate::util::eng(mean, unit), crate::util::eng(sigma, unit))
+}
+
+/// A yield fraction as a percentage with one decimal (`0.9961` →
+/// `"99.6%"`).
+pub fn pct(p: f64) -> String {
+    if p.is_nan() {
+        return "-".into();
+    }
+    format!("{:.1}%", p * 100.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,6 +133,19 @@ mod tests {
     fn csv_shape() {
         let s = csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
         assert_eq!(s, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn band_and_pct_handle_degenerate_stats() {
+        assert_eq!(band(f64::NAN, f64::NAN, "s"), "-");
+        assert_eq!(band(1e-3, f64::NAN, "s"), crate::util::eng(1e-3, "s"));
+        assert_eq!(band(1e-3, 0.0, "s"), crate::util::eng(1e-3, "s"));
+        let b = band(1e-3, 1e-5, "s");
+        assert!(b.contains('±'), "{b}");
+        assert!(b.contains(&crate::util::eng(1e-5, "s")), "{b}");
+        assert_eq!(pct(0.9961), "99.6%");
+        assert_eq!(pct(1.0), "100.0%");
+        assert_eq!(pct(f64::NAN), "-");
     }
 
     #[test]

@@ -99,6 +99,32 @@ impl Corner {
     }
 }
 
+/// Per-instance Monte-Carlo variation defaults for one device class
+/// ("si" FEOL transistors, "os" BEOL oxide-semiconductor transistors).
+/// Corners model systematic die-to-die shift; these sigmas model the
+/// *within-die* mismatch sampled per cell instance by the `variation`
+/// subsystem.  OS thin-film devices are known to have wider VT spread
+/// than crystalline silicon, which is exactly the trade the paper's
+/// retention-vs-speed story hinges on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VariationDefaults {
+    /// Per-instance VT sigma (V), applied to the cell transistors.
+    pub sigma_vt: f64,
+    /// Relative sigma on geometry-derived electricals (kp, node and
+    /// bitline capacitance) from line-edge/thickness variation.
+    pub sigma_geom: f64,
+    /// Relative sigma on the local supply seen by the cell (IR droop).
+    pub sigma_vdd: f64,
+}
+
+impl VariationDefaults {
+    /// Conservative fallback used when a node does not declare its own
+    /// numbers (keeps `variation` runnable on minimal TechBuilder techs).
+    pub fn generic() -> VariationDefaults {
+        VariationDefaults { sigma_vt: 0.02, sigma_geom: 0.02, sigma_vdd: 0.01 }
+    }
+}
+
 /// A full technology description.
 #[derive(Debug, Clone)]
 pub struct Tech {
@@ -112,6 +138,8 @@ pub struct Tech {
     pub wires: BTreeMap<LayerRole, WireRc>,
     pub cards: BTreeMap<&'static str, DeviceCard>,
     pub corners: Vec<Corner>,
+    /// Monte-Carlo variation defaults per device class ("si", "os").
+    pub variation: BTreeMap<&'static str, VariationDefaults>,
     /// Gate capacitance per W/L unit (F); pairs with `cards`.
     pub c_gate_unit: f64,
     /// Drain junction capacitance per W/L unit (F).
@@ -150,6 +178,15 @@ impl Tech {
     pub fn corner(&self, name: &str) -> Option<&Corner> {
         self.corners.iter().find(|c| c.name == name)
     }
+
+    /// Variation defaults for a device class ("si" / "os"); nodes that
+    /// do not declare the class fall back to the generic numbers.
+    pub fn variation_for(&self, class: &str) -> VariationDefaults {
+        self.variation
+            .get(class)
+            .copied()
+            .unwrap_or_else(VariationDefaults::generic)
+    }
 }
 
 /// Builder implementing the Fig. 1(a) porting flow: layer definitions,
@@ -165,6 +202,7 @@ pub struct TechBuilder {
     wires: BTreeMap<LayerRole, WireRc>,
     cards: BTreeMap<&'static str, DeviceCard>,
     corners: Vec<Corner>,
+    variation: BTreeMap<&'static str, VariationDefaults>,
     c_gate_unit: f64,
     c_junction_unit: f64,
 }
@@ -235,6 +273,11 @@ impl TechBuilder {
         self
     }
 
+    pub fn variation(mut self, class: &'static str, v: VariationDefaults) -> Self {
+        self.variation.insert(class, v);
+        self
+    }
+
     pub fn caps(mut self, c_gate_unit: f64, c_junction_unit: f64) -> Self {
         self.c_gate_unit = c_gate_unit;
         self.c_junction_unit = c_junction_unit;
@@ -277,6 +320,7 @@ impl TechBuilder {
             wires: self.wires,
             cards: self.cards,
             corners,
+            variation: self.variation,
             c_gate_unit: self.c_gate_unit,
             c_junction_unit: self.c_junction_unit,
         })
@@ -336,6 +380,16 @@ mod tests {
     fn corners_default_to_typical() {
         let t = sg40();
         assert!(t.corner("tt").is_some());
+    }
+
+    #[test]
+    fn variation_defaults_declared_and_fallback() {
+        let t = sg40();
+        let si = t.variation_for("si");
+        let os = t.variation_for("os");
+        assert!(si.sigma_vt > 0.0 && os.sigma_vt > si.sigma_vt, "OS spread wider than Si");
+        // unknown class falls back instead of panicking
+        assert_eq!(t.variation_for("ge"), VariationDefaults::generic());
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! same rule *classes* either way, and sg130 provides a strict deck.
 
 use super::cards::sg40 as cards;
-use super::{Corner, Layer, LayerKind, LayerRole, LayerRules, Tech, TechBuilder, WireRc};
+use super::{Corner, Layer, LayerKind, LayerRole, LayerRules, Tech, TechBuilder, VariationDefaults, WireRc};
 
 pub fn sg40() -> Tech {
     TechBuilder::new("sg40", 40, 1.1)
@@ -80,6 +80,11 @@ pub fn sg40() -> Tech {
         .corner(Corner::typical(1.1))
         .corner(Corner { name: "ff", kp_scale: 1.15, vt_shift: -0.04, vdd: 1.21, temp_c: -40.0 })
         .corner(Corner { name: "ss", kp_scale: 0.87, vt_shift: 0.04, vdd: 0.99, temp_c: 125.0 })
+        // ---- per-instance mismatch (Monte-Carlo defaults) ----------------
+        // Si: Pelgrom-style AVT/sqrt(WL) at minimum size; OS thin-film
+        // devices run ~2x wider VT spread and rougher geometry control.
+        .variation("si", VariationDefaults { sigma_vt: 0.018, sigma_geom: 0.02, sigma_vdd: 0.01 })
+        .variation("os", VariationDefaults { sigma_vt: 0.040, sigma_geom: 0.04, sigma_vdd: 0.01 })
         .build()
         .expect("sg40 tech must validate")
 }

@@ -37,6 +37,42 @@ impl Rng {
         r
     }
 
+    /// Derive an independent substream keyed on `label` **without
+    /// advancing this stream**: the child state is a splitmix64 mix of
+    /// the parent state with an FNV-1a hash of the label.  Because the
+    /// parent is untouched, `split` is a pure function of
+    /// (parent state, label) — deriving the same labels in any order,
+    /// from any number of worker threads, yields bit-identical streams,
+    /// which is what makes per-(design, sample) Monte-Carlo draws
+    /// reproducible independent of batch order and worker count.
+    /// Sibling streams (same parent, different labels) are statistically
+    /// independent; the property tests pin both claims plus the first
+    /// 64 draws of a reference split as golden values.
+    pub fn split(&self, label: &str) -> Rng {
+        // FNV-1a over the label bytes
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in label.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        // fold each parent state word through splitmix64 seeded by the
+        // label hash — same finalizer as `new`, so child quality matches
+        let mut x = h;
+        let mut mix = |v: u64| {
+            x = x.wrapping_add(v).wrapping_add(0x9e3779b97f4a7c15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            z ^ (z >> 31)
+        };
+        let s = [mix(self.s[0]), mix(self.s[1]), mix(self.s[2]), mix(self.s[3])];
+        if s == [0u64; 4] {
+            // xoshiro's one forbidden state; unreachable in practice
+            return Rng::new(h);
+        }
+        Rng { s }
+    }
+
     /// Uniform in [0, 1).
     pub fn f64(&mut self) -> f64 {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
@@ -47,9 +83,36 @@ impl Rng {
         lo + self.f64() * (hi - lo)
     }
 
+    /// Standard normal draw (Box–Muller, trigonometric form; consumes
+    /// exactly two `next_u64`s, so stream positions stay predictable).
+    pub fn normal(&mut self) -> f64 {
+        // u1 in (0, 1] keeps the log finite
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
     /// Uniform integer in [0, n).
+    ///
+    /// Unbiased for every `n` (regression: this was `next_u64() % n`,
+    /// which over-weights the low residues whenever `n` does not divide
+    /// 2^64 — ~2^-32-level skew for small `n`, but structural bias for
+    /// large non-power-of-two `n`).  Classic rejection sampling: draws
+    /// landing in the final partial cycle of `2^64 / n` are redrawn, so
+    /// every accepted residue is exactly equally likely.  The rejection
+    /// probability is `(2^64 mod n) / 2^64` (< 2^-32 for n < 2^32), so
+    /// for the sweep-sized `n` used here the draw sequence is the same
+    /// as before in practice — one `next_u64` per call.
     pub fn below(&mut self, n: usize) -> usize {
-        (self.next_u64() % n.max(1) as u64) as usize
+        let n = n.max(1) as u64;
+        // 2^64 mod n, computed without overflow
+        let partial = (u64::MAX % n).wrapping_add(1) % n;
+        loop {
+            let v = self.next_u64();
+            if partial == 0 || v <= u64::MAX - partial {
+                return (v % n) as usize;
+            }
+        }
     }
 
     /// Log-uniform in [lo, hi) (both > 0); natural for sweep parameters
@@ -123,5 +186,186 @@ mod tests {
         let n = 100_000;
         let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
         assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    /// The first 64 draws of `Rng::new(42).split("mc/0")` pinned as
+    /// golden values.  Any change to the seeding, the split mixer, or
+    /// the xoshiro core shifts every Monte-Carlo stream in the repo —
+    /// this test makes that loud instead of silently changing yields.
+    #[test]
+    fn split_golden_draws_are_stable() {
+        const GOLDEN: [u64; 64] = [
+            0x5be7d2ff6313f90e, 0xb2f95a9825dc550e, 0xb7902d22206d294d, 0x3410722c61096b76,
+            0x842560c4dfe6c0d0, 0xc31b198be0380635, 0xa9ee28e625afd970, 0xaa5273dc86568291,
+            0x74b6a86f5f52610e, 0x7e5879702b3f91b0, 0x70a3d65e11f9e513, 0xe005db0ea1f82a69,
+            0x5371e95e33f5fe0b, 0xe7537e2a8e7fca74, 0x8e3d3d71ade32b20, 0x40c28ab38053779b,
+            0xf2bd29ce276f53c4, 0x9b63443374ad6927, 0x618c0a845d9ea3fd, 0xc817b3dd406959c9,
+            0x0e88f9fb4034f47f, 0x1c18435b517234c6, 0xd0e19b9df386de0f, 0xb50d834a0e5af907,
+            0x97068b417995f90f, 0x389c4cb90f410829, 0x09918e00c43aa4ef, 0x46f916314a9f37f6,
+            0x3525092b426d3d88, 0xd29545c1d4779cc5, 0x75184c1f30837d4e, 0x1f58687df4cde265,
+            0x9950ce2255638a0f, 0xfc585f483e34b625, 0x3c92714cf7069148, 0x5d2ab73117a222f5,
+            0x297fe2f12f10899d, 0x828040a328abdf24, 0xd6668f9df25e2198, 0xc6cdac02a80e283f,
+            0xc2afede47b5949d7, 0xa4e32108b823e277, 0xefb358d7c0ec719c, 0x36cd6b62afeaec08,
+            0xbeade98865437273, 0x904341bd0bc67d07, 0x141851d91bb8feb2, 0x2c258ee7c9b0599f,
+            0x6830580911e8cbc5, 0xa48327acc6a64caf, 0x339061b176d745f9, 0xc580332efeac1e21,
+            0xf23f44e22ff2e2eb, 0xf148259326b509b4, 0x2c0a5db117c823dc, 0x6edf5dcd55ac8bcd,
+            0xf7d0a7a7d54ae5fd, 0x6e12ba6d47430490, 0x5f8518259b9c93a5, 0x5d0f5f776e346c01,
+            0xbe66cf4423c69941, 0x50cc0f3c14d166d1, 0x5a5b65e60226df16, 0x273a1bc707b246ef,
+        ];
+        let mut child = Rng::new(42).split("mc/0");
+        for (i, want) in GOLDEN.iter().enumerate() {
+            assert_eq!(child.next_u64(), *want, "draw {i} diverged from golden");
+        }
+    }
+
+    /// Split is a pure function of (parent state, label): it must not
+    /// advance the parent, so deriving substreams in any order — or
+    /// from any partition of labels across worker threads — gives
+    /// bit-identical children.
+    #[test]
+    fn split_is_order_and_worker_independent() {
+        let parent = Rng::new(0xDEAD_BEEF);
+        let labels: Vec<String> = (0..32).map(|i| format!("d{}/s{}", i % 4, i / 4)).collect();
+
+        // forward vs reverse derivation order
+        let fwd: Vec<Vec<u64>> = labels
+            .iter()
+            .map(|l| {
+                let mut c = parent.split(l);
+                (0..8).map(|_| c.next_u64()).collect()
+            })
+            .collect();
+        let mut rev: Vec<(usize, Vec<u64>)> = labels
+            .iter()
+            .enumerate()
+            .rev()
+            .map(|(i, l)| {
+                let mut c = parent.split(l);
+                (i, (0..8).map(|_| c.next_u64()).collect())
+            })
+            .collect();
+        rev.sort_by_key(|(i, _)| *i);
+        for (i, (_, r)) in rev.into_iter().enumerate() {
+            assert_eq!(fwd[i], r, "label {} depends on derivation order", labels[i]);
+        }
+
+        // threaded partition (simulates a worker pool splitting the label set)
+        let threaded: Vec<Vec<u64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = labels
+                .chunks(7)
+                .map(|chunk| {
+                    let parent = parent.clone();
+                    scope.spawn(move || {
+                        chunk
+                            .iter()
+                            .map(|l| {
+                                let mut c = parent.split(l);
+                                (0..8).map(|_| c.next_u64()).collect::<Vec<u64>>()
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(fwd, threaded);
+
+        // and the parent stream itself is untouched by splitting
+        let mut a = Rng::new(0xDEAD_BEEF);
+        let mut b = parent.clone();
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    /// Sibling streams must be statistically independent: the sample
+    /// cross-correlation of their uniform draws stays near zero, and no
+    /// sibling reproduces another's draws.
+    #[test]
+    fn split_siblings_are_uncorrelated() {
+        let parent = Rng::new(9);
+        let n = 20_000;
+        let streams: Vec<Vec<f64>> = (0..4)
+            .map(|i| {
+                let mut c = parent.split(&format!("sib/{i}"));
+                (0..n).map(|_| c.f64()).collect()
+            })
+            .collect();
+        for i in 0..streams.len() {
+            for j in (i + 1)..streams.len() {
+                let (a, b) = (&streams[i], &streams[j]);
+                assert_ne!(a[..64], b[..64], "siblings {i},{j} share draws");
+                let (ma, mb) = (
+                    a.iter().sum::<f64>() / n as f64,
+                    b.iter().sum::<f64>() / n as f64,
+                );
+                let cov: f64 = a
+                    .iter()
+                    .zip(b)
+                    .map(|(x, y)| (x - ma) * (y - mb))
+                    .sum::<f64>()
+                    / n as f64;
+                // uniform variance is 1/12; |rho| ~ O(1/sqrt(n)) for
+                // independent streams, so 0.05 is a ~7-sigma bound
+                let rho = cov / (1.0 / 12.0);
+                assert!(rho.abs() < 0.05, "siblings {i},{j} correlate: rho={rho}");
+            }
+        }
+    }
+
+    /// Regression for the `below` modulo bias: with rejection sampling
+    /// every residue class is equally likely, so a chi-square statistic
+    /// over non-power-of-two bins stays under the fixed-seed bound.
+    /// (Fixed seeds keep this deterministic — it cannot flake.)
+    #[test]
+    fn below_is_uniform_chi_square() {
+        for (seed, n) in [(11u64, 6usize), (12, 17), (13, 1000)] {
+            let mut r = Rng::new(seed);
+            let draws = 60_000;
+            let mut counts = vec![0u64; n];
+            for _ in 0..draws {
+                let v = r.below(n);
+                assert!(v < n);
+                counts[v] += 1;
+            }
+            let expect = draws as f64 / n as f64;
+            let chi2: f64 = counts
+                .iter()
+                .map(|&c| {
+                    let d = c as f64 - expect;
+                    d * d / expect
+                })
+                .sum();
+            // df = n-1; 99.9th percentile is ~22.5 (df=5), ~39 (df=16),
+            // ~1150 (df=999).  Generous fixed bounds well above those.
+            let bound = 2.0 * n as f64 + 30.0;
+            assert!(chi2 < bound, "chi2={chi2} for n={n} seed={seed}");
+        }
+    }
+
+    /// `below` must stay exact at the boundaries the sweeps rely on.
+    #[test]
+    fn below_edge_cases() {
+        let mut r = Rng::new(5);
+        assert_eq!(r.below(1), 0);
+        assert_eq!(r.below(0), 0, "n=0 clamps to 1");
+        for _ in 0..1000 {
+            assert!(r.below(2) < 2);
+        }
+    }
+
+    /// Box–Muller normal: centered, unit variance, deterministic.
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(21);
+        let n = 50_000;
+        let draws: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = draws.iter().sum::<f64>() / n as f64;
+        let var = draws.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+        let mut a = Rng::new(21);
+        let mut b = Rng::new(21);
+        for _ in 0..100 {
+            assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+        }
     }
 }

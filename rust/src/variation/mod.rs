@@ -1,0 +1,659 @@
+//! Monte-Carlo variation and yield-aware feasibility (PR 8).
+//!
+//! The paper's pitch is that GCRAM retention and speed are *tunable*
+//! through transistor design and operating voltage — but real silicon
+//! samples those knobs from distributions, so a compiler that only
+//! evaluates nominal points overstates feasibility (MCAIMem makes the
+//! same argument for GC-vs-SRAM comparisons).  This module makes
+//! feasibility statistical:
+//!
+//! 1. a [`VariationModel`] (per-instance VT sigma, geometry deltas,
+//!    VDD droop — per-device-class defaults from
+//!    [`crate::tech::Tech::variation_for`], plus a PVT corner mix)
+//!    expands each candidate design into `K` sampled variants, each a
+//!    [`CharPlan::with_variation`] perturbation of the nominal plan;
+//! 2. every variant of every design rides **one mega-batch** through
+//!    [`characterize::characterize_plans_health`], so `K x D` samples
+//!    pay the grouped-ceiling execution count the coordinator already
+//!    guarantees (retention packs to `ceil(K*D/cap)`; write/read pack
+//!    per quantized-window bucket) instead of `K*D` executions;
+//! 3. the per-design spans reduce to [`YieldStats`]: functional yield
+//!    with a 95 % Wilson interval, per-metric mean/sigma/quantiles,
+//!    and the demand-joint `P(functional ∧ demand met)` via
+//!    [`DesignYield::yield_for`].
+//!
+//! # Reproducibility
+//!
+//! Sample `i` of design `d` draws from
+//! `Rng::new(seed).split(stream_label(d, i))` — a pure function of the
+//! seed and the design's *identity* (not its position in the batch),
+//! so yields are bit-reproducible regardless of batch order, config
+//! duplication, or worker count ([`crate::util::rng::Rng::split`]
+//! never advances the parent stream).  A zero-sigma model produces the
+//! identity [`Perturb`] for every sample, and
+//! [`CharPlan::with_variation`] maps the identity to the bitwise
+//! nominal plan — so zero-sigma Monte-Carlo results are bit-equal to
+//! the non-MC path (`tests/variation.rs` pins all of this).
+//!
+//! # Fault accounting
+//!
+//! Quarantined variants (the PR-6 fault path: degenerate inputs,
+//! non-finite outputs, poisoned rows) count **against** yield as
+//! non-functional samples, with their reason kept in
+//! [`YieldStats::quarantined`] and in the sweep's [`RunHealth`] —
+//! never silently dropped.  `tests/fault.rs` pins that one poisoned
+//! variant lowers its design's yield by exactly `1/K` while sibling
+//! variants stay bit-identical.
+
+use crate::characterize::{self, calls_for, BankPerf, CharPlan, Perturb, Quarantine};
+use crate::compiler::{compile, Bank, CellFlavor, Config, ConfigKey};
+use crate::dse::{self, Evaluated};
+use crate::runtime::{RunHealth, SharedRuntime};
+use crate::tech::{Corner, Tech, VariationDefaults};
+use crate::util::rng::Rng;
+use crate::workloads::Demand;
+use std::collections::{HashMap, HashSet};
+
+/// Default sample count for `--mc` without an explicit K.
+pub const DEFAULT_SAMPLES: usize = 64;
+/// Default Monte-Carlo seed (any fixed value works; goldens pin it).
+pub const DEFAULT_SEED: u64 = 0x0BAD_5EED;
+/// Default `--yield` feasibility target.
+pub const DEFAULT_YIELD_TARGET: f64 = 0.99;
+/// z for the two-sided 95 % Wilson score interval.
+pub const WILSON_Z: f64 = 1.959963984540054;
+
+/// The sampled-variation model: how many variants per design, the
+/// substream seed, per-device-class mismatch sigmas, and the PVT
+/// corner mix each sample draws its systematic shift from.
+#[derive(Debug, Clone)]
+pub struct VariationModel {
+    /// Variants per design (K).
+    pub samples: usize,
+    /// Root seed; every (design, sample) substream derives from it.
+    pub seed: u64,
+    /// Mismatch sigmas for FEOL silicon cell devices.
+    pub si: VariationDefaults,
+    /// Mismatch sigmas for BEOL oxide-semiconductor cell devices.
+    pub os: VariationDefaults,
+    /// Corners sampled uniformly per instance (die-to-die systematic
+    /// shift under the per-instance mismatch).  Must be non-empty;
+    /// `[Corner::typical(vdd)]` for mismatch-only sampling.
+    pub corners: Vec<Corner>,
+}
+
+impl VariationModel {
+    /// Model with the node's declared per-class defaults and the
+    /// typical corner only.
+    pub fn from_tech(tech: &Tech, samples: usize, seed: u64) -> VariationModel {
+        VariationModel {
+            samples,
+            seed,
+            si: tech.variation_for("si"),
+            os: tech.variation_for("os"),
+            corners: vec![Corner::typical(tech.vdd)],
+        }
+    }
+
+    /// All-zero sigmas at the typical corner: every sample is the
+    /// identity perturbation (the zero-sigma bitwise-parity pin).
+    pub fn zero(samples: usize, seed: u64, vdd: f64) -> VariationModel {
+        let z = VariationDefaults { sigma_vt: 0.0, sigma_geom: 0.0, sigma_vdd: 0.0 };
+        VariationModel { samples, seed, si: z, os: z, corners: vec![Corner::typical(vdd)] }
+    }
+
+    /// Override the VT sigma for both device classes (CLI `--sigma-vt`).
+    pub fn with_sigma_vt(mut self, sigma_vt: f64) -> VariationModel {
+        self.si.sigma_vt = sigma_vt;
+        self.os.sigma_vt = sigma_vt;
+        self
+    }
+
+    fn sigmas(&self, flavor: CellFlavor) -> &VariationDefaults {
+        if flavor == CellFlavor::GcOsOs {
+            &self.os
+        } else {
+            &self.si
+        }
+    }
+
+    /// Stable substream label for (design identity, sample index):
+    /// built from the config's *fields*, never its batch position, so
+    /// the same design draws the same variants anywhere in any sweep.
+    pub fn stream_label(cfg: &Config, sample: usize) -> String {
+        format!(
+            "{:?}/{}x{}/wwlls{}/mux{:?}/vt{:?}#{}",
+            cfg.flavor, cfg.word_size, cfg.num_words, cfg.wwlls, cfg.mux_factor, cfg.write_vt, sample
+        )
+    }
+
+    /// Draw sample `sample`'s perturbation for `cfg`.  Pure: depends
+    /// only on (seed, design identity, sample index, sigmas, corners).
+    /// With all-zero sigmas and the typical corner this returns the
+    /// identity perturbation exactly (`0.0 * z` collapses to `±0.0`,
+    /// and `Perturb::is_identity` treats `-0.0` as identity).
+    pub fn perturb(&self, tech: &Tech, cfg: &Config, sample: usize) -> Perturb {
+        let s = self.sigmas(cfg.flavor);
+        let mut r = Rng::new(self.seed).split(&Self::stream_label(cfg, sample));
+        let corner = if self.corners.is_empty() {
+            Corner::typical(tech.vdd)
+        } else {
+            self.corners[r.below(self.corners.len())]
+        };
+        Perturb {
+            vt_shift_wr: corner.vt_shift + s.sigma_vt * r.normal(),
+            vt_shift_rd: corner.vt_shift + s.sigma_vt * r.normal(),
+            kp_scale: corner.kp_scale * (1.0 + s.sigma_geom * r.normal()),
+            c_scale: 1.0 + s.sigma_geom * r.normal(),
+            vdd_scale: (corner.vdd / tech.vdd) * (1.0 + s.sigma_vdd * r.normal()),
+        }
+    }
+}
+
+/// A binomial yield estimate with its 95 % Wilson score interval.
+#[derive(Debug, Clone, Copy)]
+pub struct YieldEstimate {
+    pub passed: usize,
+    pub samples: usize,
+    /// Point estimate `passed / samples` (NaN when `samples == 0`).
+    pub p: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+/// Wilson score interval for `passed` successes in `samples` trials at
+/// critical value `z`.  Unlike the normal approximation it stays
+/// inside [0, 1] and behaves at p-hat near 0/1 — exactly the regime a
+/// 99 % yield target lives in.
+pub fn wilson(passed: usize, samples: usize, z: f64) -> YieldEstimate {
+    if samples == 0 {
+        return YieldEstimate { passed: 0, samples: 0, p: f64::NAN, lo: 0.0, hi: 1.0 };
+    }
+    let n = samples as f64;
+    let p = passed as f64 / n;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / n;
+    let center = p + z2 / (2.0 * n);
+    let half = z * (p * (1.0 - p) / n + z2 / (4.0 * n * n)).sqrt();
+    YieldEstimate {
+        passed,
+        samples,
+        p,
+        lo: ((center - half) / denom).max(0.0),
+        hi: ((center + half) / denom).min(1.0),
+    }
+}
+
+/// Mean / sigma / quantiles of one metric over the functional samples.
+/// Non-finite values propagate into the mean (SRAM retention is
+/// infinite by design); NaNs are excluded up front.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricStats {
+    pub mean: f64,
+    pub sigma: f64,
+    pub q05: f64,
+    pub q50: f64,
+    pub q95: f64,
+}
+
+/// Compute [`MetricStats`] (nearest-rank quantiles).  All-NaN or empty
+/// input yields all-NaN stats.
+pub fn metric_stats(values: &[f64]) -> MetricStats {
+    let mut v: Vec<f64> = values.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return MetricStats {
+            mean: f64::NAN,
+            sigma: f64::NAN,
+            q05: f64::NAN,
+            q50: f64::NAN,
+            q95: f64::NAN,
+        };
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaNs filtered"));
+    let n = v.len() as f64;
+    let mean = v.iter().sum::<f64>() / n;
+    let sigma = (v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n).sqrt();
+    let q = |f: f64| v[((n - 1.0) * f).round() as usize];
+    MetricStats { mean, sigma, q05: q(0.05), q50: q(0.5), q95: q(0.95) }
+}
+
+/// The statistical reduction of one design's K sampled variants.
+#[derive(Debug, Clone)]
+pub struct YieldStats {
+    /// P(electrically functional), Wilson 95 %.  Demand-joint yield
+    /// (functional ∧ frequency ∧ retention met) is per-demand — see
+    /// [`DesignYield::yield_for`].
+    pub functional: YieldEstimate,
+    pub f_op_hz: MetricStats,
+    pub retention_s: MetricStats,
+    pub leakage_w: MetricStats,
+    pub stored_one_v: MetricStats,
+    /// `(sample index, reason)` for fault-quarantined variants; they
+    /// count as failures in every yield figure, never dropped.
+    pub quarantined: Vec<(usize, String)>,
+}
+
+/// One design's Monte-Carlo outcome: the nominal (unperturbed) point,
+/// the K sampled variants in sample order, and their reduction.
+#[derive(Debug, Clone)]
+pub struct DesignYield {
+    pub config: Config,
+    pub area_um2: f64,
+    /// The unperturbed point — identical to what the non-MC sweep
+    /// reports for this design.
+    pub nominal: Evaluated,
+    /// K sampled variants, index == sample index.
+    pub samples: Vec<Evaluated>,
+    pub stats: YieldStats,
+}
+
+impl DesignYield {
+    /// `P(functional ∧ demand met)`: the fraction of samples whose
+    /// shmoo verdict passes `d`, with its Wilson 95 % interval.
+    /// Quarantined samples never pass, so they count against yield.
+    pub fn yield_for(&self, d: &Demand) -> YieldEstimate {
+        let k = self.samples.iter().filter(|e| dse::shmoo_verdict(e, d).pass()).count();
+        wilson(k, self.samples.len(), WILSON_Z)
+    }
+
+    /// Yield-aware shmoo verdict: `Pass` iff the demand-joint yield
+    /// point estimate reaches `target`, else the most common failure
+    /// verdict among the failing samples (ties break toward the
+    /// earlier verdict in quarantine/margin/frequency/retention order).
+    pub fn yield_verdict(&self, d: &Demand, target: f64) -> dse::Verdict {
+        if self.yield_for(d).p >= target {
+            return dse::Verdict::Pass;
+        }
+        let mut best = dse::Verdict::FailMargin;
+        let mut best_n = 0usize;
+        for v in [
+            dse::Verdict::Quarantined,
+            dse::Verdict::FailMargin,
+            dse::Verdict::FailFreq,
+            dse::Verdict::FailRetention,
+        ] {
+            let n = self.samples.iter().filter(|e| dse::shmoo_verdict(e, d) == v).count();
+            if n > best_n {
+                best = v;
+                best_n = n;
+            }
+        }
+        best
+    }
+
+    /// Yield-adjusted point for Pareto/cost ranking: every perf field
+    /// is the mean over *functional* samples (the distribution's
+    /// center, not the nominal's optimism), and `functional` holds iff
+    /// the functional yield reaches `target`.  Feasibility decisions
+    /// should still gate on [`Self::yield_for`] — this point only
+    /// ranks the survivors.
+    pub fn adjusted(&self, target: f64) -> Evaluated {
+        let funcs: Vec<&BankPerf> =
+            self.samples.iter().filter(|e| e.perf.functional).map(|e| &e.perf).collect();
+        let mean = |f: fn(&BankPerf) -> f64| {
+            if funcs.is_empty() {
+                f64::NAN
+            } else {
+                funcs.iter().map(|p| f(p)).sum::<f64>() / funcs.len() as f64
+            }
+        };
+        let perf = BankPerf {
+            f_read_hz: mean(|p| p.f_read_hz),
+            f_write_hz: mean(|p| p.f_write_hz),
+            f_op_hz: mean(|p| p.f_op_hz),
+            bandwidth_bps: mean(|p| p.bandwidth_bps),
+            retention_s: mean(|p| p.retention_s),
+            leakage_w: mean(|p| p.leakage_w),
+            e_read_j: mean(|p| p.e_read_j),
+            t_decoder_s: mean(|p| p.t_decoder_s),
+            t_cell_read_s: mean(|p| p.t_cell_read_s),
+            stored_one_v: mean(|p| p.stored_one_v),
+            functional: !funcs.is_empty() && self.stats.functional.p >= target,
+        };
+        Evaluated {
+            config: self.config.clone(),
+            perf,
+            area_um2: self.area_um2,
+            quarantine: None,
+        }
+    }
+}
+
+fn to_eval(bank: &Bank, r: &Result<BankPerf, Quarantine>) -> Evaluated {
+    match r {
+        Ok(p) => Evaluated {
+            config: bank.config.clone(),
+            perf: *p,
+            area_um2: bank.layout.total_area_um2(),
+            quarantine: None,
+        },
+        // same quarantine phrasing as dse's evaluate path, so the
+        // zero-sigma parity pin covers quarantined designs too
+        Err(q) => Evaluated {
+            config: bank.config.clone(),
+            perf: BankPerf::quarantined(),
+            area_um2: bank.layout.total_area_um2(),
+            quarantine: Some(format!("{} stage: {}", q.stage, q.reason)),
+        },
+    }
+}
+
+fn reduce_design(bank: &Bank, span: &[Result<BankPerf, Quarantine>]) -> DesignYield {
+    let nominal = to_eval(bank, &span[0]);
+    let samples: Vec<Evaluated> = span[1..].iter().map(|r| to_eval(bank, r)).collect();
+    let functional = samples.iter().filter(|e| e.perf.functional).count();
+    let quarantined: Vec<(usize, String)> = samples
+        .iter()
+        .enumerate()
+        .filter_map(|(i, e)| e.quarantine.clone().map(|q| (i, q)))
+        .collect();
+    let of = |f: fn(&BankPerf) -> f64| -> Vec<f64> {
+        samples.iter().filter(|e| e.perf.functional).map(|e| f(&e.perf)).collect()
+    };
+    let stats = YieldStats {
+        functional: wilson(functional, samples.len(), WILSON_Z),
+        f_op_hz: metric_stats(&of(|p| p.f_op_hz)),
+        retention_s: metric_stats(&of(|p| p.retention_s)),
+        leakage_w: metric_stats(&of(|p| p.leakage_w)),
+        stored_one_v: metric_stats(&of(|p| p.stored_one_v)),
+        quarantined,
+    };
+    DesignYield {
+        config: bank.config.clone(),
+        area_um2: bank.layout.total_area_um2(),
+        nominal,
+        samples,
+        stats,
+    }
+}
+
+/// Expand every distinct design in `configs` into its nominal point
+/// plus `model.samples` sampled variants, run **all** of them as one
+/// packed mega-batch, and reduce per design.
+///
+/// Variant order inside the batch is design-major, `[nominal, sample
+/// 0, .., sample K-1]` per design — deterministic, which the fault
+/// chaos test uses to aim a poisoned row at one specific variant.
+/// Variants share a `ConfigKey` with their design, so this path does
+/// **not** use the [`dse::EvalCache`] (a cache hit would collapse
+/// distinct samples); the nominal sweep alongside remains cacheable.
+pub fn yield_sweep_health(
+    tech: &Tech,
+    rt: &SharedRuntime,
+    configs: &[Config],
+    model: &VariationModel,
+    workers: usize,
+    window_resolution: f64,
+) -> crate::Result<(Vec<DesignYield>, RunHealth)> {
+    let mut seen: HashSet<ConfigKey> = HashSet::new();
+    let mut distinct: Vec<Config> = Vec::new();
+    for cfg in configs {
+        if seen.insert(cfg.key()) {
+            distinct.push(cfg.clone());
+        }
+    }
+    let banks: Vec<Bank> = dse::par_map(&distinct, workers, |cfg| compile(tech, cfg))
+        .into_iter()
+        .collect::<crate::Result<Vec<_>>>()?;
+    let k = model.samples;
+    let mut plans: Vec<CharPlan> = Vec::with_capacity(banks.len() * (k + 1));
+    let mut labels: Vec<String> = Vec::with_capacity(banks.len() * (k + 1));
+    for b in &banks {
+        plans.push(CharPlan::with_resolution(tech, b, window_resolution));
+        labels.push(format!("{} [nom]", characterize::design_label(b)));
+        for i in 0..k {
+            let p = model.perturb(tech, &b.config, i);
+            plans.push(CharPlan::with_variation(tech, b, window_resolution, &p));
+            labels.push(format!("{} [s{i}]", characterize::design_label(b)));
+        }
+    }
+    let (res, health) = characterize::characterize_plans_health(rt, plans, labels)?;
+    let mut out = Vec::with_capacity(banks.len());
+    let mut off = 0usize;
+    for b in &banks {
+        let span = &res[off..off + k + 1];
+        off += k + 1;
+        out.push(reduce_design(b, span));
+    }
+    Ok((out, health))
+}
+
+/// Expected `(write, read, retention)` artifact-execution counts for
+/// the [`yield_sweep_health`] mega-batch, computed from the variant
+/// plans' own window bits — the grouped-ceiling KPI the statistical
+/// tests and `perf_hotpaths` assert against the runtime's real call
+/// counters.  Write groups key on the quantized write-window bits,
+/// read groups on `(pull_up, read-window bits)` with two read jobs per
+/// variant, retention packs everything.
+pub fn plan_call_counts(
+    tech: &Tech,
+    configs: &[Config],
+    model: &VariationModel,
+    window_resolution: f64,
+    write_cap: usize,
+    read_cap: usize,
+    retention_cap: usize,
+) -> crate::Result<(usize, usize, usize)> {
+    let mut seen: HashSet<ConfigKey> = HashSet::new();
+    let mut wr: HashMap<u64, usize> = HashMap::new();
+    let mut rd: HashMap<(bool, u64), usize> = HashMap::new();
+    let mut ret = 0usize;
+    for cfg in configs {
+        if !seen.insert(cfg.key()) {
+            continue;
+        }
+        let bank = compile(tech, cfg)?;
+        let mut plans = vec![CharPlan::with_resolution(tech, &bank, window_resolution)];
+        for i in 0..model.samples {
+            plans.push(CharPlan::with_variation(
+                tech,
+                &bank,
+                window_resolution,
+                &model.perturb(tech, cfg, i),
+            ));
+        }
+        for p in &plans {
+            if let Some((w, r)) = p.window_bits() {
+                *wr.entry(w).or_insert(0) += 1;
+                *rd.entry((cfg.flavor.pull_up_read(), r)).or_insert(0) += 2;
+                ret += 1;
+            }
+        }
+    }
+    Ok((
+        wr.values().map(|&n| calls_for(n, write_cap)).sum(),
+        rd.values().map(|&n| calls_for(n, read_cap)).sum(),
+        calls_for(ret, retention_cap),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::sg40;
+    use crate::workloads::{CacheLevel, TASKS};
+
+    fn demand(f: f64, life: f64) -> Demand {
+        Demand {
+            task: TASKS[0],
+            level: CacheLevel::L1,
+            machine: "test",
+            read_freq_hz: f,
+            lifetime_s: life,
+        }
+    }
+
+    fn fake_sample(functional: bool, f_op: f64, ret: f64) -> Evaluated {
+        Evaluated {
+            config: Config::new(32, 32, CellFlavor::GcSiSiNp),
+            perf: BankPerf {
+                f_read_hz: f_op,
+                f_write_hz: f_op,
+                f_op_hz: f_op,
+                bandwidth_bps: 64.0 * f_op,
+                retention_s: ret,
+                leakage_w: 1e-7,
+                e_read_j: 1e-12,
+                t_decoder_s: 1e-10,
+                t_cell_read_s: 1e-10,
+                stored_one_v: 0.6,
+                functional,
+            },
+            area_um2: 100.0,
+            quarantine: None,
+        }
+    }
+
+    fn dy(samples: Vec<Evaluated>) -> DesignYield {
+        let functional = samples.iter().filter(|e| e.perf.functional).count();
+        let nominal = fake_sample(true, 1e9, 1e-3);
+        let quarantined = samples
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.quarantine.clone().map(|q| (i, q)))
+            .collect();
+        let stats = YieldStats {
+            functional: wilson(functional, samples.len(), WILSON_Z),
+            f_op_hz: metric_stats(
+                &samples
+                    .iter()
+                    .filter(|e| e.perf.functional)
+                    .map(|e| e.perf.f_op_hz)
+                    .collect::<Vec<_>>(),
+            ),
+            retention_s: metric_stats(
+                &samples
+                    .iter()
+                    .filter(|e| e.perf.functional)
+                    .map(|e| e.perf.retention_s)
+                    .collect::<Vec<_>>(),
+            ),
+            leakage_w: metric_stats(&[1e-7]),
+            stored_one_v: metric_stats(&[0.6]),
+            quarantined,
+        };
+        DesignYield {
+            config: Config::new(32, 32, CellFlavor::GcSiSiNp),
+            area_um2: 100.0,
+            nominal,
+            samples,
+            stats,
+        }
+    }
+
+    #[test]
+    fn wilson_interval_shape() {
+        // exact edge cases
+        let all = wilson(10, 10, WILSON_Z);
+        assert_eq!(all.p, 1.0);
+        assert!(all.hi <= 1.0 && all.lo < 1.0 && all.lo > 0.6, "{all:?}");
+        let none = wilson(0, 10, WILSON_Z);
+        assert_eq!(none.p, 0.0);
+        assert!(none.lo >= 0.0 && none.hi > 0.0 && none.hi < 0.4, "{none:?}");
+        // half: symmetric around 0.5
+        let half = wilson(50, 100, WILSON_Z);
+        assert!((half.p - 0.5).abs() < 1e-12);
+        assert!(((half.lo + half.hi) / 2.0 - 0.5).abs() < 1e-9, "{half:?}");
+        // interval shrinks with n at fixed p-hat
+        let small = wilson(5, 10, WILSON_Z);
+        let big = wilson(500, 1000, WILSON_Z);
+        assert!(big.hi - big.lo < small.hi - small.lo);
+        // degenerate n=0 is explicit, not NaN bounds
+        let zero = wilson(0, 0, WILSON_Z);
+        assert!(zero.p.is_nan() && zero.lo == 0.0 && zero.hi == 1.0);
+    }
+
+    #[test]
+    fn metric_stats_quantiles_and_inf() {
+        let s = metric_stats(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.q50, 3.0);
+        assert_eq!(s.q05, 1.0);
+        assert_eq!(s.q95, 5.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.sigma - 2.0f64.sqrt()).abs() < 1e-12);
+        // SRAM-style infinite retention propagates, NaN is excluded
+        let s = metric_stats(&[f64::INFINITY, 1.0, f64::NAN]);
+        assert!(s.mean.is_infinite());
+        let s = metric_stats(&[]);
+        assert!(s.mean.is_nan() && s.q50.is_nan());
+    }
+
+    #[test]
+    fn yield_for_counts_joint_pass_and_quarantine() {
+        let mut q = fake_sample(true, 2e9, 1e-3);
+        q.quarantine = Some("write stage: poisoned".into());
+        q.perf = BankPerf::quarantined();
+        let d = dy(vec![
+            fake_sample(true, 2e9, 1e-3),  // pass
+            fake_sample(true, 2e9, 1e-6),  // retention fail
+            fake_sample(false, 2e9, 1e-3), // margin fail
+            q,                             // quarantined: counts against
+        ]);
+        let est = d.yield_for(&demand(1e9, 1e-4));
+        assert_eq!((est.passed, est.samples), (1, 4));
+        assert_eq!(d.stats.quarantined.len(), 1);
+        // dominant failure: one each of retention/margin/quarantine ->
+        // tie breaks toward quarantine (listed first)
+        assert_eq!(d.yield_verdict(&demand(1e9, 1e-4), 0.9), dse::Verdict::Quarantined);
+        // a lax target passes
+        assert_eq!(d.yield_verdict(&demand(1e9, 1e-4), 0.25), dse::Verdict::Pass);
+    }
+
+    #[test]
+    fn adjusted_means_over_functional_samples_only() {
+        let d = dy(vec![
+            fake_sample(true, 1e9, 1e-3),
+            fake_sample(true, 3e9, 3e-3),
+            fake_sample(false, 9e9, 9e-3), // excluded from the means
+        ]);
+        let adj = d.adjusted(0.5);
+        assert!((adj.perf.f_op_hz - 2e9).abs() < 1.0);
+        assert!((adj.perf.retention_s - 2e-3).abs() < 1e-9);
+        assert!(adj.perf.functional, "2/3 functional >= 0.5 target");
+        assert!(!d.adjusted(0.9).perf.functional, "2/3 < 0.9 target");
+    }
+
+    #[test]
+    fn zero_sigma_model_draws_identity_perturbs() {
+        let t = sg40();
+        let m = VariationModel::zero(8, 1, t.vdd);
+        for flavor in [CellFlavor::GcSiSiNp, CellFlavor::GcSiSiNn, CellFlavor::GcOsOs] {
+            let cfg = Config::new(32, 32, flavor);
+            for i in 0..8 {
+                assert!(m.perturb(&t, &cfg, i).is_identity(), "{flavor:?} sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn perturb_is_identity_of_design_not_position() {
+        let t = sg40();
+        let m = VariationModel::from_tech(&t, 4, 7);
+        let a = Config::new(32, 32, CellFlavor::GcSiSiNp);
+        let b = Config::new(64, 64, CellFlavor::GcSiSiNp);
+        // same (design, sample) -> same perturbation, draw order free
+        let pa2 = m.perturb(&t, &a, 2);
+        let _ = m.perturb(&t, &b, 0);
+        assert_eq!(m.perturb(&t, &a, 2), pa2);
+        // different samples and different designs draw differently
+        assert_ne!(m.perturb(&t, &a, 0), m.perturb(&t, &a, 1));
+        assert_ne!(m.perturb(&t, &a, 0), m.perturb(&t, &b, 0));
+        // sigma scale: OS class declared wider than Si on sg40
+        assert!(m.os.sigma_vt > m.si.sigma_vt);
+    }
+
+    #[test]
+    fn corner_mix_shifts_samples_systematically() {
+        let t = sg40();
+        let mut m = VariationModel::zero(64, 3, t.vdd);
+        m.corners = vec![*t.corner("ss").unwrap()];
+        let cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
+        for i in 0..8 {
+            let p = m.perturb(&t, &cfg, i);
+            assert!(!p.is_identity());
+            assert_eq!(p.vt_shift_wr, 0.04, "ss VT shift, zero mismatch sigma");
+            assert_eq!(p.kp_scale, 0.87);
+            assert!((p.vdd_scale - 0.99 / t.vdd).abs() < 1e-12);
+        }
+    }
+}

@@ -17,7 +17,7 @@ use opengcram::runtime::engines;
 use opengcram::runtime::fault::{FaultBackend, FaultPlan};
 use opengcram::runtime::{FailoverBackend, NativeBackend, SharedRuntime};
 use opengcram::tech::sg40;
-use opengcram::{compose, dse, workloads};
+use opengcram::{compose, dse, variation, workloads};
 
 /// The cross-flavor sweep of the chaos parity pin: five transient GC
 /// designs spanning all three gain-cell flavors and two geometries.
@@ -237,6 +237,85 @@ fn fault_failover_serves_failed_request_from_native_fallback() {
     let again = engines::retention(&fo, &pts).unwrap();
     assert_eq!(again[0].t_retain.to_bits(), want[0].t_retain.to_bits());
     assert_eq!(fo.failovers(), 1);
+}
+
+#[test]
+fn fault_poisoned_variant_lowers_yield_by_exactly_one_over_k() {
+    // Monte-Carlo chaos pin: poison one sampled variant inside the
+    // variation mega-batch.  A zero-sigma model keeps every variant
+    // bitwise-nominal (so the baseline is fully functional by the
+    // parity suite's guarantee), and 16/32-row designs sit on the
+    // transient window floor clamps, so ALL write jobs share one
+    // group: the first write execution's rows follow plan order
+    // [d0 nom, d0 s0..s3, d1 nom, d1 s0..s3], making row 2 design 0's
+    // sample 1, deterministically.
+    let t = sg40();
+    let cfgs = vec![
+        Config::new(32, 32, CellFlavor::GcSiSiNp),
+        Config::new(16, 16, CellFlavor::GcSiSiNp),
+    ];
+    let k = 4;
+    let model = variation::VariationModel::zero(k, 0xFA11, t.vdd);
+
+    let base_rt = SharedRuntime::native();
+    let (base, bh) = variation::yield_sweep_health(&t, &base_rt, &cfgs, &model, 2, 0.0).unwrap();
+    assert!(bh.is_clean(), "{}", bh.summary());
+    assert_eq!(base[0].stats.functional.passed, k, "baseline must be fully functional");
+
+    let rt = SharedRuntime::native().with_faults(FaultPlan::new().poison_row("write", 1, 2));
+    let (dys, health) = variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, 0.0).unwrap();
+
+    // exactly one quarantined variant, named and reasoned in RunHealth
+    assert_eq!(health.quarantined.len(), 1, "{}", health.summary());
+    let q = &health.quarantined[0];
+    assert_eq!(q.index, 2, "plan-order index of design 0, sample 1");
+    assert!(q.design.ends_with("[s1]"), "{}", q.design);
+    assert_eq!(q.stage, "write");
+    assert!(q.reason.contains("non-finite write output"), "{}", q.reason);
+
+    // ... and mirrored into the design's own yield stats with a reason
+    assert_eq!(dys[0].stats.quarantined.len(), 1);
+    let (si, reason) = &dys[0].stats.quarantined[0];
+    assert_eq!(*si, 1, "sample index");
+    assert!(reason.contains("non-finite write output"), "{reason}");
+    assert!(dys[1].stats.quarantined.is_empty());
+
+    // functional yield drops by exactly 1/K for the poisoned design
+    let (b0, a0) = (&base[0].stats.functional, &dys[0].stats.functional);
+    assert_eq!(a0.samples, b0.samples);
+    assert_eq!(b0.passed - a0.passed, 1, "exactly one sample lost");
+    assert!((b0.p - a0.p - 1.0 / k as f64).abs() < 1e-12, "{} -> {}", b0.p, a0.p);
+    // ... and by exactly one pass in every demand-joint yield the
+    // poisoned sample used to satisfy
+    for d in workloads::all_demands(&workloads::GT520M) {
+        let lost = dse::shmoo_verdict(&base[0].samples[1], &d).pass() as usize;
+        assert_eq!(
+            base[0].yield_for(&d).passed - dys[0].yield_for(&d).passed,
+            lost,
+            "{} {:?}",
+            d.task.name,
+            d.level
+        );
+    }
+    assert_eq!(dys[1].stats.functional.passed, base[1].stats.functional.passed);
+
+    // sibling variants and the other design stay bitwise identical
+    for (di, (dy, b)) in dys.iter().zip(&base).enumerate() {
+        perf_bits_eq(&dy.nominal.perf, &b.nominal.perf, &format!("design {di} [nom]"));
+        for (i, (s, bs)) in dy.samples.iter().zip(&b.samples).enumerate() {
+            if di == 0 && i == 1 {
+                assert!(s.quarantine.is_some(), "poisoned variant must be quarantined");
+                assert!(!s.perf.functional);
+                continue;
+            }
+            assert!(s.quarantine.is_none(), "design {di} [s{i}]");
+            perf_bits_eq(&s.perf, &bs.perf, &format!("design {di} [s{i}]"));
+        }
+    }
+    // poisoning an output row never changes the write call census, and
+    // quarantining can only shrink downstream batches
+    assert_eq!(rt.call_count("write"), base_rt.call_count("write"));
+    assert!(rt.call_count("read") <= base_rt.call_count("read"));
 }
 
 #[test]

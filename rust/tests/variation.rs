@@ -1,0 +1,262 @@
+//! Statistical tier for the Monte-Carlo variation engine
+//! ([`opengcram::variation`]).  Everything here is deterministic —
+//! fixed seeds, substream-split draws — so none of it can flake:
+//!
+//! * **Zero-sigma == nominal, bitwise**: a zero-sigma model's samples
+//!   are bit-identical to the non-MC batched sweep.
+//! * **Mega-batch == singletons, bitwise**: every sampled variant run
+//!   inside the packed `K x D` mega-batch matches its own singleton
+//!   [`characterize_plan`] run to the last bit (batch packing is
+//!   invisible to variant physics).
+//! * **Reproducibility**: yields are bit-stable across worker counts
+//!   and config batch order (substream labels key on design identity,
+//!   not position).
+//! * **Grouped-ceiling occupancy**: the mega-batch's real native
+//!   artifact counters equal [`variation::plan_call_counts`]'s
+//!   prediction — `K x D` variants never pay `K x D` executions per
+//!   engine.
+//! * **Closed-form yield in the Wilson interval**: sign/corner counts
+//!   with known probability 0.5 land inside their 95 % Wilson score
+//!   intervals at the pinned seed (the counts themselves were verified
+//!   against an independent reimplementation of the PRNG).
+
+use opengcram::characterize::{self, CharPlan};
+use opengcram::compiler::{compile, CellFlavor, Config, ConfigKey};
+use opengcram::runtime::SharedRuntime;
+use opengcram::tech::sg40;
+use opengcram::variation::{self, VariationModel};
+use opengcram::{dse, workloads};
+use std::collections::HashMap;
+
+/// Bitwise `BankPerf` comparison — same contract as the parity suite.
+fn perf_bits_eq(a: &characterize::BankPerf, b: &characterize::BankPerf, what: &str) {
+    let fields = [
+        ("f_read_hz", a.f_read_hz, b.f_read_hz),
+        ("f_write_hz", a.f_write_hz, b.f_write_hz),
+        ("f_op_hz", a.f_op_hz, b.f_op_hz),
+        ("bandwidth_bps", a.bandwidth_bps, b.bandwidth_bps),
+        ("retention_s", a.retention_s, b.retention_s),
+        ("leakage_w", a.leakage_w, b.leakage_w),
+        ("e_read_j", a.e_read_j, b.e_read_j),
+        ("t_decoder_s", a.t_decoder_s, b.t_decoder_s),
+        ("t_cell_read_s", a.t_cell_read_s, b.t_cell_read_s),
+        ("stored_one_v", a.stored_one_v, b.stored_one_v),
+    ];
+    for (name, x, y) in fields {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {name} diverged ({x} vs {y})");
+    }
+    assert_eq!(a.functional, b.functional, "{what}: functional verdict diverged");
+}
+
+#[test]
+fn variation_zero_sigma_mc_is_bitwise_equal_to_nominal_sweep() {
+    // acceptance pin (c): --mc with a zero-sigma model produces
+    // bit-identical results to the nominal non-MC sweep.  K = 2 keeps
+    // even the sample *means* exact (x + x = 2x and 2x / 2 = x are
+    // both exact in binary floating point), so the reduced stats are
+    // pinned bitwise too, not just the per-sample points.
+    let t = sg40();
+    let cfgs = vec![
+        Config::new(32, 32, CellFlavor::GcSiSiNp),
+        Config::new(32, 32, CellFlavor::GcOsOs),
+    ];
+    let model = VariationModel::zero(2, 0xFEED, t.vdd);
+
+    let nom_rt = SharedRuntime::native();
+    let nominal = dse::evaluate_all_batched(&t, &nom_rt, &cfgs, 2, 0.0).unwrap();
+
+    let rt = SharedRuntime::native();
+    let (dys, health) = variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, 0.0).unwrap();
+    assert!(health.is_clean(), "{}", health.summary());
+    assert_eq!(dys.len(), cfgs.len());
+
+    for (dy, base) in dys.iter().zip(&nominal) {
+        assert_eq!(dy.config.key(), base.config.key(), "sweep order diverged");
+        let what = format!("{:?}", dy.config);
+        perf_bits_eq(&dy.nominal.perf, &base.perf, &format!("{what} [nom]"));
+        for (i, s) in dy.samples.iter().enumerate() {
+            assert!(s.quarantine.is_none());
+            perf_bits_eq(&s.perf, &base.perf, &format!("{what} [s{i}]"));
+        }
+        assert!(dy.stats.quarantined.is_empty());
+        if base.perf.functional {
+            assert_eq!(dy.stats.functional.p, 1.0, "{what}");
+            // K = 2: the mean of two identical values is exact, and a
+            // zero spread means an exactly-zero sigma
+            assert_eq!(dy.stats.f_op_hz.mean.to_bits(), base.perf.f_op_hz.to_bits(), "{what}");
+            assert_eq!(dy.stats.f_op_hz.sigma, 0.0, "{what}");
+            assert_eq!(
+                dy.stats.retention_s.mean.to_bits(),
+                base.perf.retention_s.to_bits(),
+                "{what}"
+            );
+        }
+    }
+    // the workhorse design must actually be functional for the p == 1.0
+    // branch above to have bitten
+    assert!(nominal[0].perf.functional, "32x32 GcSiSiNp should be functional");
+}
+
+#[test]
+fn variation_mega_batch_matches_singleton_characterization_bitwise() {
+    // acceptance pin: MC-through-characterize equals, bitwise, running
+    // each sampled variant alone through the singleton path at exact
+    // (resolution 0.0) windows — the same claim the backend parity
+    // suite makes for nominal plans, extended to perturbed ones.
+    let t = sg40();
+    let cfgs = vec![
+        Config::new(32, 32, CellFlavor::GcSiSiNp),
+        Config::new(16, 16, CellFlavor::GcOsOs),
+    ];
+    let model = VariationModel::from_tech(&t, 3, 0xC0FFEE);
+
+    let rt = SharedRuntime::native();
+    let (dys, health) = variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, 0.0).unwrap();
+    assert!(health.is_clean(), "{}", health.summary());
+
+    let single_rt = SharedRuntime::native();
+    for (dy, cfg) in dys.iter().zip(&cfgs) {
+        let bank = compile(&t, cfg).unwrap();
+        let what = format!("{cfg:?}");
+        let nom = single_rt
+            .with(|b| characterize::characterize_plan(b, CharPlan::with_resolution(&t, &bank, 0.0)))
+            .unwrap();
+        perf_bits_eq(&dy.nominal.perf, &nom, &format!("{what} [nom]"));
+        for (i, s) in dy.samples.iter().enumerate() {
+            let p = model.perturb(&t, cfg, i);
+            let single = single_rt
+                .with(|b| {
+                    characterize::characterize_plan(b, CharPlan::with_variation(&t, &bank, 0.0, &p))
+                })
+                .unwrap();
+            perf_bits_eq(&s.perf, &single, &format!("{what} [s{i}]"));
+        }
+    }
+}
+
+#[test]
+fn variation_yields_reproducible_across_workers_and_batch_order() {
+    // acceptance pin (b): seed-reproducible yield independent of worker
+    // count and batch order.  Substream labels are built from design
+    // identity, so reversing the config list or changing the compile
+    // worker pool must not move a single bit.
+    let t = sg40();
+    let cfgs = vec![
+        Config::new(32, 32, CellFlavor::GcSiSiNp),
+        Config::new(16, 16, CellFlavor::GcSiSiNn),
+        Config::new(32, 32, CellFlavor::GcOsOs),
+    ];
+    let model = VariationModel::from_tech(&t, 4, 0xBEEF);
+
+    let run = |configs: &[Config], workers: usize| {
+        let rt = SharedRuntime::native();
+        let (dys, health) =
+            variation::yield_sweep_health(&t, &rt, configs, &model, workers, 0.0).unwrap();
+        assert!(health.is_clean(), "{}", health.summary());
+        dys.into_iter().map(|dy| (dy.config.key(), dy)).collect::<HashMap<ConfigKey, _>>()
+    };
+
+    let base = run(&cfgs, 1);
+    let mut reversed: Vec<Config> = cfgs.clone();
+    reversed.reverse();
+    for other in [run(&cfgs, 8), run(&reversed, 1)] {
+        assert_eq!(other.len(), base.len());
+        for (key, dy) in &base {
+            let o = other.get(key).expect("design missing from re-ordered sweep");
+            let what = format!("{:?}", dy.config);
+            perf_bits_eq(&o.nominal.perf, &dy.nominal.perf, &format!("{what} [nom]"));
+            assert_eq!(o.samples.len(), dy.samples.len());
+            for (i, (a, b)) in o.samples.iter().zip(&dy.samples).enumerate() {
+                perf_bits_eq(&a.perf, &b.perf, &format!("{what} [s{i}]"));
+            }
+            assert_eq!(o.stats.functional.passed, dy.stats.functional.passed);
+            assert_eq!(o.stats.functional.samples, dy.stats.functional.samples);
+            // demand-joint yields ride on the same samples
+            for d in workloads::all_demands(&workloads::GT520M) {
+                assert_eq!(
+                    o.yield_for(&d).passed,
+                    dy.yield_for(&d).passed,
+                    "{what} {} {:?}",
+                    d.task.name,
+                    d.level
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn variation_mega_batch_pays_grouped_ceiling_execution_counts() {
+    // acceptance pin (a): grouped-ceiling execution counts for K x D
+    // variants on the *real* native counters.  The rows-axis designs
+    // sit above the window floor clamps, so their windows are genuinely
+    // distinct and the quantizer (not the clamp) does the packing.
+    let t = sg40();
+    let cfgs = characterize::quantization_axis(3, 180, 8);
+    let k = 6;
+    let model = VariationModel::from_tech(&t, k, 0xA11CE);
+    let res = characterize::DEFAULT_WINDOW_RESOLUTION;
+
+    let rt = SharedRuntime::native();
+    let caps = (
+        rt.batch_cap("write").unwrap(),
+        rt.batch_cap("read").unwrap(),
+        rt.batch_cap("retention").unwrap(),
+    );
+    let (want_w, want_r, want_t) =
+        variation::plan_call_counts(&t, &cfgs, &model, res, caps.0, caps.1, caps.2).unwrap();
+
+    let (dys, health) = variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, res).unwrap();
+    assert!(health.is_clean(), "{}", health.summary());
+    assert_eq!(dys.len(), cfgs.len());
+
+    assert_eq!(rt.call_count("write"), want_w as u64, "write occupancy model diverged");
+    assert_eq!(rt.call_count("read"), want_r as u64, "read occupancy model diverged");
+    assert_eq!(rt.call_count("retention"), want_t as u64, "retention occupancy model diverged");
+
+    // the whole point: far under one-execution-per-variant-per-engine
+    let naive = cfgs.len() * (k + 1);
+    assert!(want_w < naive, "write: {want_w} groups for {naive} variant plans");
+    assert_eq!(want_t, 1, "retention always packs ({naive} jobs, cap {})", caps.2);
+    // two read jobs per plan share a (pull_up, window) group
+    assert!(want_r <= naive, "read: {want_r} calls for {} jobs", 2 * naive);
+}
+
+#[test]
+fn variation_sign_counts_sit_inside_wilson_intervals() {
+    // closed-form yield check at a pinned seed: each of these events
+    // has exact probability 1/2 by symmetry (the Box-Muller normal's
+    // sign, and a two-corner uniform pick), so the observed count over
+    // N = 400 substreams must put 0.5 inside its 95 % Wilson interval.
+    // Deterministic: the counts at this seed are 193 (vt), 195 (kp)
+    // and 200 (corner), verified against an independent
+    // reimplementation of splitmix64/xoshiro256**/Box-Muller.
+    let t = sg40();
+    let n = 400;
+    let cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
+
+    // per-instance mismatch: P(vt_shift_wr > 0) = P(kp_scale > 1) = 1/2
+    let m = VariationModel::from_tech(&t, n, 0xC0FFEE);
+    let vt_up = (0..n).filter(|&i| m.perturb(&t, &cfg, i).vt_shift_wr > 0.0).count();
+    let kp_up = (0..n).filter(|&i| m.perturb(&t, &cfg, i).kp_scale > 1.0).count();
+
+    // corner mix: P(ss) = 1/2 with a two-corner uniform draw; zero
+    // sigmas make the ss pick exactly recognizable by its VT shift
+    let mut mc = VariationModel::zero(n, 0xC0FFEE, t.vdd);
+    let ss = *t.corner("ss").unwrap();
+    mc.corners.push(ss);
+    let ss_picks =
+        (0..n).filter(|&i| mc.perturb(&t, &cfg, i).vt_shift_wr == ss.vt_shift).count();
+
+    for (what, count) in [("vt sign", vt_up), ("kp sign", kp_up), ("ss corner", ss_picks)] {
+        let est = variation::wilson(count, n, variation::WILSON_Z);
+        assert!(
+            est.lo <= 0.5 && 0.5 <= est.hi,
+            "{what}: closed-form p=0.5 outside Wilson interval [{}, {}] (count {count}/{n})",
+            est.lo,
+            est.hi
+        );
+        // and the estimate itself is sane, not degenerate
+        assert!((150..=250).contains(&count), "{what}: count {count} wildly off");
+    }
+}
