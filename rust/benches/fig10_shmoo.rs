@@ -28,7 +28,7 @@ fn main() {
     let rt = SharedRuntime::auto(Path::new("artifacts"));
     println!("# execution backend: {}", rt.backend_name());
     let configs = dse::fig10_configs(CellFlavor::GcSiSiNp);
-    let workers = dse::default_workers();
+    let workers = opengcram::util::default_workers();
 
     let window_res = characterize::DEFAULT_WINDOW_RESOLUTION;
 

@@ -113,7 +113,7 @@ fn main() {
             quarantine: None,
         })
     };
-    let workers = dse::default_workers();
+    let workers = opengcram::util::default_workers();
     let s = bench::run("dse_shmoo_axis_serial", t_long, || {
         dse::evaluate_all(&shmoo_configs, 1, eval).unwrap()
     });

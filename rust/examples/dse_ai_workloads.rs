@@ -34,7 +34,7 @@ fn main() -> opengcram::Result<()> {
         &tech,
         &rt,
         &dse::fig10_configs(CellFlavor::GcSiSiNp),
-        dse::default_workers(),
+        opengcram::util::default_workers(),
         &cache,
         DEFAULT_WINDOW_RESOLUTION,
     )?;

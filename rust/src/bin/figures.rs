@@ -172,7 +172,7 @@ fn main() -> opengcram::Result<()> {
         &tech,
         &rt,
         &dse::fig10_configs(CellFlavor::GcSiSiNp),
-        dse::default_workers(),
+        opengcram::util::default_workers(),
         0.0,
     )?;
     for (level, machine) in [
@@ -203,7 +203,7 @@ fn main() -> opengcram::Result<()> {
         &rt,
         &dse::fig10_configs(CellFlavor::GcSiSiNp),
         &model,
-        dse::default_workers(),
+        opengcram::util::default_workers(),
         0.0,
     )?;
     let mut tmc = report::Table::new(&[

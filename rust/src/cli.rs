@@ -75,12 +75,22 @@ pub fn flavor_name(f: CellFlavor) -> &'static str {
     }
 }
 
+/// Resolve a machine by its `--machine` spelling — shared by the flag
+/// parser and the serve protocol (a request's `"machine"` field uses
+/// the same names and the same strictness).
+pub fn machine_by_name(s: &str) -> crate::Result<&'static Machine> {
+    match s {
+        "h100" => Ok(&workloads::H100),
+        "gt520m" => Ok(&workloads::GT520M),
+        other => anyhow::bail!("unknown --machine '{other}' (expected h100|gt520m)"),
+    }
+}
+
 /// The `--machine` flag (default H100); unknown names error.
 pub fn parse_machine(args: &[String]) -> crate::Result<&'static Machine> {
-    match flag_value(args, "--machine").as_deref() {
-        None | Some("h100") => Ok(&workloads::H100),
-        Some("gt520m") => Ok(&workloads::GT520M),
-        Some(other) => anyhow::bail!("unknown --machine '{other}' (expected h100|gt520m)"),
+    match flag_value(args, "--machine") {
+        None => Ok(&workloads::H100),
+        Some(s) => machine_by_name(&s),
     }
 }
 

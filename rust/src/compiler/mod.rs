@@ -73,6 +73,25 @@ pub struct ConfigKey {
     pub write_vt_bits: Option<u64>,
 }
 
+impl ConfigKey {
+    /// Reconstruct the [`Config`] this key identifies.  Keys are
+    /// lossless (the VT override is a bit-cast, not a rounding), so
+    /// `cfg.key().to_config().key() == cfg.key()` always — the on-disk
+    /// evaluation store ([`crate::store`]) relies on this to rebuild
+    /// the config of a persisted entry without storing it twice.
+    pub fn to_config(&self) -> Config {
+        let &ConfigKey { word_size, num_words, flavor, wwlls, mux_factor, write_vt_bits } = self;
+        Config {
+            word_size,
+            num_words,
+            flavor,
+            wwlls,
+            mux_factor,
+            write_vt: write_vt_bits.map(f64::from_bits),
+        }
+    }
+}
+
 impl Config {
     pub fn new(word_size: usize, num_words: usize, flavor: CellFlavor) -> Config {
         Config { word_size, num_words, flavor, wwlls: false, mux_factor: None, write_vt: None }

@@ -123,7 +123,7 @@ impl ComposeSpec {
             w_delay: 1.0,
             w_area: 0.5,
             w_power: 0.5,
-            workers: dse::default_workers(),
+            workers: crate::util::default_workers(),
             mc: None,
             yield_target: variation::DEFAULT_YIELD_TARGET,
         }
@@ -467,7 +467,7 @@ pub fn plan(
         }
     }
     // same parallel compile fan-out as the real sweep (pure geometry)
-    let banks: Vec<_> = dse::par_map(&distinct_cfgs, dse::default_workers(), |cfg| {
+    let banks: Vec<_> = crate::util::par_map(&distinct_cfgs, crate::util::default_workers(), |cfg| {
         compile(tech, cfg)
     })
     .into_iter()

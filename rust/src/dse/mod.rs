@@ -6,6 +6,7 @@ use crate::characterize::{self, BankPerf};
 use crate::compiler::{compile, Bank, CellFlavor, Config, ConfigKey};
 use crate::runtime::{RunHealth, SharedRuntime};
 use crate::tech::Tech;
+use crate::util::{default_workers, par_map};
 use crate::workloads::Demand;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -93,6 +94,29 @@ impl EvalCache {
             .or_insert(e);
     }
 
+    /// Record an evaluation recovered from *outside* the pipeline —
+    /// the on-disk store tier ([`crate::store`]) promoting an entry
+    /// into memory.  Unlike [`Self::insert`] no miss is counted: no
+    /// pipeline invocation was paid, and `stats()` must keep meaning
+    /// "(memory hits, underlying evaluations)" so the warm-restart KPI
+    /// (zero evaluations on a store-served sweep) is assertable from
+    /// the counters alone.  First write wins.
+    pub fn adopt(&self, e: Evaluated) {
+        self.map
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .entry(e.config.key())
+            .or_insert(e);
+    }
+
+    /// Uncounted lookup for bookkeeping passes that re-read entries
+    /// they just inserted/adopted — the order-preserving resolution
+    /// step of a batched sweep must not report its own writes as
+    /// cache hits.  (The counted read is [`Self::peek`].)
+    pub fn resolve(&self, key: &ConfigKey) -> Option<Evaluated> {
+        self.lookup(key)
+    }
+
     /// Bind the cache to one window-quantization resolution.  Entries
     /// record results *produced at* some resolution but are keyed on
     /// [`ConfigKey`] alone, so a cache shared across resolutions would
@@ -149,10 +173,6 @@ impl EvalCache {
     }
 }
 
-/// Default DSE fan-out width: one worker per available core
-/// (re-exported from [`crate::util`], which also serves the native
-/// backend's row chunking).
-pub use crate::util::default_workers;
 
 /// Evaluate every config concurrently over `std::thread::scope`
 /// workers (work-stealing index, so uneven per-config costs balance).
@@ -166,10 +186,6 @@ where
 {
     par_map(configs, workers, |c| eval(c)).into_iter().collect()
 }
-
-/// Scoped work-stealing parallel map (see [`crate::util::par_map`],
-/// where it now lives so the native backend can share it).
-pub(crate) use crate::util::par_map;
 
 /// [`evaluate_all`] through a shared [`EvalCache`]: repeated configs
 /// (shmoo axes overlapping optimizer walks, re-runs across workloads)

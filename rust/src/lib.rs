@@ -43,6 +43,15 @@
 //! * [`variation`] — Monte-Carlo variation engine: sampled per-instance
 //!   perturbations ride the batched characterizer as one mega-batch and
 //!   reduce to Wilson-bounded yield estimates for yield-aware DSE.
+//! * [`service`] — the persistent compiler service: a [`service::Session`]
+//!   owns the runtime, cache hierarchy and warm flatten memos, the
+//!   former subcommand bodies are request handlers borrowing it, and
+//!   [`service::serve`] is the JSON-lines Unix-socket front end with
+//!   cross-request batch packing.
+//! * [`store`] — content-addressed on-disk evaluation store (config +
+//!   tech + window resolution + format version), validated on load,
+//!   shared across process lifetimes — the disk tier under
+//!   [`dse::EvalCache`].
 //! * [`report`] — table/CSV renderers for the paper's figures.
 //! * [`cli`] — strict flag parsing shared by the `opengcram` binary.
 //! * [`util`] — JSON parsing, PRNG, timing (offline-registry stand-ins).
@@ -59,7 +68,9 @@ pub mod lvs;
 pub mod netlist;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sim;
+pub mod store;
 pub mod tech;
 pub mod util;
 pub mod variation;

@@ -5,11 +5,29 @@
 //!                      [--wwlls] [--gds out.gds] [--spice out.sp]
 //!   opengcram char     ... (adds transient characterization)
 //!   opengcram dse      --level l1|l2 --machine h100|gt520m [--window-res 0.1]
-//!                      [--mc [K] [--yield 0.99] [--mc-seed S]
-//!                       [--sigma-vt V] [--corners tt,ss]]
+//!                      [--store DIR] [--mc [K] [--yield 0.99] [--mc-seed S]
+//!                      [--sigma-vt V] [--corners tt,ss]]
 //!   opengcram compose  --machine h100|gt520m [--window-res 0.1]
-//!                      [--weights delay,area,power] [--csv out.csv]
+//!                      [--weights delay,area,power] [--csv out.csv] [--store DIR]
 //!                      [--plan [--cap 256]] [--mc [K] [--yield 0.99] ...]
+//!   opengcram serve    [--socket /tmp/opengcram.sock] [--window-res 0.1]
+//!                      [--store DIR] [--gather-ms 25] [--backend ...]
+//!   opengcram client   --json '<request>' [--socket /tmp/opengcram.sock]
+//!
+//! Every subcommand now runs through an `opengcram::service::Session`:
+//! one-shot
+//! mode is "open session → one request → drop" (results on the
+//! no-store path are identical to the historical per-command
+//! pipelines), while `serve` keeps the session alive as a long-running
+//! process accepting concurrent JSON-lines requests over a Unix
+//! socket — concurrent clients' characterization points pack into
+//! shared batches through the one coordinator (grouped-ceiling
+//! executions, not per-client), and `--store DIR` adds the
+//! content-addressed on-disk evaluation store so a restarted service
+//! (or a repeat `dse --store`) serves previously characterized points
+//! with zero executions.  `client` sends one request line and prints
+//! the response (exit 1 on an `"ok": false` reply) — the scripting
+//! surface the CI smoke steps drive.
 //!
 //! `--mc` switches `dse`/`compose` to Monte-Carlo mode: each design
 //! expands into K sampled per-instance variants (VT mismatch, geometry
@@ -17,7 +35,8 @@
 //! riding the batched characterizer as one mega-batch, and feasibility
 //! becomes "demand-joint yield >= --yield" with Wilson 95 % intervals
 //! reported.  Same seed, same yields — regardless of worker count or
-//! batch order.
+//! batch order.  (MC variants share their design's cache key, so they
+//! bypass both cache tiers by construction.)
 //!
 //! Every transient-backed subcommand takes `--backend native|pjrt|auto`
 //! (default `auto`): `native` runs the in-process EKV solver — no
@@ -33,6 +52,9 @@
 //! (bucket step) of the batched sweeps: larger packs mixed-geometry
 //! designs into fewer artifact executions, `0` reproduces the exact
 //! unquantized windows.  Default: `characterize::DEFAULT_WINDOW_RESOLUTION`.
+//! A session (and its on-disk store entries) is bound to one
+//! resolution; `--store` entries recorded at another resolution are
+//! simply misses, never aliases.
 //!
 //! `compose` runs the cross-flavor mega-sweep and selects a bank per
 //! cache demand and per cache level; `compose --plan` is the
@@ -43,16 +65,33 @@
 
 use opengcram::cli;
 use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::service::{serve, Session};
 use opengcram::tech::sg40;
 use opengcram::util::eng;
-use opengcram::{characterize, compose, dse, report, variation, workloads};
-use std::path::Path;
+use opengcram::util::json::Json;
+use opengcram::{characterize, compose, dse, report, workloads};
+use std::path::{Path, PathBuf};
 
 fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e}");
         std::process::exit(1);
     }
+}
+
+/// Open the session a transient-backed subcommand runs against:
+/// backend from `--backend`, optional disk tier from `--store DIR`.
+fn open_session(
+    tech: &opengcram::tech::Tech,
+    args: &[String],
+    window_resolution: f64,
+) -> opengcram::Result<Session<'_>> {
+    let rt = cli::parse_backend(args)?.load(Path::new("artifacts"))?;
+    let mut session = Session::new(tech, rt, window_resolution)?;
+    if let Some(dir) = cli::flag_value(args, "--store") {
+        session = session.with_store(dir)?;
+    }
+    Ok(session)
 }
 
 fn run() -> opengcram::Result<()> {
@@ -95,11 +134,15 @@ fn run() -> opengcram::Result<()> {
                 eng(a.leakage_w, "W")
             );
             if cmd == "char" {
-                let rt = cli::parse_backend(&args)?.load(Path::new("artifacts"))?;
-                let c = rt.with(|b| characterize::characterize(&tech, b, &bank))?;
+                // exact-window session (resolution 0.0): single-design
+                // characterization through the session is bitwise the
+                // historical per-design path
+                let session = open_session(&tech, &args, 0.0)?;
+                let e = session.characterize_config(&cfg)?;
+                let c = &e.perf;
                 println!(
                     "transient ({}):  f_op {}  retention {}  stored1 {:.3} V  functional {}",
-                    rt.backend_name(),
+                    session.backend_name(),
                     eng(c.f_op_hz, "Hz"),
                     eng(c.retention_s, "s"),
                     c.stored_one_v,
@@ -113,21 +156,14 @@ fn run() -> opengcram::Result<()> {
             let window_res: f64 =
                 cli::parse_or(&args, "--window-res", characterize::DEFAULT_WINDOW_RESOLUTION)?;
             let mc = cli::parse_mc(&args, &tech)?;
-            let rt = cli::parse_backend(&args)?.load(Path::new("artifacts"))?;
+            let session = open_session(&tech, &args, window_res)?;
             let configs = dse::fig10_configs(CellFlavor::GcSiSiNp);
             if let Some(model) = mc {
                 // statistical mode: every size expands into K sampled
                 // variants riding one mega-batch; a cell passes when its
                 // demand-joint yield reaches the --yield target
                 let target = cli::parse_yield(&args)?;
-                let (dys, health) = variation::yield_sweep_health(
-                    &tech,
-                    &rt,
-                    &configs,
-                    &model,
-                    dse::default_workers(),
-                    window_res,
-                )?;
+                let (dys, health) = session.yield_sweep(&configs, &model)?;
                 let mut table =
                     report::Table::new(&["task", "demand MHz", "16", "32", "64", "96", "128"]);
                 for task in &workloads::TASKS {
@@ -146,7 +182,7 @@ fn run() -> opengcram::Result<()> {
                     model.seed,
                     machine.name,
                     level,
-                    rt.backend_name()
+                    session.backend_name()
                 );
                 let mut yt = report::Table::new(&[
                     "design", "functional", "95% CI", "f_op", "retention", "ret q05..q95",
@@ -180,15 +216,10 @@ fn run() -> opengcram::Result<()> {
                 return Ok(());
             }
             let mut table = report::Table::new(&["task", "demand MHz", "16", "32", "64", "96", "128"]);
-            // batch-first sweep: compile in parallel, characterize in
-            // shared padded artifact batches via the coordinator
-            let (evals, health) = dse::evaluate_all_batched_health(
-                &tech,
-                &rt,
-                &configs,
-                dse::default_workers(),
-                window_res,
-            )?;
+            // batch-first sweep through the session: compile in
+            // parallel, characterize in shared padded artifact batches,
+            // serve repeats from the cache tiers (--store persists them)
+            let (evals, health) = session.sweep(&configs)?;
             for task in &workloads::TASKS {
                 let d = workloads::profile(task, level, machine);
                 let mut row = vec![task.name.to_string(), report::mhz(d.read_freq_hz)];
@@ -202,7 +233,7 @@ fn run() -> opengcram::Result<()> {
                 "P=pass f=too slow r=retention x=no margin q=quarantined (Fig. 10, {} {:?}, {} backend)",
                 machine.name,
                 level,
-                rt.backend_name()
+                session.backend_name()
             );
             println!("run health: {}", health.summary());
             for q in &health.quarantined {
@@ -262,8 +293,8 @@ fn run() -> opengcram::Result<()> {
                 );
                 return Ok(());
             }
-            let rt = cli::parse_backend(&args)?.load(Path::new("artifacts"))?;
-            println!("# {} backend", rt.backend_name());
+            let session = open_session(&tech, &args, window_res)?;
+            println!("# {} backend", session.backend_name());
             let mut spec = compose::ComposeSpec::new(machine);
             spec.window_resolution = window_res;
             spec.w_delay = w_delay;
@@ -273,7 +304,7 @@ fn run() -> opengcram::Result<()> {
             if spec.mc.is_some() {
                 spec.yield_target = cli::parse_yield(&args)?;
             }
-            let c = compose::compose(&tech, &rt, &spec)?;
+            let c = session.compose(&spec)?;
             println!("{}", compose::table(&c));
             if let Some(model) = &spec.mc {
                 println!(
@@ -314,8 +345,35 @@ fn run() -> opengcram::Result<()> {
                 println!("wrote {path}");
             }
         }
+        "serve" => {
+            let window_res: f64 =
+                cli::parse_or(&args, "--window-res", characterize::DEFAULT_WINDOW_RESOLUTION)?;
+            let gather_ms: u64 = cli::parse_or(&args, "--gather-ms", serve::DEFAULT_GATHER_MS)?;
+            let socket = cli::flag_value(&args, "--socket")
+                .unwrap_or_else(|| serve::DEFAULT_SOCKET.to_string());
+            let session = open_session(&tech, &args, window_res)?;
+            let opts = serve::ServeOpts { socket: PathBuf::from(socket), gather_ms };
+            serve::serve(&session, &opts)?;
+            println!("shutdown complete");
+        }
+        "client" => {
+            let socket = cli::flag_value(&args, "--socket")
+                .unwrap_or_else(|| serve::DEFAULT_SOCKET.to_string());
+            let line = cli::flag_value(&args, "--json").ok_or_else(|| {
+                anyhow::anyhow!("client: --json '<request line>' required (see README protocol)")
+            })?;
+            let resp = serve::client_request(Path::new(&socket), &line)?;
+            println!("{resp}");
+            let ok = Json::parse(&resp)
+                .ok()
+                .and_then(|j| j.get("ok").and_then(Json::as_bool))
+                .unwrap_or(false);
+            anyhow::ensure!(ok, "server returned an error response");
+        }
         _ => {
-            println!("usage: opengcram <compile|char|dse|compose> [flags] — see README.md");
+            println!(
+                "usage: opengcram <compile|char|dse|compose|serve|client> [flags] — see README.md"
+            );
         }
     }
     Ok(())

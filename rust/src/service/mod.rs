@@ -1,0 +1,302 @@
+//! Persistent compiler service — the ownership layer between the CLI
+//! (or the [`serve`] socket front end) and the pipeline.
+//!
+//! Historically every `char`/`dse`/`compose` invocation built its own
+//! `SharedRuntime`, `EvalCache` and flatten memo and threw them away
+//! at exit.  A [`Session`] lifts that state out of `main.rs`: it owns
+//! the runtime, the in-memory evaluation cache (bound once to the
+//! session's window resolution), an optional on-disk store tier
+//! ([`crate::store::DiskStore`]) and per-design warm
+//! [`FlattenCache`]s, and the former subcommand bodies become request
+//! handlers that **borrow** the session.  One-shot CLI mode is now
+//! literally "open session → one request → drop" — on the no-store
+//! path each handler replays the exact call sequence the old
+//! subcommand made, so its output is bitwise-identical.
+//!
+//! The payoff is every later request: a second sweep through the same
+//! session hits the memory tier, a second *process* hits the disk
+//! tier (zero characterization executions for cached points — the
+//! warm-restart KPI), and concurrent requests funneled through one
+//! session by [`serve`] pack their transient points into shared
+//! batches at the grouped ceiling.
+//!
+//! Tier order on lookup: memory (counts a hit) → disk (validated,
+//! promoted via [`EvalCache::adopt`] — *not* counted as a hit or
+//! miss, so `EvalCache::stats()` still means "requests served warm /
+//! pipeline evaluations paid this process") → pipeline (compile +
+//! batched characterize, counted as a miss, written back to both
+//! tiers).
+
+pub mod serve;
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::Mutex;
+
+use crate::characterize::{self, BankPerf};
+use crate::compiler::{compile, Bank, Config, ConfigKey};
+use crate::compose::{self, Composition};
+use crate::dse::{EvalCache, Evaluated};
+use crate::layout::FlattenCache;
+use crate::runtime::{RunHealth, SharedRuntime};
+use crate::store::{DiskStore, StoreKey, StoreStats};
+use crate::tech::Tech;
+use crate::util::par_map;
+use crate::variation::{self, DesignYield, VariationModel};
+
+/// Long-lived compiler state: one runtime, one coordinator path, one
+/// cache hierarchy.  All request methods take `&self` — the session
+/// is shared across server threads by reference
+/// (`std::thread::scope`), with interior mutability confined to the
+/// caches.
+pub struct Session<'t> {
+    tech: &'t Tech,
+    rt: SharedRuntime,
+    cache: EvalCache,
+    store: Option<DiskStore>,
+    /// Warm flatten memos, one per design: [`FlattenCache`] keys on
+    /// cell *names*, and same-named cells (bitcell, drivers, bank)
+    /// have different geometry under different configs — sharing one
+    /// memo across configs would alias rect lists.  Per-key memos
+    /// make repeat DRC of the same design warm and cross-design
+    /// aliasing impossible.
+    flatten: Mutex<HashMap<ConfigKey, FlattenCache>>,
+    window_resolution: f64,
+    workers: usize,
+}
+
+/// Telemetry snapshot for one [`Session`] lifetime — what the `stats`
+/// protocol command reports.
+#[derive(Debug, Clone)]
+pub struct SessionStats {
+    /// Distinct evaluations in the memory tier.
+    pub cache_entries: usize,
+    /// Requests served from the memory tier.
+    pub cache_hits: usize,
+    /// Pipeline evaluations paid by this process.
+    pub cache_misses: usize,
+    /// Disk-tier counters (`None` when the session has no store).
+    pub store: Option<StoreStats>,
+    /// Designs with a warm flatten memo.
+    pub flatten_configs: usize,
+    /// Cumulative per-artifact execution counters from the runtime —
+    /// the ground truth the grouped-ceiling KPIs are asserted on.
+    pub call_counts: BTreeMap<String, u64>,
+    pub backend: &'static str,
+}
+
+impl<'t> Session<'t> {
+    /// Open a session.  `window_resolution` is fixed for the session
+    /// lifetime and binds the cache immediately — a session can never
+    /// alias evaluations across resolutions
+    /// ([`EvalCache::bind_resolution`]).
+    pub fn new(
+        tech: &'t Tech,
+        rt: SharedRuntime,
+        window_resolution: f64,
+    ) -> crate::Result<Session<'t>> {
+        let cache = EvalCache::new();
+        cache.bind_resolution(window_resolution)?;
+        Ok(Session {
+            tech,
+            rt,
+            cache,
+            store: None,
+            flatten: Mutex::new(HashMap::new()),
+            window_resolution,
+            workers: crate::util::default_workers(),
+        })
+    }
+
+    /// Attach the on-disk store tier rooted at `dir` (created if
+    /// missing).  Entries are keyed by config + tech + resolution +
+    /// format version, so many sessions — concurrent or across
+    /// process lifetimes — can share one directory safely.
+    pub fn with_store(mut self, dir: impl AsRef<std::path::Path>) -> crate::Result<Session<'t>> {
+        self.store = Some(DiskStore::open(dir)?);
+        Ok(self)
+    }
+
+    /// Parallel-compile fan-out for sweep misses (defaults to
+    /// [`crate::util::default_workers`]).
+    pub fn with_workers(mut self, workers: usize) -> Session<'t> {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn tech(&self) -> &'t Tech {
+        self.tech
+    }
+
+    pub fn runtime(&self) -> &SharedRuntime {
+        &self.rt
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.rt.backend_name()
+    }
+
+    pub fn window_resolution(&self) -> f64 {
+        self.window_resolution
+    }
+
+    fn store_key(&self, key: &ConfigKey) -> StoreKey {
+        StoreKey::new(key.clone(), self.tech.name, self.window_resolution)
+    }
+
+    /// The batched sweep — the session-owned replacement for
+    /// [`dse::evaluate_all_batched_cached_health`](crate::dse::evaluate_all_batched_cached_health),
+    /// with the disk tier spliced between the memory tier and the
+    /// pipeline.  Behavior is pinned to the original: same dedup,
+    /// same miss order, same compile/characterize call sequence —
+    /// with no store attached the results are **bitwise-identical**
+    /// (`tests/serve.rs` asserts this), which is what keeps one-shot
+    /// CLI output stable across the refactor.
+    ///
+    /// The health report covers only the pipeline misses this call
+    /// paid; a sweep served from either cache tier reports clean.
+    pub fn evaluate(&self, configs: &[Config]) -> crate::Result<(Vec<Evaluated>, RunHealth)> {
+        self.cache.bind_resolution(self.window_resolution)?;
+        // distinct configs not yet in any tier, in first-appearance order
+        let mut seen: HashSet<ConfigKey> = HashSet::new();
+        let mut miss_cfgs: Vec<Config> = Vec::new();
+        for cfg in configs {
+            let key = cfg.key();
+            if !seen.insert(key.clone()) {
+                continue;
+            }
+            if self.cache.peek(&key).is_some() {
+                continue;
+            }
+            if let Some(store) = &self.store {
+                if let Some(e) = store.load(&self.store_key(&key)) {
+                    self.cache.adopt(e);
+                    continue;
+                }
+            }
+            miss_cfgs.push(cfg.clone());
+        }
+        let banks: Vec<Bank> = par_map(&miss_cfgs, self.workers, |cfg| compile(self.tech, cfg))
+            .into_iter()
+            .collect::<crate::Result<Vec<_>>>()?;
+        let (perfs, health) =
+            characterize::characterize_all_health(self.tech, &self.rt, &banks, self.window_resolution)?;
+        for (bank, perf) in banks.iter().zip(perfs) {
+            let (perf, quarantine) = match perf {
+                Ok(p) => (p, None),
+                Err(q) => (
+                    BankPerf::quarantined(),
+                    Some(format!("{} stage: {}", q.stage, q.reason)),
+                ),
+            };
+            let e = Evaluated {
+                config: bank.config.clone(),
+                perf,
+                area_um2: bank.layout.total_area_um2(),
+                quarantine,
+            };
+            if let Some(store) = &self.store {
+                store.save(&self.store_key(&e.config.key()), &e);
+            }
+            self.cache.insert(e);
+        }
+        let evals = configs
+            .iter()
+            .map(|cfg| {
+                self.cache.resolve(&cfg.key()).ok_or_else(|| {
+                    anyhow::anyhow!("config missing from cache after batch evaluation")
+                })
+            })
+            .collect::<crate::Result<Vec<Evaluated>>>()?;
+        Ok((evals, health))
+    }
+
+    /// Single-design characterization — the `char` subcommand body.
+    /// Rides [`Self::evaluate`] (so concurrent `char` requests
+    /// co-batch and cached points are free); a quarantined design is
+    /// a hard error naming the reason, matching the strict semantics
+    /// of the old per-design path.  Use a `0.0`-resolution session
+    /// for bitwise parity with direct
+    /// [`characterize::characterize`].
+    pub fn characterize_config(&self, cfg: &Config) -> crate::Result<Evaluated> {
+        let (evals, _health) = self.evaluate(std::slice::from_ref(cfg))?;
+        let e = evals.into_iter().next().expect("one config in, one eval out");
+        match &e.quarantine {
+            Some(reason) => anyhow::bail!("design quarantined: {reason}"),
+            None => Ok(e),
+        }
+    }
+
+    /// The `dse` nominal sweep body: evaluate and keep the session
+    /// caches warm for the next request.
+    pub fn sweep(&self, configs: &[Config]) -> crate::Result<(Vec<Evaluated>, RunHealth)> {
+        self.evaluate(configs)
+    }
+
+    /// The `compose` body.  `spec.window_resolution` must equal the
+    /// session's (the sweep cache is bound to it).  With a store
+    /// attached, the design grid is pre-warmed through
+    /// [`Self::evaluate`] first so new evaluations persist to disk
+    /// and a restarted service re-composes without re-characterizing;
+    /// the pre-warm's health is merged into the composition's.
+    /// Monte-Carlo compositions bypass both cache tiers (sampled
+    /// variants share their design's [`ConfigKey`]).
+    pub fn compose(&self, spec: &compose::ComposeSpec) -> crate::Result<Composition> {
+        anyhow::ensure!(
+            spec.window_resolution.to_bits() == self.window_resolution.to_bits(),
+            "compose spec resolution {} != session resolution {}",
+            spec.window_resolution,
+            self.window_resolution
+        );
+        let mut pre_health = RunHealth::default();
+        if self.store.is_some() && spec.mc.is_none() {
+            let (_evals, h) = self.evaluate(&compose::design_grid())?;
+            pre_health = h;
+        }
+        let mut c = compose::compose_cached(self.tech, &self.rt, spec, &self.cache)?;
+        pre_health.merge(std::mem::take(&mut c.health));
+        c.health = pre_health;
+        Ok(c)
+    }
+
+    /// The `dse --mc` body: Monte-Carlo yield sweep.  Sampled
+    /// variants share their design's [`ConfigKey`], so neither cache
+    /// tier can hold them — the sweep always runs the pipeline (all
+    /// `D·(K+1)` variants in one mega-batch at the grouped ceiling).
+    pub fn yield_sweep(
+        &self,
+        configs: &[Config],
+        model: &VariationModel,
+    ) -> crate::Result<(Vec<DesignYield>, RunHealth)> {
+        variation::yield_sweep_health(
+            self.tech,
+            &self.rt,
+            configs,
+            model,
+            self.workers,
+            self.window_resolution,
+        )
+    }
+
+    /// Hierarchical DRC of one design through its warm per-config
+    /// flatten memo: the first check of a design flattens its unique
+    /// cells once, repeat checks reuse the memo.
+    pub fn drc_check(&self, cfg: &Config) -> crate::Result<crate::drc::Report> {
+        let bank = compile(self.tech, cfg)?;
+        let mut memos = self.flatten.lock().unwrap_or_else(|p| p.into_inner());
+        let memo = memos.entry(cfg.key()).or_default();
+        crate::drc::hier::check_hier_cached(self.tech, &bank.library, "bank", memo)
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        let (cache_hits, cache_misses) = self.cache.stats();
+        SessionStats {
+            cache_entries: self.cache.len(),
+            cache_hits,
+            cache_misses,
+            store: self.store.as_ref().map(|s| s.stats()),
+            flatten_configs: self.flatten.lock().unwrap_or_else(|p| p.into_inner()).len(),
+            call_counts: self.rt.call_counts(),
+            backend: self.rt.backend_name(),
+        }
+    }
+}

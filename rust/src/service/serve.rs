@@ -1,0 +1,583 @@
+//! `opengcram serve` — the long-running socket front end over one
+//! shared [`Session`].
+//!
+//! Protocol: JSON-lines over a Unix domain socket.  One request per
+//! line, one response line per request, connections stay open for any
+//! number of requests.  Responses always carry `"ok": true|false`; an
+//! unparseable or unknown request gets an `"ok": false` response (with
+//! the parse context from [`crate::util::json::JsonError`]) and the
+//! connection survives.
+//!
+//! Requests:
+//!
+//! ```text
+//! {"cmd":"char","config":{"word":32,"words":64,"flavor":"gc-np"},"gather":3}
+//! {"cmd":"dse","configs":[{...},{...}],"gather":2}
+//! {"cmd":"compose","machine":"h100","weights":[1,0.5,0.5]}
+//! {"cmd":"drc","config":{...}}
+//! {"cmd":"stats"}
+//! {"cmd":"shutdown"}
+//! ```
+//!
+//! **Cross-request batching.**  `char`/`dse` requests do not run the
+//! pipeline themselves: they enqueue an evaluation job to the single
+//! dispatcher thread, which gathers concurrently arriving jobs (queue
+//! drain + a bounded gather window) and runs their **union** through
+//! one [`Session::evaluate`] call — so N concurrent single-design
+//! clients pay the grouped-ceiling execution census of one N-design
+//! sweep, not N separate sweeps.  The optional `"gather": N` hint
+//! holds the batch open (up to the window) until N party members have
+//! arrived, which makes co-batching deterministic for tests and
+//! scripted fleets; without hints, co-batching still happens whenever
+//! requests queue while an evaluation is in flight.  Every response
+//! reports `"party"` (how many requests shared the batch) and
+//! `"sweep_calls"` (the real per-artifact execution-counter delta of
+//! that batch) so the KPI is assertable from the protocol alone.
+//!
+//! `compose`/`drc`/`stats` run directly on the connection thread
+//! against the same session (the compose mega-sweep shares the same
+//! cache tiers; `drc` reuses warm per-design flatten memos).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::Session;
+use crate::cli;
+use crate::compiler::Config;
+use crate::compose;
+use crate::dse::Evaluated;
+use crate::runtime::RunHealth;
+use crate::util::json::{Json, ObjBuilder};
+
+/// Default socket path of `opengcram serve` / `opengcram client`.
+pub const DEFAULT_SOCKET: &str = "/tmp/opengcram.sock";
+
+/// Default gather window (ms): long enough for a scripted burst of
+/// clients to co-batch, short enough to be invisible interactively.
+pub const DEFAULT_GATHER_MS: u64 = 25;
+
+/// Server options.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    pub socket: PathBuf,
+    /// Upper bound on how long the dispatcher holds a batch open
+    /// waiting for its `"gather"` party to fill.
+    pub gather_ms: u64,
+}
+
+/// One evaluation request in the dispatcher queue.
+struct EvalJob {
+    configs: Vec<Config>,
+    /// Party-size hint: hold the batch open (up to the gather window)
+    /// until this many jobs have joined.
+    gather: usize,
+    reply: mpsc::Sender<Result<EvalShare, String>>,
+}
+
+/// One job's share of a dispatched batch.
+struct EvalShare {
+    /// This job's evaluations, in its own request order.
+    evals: Vec<Evaluated>,
+    /// Health of the whole batch (shared by every party member).
+    health: RunHealth,
+    /// Per-artifact execution-counter delta of the whole batch.
+    calls: BTreeMap<String, u64>,
+    /// How many requests shared the batch.
+    party: usize,
+}
+
+/// Run the server until a `shutdown` request.  The session is
+/// borrowed — the caller owns it and keeps its caches after the
+/// server exits (tests restart the listener over one warm session).
+pub fn serve(session: &Session, opts: &ServeOpts) -> crate::Result<()> {
+    let _ = std::fs::remove_file(&opts.socket);
+    let listener = UnixListener::bind(&opts.socket)
+        .map_err(|e| anyhow::anyhow!("serve: cannot bind {}: {e}", opts.socket.display()))?;
+    println!("listening on {} ({} backend)", opts.socket.display(), session.backend_name());
+    let stop = AtomicBool::new(false);
+    let gather = Duration::from_millis(opts.gather_ms);
+    let (job_tx, job_rx) = mpsc::channel::<EvalJob>();
+    std::thread::scope(|s| {
+        s.spawn(|| dispatcher(session, job_rx, gather));
+        for conn in listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let tx = job_tx.clone();
+                    let stop = &stop;
+                    let socket = opts.socket.as_path();
+                    s.spawn(move || client_loop(session, stream, tx, stop, socket));
+                }
+                Err(e) => eprintln!("serve: accept error: {e}"),
+            }
+        }
+        // the accept loop's sender dies here; the dispatcher exits
+        // once every client thread has dropped its clone
+        drop(job_tx);
+    });
+    let _ = std::fs::remove_file(&opts.socket);
+    Ok(())
+}
+
+/// Gather concurrently arriving evaluation jobs and run their union
+/// through one [`Session::evaluate`] — the cross-request batching
+/// core.  Single jobs with no party hint and an idle queue run
+/// immediately (no added latency).
+fn dispatcher(session: &Session, rx: mpsc::Receiver<EvalJob>, gather: Duration) {
+    while let Ok(first) = rx.recv() {
+        let mut jobs = vec![first];
+        // opportunistic drain: anything already queued joins for free
+        while let Ok(j) = rx.try_recv() {
+            jobs.push(j);
+        }
+        // party hints hold the batch open, bounded by the window
+        let deadline = Instant::now() + gather;
+        loop {
+            let target = jobs.iter().map(|j| j.gather.max(1)).max().unwrap_or(1);
+            if jobs.len() >= target {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(_) => break,
+            }
+        }
+        let union: Vec<Config> =
+            jobs.iter().flat_map(|j| j.configs.iter().cloned()).collect();
+        let party = jobs.len();
+        let before = session.runtime().call_counts();
+        match session.evaluate(&union) {
+            Ok((evals, health)) => {
+                let after = session.runtime().call_counts();
+                let calls = counter_delta(&before, &after);
+                let mut evals = evals.into_iter();
+                for job in jobs {
+                    let share = EvalShare {
+                        evals: evals.by_ref().take(job.configs.len()).collect(),
+                        health: health.clone(),
+                        calls: calls.clone(),
+                        party,
+                    };
+                    let _ = job.reply.send(Ok(share));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for job in jobs {
+                    let _ = job.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// `after - before`, per artifact (names absent from `before` count
+/// from zero; unchanged counters are omitted).
+fn counter_delta(
+    before: &BTreeMap<String, u64>,
+    after: &BTreeMap<String, u64>,
+) -> BTreeMap<String, u64> {
+    after
+        .iter()
+        .filter_map(|(name, &n)| {
+            let d = n - before.get(name).copied().unwrap_or(0);
+            (d > 0).then(|| (name.clone(), d))
+        })
+        .collect()
+}
+
+fn client_loop(
+    session: &Session,
+    stream: UnixStream,
+    jobs: mpsc::Sender<EvalJob>,
+    stop: &AtomicBool,
+    socket: &Path,
+) {
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (response, shutdown) = handle_line(session, &jobs, &line);
+        let mut out = response.dump();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).and_then(|()| writer.flush()).is_err() {
+            break;
+        }
+        if shutdown {
+            stop.store(true, Ordering::SeqCst);
+            // unblock the accept loop so it observes the stop flag
+            let _ = UnixStream::connect(socket);
+            break;
+        }
+    }
+}
+
+/// Dispatch one request line.  Returns the response and whether this
+/// request shuts the server down.
+fn handle_line(session: &Session, jobs: &mpsc::Sender<EvalJob>, line: &str) -> (Json, bool) {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return (err_response(&format!("bad request: {e}")), false),
+    };
+    let cmd = match req.get("cmd").and_then(Json::as_str) {
+        Some(c) => c.to_string(),
+        None => return (err_response("missing \"cmd\""), false),
+    };
+    if cmd == "shutdown" {
+        let resp = ObjBuilder::new()
+            .put("ok", Json::Bool(true))
+            .put("cmd", Json::Str("shutdown".into()))
+            .build();
+        return (resp, true);
+    }
+    let res = match cmd.as_str() {
+        "char" => handle_char(jobs, &req),
+        "dse" => handle_dse(jobs, &req),
+        "compose" => handle_compose(session, &req),
+        "drc" => handle_drc(session, &req),
+        "stats" => Ok(stats_json(session)),
+        other => Err(anyhow::anyhow!(
+            "unknown cmd '{other}' (expected char|dse|compose|drc|stats|shutdown)"
+        )),
+    };
+    match res {
+        Ok(j) => (j, false),
+        Err(e) => (err_response(&format!("{e:#}")), false),
+    }
+}
+
+fn err_response(msg: &str) -> Json {
+    ObjBuilder::new()
+        .put("ok", Json::Bool(false))
+        .put("error", Json::Str(msg.to_string()))
+        .build()
+}
+
+/// Enqueue one evaluation job and wait for the dispatcher's answer.
+fn submit(
+    jobs: &mpsc::Sender<EvalJob>,
+    configs: Vec<Config>,
+    gather: usize,
+) -> crate::Result<EvalShare> {
+    let (tx, rx) = mpsc::channel();
+    jobs.send(EvalJob { configs, gather, reply: tx })
+        .map_err(|_| anyhow::anyhow!("dispatcher is gone"))?;
+    match rx.recv() {
+        Ok(Ok(share)) => Ok(share),
+        Ok(Err(msg)) => Err(anyhow::anyhow!(msg)),
+        Err(_) => Err(anyhow::anyhow!("dispatcher dropped the reply")),
+    }
+}
+
+fn gather_hint(req: &Json) -> usize {
+    req.get("gather").and_then(Json::as_usize).unwrap_or(1)
+}
+
+fn handle_char(jobs: &mpsc::Sender<EvalJob>, req: &Json) -> crate::Result<Json> {
+    let cfg = config_from_json(
+        req.get("config").ok_or_else(|| anyhow::anyhow!("char: missing \"config\""))?,
+    )?;
+    let share = submit(jobs, vec![cfg], gather_hint(req))?;
+    let e = &share.evals[0];
+    Ok(ObjBuilder::new()
+        .put("ok", Json::Bool(true))
+        .put("eval", eval_json(e))
+        .put("party", Json::Num(share.party as f64))
+        .put("sweep_calls", calls_json(&share.calls))
+        .put("health", health_json(&share.health))
+        .build())
+}
+
+fn handle_dse(jobs: &mpsc::Sender<EvalJob>, req: &Json) -> crate::Result<Json> {
+    let arr = req
+        .get("configs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("dse: missing \"configs\" array"))?;
+    anyhow::ensure!(!arr.is_empty(), "dse: \"configs\" is empty");
+    let configs = arr.iter().map(config_from_json).collect::<crate::Result<Vec<_>>>()?;
+    let share = submit(jobs, configs, gather_hint(req))?;
+    Ok(ObjBuilder::new()
+        .put("ok", Json::Bool(true))
+        .put("evals", Json::Arr(share.evals.iter().map(eval_json).collect()))
+        .put("party", Json::Num(share.party as f64))
+        .put("sweep_calls", calls_json(&share.calls))
+        .put("health", health_json(&share.health))
+        .build())
+}
+
+fn handle_compose(session: &Session, req: &Json) -> crate::Result<Json> {
+    let machine =
+        cli::machine_by_name(req.get("machine").and_then(Json::as_str).unwrap_or("h100"))?;
+    let mut spec = compose::ComposeSpec::new(machine);
+    spec.window_resolution = session.window_resolution();
+    if let Some(w) = req.get("weights").and_then(Json::as_arr) {
+        anyhow::ensure!(w.len() == 3, "compose: \"weights\" needs [delay, area, power]");
+        let vals = w
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("compose: non-numeric weight")))
+            .collect::<crate::Result<Vec<f64>>>()?;
+        spec.w_delay = vals[0];
+        spec.w_area = vals[1];
+        spec.w_power = vals[2];
+    }
+    let c = session.compose(&spec)?;
+    let levels: Vec<Json> = c
+        .per_level
+        .iter()
+        .map(|s| {
+            let choice = match &s.choice {
+                None => Json::Null,
+                Some(ch) => ObjBuilder::new()
+                    .put("config", config_json(&ch.eval.config))
+                    .put("area_um2", Json::Num(ch.eval.area_um2))
+                    .put("leakage_w", Json::Num(ch.eval.perf.leakage_w))
+                    .put("f_op_hz", Json::Num(ch.eval.perf.f_op_hz))
+                    .put("cost", Json::Num(ch.cost))
+                    .put("freq_margin", Json::Num(ch.freq_margin))
+                    .put("retention_margin", Json::Num(ch.retention_margin))
+                    .build(),
+            };
+            ObjBuilder::new()
+                .put("level", Json::Str(format!("{:?}", s.demand.level)))
+                .put("feasible", Json::Num(s.feasible as f64))
+                .put("front", Json::Num(s.front as f64))
+                .put("choice", choice)
+                .build()
+        })
+        .collect();
+    Ok(ObjBuilder::new()
+        .put("ok", Json::Bool(true))
+        .put("machine", Json::Str(c.machine.to_string()))
+        .put("distinct", Json::Num(c.distinct as f64))
+        .put("cache_hits", Json::Num(c.cache_hits as f64))
+        .put("cache_misses", Json::Num(c.cache_misses as f64))
+        .put("levels", Json::Arr(levels))
+        .put("health", health_json(&c.health))
+        .build())
+}
+
+fn handle_drc(session: &Session, req: &Json) -> crate::Result<Json> {
+    let cfg = config_from_json(
+        req.get("config").ok_or_else(|| anyhow::anyhow!("drc: missing \"config\""))?,
+    )?;
+    let report = session.drc_check(&cfg)?;
+    Ok(ObjBuilder::new()
+        .put("ok", Json::Bool(true))
+        .put("clean", Json::Bool(report.clean()))
+        .put("violations", Json::Num(report.violations.len() as f64))
+        .put("rects_checked", Json::Num(report.rects_checked as f64))
+        .build())
+}
+
+fn stats_json(session: &Session) -> Json {
+    let s = session.stats();
+    let store = match s.store {
+        None => Json::Null,
+        Some(st) => ObjBuilder::new()
+            .put("hits", Json::Num(st.hits as f64))
+            .put("misses", Json::Num(st.misses as f64))
+            .put("rejects", Json::Num(st.rejects as f64))
+            .put("write_errors", Json::Num(st.write_errors as f64))
+            .build(),
+    };
+    ObjBuilder::new()
+        .put("ok", Json::Bool(true))
+        .put("backend", Json::Str(s.backend.to_string()))
+        .put("window_res", Json::Num(session.window_resolution()))
+        .put("cache_entries", Json::Num(s.cache_entries as f64))
+        .put("cache_hits", Json::Num(s.cache_hits as f64))
+        .put("cache_misses", Json::Num(s.cache_misses as f64))
+        .put("store", store)
+        .put("flatten_configs", Json::Num(s.flatten_configs as f64))
+        .put("calls", calls_json(&s.call_counts))
+        .build()
+}
+
+fn calls_json(calls: &BTreeMap<String, u64>) -> Json {
+    Json::Obj(calls.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect())
+}
+
+fn health_json(h: &RunHealth) -> Json {
+    let quarantined: Vec<Json> = h
+        .quarantined
+        .iter()
+        .map(|q| {
+            ObjBuilder::new()
+                .put("index", Json::Num(q.index as f64))
+                .put("design", Json::Str(q.design.clone()))
+                .put("stage", Json::Str(q.stage.to_string()))
+                .put("reason", Json::Str(q.reason.clone()))
+                .build()
+        })
+        .collect();
+    ObjBuilder::new()
+        .put("retries", Json::Num(h.retries as f64))
+        .put("bisect_execs", Json::Num(h.bisect_execs as f64))
+        .put("failovers", Json::Num(h.failovers as f64))
+        .put("quarantined", Json::Arr(quarantined))
+        .put("summary", Json::Str(h.summary()))
+        .build()
+}
+
+/// Protocol encoding of one design config — round-trips through
+/// [`config_from_json`].  Optional knobs serialize as `null` when
+/// unset.
+pub fn config_json(cfg: &Config) -> Json {
+    ObjBuilder::new()
+        .put("word", Json::Num(cfg.word_size as f64))
+        .put("words", Json::Num(cfg.num_words as f64))
+        .put("flavor", Json::Str(cli::flavor_name(cfg.flavor).to_string()))
+        .put("wwlls", Json::Bool(cfg.wwlls))
+        .put(
+            "mux",
+            match cfg.mux_factor {
+                Some(m) => Json::Num(m as f64),
+                None => Json::Null,
+            },
+        )
+        .put(
+            "vt",
+            match cfg.write_vt {
+                Some(v) => Json::Num(v),
+                None => Json::Null,
+            },
+        )
+        .build()
+}
+
+/// Parse a protocol config object.  `word`/`words` are required;
+/// `flavor` defaults to `gc-np` and parses strictly via
+/// [`cli::parse_flavor`]; `wwlls`/`mux`/`vt` are optional.
+pub fn config_from_json(j: &Json) -> crate::Result<Config> {
+    let word = j
+        .get("word")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("config: missing or non-integer \"word\""))?;
+    let words = j
+        .get("words")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("config: missing or non-integer \"words\""))?;
+    let flavor = match j.get("flavor") {
+        None | Some(Json::Null) => crate::compiler::CellFlavor::GcSiSiNp,
+        Some(f) => cli::parse_flavor(
+            f.as_str().ok_or_else(|| anyhow::anyhow!("config: \"flavor\" must be a string"))?,
+        )?,
+    };
+    let mut cfg = Config::new(word, words, flavor);
+    cfg.wwlls = j.get("wwlls").and_then(Json::as_bool).unwrap_or(false);
+    cfg.mux_factor = j.get("mux").and_then(Json::as_usize);
+    cfg.write_vt = j.get("vt").and_then(Json::as_f64);
+    Ok(cfg)
+}
+
+/// Protocol encoding of one evaluation (decimal f64s — Rust's
+/// shortest-round-trip `Display`, so finite values parse back
+/// bit-identically; NaN fields of quarantined points render as
+/// `null`).
+pub fn eval_json(e: &Evaluated) -> Json {
+    let p = &e.perf;
+    let perf = ObjBuilder::new()
+        .put("f_read_hz", Json::Num(p.f_read_hz))
+        .put("f_write_hz", Json::Num(p.f_write_hz))
+        .put("f_op_hz", Json::Num(p.f_op_hz))
+        .put("bandwidth_bps", Json::Num(p.bandwidth_bps))
+        .put("retention_s", Json::Num(p.retention_s))
+        .put("leakage_w", Json::Num(p.leakage_w))
+        .put("e_read_j", Json::Num(p.e_read_j))
+        .put("t_decoder_s", Json::Num(p.t_decoder_s))
+        .put("t_cell_read_s", Json::Num(p.t_cell_read_s))
+        .put("stored_one_v", Json::Num(p.stored_one_v))
+        .put("functional", Json::Bool(p.functional))
+        .build();
+    ObjBuilder::new()
+        .put("config", config_json(&e.config))
+        .put("area_um2", Json::Num(e.area_um2))
+        .put("perf", perf)
+        .put(
+            "quarantine",
+            match &e.quarantine {
+                Some(r) => Json::Str(r.clone()),
+                None => Json::Null,
+            },
+        )
+        .build()
+}
+
+/// One-shot scripted client: send one request line, return the
+/// response line.  Powers `opengcram client` (the CI smoke scripts).
+pub fn client_request(socket: &Path, line: &str) -> crate::Result<String> {
+    let mut stream = UnixStream::connect(socket)
+        .map_err(|e| anyhow::anyhow!("client: cannot connect to {}: {e}", socket.display()))?;
+    stream.write_all(line.as_bytes())?;
+    if !line.ends_with('\n') {
+        stream.write_all(b"\n")?;
+    }
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    let n = reader.read_line(&mut resp)?;
+    anyhow::ensure!(n > 0, "client: server closed the connection without a response");
+    Ok(resp.trim_end().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::CellFlavor;
+
+    #[test]
+    fn config_round_trips_through_protocol_json() {
+        let mut cfg = Config::new(16, 512, CellFlavor::GcOsOs);
+        cfg.wwlls = true;
+        cfg.mux_factor = Some(8);
+        cfg.write_vt = Some(0.35);
+        let j = config_json(&cfg);
+        let back = config_from_json(&j).unwrap();
+        assert_eq!(back.key(), cfg.key());
+        // defaults: bare object gets gc-np, no knobs
+        let bare = Json::parse(r#"{"word":32,"words":32}"#).unwrap();
+        let c = config_from_json(&bare).unwrap();
+        assert_eq!(c.flavor, CellFlavor::GcSiSiNp);
+        assert_eq!(c.key(), Config::new(32, 32, CellFlavor::GcSiSiNp).key());
+        // strictness: missing word, bad flavor
+        assert!(config_from_json(&Json::parse(r#"{"words":32}"#).unwrap()).is_err());
+        assert!(config_from_json(
+            &Json::parse(r#"{"word":32,"words":32,"flavor":"gc-pn"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn counter_delta_subtracts_and_drops_unchanged() {
+        let before: BTreeMap<String, u64> =
+            [("write".into(), 2u64), ("read".into(), 5u64)].into_iter().collect();
+        let after: BTreeMap<String, u64> =
+            [("write".into(), 2u64), ("read".into(), 7u64), ("retention".into(), 1u64)]
+                .into_iter()
+                .collect();
+        let d = counter_delta(&before, &after);
+        assert_eq!(d.get("read"), Some(&2));
+        assert_eq!(d.get("retention"), Some(&1));
+        assert!(!d.contains_key("write"), "unchanged counters are omitted");
+    }
+}

@@ -1,0 +1,363 @@
+//! Content-addressed on-disk evaluation store — the persistent tier
+//! under [`dse::EvalCache`](crate::dse::EvalCache).
+//!
+//! One evaluated design point ([`dse::Evaluated`](crate::dse::Evaluated))
+//! is one small JSON file whose *identity* is the full provenance of
+//! the measurement, not just the design: [`StoreKey`] combines the
+//! [`ConfigKey`], the technology name, the window-quantization
+//! resolution (bit pattern — resolution changes measured windows, so
+//! entries must never alias across resolutions) and [`FORMAT_VERSION`].
+//! The canonical key string is stored **verbatim inside the entry**
+//! and re-checked on load, so a hash collision, a renamed file, or an
+//! entry copied between stores is rejected instead of silently served
+//! as someone else's evaluation.
+//!
+//! Numeric payloads (`area_um2`, every [`BankPerf`] figure) are
+//! encoded as 16-hex-digit `f64::to_bits` strings, so persistence is
+//! **bitwise** — including the all-NaN quarantine placeholder, which a
+//! plain decimal round-trip would corrupt (`NaN` has no JSON literal).
+//! That is what lets a warm restart reproduce a sweep bit-identically
+//! with zero characterization executions.
+//!
+//! Writes are atomic (`.tmp` + rename) and best-effort: a read-only
+//! store directory degrades to a cache miss on every load, never an
+//! error.  Validation failures of any kind (unparseable bytes, version
+//! bump, key mismatch) count as `rejects` in [`StoreStats`] and the
+//! caller recomputes — corruption costs a re-evaluation, not wrong
+//! data.
+//!
+//! [`BankPerf`]: crate::characterize::BankPerf
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::characterize::BankPerf;
+use crate::compiler::ConfigKey;
+use crate::dse::Evaluated;
+use crate::util::json::{Json, ObjBuilder};
+
+/// Bump on ANY change to the entry encoding or to the semantics of
+/// what a stored figure means; old entries are then rejected (and
+/// recomputed) rather than misread.
+pub const FORMAT_VERSION: u64 = 1;
+
+/// Full provenance identity of one stored evaluation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct StoreKey {
+    pub config: ConfigKey,
+    /// [`Tech::name`](crate::tech::Tech::name) the point was
+    /// characterized under.
+    pub tech: String,
+    /// `window_resolution.to_bits()` — the quantization step changes
+    /// the measured transient windows, so it is part of identity.
+    pub window_res_bits: u64,
+}
+
+impl StoreKey {
+    pub fn new(config: ConfigKey, tech: &str, window_resolution: f64) -> StoreKey {
+        StoreKey { config, tech: tech.to_string(), window_res_bits: window_resolution.to_bits() }
+    }
+
+    /// Canonical, human-greppable key string.  This exact string is
+    /// hashed for the filename AND embedded verbatim in the entry;
+    /// equality of the embedded copy is what validates a load.
+    pub fn canonical(&self) -> String {
+        let ConfigKey { word_size, num_words, flavor, wwlls, mux_factor, write_vt_bits } =
+            &self.config;
+        let mux = match mux_factor {
+            Some(m) => m.to_string(),
+            None => "none".to_string(),
+        };
+        let vt = match write_vt_bits {
+            Some(b) => format!("{b:016x}"),
+            None => "none".to_string(),
+        };
+        format!(
+            "v{}|tech={}|res={:016x}|word={}|words={}|flavor={}|wwlls={}|mux={}|vt={}",
+            FORMAT_VERSION,
+            self.tech,
+            self.window_res_bits,
+            word_size,
+            num_words,
+            crate::cli::flavor_name(*flavor),
+            wwlls,
+            mux,
+            vt,
+        )
+    }
+
+    /// Entry filename: FNV-1a of the canonical string.  Collisions are
+    /// harmless (the embedded key check rejects the impostor and the
+    /// point is recomputed), so a 64-bit hash is plenty.
+    pub fn filename(&self) -> String {
+        format!("{:016x}.json", fnv1a64(self.canonical().as_bytes()))
+    }
+}
+
+/// FNV-1a 64-bit — tiny, dependency-free, stable across platforms
+/// (unlike `DefaultHasher`, whose output is explicitly unspecified
+/// between releases and therefore unusable for on-disk names).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Load/save/reject counters for one [`DiskStore`] lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Entries served (validated) from disk.
+    pub hits: usize,
+    /// Lookups with no file on disk.
+    pub misses: usize,
+    /// Files present but rejected: parse failure, version mismatch,
+    /// canonical-key mismatch, or malformed payload.
+    pub rejects: usize,
+    /// Best-effort saves that failed (e.g. read-only directory).
+    pub write_errors: usize,
+}
+
+/// The on-disk tier.  Thread-safe (`&self` everywhere); concurrent
+/// saves of the same key are benign because writes are atomic renames
+/// of identical content.
+#[derive(Debug)]
+pub struct DiskStore {
+    dir: PathBuf,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    rejects: AtomicUsize,
+    write_errors: AtomicUsize,
+}
+
+impl DiskStore {
+    /// Open (creating the directory if needed).  Fails only if the
+    /// directory cannot be created — an *unwritable* but existing
+    /// directory opens fine and degrades to a read-only store.
+    pub fn open(dir: impl AsRef<Path>) -> crate::Result<DiskStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("store: cannot create {}: {e}", dir.display()))?;
+        Ok(DiskStore {
+            dir,
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            rejects: AtomicUsize::new(0),
+            write_errors: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            rejects: self.rejects.load(Ordering::Relaxed),
+            write_errors: self.write_errors.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Load and validate one entry.  `None` (and the appropriate
+    /// counter) on missing file or any validation failure — the caller
+    /// recomputes; this method never fabricates or aliases data.
+    pub fn load(&self, key: &StoreKey) -> Option<Evaluated> {
+        let path = self.dir.join(key.filename());
+        let bytes = match std::fs::read_to_string(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match decode_entry(&bytes, key) {
+            Some(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e)
+            }
+            None => {
+                self.rejects.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Persist one entry, best-effort.  Atomic (`.tmp` + rename) so a
+    /// crashed or concurrent writer can never leave a torn entry for
+    /// [`Self::load`] to reject later.
+    pub fn save(&self, key: &StoreKey, e: &Evaluated) {
+        let line = encode_entry(key, e);
+        let path = self.dir.join(key.filename());
+        let tmp = self.dir.join(format!("{}.tmp.{}", key.filename(), std::process::id()));
+        let res = std::fs::write(&tmp, line.as_bytes()).and_then(|()| std::fs::rename(&tmp, &path));
+        if res.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+            self.write_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn hex_bits(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+fn parse_bits(j: &Json) -> Option<f64> {
+    let s = j.as_str()?;
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+/// One-line JSON encoding of an entry.  Every `f64` is a
+/// 16-hex-digit bit pattern (bitwise round-trip incl. NaN); the
+/// canonical key rides along verbatim for load-time validation.
+pub fn encode_entry(key: &StoreKey, e: &Evaluated) -> String {
+    let p = &e.perf;
+    let perf = ObjBuilder::new()
+        .put("f_read_hz", hex_bits(p.f_read_hz))
+        .put("f_write_hz", hex_bits(p.f_write_hz))
+        .put("f_op_hz", hex_bits(p.f_op_hz))
+        .put("bandwidth_bps", hex_bits(p.bandwidth_bps))
+        .put("retention_s", hex_bits(p.retention_s))
+        .put("leakage_w", hex_bits(p.leakage_w))
+        .put("e_read_j", hex_bits(p.e_read_j))
+        .put("t_decoder_s", hex_bits(p.t_decoder_s))
+        .put("t_cell_read_s", hex_bits(p.t_cell_read_s))
+        .put("stored_one_v", hex_bits(p.stored_one_v))
+        .put("functional", Json::Bool(p.functional))
+        .build();
+    let quarantine = match &e.quarantine {
+        Some(r) => Json::Str(r.clone()),
+        None => Json::Null,
+    };
+    ObjBuilder::new()
+        .put("version", Json::Num(FORMAT_VERSION as f64))
+        .put("key", Json::Str(key.canonical()))
+        .put("area_um2", hex_bits(e.area_um2))
+        .put("perf", perf)
+        .put("quarantine", quarantine)
+        .build()
+        .dump()
+}
+
+/// Strict decode-and-validate.  `None` unless the bytes parse, the
+/// version matches [`FORMAT_VERSION`], the embedded canonical key is
+/// byte-identical to `key.canonical()`, and every payload field is
+/// well-formed.  The config is rebuilt from the key
+/// ([`ConfigKey::to_config`] is lossless), so an entry can never
+/// carry a config that disagrees with its identity.
+pub fn decode_entry(bytes: &str, key: &StoreKey) -> Option<Evaluated> {
+    let j = Json::parse(bytes).ok()?;
+    let version = j.get("version")?.as_f64()?;
+    if version != FORMAT_VERSION as f64 {
+        return None;
+    }
+    if j.get("key")?.as_str()? != key.canonical() {
+        return None;
+    }
+    let area_um2 = parse_bits(j.get("area_um2")?)?;
+    let p = j.get("perf")?;
+    let perf = BankPerf {
+        f_read_hz: parse_bits(p.get("f_read_hz")?)?,
+        f_write_hz: parse_bits(p.get("f_write_hz")?)?,
+        f_op_hz: parse_bits(p.get("f_op_hz")?)?,
+        bandwidth_bps: parse_bits(p.get("bandwidth_bps")?)?,
+        retention_s: parse_bits(p.get("retention_s")?)?,
+        leakage_w: parse_bits(p.get("leakage_w")?)?,
+        e_read_j: parse_bits(p.get("e_read_j")?)?,
+        t_decoder_s: parse_bits(p.get("t_decoder_s")?)?,
+        t_cell_read_s: parse_bits(p.get("t_cell_read_s")?)?,
+        stored_one_v: parse_bits(p.get("stored_one_v")?)?,
+        functional: p.get("functional")?.as_bool()?,
+    };
+    let quarantine = match j.get("quarantine")? {
+        Json::Null => None,
+        q => Some(q.as_str()?.to_string()),
+    };
+    Some(Evaluated { config: key.config.to_config(), perf, area_um2, quarantine })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{CellFlavor, Config};
+
+    fn sample_eval() -> (StoreKey, Evaluated) {
+        let mut cfg = Config::new(32, 64, CellFlavor::GcSiSiNp);
+        cfg.write_vt = Some(0.42);
+        let perf = BankPerf {
+            f_read_hz: 1.23e9,
+            f_write_hz: 2.5e9,
+            f_op_hz: 1.23e9,
+            bandwidth_bps: 3.9e10,
+            retention_s: 1.0 / 3.0,
+            leakage_w: 5e-324, // subnormal: stresses the bit round-trip
+            e_read_j: 2.1e-13,
+            t_decoder_s: 8.1e-11,
+            t_cell_read_s: 3.3e-10,
+            stored_one_v: 0.73,
+            functional: true,
+        };
+        let e = Evaluated { config: cfg.clone(), perf, area_um2: 1234.5678, quarantine: None };
+        (StoreKey::new(cfg.key(), "sg40", 0.1), e)
+    }
+
+    #[test]
+    fn canonical_key_distinguishes_every_identity_axis() {
+        let (key, _) = sample_eval();
+        let base = key.canonical();
+        let mut tech = key.clone();
+        tech.tech = "sg28".into();
+        let mut res = key.clone();
+        res.window_res_bits = 0.2f64.to_bits();
+        let mut cfg = key.clone();
+        cfg.config.word_size = 16;
+        for other in [tech, res, cfg] {
+            assert_ne!(base, other.canonical());
+            assert_ne!(key.filename(), other.filename());
+        }
+        assert!(base.starts_with(&format!("v{FORMAT_VERSION}|tech=sg40|")));
+    }
+
+    #[test]
+    fn encode_decode_is_bitwise_including_nan_quarantine() {
+        let (key, e) = sample_eval();
+        let line = encode_entry(&key, &e);
+        let back = decode_entry(&line, &key).expect("round-trip");
+        assert_eq!(back.config.key(), e.config.key());
+        assert_eq!(back.area_um2.to_bits(), e.area_um2.to_bits());
+        assert_eq!(back.perf.retention_s.to_bits(), e.perf.retention_s.to_bits());
+        assert_eq!(back.perf.leakage_w.to_bits(), e.perf.leakage_w.to_bits());
+        assert_eq!(back.quarantine, None);
+
+        // quarantined entry: all-NaN perf must survive bit-for-bit
+        let q = Evaluated {
+            config: e.config.clone(),
+            perf: BankPerf::quarantined(),
+            area_um2: f64::NAN,
+            quarantine: Some("write stage: poisoned".into()),
+        };
+        let back = decode_entry(&encode_entry(&key, &q), &key).expect("round-trip");
+        assert_eq!(back.area_um2.to_bits(), f64::NAN.to_bits());
+        assert!(back.perf.f_op_hz.is_nan());
+        assert!(!back.perf.functional);
+        assert_eq!(back.quarantine.as_deref(), Some("write stage: poisoned"));
+    }
+
+    #[test]
+    fn decode_rejects_version_and_key_mismatches() {
+        let (key, e) = sample_eval();
+        let line = encode_entry(&key, &e);
+        assert!(decode_entry(&line.replace("\"version\":1", "\"version\":2"), &key).is_none());
+        let mut other = key.clone();
+        other.tech = "sg28".into();
+        assert!(decode_entry(&line, &other).is_none(), "copied entry must not alias");
+        assert!(decode_entry("not json at all", &key).is_none());
+        assert!(decode_entry(&line.replace("functional", "funktional"), &key).is_none());
+    }
+}

@@ -1,10 +1,18 @@
-//! Minimal recursive-descent JSON parser for `artifacts/manifest.json`.
+//! Minimal recursive-descent JSON parser and serializer.
 //!
-//! serde_json is not in the offline registry, and the manifest is the
-//! single JSON document the runtime must read, so a ~200-line strict
-//! parser is the right tool.  Supports the full JSON grammar (objects,
-//! arrays, strings with escapes, numbers, bools, null); rejects trailing
-//! garbage.
+//! serde_json is not in the offline registry; this module started as
+//! the strict parser for `artifacts/manifest.json` and now also does
+//! protocol duty for the `serve` front end ([`crate::service::serve`])
+//! and the on-disk evaluation store ([`crate::store`]).  Supports the
+//! full JSON grammar (objects, arrays, strings with escapes, numbers,
+//! bools, null); rejects trailing garbage.  Parse errors carry a
+//! snippet of the offending input ([`JsonError::context`]) so a bad
+//! request line over the socket is diagnosable from the error alone.
+//!
+//! [`Json::dump`] is the serializer: compact one-line output, strings
+//! escaped per RFC 8259 (quotes, backslashes, all control characters),
+//! non-finite numbers emitted as `null` (JSON has no NaN/Infinity).
+//! `parse(dump(x)) == x` for every value whose numbers are finite.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -70,6 +78,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// Array of strings helper (manifest node/param name lists).
     pub fn str_list(&self) -> Option<Vec<String>> {
         self.as_arr()?
@@ -77,17 +92,121 @@ impl Json {
             .map(|v| v.as_str().map(|s| s.to_string()))
             .collect()
     }
+
+    /// Serialize to compact one-line JSON.  Strings are escaped per
+    /// RFC 8259 — `"`, `\`, and **every** control character below
+    /// U+0020 (named escapes where they exist, `\u00XX` otherwise) —
+    /// so untrusted content round-trips through the line-oriented
+    /// serve protocol without ever emitting a raw newline.  Non-finite
+    /// numbers serialize as `null`.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_num(*n, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    x.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Rust's shortest-round-trip `Display` for f64: `parse(dump)` is
+/// bit-identical for every finite value, which the on-disk store's
+/// textual fields and the serve protocol rely on.
+fn write_num(n: f64, out: &mut String) {
+    use fmt::Write;
+    if n.is_finite() {
+        let _ = write!(out, "{n}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    use fmt::Write;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Fluent [`Json::Obj`] builder for response/entry assembly.
+#[derive(Default)]
+pub struct ObjBuilder(BTreeMap<String, Json>);
+
+impl ObjBuilder {
+    pub fn new() -> ObjBuilder {
+        ObjBuilder::default()
+    }
+
+    pub fn put(mut self, key: &str, value: Json) -> ObjBuilder {
+        self.0.insert(key.to_string(), value);
+        self
+    }
+
+    pub fn build(self) -> Json {
+        Json::Obj(self.0)
+    }
 }
 
 #[derive(Debug, Clone)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
+    /// Snippet of the offending input around `pos` (control characters
+    /// escaped) — a bad request line over the serve socket must be
+    /// diagnosable from the error alone, without server-side logs of
+    /// the raw input.
+    pub context: String,
 }
 
 impl fmt::Display for JsonError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+        write!(
+            f,
+            "json error at byte {}: {} (near `{}`)",
+            self.pos, self.msg, self.context
+        )
     }
 }
 
@@ -100,7 +219,15 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
-        JsonError { pos: self.i, msg: msg.to_string() }
+        // a window of the raw input around the failure point; lossy
+        // decoding tolerates the window splitting a multi-byte char
+        let lo = self.i.saturating_sub(16);
+        let hi = (self.i + 16).min(self.b.len());
+        let context: String = String::from_utf8_lossy(&self.b[lo..hi])
+            .chars()
+            .map(|c| if c.is_control() { '\u{fffd}' } else { c })
+            .collect();
+        JsonError { pos: self.i, msg: msg.to_string(), context }
     }
 
     fn skip_ws(&mut self) {
@@ -310,5 +437,76 @@ mod tests {
     fn unicode_escape() {
         let j = Json::parse(r#""µs""#).unwrap();
         assert_eq!(j.as_str(), Some("\u{b5}s"));
+    }
+
+    #[test]
+    fn serializer_escapes_quotes_and_control_characters() {
+        // regression: the pre-PR-9 crate had no serializer at all and
+        // the bench writer emitted strings raw — a quote or newline in
+        // a value would have produced an unparseable document
+        assert_eq!(Json::Str("a\"b".into()).dump(), r#""a\"b""#);
+        assert_eq!(Json::Str("back\\slash".into()).dump(), r#""back\\slash""#);
+        assert_eq!(Json::Str("line\nbreak".into()).dump(), r#""line\nbreak""#);
+        assert_eq!(Json::Str("\r\t\u{8}\u{c}".into()).dump(), r#""\r\t\b\f""#);
+        // unnamed control chars get \u00XX, so a line-oriented protocol
+        // never sees a raw control byte inside a serialized line
+        assert_eq!(Json::Str("\u{1}\u{1f}".into()).dump(), "\"\\u0001\\u001f\"");
+        assert!(!Json::Str("x\u{0}y".into()).dump().contains('\u{0}'));
+        // non-string scalars and containers
+        assert_eq!(Json::Null.dump(), "null");
+        assert_eq!(Json::Bool(true).dump(), "true");
+        assert_eq!(Json::Num(-1500.0).dump(), "-1500");
+        assert_eq!(Json::Num(f64::NAN).dump(), "null", "JSON has no NaN");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        let obj = ObjBuilder::new()
+            .put("b", Json::Arr(vec![Json::Num(1.0), Json::Str("x".into())]))
+            .put("a", Json::Null)
+            .build();
+        assert_eq!(obj.dump(), r#"{"a":null,"b":[1,"x"]}"#);
+    }
+
+    #[test]
+    fn serializer_round_trips_through_parser() {
+        // parse(dump(x)) == x, including every escape class and
+        // shortest-round-trip float formatting (bit-exact for finite)
+        let cases = [
+            Json::Str("quote \" slash \\ nl \n tab \t nul \u{0} µ".into()),
+            Json::Num(0.1 + 0.2),
+            Json::Num(-0.0),
+            Json::Num(1e-300),
+            Json::parse(r#"{"a":[1,2,{"b":"xy"}],"c":{},"d":null}"#).unwrap(),
+        ];
+        for v in cases {
+            let back = Json::parse(&v.dump()).unwrap();
+            assert_eq!(back, v, "round-trip diverged for {}", v.dump());
+        }
+        // bit-exactness of the float path specifically
+        for f in [std::f64::consts::PI, 1.0 / 3.0, 6.02e23, 5e-324] {
+            let back = Json::parse(&Json::Num(f).dump()).unwrap();
+            assert_eq!(back.as_f64().unwrap().to_bits(), f.to_bits());
+        }
+    }
+
+    #[test]
+    fn parse_errors_carry_the_offending_input() {
+        // regression: errors used to report only a byte offset, so a
+        // bad request line over the serve socket was undiagnosable
+        // without server-side logging of the raw input
+        let err = Json::parse(r#"{"word": thirty-two}"#).unwrap_err();
+        assert!(err.context.contains("thirty-two"), "{err}");
+        assert!(err.to_string().contains("thirty-two"), "{err}");
+        let err = Json::parse("[1, 2, oops]").unwrap_err();
+        assert!(err.to_string().contains("oops"), "{err}");
+        // trailing garbage names the garbage
+        let err = Json::parse("{} trailing-junk").unwrap_err();
+        assert!(err.to_string().contains("trailing-junk"), "{err}");
+        // the snippet is a window, not the whole (possibly huge) input
+        let long = format!("[{}oops]", "1,".repeat(10_000));
+        let err = Json::parse(&long).unwrap_err();
+        assert!(err.context.len() <= 40, "context too large: {}", err.context.len());
+        assert!(err.context.contains("oops"), "{err}");
+        // control characters in the snippet are sanitized
+        let err = Json::parse("{\"a\": \u{1}bad}").unwrap_err();
+        assert!(!err.to_string().contains('\u{1}'));
     }
 }

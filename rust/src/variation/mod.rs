@@ -392,7 +392,7 @@ pub fn yield_sweep_health(
             distinct.push(cfg.clone());
         }
     }
-    let banks: Vec<Bank> = dse::par_map(&distinct, workers, |cfg| compile(tech, cfg))
+    let banks: Vec<Bank> = crate::util::par_map(&distinct, workers, |cfg| compile(tech, cfg))
         .into_iter()
         .collect::<crate::Result<Vec<_>>>()?;
     let k = model.samples;

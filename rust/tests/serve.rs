@@ -1,0 +1,339 @@
+//! Service-layer acceptance tier: the session refactor must not move
+//! a single bit of the one-shot results, and the `serve` front end
+//! must deliver its two scale KPIs on REAL native call counters —
+//! N concurrent single-design clients pay the grouped-ceiling census
+//! of ONE union sweep, and a server restarted over the same on-disk
+//! store re-serves an identical sweep with zero characterization
+//! executions.
+
+use opengcram::characterize::{self, DEFAULT_WINDOW_RESOLUTION};
+use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::runtime::SharedRuntime;
+use opengcram::service::serve::{self, ServeOpts};
+use opengcram::service::Session;
+use opengcram::tech::sg40;
+use opengcram::util::json::Json;
+use opengcram::dse;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Unique scratch path (no tempfile crate in the offline registry).
+fn scratch(name: &str) -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    std::env::temp_dir().join(format!(
+        "opengcram-serve-test-{}-{}-{}",
+        name,
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Run `body` against a live server over `session`, then shut the
+/// server down cleanly.  A panicking body still shuts the server down
+/// (so the scope join can't deadlock) before resuming the panic.
+fn with_server<R>(
+    session: &Session,
+    socket: &Path,
+    gather_ms: u64,
+    body: impl FnOnce() -> R,
+) -> R {
+    let opts = ServeOpts { socket: socket.to_path_buf(), gather_ms };
+    std::thread::scope(|s| {
+        let server = s.spawn(|| serve::serve(session, &opts));
+        for _ in 0..1000 {
+            if socket.exists() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(socket.exists(), "server did not come up on {}", socket.display());
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
+        let down = serve::client_request(socket, r#"{"cmd":"shutdown"}"#);
+        server.join().expect("server thread").expect("clean serve exit");
+        match out {
+            Ok(r) => {
+                down.expect("shutdown handshake");
+                r
+            }
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    })
+}
+
+fn parse_ok(resp: &str) -> Json {
+    let j = Json::parse(resp).unwrap_or_else(|e| panic!("bad response {resp}: {e}"));
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "error response: {resp}");
+    j
+}
+
+fn calls_of(j: &Json, field: &str) -> BTreeMap<String, u64> {
+    j.get(field)
+        .and_then(Json::as_obj)
+        .map(|m| {
+            m.iter()
+                .map(|(k, v)| (k.clone(), v.as_f64().expect("numeric counter") as u64))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn char_line(cfg: &Config, gather: usize) -> String {
+    format!(
+        r#"{{"cmd":"char","config":{},"gather":{}}}"#,
+        serve::config_json(cfg).dump(),
+        gather
+    )
+}
+
+/// The acceptance KPI: three concurrent single-design clients share
+/// ONE batched sweep — each response reports the full party and a
+/// sweep census equal to a reference single-mega-batch run of the
+/// same three designs on a private runtime (grouped ceiling: one
+/// retention execution for the whole party, not one per client).
+#[test]
+fn concurrent_clients_pay_grouped_ceiling_census() {
+    let t = sg40();
+    let configs = [
+        Config::new(16, 16, CellFlavor::GcSiSiNp),
+        Config::new(32, 32, CellFlavor::GcSiSiNp),
+        Config::new(16, 32, CellFlavor::GcSiSiNp),
+    ];
+
+    // reference: the same three designs as one batched sweep on a
+    // private runtime — real counters, no other test can touch them
+    let rt_ref = SharedRuntime::native();
+    let (expected, _h) = dse::evaluate_all_batched_health(
+        &t,
+        &rt_ref,
+        &configs,
+        1,
+        DEFAULT_WINDOW_RESOLUTION,
+    )
+    .unwrap();
+    let expected_calls = rt_ref.call_counts();
+    assert_eq!(
+        expected_calls.get("retention").copied(),
+        Some(1),
+        "3 designs must share one retention execution: {expected_calls:?}"
+    );
+
+    let session = Session::new(&t, SharedRuntime::native(), DEFAULT_WINDOW_RESOLUTION).unwrap();
+    let socket = scratch("census.sock");
+    let responses: Vec<(usize, Json)> = with_server(&session, &socket, 10_000, || {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = configs
+                .iter()
+                .enumerate()
+                .map(|(i, cfg)| {
+                    let socket = socket.as_path();
+                    let line = char_line(cfg, configs.len());
+                    s.spawn(move || (i, parse_ok(&serve::client_request(socket, &line).unwrap())))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    });
+
+    for (i, resp) in &responses {
+        assert_eq!(
+            resp.get("party").and_then(Json::as_usize),
+            Some(configs.len()),
+            "client {i} must report the full party: {resp:?}"
+        );
+        // the shared census IS the reference mega-batch census
+        assert_eq!(calls_of(resp, "sweep_calls"), expected_calls, "client {i}");
+        // and each client's numbers are its design's, bit-for-bit
+        // (decimal JSON round-trips f64 exactly)
+        let perf = resp.get("eval").and_then(|e| e.get("perf")).expect("perf");
+        let want = &expected[*i].perf;
+        for (name, w) in [
+            ("f_op_hz", want.f_op_hz),
+            ("retention_s", want.retention_s),
+            ("leakage_w", want.leakage_w),
+            ("stored_one_v", want.stored_one_v),
+        ] {
+            let got = perf.get(name).and_then(Json::as_f64).expect(name);
+            assert_eq!(got.to_bits(), w.to_bits(), "client {i} {name}");
+        }
+        assert_eq!(resp.get("eval").and_then(|e| e.get("quarantine")), Some(&Json::Null));
+    }
+
+    // session telemetry agrees: one union sweep, three pipeline misses
+    let stats = session.stats();
+    assert_eq!(stats.call_counts, expected_calls);
+    assert_eq!(stats.cache_misses, configs.len());
+    assert_eq!(stats.cache_hits, 0);
+}
+
+/// Bitwise pin of the refactor: `Session::evaluate` (no store) must
+/// reproduce `dse::evaluate_all_batched_health` exactly, and the
+/// session `char` body at resolution 0 must reproduce the historical
+/// per-design `characterize::characterize` path exactly.
+#[test]
+fn session_paths_are_bitwise_identical_to_preservice_pipelines() {
+    let t = sg40();
+    let mut vt = Config::new(16, 16, CellFlavor::GcSiSiNp);
+    vt.write_vt = Some(0.45);
+    let configs = [
+        Config::new(16, 16, CellFlavor::GcSiSiNp),
+        Config::new(32, 32, CellFlavor::GcOsOs),
+        vt.clone(),
+        Config::new(16, 16, CellFlavor::GcSiSiNp), // repeat: cache path
+    ];
+
+    let rt_old = SharedRuntime::native();
+    let (old, old_health) =
+        dse::evaluate_all_batched_health(&t, &rt_old, &configs, 2, DEFAULT_WINDOW_RESOLUTION)
+            .unwrap();
+    assert!(old_health.is_clean());
+
+    let session = Session::new(&t, SharedRuntime::native(), DEFAULT_WINDOW_RESOLUTION)
+        .unwrap()
+        .with_workers(2);
+    let (new, new_health) = session.evaluate(&configs).unwrap();
+    assert!(new_health.is_clean());
+    assert_eq!(session.runtime().call_counts(), rt_old.call_counts(), "same execution census");
+    assert_eq!(old.len(), new.len());
+    for (a, b) in old.iter().zip(&new) {
+        assert_eq!(a.config.key(), b.config.key());
+        assert_eq!(a.area_um2.to_bits(), b.area_um2.to_bits());
+        let pairs = [
+            (a.perf.f_read_hz, b.perf.f_read_hz),
+            (a.perf.f_write_hz, b.perf.f_write_hz),
+            (a.perf.f_op_hz, b.perf.f_op_hz),
+            (a.perf.bandwidth_bps, b.perf.bandwidth_bps),
+            (a.perf.retention_s, b.perf.retention_s),
+            (a.perf.leakage_w, b.perf.leakage_w),
+            (a.perf.e_read_j, b.perf.e_read_j),
+            (a.perf.t_decoder_s, b.perf.t_decoder_s),
+            (a.perf.t_cell_read_s, b.perf.t_cell_read_s),
+            (a.perf.stored_one_v, b.perf.stored_one_v),
+        ];
+        for (i, (x, y)) in pairs.iter().enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "field {i} of {:?}", a.config.key());
+        }
+        assert_eq!(a.perf.functional, b.perf.functional);
+    }
+
+    // char body: exact-window session == historical singleton path
+    let cfg = Config::new(16, 16, CellFlavor::GcSiSiNn);
+    let bank = compile(&t, &cfg).unwrap();
+    let rt_single = SharedRuntime::native();
+    let direct = rt_single.with(|b| characterize::characterize(&t, b, &bank)).unwrap();
+    let char_session = Session::new(&t, SharedRuntime::native(), 0.0).unwrap();
+    let via = char_session.characterize_config(&cfg).unwrap();
+    assert_eq!(via.perf.f_op_hz.to_bits(), direct.f_op_hz.to_bits());
+    assert_eq!(via.perf.retention_s.to_bits(), direct.retention_s.to_bits());
+    assert_eq!(via.perf.stored_one_v.to_bits(), direct.stored_one_v.to_bits());
+    assert_eq!(via.area_um2.to_bits(), bank.layout.total_area_um2().to_bits());
+}
+
+/// Restart KPI at the socket level: a second server process (fresh
+/// session, fresh runtime) over the same store directory answers an
+/// identical sweep purely from disk — zero characterization
+/// executions — with a response identical to the cold run's.
+#[test]
+fn server_restart_serves_identical_sweep_from_disk() {
+    let t = sg40();
+    let dir = scratch("restart-store");
+    let socket = scratch("restart.sock");
+    let dse_line = format!(
+        r#"{{"cmd":"dse","configs":[{},{}]}}"#,
+        serve::config_json(&Config::new(16, 16, CellFlavor::GcSiSiNp)).dump(),
+        serve::config_json(&Config::new(32, 32, CellFlavor::GcSiSiNp)).dump(),
+    );
+
+    // cold server: pays the pipeline, persists
+    let s1 = Session::new(&t, SharedRuntime::native(), 0.0).unwrap().with_store(&dir).unwrap();
+    let (cold, cold_stats) = with_server(&s1, &socket, 10, || {
+        let r = parse_ok(&serve::client_request(&socket, &dse_line).unwrap());
+        let st = parse_ok(&serve::client_request(&socket, r#"{"cmd":"stats"}"#).unwrap());
+        (r, st)
+    });
+    assert!(
+        calls_of(&cold_stats, "calls").values().sum::<u64>() > 0,
+        "cold run must execute: {cold_stats:?}"
+    );
+    assert!(!calls_of(&cold, "sweep_calls").is_empty());
+
+    // restarted server: new session + runtime, same store
+    let s2 = Session::new(&t, SharedRuntime::native(), 0.0).unwrap().with_store(&dir).unwrap();
+    let (warm, warm_stats) = with_server(&s2, &socket, 10, || {
+        let r = parse_ok(&serve::client_request(&socket, &dse_line).unwrap());
+        let st = parse_ok(&serve::client_request(&socket, r#"{"cmd":"stats"}"#).unwrap());
+        (r, st)
+    });
+    assert_eq!(
+        calls_of(&warm_stats, "calls").values().sum::<u64>(),
+        0,
+        "warm restart must pay zero characterization executions: {warm_stats:?}"
+    );
+    assert!(calls_of(&warm, "sweep_calls").is_empty(), "no executions in the warm sweep");
+    assert_eq!(warm_stats.get("cache_misses").and_then(Json::as_usize), Some(0));
+    let store = warm_stats.get("store").expect("store stats");
+    assert_eq!(store.get("hits").and_then(Json::as_usize), Some(2));
+    assert_eq!(store.get("rejects").and_then(Json::as_usize), Some(0));
+    // identical evaluations, field for field (finite values round-trip
+    // decimal JSON exactly, so Json equality is bit equality here)
+    assert_eq!(cold.get("evals"), warm.get("evals"));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Protocol robustness: a garbage line gets an `"ok": false` response
+/// carrying the parse context, and the SAME connection then serves a
+/// valid request — one bad client line must never poison a session.
+#[test]
+fn malformed_lines_error_without_killing_the_connection() {
+    let t = sg40();
+    let session = Session::new(&t, SharedRuntime::native(), 0.0).unwrap();
+    let socket = scratch("robust.sock");
+    let (bad, unknown, stats) = with_server(&session, &socket, 10, || {
+        let stream = std::os::unix::net::UnixStream::connect(&socket).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        let mut ask = |line: &str| {
+            writer.write_all(line.as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+            writer.flush().unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            resp.trim_end().to_string()
+        };
+        let bad = ask(r#"{"cmd": oops-not-json}"#);
+        let unknown = ask(r#"{"cmd":"explode"}"#);
+        let stats = ask(r#"{"cmd":"stats"}"#);
+        (bad, unknown, stats)
+    });
+    let j = Json::parse(&bad).unwrap();
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+    let err = j.get("error").and_then(Json::as_str).unwrap();
+    assert!(err.contains("oops"), "parse error must carry the offending input: {err}");
+    let j = Json::parse(&unknown).unwrap();
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(j.get("error").and_then(Json::as_str).unwrap().contains("unknown cmd"));
+    parse_ok(&stats); // the connection survived both bad lines
+}
+
+/// The warm per-design flatten memo: repeat DRC of one design through
+/// the session reuses its memo (same clean report, memo count stays
+/// at one design), and the report matches a fresh hierarchical check.
+#[test]
+fn session_drc_memo_is_warm_and_correct() {
+    let t = sg40();
+    let session = Session::new(&t, SharedRuntime::native(), 0.0).unwrap();
+    let cfg = Config::new(16, 16, CellFlavor::GcSiSiNp);
+    let r1 = session.drc_check(&cfg).unwrap();
+    let r2 = session.drc_check(&cfg).unwrap();
+    assert_eq!(r1.violations.len(), r2.violations.len());
+    assert_eq!(r1.rects_checked, r2.rects_checked);
+    assert_eq!(session.stats().flatten_configs, 1);
+
+    let bank = compile(&t, &cfg).unwrap();
+    let fresh = opengcram::drc::hier::check_hier(&t, &bank.library, "bank").unwrap();
+    assert_eq!(fresh.violations.len(), r1.violations.len());
+    assert_eq!(fresh.rects_checked, r1.rects_checked);
+}

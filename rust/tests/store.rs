@@ -1,0 +1,229 @@
+//! On-disk evaluation-store integrity tier.
+//!
+//! The store is trusted to survive process lifetimes, so these tests
+//! attack exactly the ways persisted state goes wrong: torn/corrupted
+//! bytes, format-version drift, entries copied between identities
+//! (tech / window resolution), and the interaction with the session's
+//! cache hierarchy — a rejected entry must be *recomputed*, never
+//! aliased, and a valid one must be served with **zero**
+//! characterization executions (asserted on the real native
+//! call counters).
+
+use opengcram::compiler::{CellFlavor, Config};
+use opengcram::dse::Evaluated;
+use opengcram::runtime::SharedRuntime;
+use opengcram::service::Session;
+use opengcram::store::{decode_entry, encode_entry, DiskStore, StoreKey, FORMAT_VERSION};
+use opengcram::tech::sg40;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Fresh scratch directory per test (no tempfile crate in the offline
+/// registry) — unique per process AND per call so parallel tests never
+/// share a store.
+fn scratch(name: &str) -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "opengcram-store-test-{}-{}-{}",
+        name,
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sample_entry() -> (StoreKey, Evaluated) {
+    let mut cfg = Config::new(32, 32, CellFlavor::GcSiSiNp);
+    cfg.write_vt = Some(0.45);
+    let perf = opengcram::characterize::BankPerf {
+        f_read_hz: 1.1e9,
+        f_write_hz: 2.2e9,
+        f_op_hz: 1.1e9,
+        bandwidth_bps: 3.52e10,
+        retention_s: 1.0 / 3.0,
+        leakage_w: 5e-324,
+        e_read_j: 1.7e-13,
+        t_decoder_s: 9.3e-11,
+        t_cell_read_s: 4.4e-10,
+        stored_one_v: 0.71,
+        functional: true,
+    };
+    let e = Evaluated { config: cfg.clone(), perf, area_um2: 987.654321, quarantine: None };
+    (StoreKey::new(cfg.key(), "sg40", 0.1), e)
+}
+
+#[test]
+fn disk_round_trip_is_bitwise_and_counted() {
+    let dir = scratch("roundtrip");
+    let store = DiskStore::open(&dir).unwrap();
+    let (key, e) = sample_entry();
+
+    // cold store: a lookup is a miss, not an error
+    assert!(store.load(&key).is_none());
+    assert_eq!(store.stats().misses, 1);
+
+    store.save(&key, &e);
+    let back = store.load(&key).expect("saved entry loads");
+    assert_eq!(store.stats().hits, 1);
+    assert_eq!(back.config.key(), e.config.key());
+    assert_eq!(back.area_um2.to_bits(), e.area_um2.to_bits());
+    assert_eq!(back.perf.retention_s.to_bits(), e.perf.retention_s.to_bits());
+    assert_eq!(back.perf.leakage_w.to_bits(), e.perf.leakage_w.to_bits(), "subnormals survive");
+    assert_eq!(back.perf.functional, e.perf.functional);
+    assert_eq!(back.quarantine, e.quarantine);
+    assert_eq!(store.stats().rejects, 0);
+    assert_eq!(store.stats().write_errors, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_bytes_are_rejected_not_served() {
+    let dir = scratch("corrupt");
+    let store = DiskStore::open(&dir).unwrap();
+    let (key, e) = sample_entry();
+    store.save(&key, &e);
+    let path = dir.join(key.filename());
+
+    // truncation (torn write survived a crash without the atomic rename)
+    let full = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    assert!(store.load(&key).is_none(), "truncated entry must be rejected");
+    assert_eq!(store.stats().rejects, 1);
+
+    // bit-flip inside a hex field: still JSON, wrong payload width
+    std::fs::write(&path, full.replace(&format!("{:016x}", e.area_um2.to_bits()), "zz")).unwrap();
+    assert!(store.load(&key).is_none(), "malformed hex field must be rejected");
+    assert_eq!(store.stats().rejects, 2);
+
+    // a fresh save heals the slot
+    store.save(&key, &e);
+    assert!(store.load(&key).is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn version_bump_invalidates_old_entries() {
+    let dir = scratch("version");
+    let store = DiskStore::open(&dir).unwrap();
+    let (key, e) = sample_entry();
+    store.save(&key, &e);
+    let path = dir.join(key.filename());
+    let line = std::fs::read_to_string(&path).unwrap();
+    // simulate an entry written by a future (or past) format version:
+    // both the version field and the embedded key carry the version,
+    // so tampering either one alone must already reject
+    let v = format!("\"version\":{FORMAT_VERSION}");
+    assert!(line.contains(&v), "entry must embed its format version: {line}");
+    std::fs::write(&path, line.replace(&v, &format!("\"version\":{}", FORMAT_VERSION + 1)))
+        .unwrap();
+    assert!(store.load(&key).is_none(), "future-version entry must be rejected");
+    assert_eq!(store.stats().rejects, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tech_and_resolution_changes_never_alias() {
+    let dir = scratch("identity");
+    let store = DiskStore::open(&dir).unwrap();
+    let (key, e) = sample_entry();
+    store.save(&key, &e);
+
+    // different tech / resolution → different filename → plain miss
+    let mut other_tech = key.clone();
+    other_tech.tech = "sg28".into();
+    let mut other_res = key.clone();
+    other_res.window_res_bits = 0.0f64.to_bits();
+    for other in [&other_tech, &other_res] {
+        assert_ne!(other.filename(), key.filename());
+        assert!(store.load(other).is_none());
+    }
+    assert_eq!(store.stats().misses, 2);
+
+    // an adversarially *copied* file (same bytes under the other key's
+    // filename) parses fine but its embedded canonical key disagrees —
+    // reject, never alias
+    std::fs::copy(dir.join(key.filename()), dir.join(other_res.filename())).unwrap();
+    assert!(store.load(&other_res).is_none(), "copied entry must not alias across resolutions");
+    assert_eq!(store.stats().rejects, 1);
+
+    // decode_entry level: same line, wrong key
+    let line = encode_entry(&key, &e);
+    assert!(decode_entry(&line, &other_tech).is_none());
+    assert!(decode_entry(&line, &key).is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The headline store KPI, on real counters: a second session over the
+/// same store directory re-serves the sweep with ZERO characterization
+/// executions; after corruption the same point is recomputed (paid
+/// again), not served from the corpse.
+#[test]
+fn warm_restart_serves_from_disk_and_corruption_forces_recompute() {
+    let t = sg40();
+    let dir = scratch("warm");
+    let configs = [
+        Config::new(16, 16, CellFlavor::GcSiSiNp),
+        Config::new(32, 32, CellFlavor::GcSiSiNp),
+    ];
+
+    // session 1: cold — pays the pipeline, persists to disk
+    let s1 = Session::new(&t, SharedRuntime::native(), 0.0)
+        .unwrap()
+        .with_store(&dir)
+        .unwrap();
+    let (evals1, health1) = s1.evaluate(&configs).unwrap();
+    assert!(health1.is_clean());
+    let calls1 = s1.runtime().call_counts();
+    assert!(calls1.values().sum::<u64>() > 0, "cold sweep must execute: {calls1:?}");
+
+    // session 2 (a "restarted process"): fresh runtime, fresh memory
+    // tier, same store — zero executions, bitwise-identical results
+    let s2 = Session::new(&t, SharedRuntime::native(), 0.0)
+        .unwrap()
+        .with_store(&dir)
+        .unwrap();
+    let (evals2, health2) = s2.evaluate(&configs).unwrap();
+    assert!(health2.is_clean());
+    let calls2 = s2.runtime().call_counts();
+    assert_eq!(calls2.values().sum::<u64>(), 0, "warm restart must not execute: {calls2:?}");
+    for (a, b) in evals1.iter().zip(&evals2) {
+        assert_eq!(a.config.key(), b.config.key());
+        assert_eq!(a.area_um2.to_bits(), b.area_um2.to_bits());
+        assert_eq!(a.perf.f_op_hz.to_bits(), b.perf.f_op_hz.to_bits());
+        assert_eq!(a.perf.retention_s.to_bits(), b.perf.retention_s.to_bits());
+        assert_eq!(a.perf.leakage_w.to_bits(), b.perf.leakage_w.to_bits());
+    }
+    let st2 = s2.stats();
+    assert_eq!(st2.store.unwrap().hits, configs.len());
+    assert_eq!(st2.cache_misses, 0, "disk promotion must not count as a pipeline miss");
+
+    // corrupt one entry on disk: a third session must recompute that
+    // point (and only pay for it, the healthy one still loads)
+    let victim = StoreKey::new(configs[0].key(), t.name, 0.0);
+    let path = dir.join(victim.filename());
+    std::fs::write(&path, "{\"version\":999,\"garbage\":true}").unwrap();
+    let s3 = Session::new(&t, SharedRuntime::native(), 0.0)
+        .unwrap()
+        .with_store(&dir)
+        .unwrap();
+    let (evals3, _h) = s3.evaluate(&configs).unwrap();
+    assert!(
+        s3.runtime().call_counts().values().sum::<u64>() > 0,
+        "corrupted entry must be recomputed"
+    );
+    let st3 = s3.stats();
+    assert_eq!(st3.store.as_ref().unwrap().rejects, 1);
+    assert_eq!(st3.store.as_ref().unwrap().hits, 1);
+    assert_eq!(st3.cache_misses, 1, "exactly the corrupted point re-pays the pipeline");
+    // recomputed result is bitwise the original — and the heal is
+    // persisted: a fourth session is all-warm again
+    assert_eq!(evals3[0].perf.f_op_hz.to_bits(), evals1[0].perf.f_op_hz.to_bits());
+    let s4 = Session::new(&t, SharedRuntime::native(), 0.0)
+        .unwrap()
+        .with_store(&dir)
+        .unwrap();
+    let _ = s4.evaluate(&configs).unwrap();
+    assert_eq!(s4.runtime().call_counts().values().sum::<u64>(), 0, "store healed after rewrite");
+    let _ = std::fs::remove_dir_all(&dir);
+}
