@@ -13,7 +13,7 @@
 //! quantization a fine size axis must issue grouped-ceiling write and
 //! read executions (not N either).
 use opengcram::characterize::batch;
-use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::compiler::{compile, CellFlavor, CompileCache, Config};
 use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
 use opengcram::util::bench;
@@ -36,8 +36,9 @@ fn main() {
     let ret_cap = rt.batch_cap("retention").unwrap();
     let ret_before = rt.call_count("retention");
     let cache = dse::EvalCache::new();
+    let structs = CompileCache::new();
     let evals =
-        dse::evaluate_all_batched_cached(&tech, &rt, &configs, workers, &cache, window_res)
+        dse::evaluate_all_batched_cached(&tech, &rt, &configs, workers, &cache, &structs, window_res)
             .unwrap();
     let ret_calls = (rt.call_count("retention") - ret_before) as usize;
     let want_calls = batch::calls_for(configs.len(), ret_cap);
@@ -81,9 +82,16 @@ fn main() {
     let wr_before = rt.call_count("write");
     let rd_before = rt.call_count("read");
     let axis_cache = dse::EvalCache::new();
-    let axis_evals =
-        dse::evaluate_all_batched_cached(&tech, &rt, &axis_cfgs, workers, &axis_cache, window_res)
-            .unwrap();
+    let axis_evals = dse::evaluate_all_batched_cached(
+        &tech,
+        &rt,
+        &axis_cfgs,
+        workers,
+        &axis_cache,
+        &CompileCache::new(),
+        window_res,
+    )
+    .unwrap();
     assert_eq!(axis_evals.len(), axis_cfgs.len());
     let wr_calls = (rt.call_count("write") - wr_before) as usize;
     let rd_calls = (rt.call_count("read") - rd_before) as usize;
@@ -118,9 +126,17 @@ fn main() {
     let transient = grid.iter().filter(|c| c.flavor.is_gc()).count();
     let ret_before = rt.call_count("retention");
     let comp_cache = dse::EvalCache::new();
-    let comp_evals =
-        dse::evaluate_all_batched_cached(&tech, &rt, &grid, workers, &comp_cache, window_res)
-            .unwrap();
+    let comp_structs = CompileCache::new();
+    let comp_evals = dse::evaluate_all_batched_cached(
+        &tech,
+        &rt,
+        &grid,
+        workers,
+        &comp_cache,
+        &comp_structs,
+        window_res,
+    )
+    .unwrap();
     assert_eq!(comp_evals.len(), grid.len());
     let ret_calls = (rt.call_count("retention") - ret_before) as usize;
     let want = batch::calls_for(transient, ret_cap);
@@ -138,7 +154,7 @@ fn main() {
     // machine pays zero additional pipeline evaluations
     let mut spec = compose::ComposeSpec::new(&workloads::H100);
     spec.window_resolution = window_res;
-    let comp = compose::compose_cached(&tech, &rt, &spec, &comp_cache).unwrap();
+    let comp = compose::compose_cached(&tech, &rt, &spec, &comp_cache, &comp_structs).unwrap();
     assert_eq!(comp.cache_misses, 0, "composition re-ran the sweep instead of reusing the cache");
     let served = comp.per_demand.iter().filter(|s| s.choice.is_some()).count();
     println!("compose_h100_demands_served,{served}/{}", comp.per_demand.len());
@@ -201,7 +217,7 @@ fn main() {
 
     // cached re-sweep: the caching win on top of batching
     let s_hot = bench::run("dse_shmoo_axis_cached", 1.0, || {
-        dse::evaluate_all_batched_cached(&tech, &rt, &configs, workers, &cache, window_res)
+        dse::evaluate_all_batched_cached(&tech, &rt, &configs, workers, &cache, &structs, window_res)
             .unwrap()
     });
     println!("shmoo_cache_speedup,{:.1}x", s_batched.median_s / s_hot.median_s.max(1e-9));

@@ -23,7 +23,7 @@
 //!   (default 1.5; the rows/sec series for both modes land in
 //!   `BENCH_perf.json` regardless).
 use opengcram::characterize::batch;
-use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::compiler::{compile, CellFlavor, CompileCache, Config};
 use opengcram::coordinator::{BatchExec, Coordinator};
 use opengcram::layout::{cells, FlattenCache, Library};
 use opengcram::runtime::{engines, ExecBackend, NativeBackend, SharedRuntime};
@@ -55,6 +55,41 @@ fn main() {
     let s = bench::run(&format!("l3_compile_{n}x{n}_bank"), t_long, || {
         compile(&tech, &Config::new(n, n, CellFlavor::GcSiSiNp)).unwrap()
     });
+    records.push((s.clone(), s.per_sec()));
+
+    // ---- L3: structure-keyed compile cache -------------------------------
+    // Census pin on the real counters: the 5x5 optimizer grid spans 25
+    // configs but only 5 distinct geometries (the VT axis is purely
+    // electrical), so a cold sweep through the cache pays exactly one
+    // geometry compile per distinct StructKey and serves the rest as
+    // Arc clones of the shared structure.
+    let grid = dse::grid_configs(CellFlavor::GcSiSiNp);
+    let grid_refs: Vec<&Config> = grid.iter().collect();
+    let distinct: std::collections::HashSet<_> = grid.iter().map(|c| c.struct_key()).collect();
+    let census = CompileCache::new();
+    census.compile_all(&tech, &grid_refs, 2).unwrap();
+    let (census_hits, census_compiles) = census.stats();
+    assert_eq!(
+        census_compiles,
+        distinct.len(),
+        "grid sweep paid {census_compiles} geometry compiles for {} distinct structures",
+        distinct.len()
+    );
+    assert_eq!(census_hits, grid.len() - distinct.len(), "every VT sibling must be a cache hit");
+    println!("compile_cache_grid_compiles,{census_compiles}");
+    println!("compile_cache_grid_hits,{census_hits}");
+    let s = bench::run("compile_structure_cold_32x32", t_short, || {
+        CompileCache::new().compile(&tech, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap()
+    });
+    records.push((s.clone(), s.per_sec()));
+    let warm = CompileCache::new();
+    warm.compile(&tech, &Config::new(32, 32, CellFlavor::GcSiSiNp)).unwrap();
+    let mut vt_sibling = Config::new(32, 32, CellFlavor::GcSiSiNp);
+    vt_sibling.write_vt = Some(0.55);
+    let s = bench::run("compile_cached_vt_sibling_32x32", t_short, || {
+        warm.compile(&tech, &vt_sibling).unwrap()
+    });
+    println!("compile_cached_banks_per_sec,{:.0}", 1.0 / s.median_s);
     records.push((s.clone(), s.per_sec()));
 
     // ---- L3: memoized flatten -------------------------------------------
@@ -498,7 +533,9 @@ fn mc_yield_records(
     assert_eq!(want_t, batch::calls_for(variants, caps.2), "retention must always pack");
 
     let before = (rt.call_count("write"), rt.call_count("read"), rt.call_count("retention"));
-    let (dys, health) = variation::yield_sweep_health(tech, rt, &cfgs, &model, 2, res).unwrap();
+    let (dys, health) =
+        variation::yield_sweep_health(tech, rt, &cfgs, &model, 2, res, &CompileCache::new())
+            .unwrap();
     assert!(health.is_clean(), "{}", health.summary());
     assert_eq!(dys.len(), cfgs.len());
     let got_w = (rt.call_count("write") - before.0) as usize;
@@ -516,7 +553,7 @@ fn mc_yield_records(
     println!("mc_retention_calls_{variants}variants,{got_t}");
 
     let s = bench::run(&format!("mc_yield_sweep_{}designs_k{k}", cfgs.len()), t_eng, || {
-        variation::yield_sweep_health(tech, rt, &cfgs, &model, 2, res).unwrap()
+        variation::yield_sweep_health(tech, rt, &cfgs, &model, 2, res, &CompileCache::new()).unwrap()
     });
     println!("mc_yield_rows_per_sec,{:.0}", variants as f64 / s.median_s);
     records.push((s.clone(), variants as f64 / s.median_s));

@@ -30,12 +30,14 @@ fn main() -> opengcram::Result<()> {
 
     println!("\n== sweeping bank configs 16x16..128x128 (batch-first pipeline) ==");
     let cache = dse::EvalCache::new();
+    let structs = opengcram::compiler::CompileCache::new();
     let evals = dse::evaluate_all_batched_cached(
         &tech,
         &rt,
         &dse::fig10_configs(CellFlavor::GcSiSiNp),
         opengcram::util::default_workers(),
         &cache,
+        &structs,
         DEFAULT_WINDOW_RESOLUTION,
     )?;
     for e in &evals {

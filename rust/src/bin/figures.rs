@@ -8,7 +8,7 @@
 //! set regenerates on a clean checkout.
 
 use opengcram::cli;
-use opengcram::compiler::{compile, CellFlavor, Config};
+use opengcram::compiler::{compile, CellFlavor, CompileCache, Config};
 use opengcram::layout::{cells, Library};
 use opengcram::runtime::engines;
 use opengcram::tech::{sg40, LayerRole};
@@ -205,6 +205,7 @@ fn main() -> opengcram::Result<()> {
         &model,
         opengcram::util::default_workers(),
         0.0,
+        &CompileCache::new(),
     )?;
     let mut tmc = report::Table::new(&[
         "design", "yield", "95% CI", "f_op", "retention", "ret q05..q95", "nominal ret",
@@ -244,11 +245,12 @@ fn main() -> opengcram::Result<()> {
     // composition is served entirely from the EvalCache (the demands
     // change the selection, not the sweep)
     let comp_cache = dse::EvalCache::new();
+    let comp_structs = CompileCache::new();
     for m in [&workloads::H100, &workloads::GT520M] {
         let mut spec = compose::ComposeSpec::new(m);
         // canonical figure output stays bitwise-exact
         spec.window_resolution = 0.0;
-        let c = compose::compose_cached(&tech, &rt, &spec, &comp_cache)?;
+        let c = compose::compose_cached(&tech, &rt, &spec, &comp_cache, &comp_structs)?;
         println!("-- {} --\n{}", m.name, compose::table(&c));
         match (c.total_area_um2(), c.total_leakage_w()) {
             (Some(area), Some(leak)) => println!(

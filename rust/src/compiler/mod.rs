@@ -10,11 +10,25 @@
 //!   ready for GDS export, and
 //! * the geometric/electrical summary the characterizer consumes
 //!   (bitline/wordline parasitics from real wire geometry).
+//!
+//! Compilation is split into a **geometry phase** and an **electrical
+//! binding**: [`Config::struct_key`] projects out exactly the fields
+//! that determine geometry, [`compile_structure`] builds the
+//! library/netlist/layout/parasitics once per distinct [`StructKey`],
+//! and a [`Bank`] is a thin wrapper binding an `Arc<BankStructure>` to
+//! the full electrical [`Config`].  A [`CompileCache`] shares the
+//! structure across the electrical axis (e.g. the write-VT sweep of
+//! Fig. 8c), so a 5×5 size×VT grid pays 5 structure compiles, not 25.
+
+use std::collections::HashMap;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::layout::{bank, cells, Library};
 use crate::netlist::{Circuit, Netlist};
 use crate::tech::{LayerRole, Tech};
-use crate::util::{ceil_div, ceil_log2, next_pow2};
+use crate::util::{ceil_div, ceil_log2, next_pow2, par_map};
 
 /// Bit-cell flavor (Fig. 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -92,6 +106,34 @@ impl ConfigKey {
     }
 }
 
+/// Geometric identity of a [`Config`]: exactly the fields that
+/// determine the compiled structure (library, netlist, layout,
+/// parasitics, delay-chain stages).  `write_vt` is deliberately absent
+/// — it is an electrical knob consumed only by the characterizer, so
+/// configs differing only in VT share one [`BankStructure`].  The
+/// mux factor is stored **resolved** (policy applied), so an explicit
+/// `mux_factor: Some(m)` and a `None` that resolves to the same `m`
+/// alias to the same structure.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StructKey {
+    pub word_size: usize,
+    pub num_words: usize,
+    pub flavor: CellFlavor,
+    pub wwlls: bool,
+    /// Resolved column-mux factor ([`Config::mux_factor`] policy applied).
+    pub mux_factor: usize,
+}
+
+impl StructKey {
+    /// A representative [`Config`] for this structure (no electrical
+    /// overrides).  [`compile_structure`] drives the geometry build
+    /// through it so `rows()`/`cols()` policy lives in one place.
+    pub fn to_config(&self) -> Config {
+        let &StructKey { word_size, num_words, flavor, wwlls, mux_factor } = self;
+        Config { word_size, num_words, flavor, wwlls, mux_factor: Some(mux_factor), write_vt: None }
+    }
+}
+
 impl Config {
     pub fn new(word_size: usize, num_words: usize, flavor: CellFlavor) -> Config {
         Config { word_size, num_words, flavor, wwlls: false, mux_factor: None, write_vt: None }
@@ -111,6 +153,23 @@ impl Config {
             mux_factor,
             write_vt_bits: write_vt.map(f64::to_bits),
         }
+    }
+
+    /// Structure identity: two configs with equal struct keys compile
+    /// to bitwise-identical geometry (pinned by `tests/structure.rs`).
+    /// Exhaustive destructuring: adding a Config field forces a choice
+    /// here — geometric (goes in the key) or electrical (explicitly
+    /// discarded) — at compile time, not as a silent aliasing bug.
+    pub fn struct_key(&self) -> StructKey {
+        let &Config {
+            word_size,
+            num_words,
+            flavor,
+            wwlls,
+            mux_factor: _, // folded into the resolved policy value below
+            write_vt: _,   // electrical only: consumed by the characterizer
+        } = self;
+        StructKey { word_size, num_words, flavor, wwlls, mux_factor: self.mux_factor() }
     }
 
     pub fn bits(&self) -> usize {
@@ -155,15 +214,33 @@ impl Config {
     }
 }
 
-/// Compiled bank: netlist + layout + geometry summary.
-pub struct Bank {
-    pub config: Config,
+/// The geometry-phase output: netlist + layout + geometry summary,
+/// one per distinct [`StructKey`].  Immutable once built and shared by
+/// `Arc` across every electrical variant of the same geometry.
+pub struct BankStructure {
+    /// The structure identity this was compiled from.
+    pub key: StructKey,
     pub netlist: Netlist,
     pub library: Library,
     pub layout: bank::BankLayout,
     pub parasitics: Parasitics,
     /// Replica delay-chain stages in the read control (Fig. 7a step).
     pub delay_chain_stages: usize,
+}
+
+/// Compiled bank: the electrical [`Config`] bound to its shared
+/// [`BankStructure`].  Derefs to the structure, so consumers keep
+/// writing `bank.netlist` / `bank.layout` / `bank.parasitics`.
+pub struct Bank {
+    pub config: Config,
+    pub structure: Arc<BankStructure>,
+}
+
+impl Deref for Bank {
+    type Target = BankStructure;
+    fn deref(&self) -> &BankStructure {
+        &self.structure
+    }
 }
 
 /// Extracted electrical summary used by the characterizer.
@@ -182,9 +259,23 @@ pub struct Parasitics {
     pub c_rwl_sn: f64,
 }
 
-/// Compile a bank.
+/// Compile a bank: geometry phase ([`compile_structure`]) plus the
+/// electrical binding.  Uncached — every call rebuilds the structure;
+/// use a [`CompileCache`] to share structures across a sweep.
 pub fn compile(tech: &Tech, cfg: &Config) -> crate::Result<Bank> {
     cfg.validate()?;
+    let structure = compile_structure(tech, &cfg.struct_key())?;
+    Ok(Bank { config: cfg.clone(), structure })
+}
+
+/// The geometry phase: build library, netlist, layout, and extracted
+/// parasitics for one distinct structure.  Everything here is a pure
+/// function of the [`StructKey`] (pinned bitwise by
+/// `tests/structure.rs`), which is what makes sharing the result
+/// across the electrical axis sound.
+pub fn compile_structure(tech: &Tech, key: &StructKey) -> crate::Result<Arc<BankStructure>> {
+    let cfg = key.to_config();
+    let cfg = &cfg;
     let rows = cfg.rows();
     let cols = cfg.cols();
 
@@ -304,7 +395,115 @@ pub fn compile(tech: &Tech, cfg: &Config) -> crate::Result<Bank> {
     let t_bl_est = parasitics.c_rbl * 0.55 / 20e-6; // coarse I/C slew
     let delay_chain_stages = (t_bl_est / tau_stage).ceil() as usize + 2;
 
-    Ok(Bank { config: cfg.clone(), netlist: nl, library: lib, layout, parasitics, delay_chain_stages })
+    Ok(Arc::new(BankStructure {
+        key: key.clone(),
+        netlist: nl,
+        library: lib,
+        layout,
+        parasitics,
+        delay_chain_stages,
+    }))
+}
+
+/// Session-scoped structure cache: one compiled [`BankStructure`] per
+/// (tech, [`StructKey`]), shared by `Arc` across every config that
+/// maps to it.  Mirrors [`crate::dse::EvalCache`]'s shape — interior
+/// mutability plus real hit/compile counters so sweeps can assert the
+/// distinct-structure census (compiles == |{struct_key}|, not
+/// |configs|) the way `plan_call_counts` pins transient calls.
+#[derive(Default)]
+pub struct CompileCache {
+    map: Mutex<HashMap<(&'static str, StructKey), Arc<BankStructure>>>,
+    hits: AtomicUsize,
+    compiles: AtomicUsize,
+}
+
+impl CompileCache {
+    pub fn new() -> CompileCache {
+        CompileCache::default()
+    }
+
+    /// Distinct structures currently held.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(hits, compiles)` counters: `hits` counts banks served from an
+    /// already-compiled structure (including fan-out within one
+    /// [`CompileCache::compile_all`] call); `compiles` counts geometry
+    /// builds actually paid.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits.load(Ordering::Relaxed), self.compiles.load(Ordering::Relaxed))
+    }
+
+    fn lookup(&self, tech: &Tech, key: &StructKey) -> Option<Arc<BankStructure>> {
+        let map = self.map.lock().unwrap_or_else(|p| p.into_inner());
+        map.get(&(tech.name, key.clone())).cloned()
+    }
+
+    fn insert(&self, tech: &Tech, structure: Arc<BankStructure>) {
+        let mut map = self.map.lock().unwrap_or_else(|p| p.into_inner());
+        map.insert((tech.name, structure.key.clone()), structure);
+    }
+
+    /// Compile one bank through the cache: the structure is built at
+    /// most once per (tech, struct key) and then shared by `Arc`.
+    pub fn compile(&self, tech: &Tech, cfg: &Config) -> crate::Result<Bank> {
+        cfg.validate()?;
+        let key = cfg.struct_key();
+        let structure = match self.lookup(tech, &key) {
+            Some(s) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                let s = compile_structure(tech, &key)?;
+                self.compiles.fetch_add(1, Ordering::Relaxed);
+                self.insert(tech, s.clone());
+                s
+            }
+        };
+        Ok(Bank { config: cfg.clone(), structure })
+    }
+
+    /// Compile a batch: dedup by struct key **before** the parallel
+    /// geometry phase, compile only the cold distinct structures, then
+    /// fan the shared `Arc`s out across the (electrical) batch in
+    /// input order.  This is the sweep hot path — a 5×5 size×VT grid
+    /// pays exactly 5 compiles here.
+    pub fn compile_all(&self, tech: &Tech, cfgs: &[&Config], workers: usize) -> crate::Result<Vec<Bank>> {
+        for cfg in cfgs {
+            cfg.validate()?;
+        }
+        let keys: Vec<StructKey> = cfgs.iter().map(|c| c.struct_key()).collect();
+        // cold distinct keys, first-appearance order
+        let mut cold: Vec<StructKey> = Vec::new();
+        for key in &keys {
+            if !cold.contains(key) && self.lookup(tech, key).is_none() {
+                cold.push(key.clone());
+            }
+        }
+        let built = par_map(&cold, workers, |key| compile_structure(tech, key));
+        for s in built {
+            let s = s?;
+            self.compiles.fetch_add(1, Ordering::Relaxed);
+            self.insert(tech, s);
+        }
+        self.hits.fetch_add(cfgs.len() - cold.len(), Ordering::Relaxed);
+        keys.into_iter()
+            .zip(cfgs)
+            .map(|(key, cfg)| {
+                let structure = self
+                    .lookup(tech, &key)
+                    .expect("structure compiled or cached above");
+                Ok(Bank { config: (*cfg).clone(), structure })
+            })
+            .collect()
+    }
 }
 
 fn array_circuit(cfg: &Config, bitcell: &Circuit) -> Circuit {

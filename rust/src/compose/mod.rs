@@ -50,7 +50,7 @@
 //! is pinned by `tests/integration.rs`.
 
 use crate::characterize::{self, calls_for};
-use crate::compiler::{compile, CellFlavor, Config, ConfigKey};
+use crate::compiler::{CellFlavor, CompileCache, Config, ConfigKey};
 use crate::coordinator::{BatchExec, Coordinator};
 use crate::dse::{self, CostWeights, EvalCache, Evaluated};
 use crate::report;
@@ -311,9 +311,9 @@ pub fn select_for_yield(
     }
 }
 
-/// Compose with a throwaway sweep cache — see [`compose_cached`].
+/// Compose with throwaway sweep/structure caches — see [`compose_cached`].
 pub fn compose(tech: &Tech, rt: &SharedRuntime, spec: &ComposeSpec) -> crate::Result<Composition> {
-    compose_cached(tech, rt, spec, &EvalCache::new())
+    compose_cached(tech, rt, spec, &EvalCache::new(), &CompileCache::new())
 }
 
 /// Run the cross-flavor mega-sweep through `cache` (one
@@ -323,17 +323,21 @@ pub fn compose(tech: &Tech, rt: &SharedRuntime, spec: &ComposeSpec) -> crate::Re
 /// `bin/figures` does this) re-uses every evaluation: the demands only
 /// change the selection, not the sweep.  The cache binds to
 /// `spec.window_resolution` on first use ([`EvalCache::bind_resolution`]).
+/// `structs` shares compiled geometry across the grid's VT axis (and
+/// with any other sweep the caller runs), so the mega-sweep pays the
+/// distinct-structure census — |{struct_key}| compiles, not |configs|.
 pub fn compose_cached(
     tech: &Tech,
     rt: &SharedRuntime,
     spec: &ComposeSpec,
     cache: &EvalCache,
+    structs: &CompileCache,
 ) -> crate::Result<Composition> {
     if let Some(model) = &spec.mc {
         // Monte-Carlo mode: sampled variants share their design's
         // ConfigKey, so the point cache cannot distinguish them — the
         // MC sweep bypasses it entirely (cache_hits reports 0).
-        return compose_mc(tech, rt, spec, model);
+        return compose_mc(tech, rt, spec, model, structs);
     }
     let configs = design_grid();
     let (h0, m0) = cache.stats();
@@ -343,6 +347,7 @@ pub fn compose_cached(
         &configs,
         spec.workers,
         cache,
+        structs,
         spec.window_resolution,
     )?;
     let (h1, m1) = cache.stats();
@@ -381,6 +386,7 @@ pub fn compose_mc(
     rt: &SharedRuntime,
     spec: &ComposeSpec,
     model: &variation::VariationModel,
+    structs: &CompileCache,
 ) -> crate::Result<Composition> {
     let configs = design_grid();
     let (dys, health) = variation::yield_sweep_health(
@@ -390,6 +396,7 @@ pub fn compose_mc(
         model,
         spec.workers,
         spec.window_resolution,
+        structs,
     )?;
     let mut per_demand = Vec::new();
     for d in workloads::all_demands(spec.machine) {
@@ -460,18 +467,18 @@ pub fn plan(
     retention_cap: usize,
 ) -> crate::Result<SweepPlan> {
     let mut seen: HashSet<ConfigKey> = HashSet::new();
-    let mut distinct_cfgs: Vec<Config> = Vec::new();
+    let mut distinct_cfgs: Vec<&Config> = Vec::new();
     for cfg in configs {
-        if seen.insert(cfg.key()) {
-            distinct_cfgs.push(cfg.clone());
+        let key = cfg.key();
+        if !seen.contains(&key) {
+            seen.insert(key);
+            distinct_cfgs.push(cfg);
         }
     }
-    // same parallel compile fan-out as the real sweep (pure geometry)
-    let banks: Vec<_> = crate::util::par_map(&distinct_cfgs, crate::util::default_workers(), |cfg| {
-        compile(tech, cfg)
-    })
-    .into_iter()
-    .collect::<crate::Result<Vec<_>>>()?;
+    // same structure-deduped compile fan-out as the real sweep (pure
+    // geometry: the grid's VT axis shares compiled structures)
+    let banks: Vec<_> =
+        CompileCache::new().compile_all(tech, &distinct_cfgs, crate::util::default_workers())?;
     let (write_groups, read_groups) =
         characterize::window_group_counts(tech, &banks, window_resolution);
     let mut per_flavor: BTreeMap<CellFlavor, usize> = BTreeMap::new();

@@ -3,7 +3,7 @@
 //! the future-work gradient-descent co-optimizer (§VI).
 
 use crate::characterize::{self, BankPerf};
-use crate::compiler::{compile, Bank, CellFlavor, Config, ConfigKey};
+use crate::compiler::{Bank, CellFlavor, CompileCache, Config, ConfigKey};
 use crate::runtime::{RunHealth, SharedRuntime};
 use crate::tech::Tech;
 use crate::util::{default_workers, par_map};
@@ -222,16 +222,31 @@ where
 /// other resolution's evaluation; [`EvalCache::bind_resolution`]
 /// enforces this (the first sweep binds the cache, a later mismatch
 /// errors).
+///
+/// `structs` shares compiled [`crate::compiler::BankStructure`]s
+/// across the sweep's electrical axis (and across sweeps, when the
+/// caller keeps the cache): miss configs are deduped by
+/// [`Config::struct_key`] before the parallel compile, so a 5×5
+/// size×VT grid pays 5 structure compiles — the distinct-structure
+/// census, not the config count.
 pub fn evaluate_all_batched_cached(
     tech: &Tech,
     rt: &SharedRuntime,
     configs: &[Config],
     workers: usize,
     cache: &EvalCache,
+    structs: &CompileCache,
     window_resolution: f64,
 ) -> crate::Result<Vec<Evaluated>> {
-    let (evals, _health) =
-        evaluate_all_batched_cached_health(tech, rt, configs, workers, cache, window_resolution)?;
+    let (evals, _health) = evaluate_all_batched_cached_health(
+        tech,
+        rt,
+        configs,
+        workers,
+        cache,
+        structs,
+        window_resolution,
+    )?;
     Ok(evals)
 }
 
@@ -249,24 +264,27 @@ pub fn evaluate_all_batched_cached_health(
     configs: &[Config],
     workers: usize,
     cache: &EvalCache,
+    structs: &CompileCache,
     window_resolution: f64,
 ) -> crate::Result<(Vec<Evaluated>, RunHealth)> {
     cache.bind_resolution(window_resolution)?;
-    // distinct configs not yet cached, in first-appearance order
+    // distinct configs not yet cached, in first-appearance order.
+    // Allocation-light: keys move into `seen` (no per-occurrence
+    // clones) and misses are borrowed, not cloned.
     let mut seen: std::collections::HashSet<ConfigKey> = std::collections::HashSet::new();
-    let mut miss_cfgs: Vec<Config> = Vec::new();
+    let mut miss_cfgs: Vec<&Config> = Vec::new();
     for cfg in configs {
         let key = cfg.key();
-        if !seen.insert(key.clone()) {
+        if seen.contains(&key) {
             continue;
         }
-        if cache.peek(&key).is_none() {
-            miss_cfgs.push(cfg.clone());
+        let cached = cache.peek(&key).is_some();
+        seen.insert(key);
+        if !cached {
+            miss_cfgs.push(cfg);
         }
     }
-    let banks: Vec<Bank> = par_map(&miss_cfgs, workers, |cfg| compile(tech, cfg))
-        .into_iter()
-        .collect::<crate::Result<Vec<_>>>()?;
+    let banks: Vec<Bank> = structs.compile_all(tech, &miss_cfgs, workers)?;
     let (perfs, health) =
         characterize::characterize_all_health(tech, rt, &banks, window_resolution)?;
     for (bank, perf) in banks.iter().zip(perfs) {
@@ -307,7 +325,15 @@ pub fn evaluate_all_batched(
     workers: usize,
     window_resolution: f64,
 ) -> crate::Result<Vec<Evaluated>> {
-    evaluate_all_batched_cached(tech, rt, configs, workers, &EvalCache::new(), window_resolution)
+    evaluate_all_batched_cached(
+        tech,
+        rt,
+        configs,
+        workers,
+        &EvalCache::new(),
+        &CompileCache::new(),
+        window_resolution,
+    )
 }
 
 /// [`evaluate_all_batched`] returning the [`RunHealth`] report — the
@@ -325,6 +351,7 @@ pub fn evaluate_all_batched_health(
         configs,
         workers,
         &EvalCache::new(),
+        &CompileCache::new(),
         window_resolution,
     )
 }
@@ -591,9 +618,12 @@ pub fn optimize_batched(
     let mut si = 1usize;
     let mut vi = 0usize;
     let cache = EvalCache::new();
+    // one structure cache for the whole walk: the VT axis revisits the
+    // same array sizes, so neighbor moves along it compile nothing
+    let structs = CompileCache::new();
     let workers = default_workers();
     let eval_batch = |cfgs: &[Config]| {
-        evaluate_all_batched_cached(tech, rt, cfgs, workers, &cache, window_resolution)
+        evaluate_all_batched_cached(tech, rt, cfgs, workers, &cache, &structs, window_resolution)
     };
     let mut best = eval_batch(&[opt_config(flavor, si, vi)])?.remove(0);
     let mut best_cost = cost(weights, &best);

@@ -213,6 +213,11 @@ fn run() -> opengcram::Result<()> {
                         q.index, q.design, q.stage, q.reason
                     );
                 }
+                let st = session.stats();
+                println!(
+                    "compile cache: {} structures, {} hits, {} compiles",
+                    st.structures, st.struct_hits, st.struct_compiles
+                );
                 return Ok(());
             }
             let mut table = report::Table::new(&["task", "demand MHz", "16", "32", "64", "96", "128"]);
@@ -239,6 +244,11 @@ fn run() -> opengcram::Result<()> {
             for q in &health.quarantined {
                 println!("  quarantined [{}] {} — {} stage: {}", q.index, q.design, q.stage, q.reason);
             }
+            let st = session.stats();
+            println!(
+                "compile cache: {} structures, {} hits, {} compiles",
+                st.structures, st.struct_hits, st.struct_compiles
+            );
         }
         "compose" => {
             let machine = cli::parse_machine(&args)?;
@@ -340,6 +350,11 @@ fn run() -> opengcram::Result<()> {
             for q in &c.health.quarantined {
                 println!("  quarantined [{}] {} — {} stage: {}", q.index, q.design, q.stage, q.reason);
             }
+            let st = session.stats();
+            println!(
+                "compile cache: {} structures, {} hits, {} compiles",
+                st.structures, st.struct_hits, st.struct_compiles
+            );
             if let Some(path) = cli::flag_value(&args, "--csv") {
                 std::fs::write(&path, compose::csv(&c))?;
                 println!("wrote {path}");

@@ -33,14 +33,13 @@ use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::Mutex;
 
 use crate::characterize::{self, BankPerf};
-use crate::compiler::{compile, Bank, Config, ConfigKey};
+use crate::compiler::{Bank, CompileCache, Config, ConfigKey, StructKey};
 use crate::compose::{self, Composition};
 use crate::dse::{EvalCache, Evaluated};
 use crate::layout::FlattenCache;
 use crate::runtime::{RunHealth, SharedRuntime};
 use crate::store::{DiskStore, StoreKey, StoreStats};
 use crate::tech::Tech;
-use crate::util::par_map;
 use crate::variation::{self, DesignYield, VariationModel};
 
 /// Long-lived compiler state: one runtime, one coordinator path, one
@@ -52,14 +51,19 @@ pub struct Session<'t> {
     tech: &'t Tech,
     rt: SharedRuntime,
     cache: EvalCache,
+    /// Session-lifetime structure cache: compiled geometry shared
+    /// across the electrical axis and across requests, so a repeated
+    /// (or VT-only-differing) sweep pays zero structure compiles.
+    structs: CompileCache,
     store: Option<DiskStore>,
-    /// Warm flatten memos, one per design: [`FlattenCache`] keys on
-    /// cell *names*, and same-named cells (bitcell, drivers, bank)
-    /// have different geometry under different configs — sharing one
-    /// memo across configs would alias rect lists.  Per-key memos
-    /// make repeat DRC of the same design warm and cross-design
+    /// Warm flatten memos, one per *structure*: [`FlattenCache`] keys
+    /// on cell names, and same-named cells (bitcell, drivers, bank)
+    /// have different geometry under different structures — sharing
+    /// one memo across structures would alias rect lists.  Keying on
+    /// [`StructKey`] (not [`ConfigKey`]) makes repeat DRC warm across
+    /// VT-only-differing requests while keeping cross-geometry
     /// aliasing impossible.
-    flatten: Mutex<HashMap<ConfigKey, FlattenCache>>,
+    flatten: Mutex<HashMap<StructKey, FlattenCache>>,
     window_resolution: f64,
     workers: usize,
 }
@@ -76,7 +80,13 @@ pub struct SessionStats {
     pub cache_misses: usize,
     /// Disk-tier counters (`None` when the session has no store).
     pub store: Option<StoreStats>,
-    /// Designs with a warm flatten memo.
+    /// Distinct compiled structures held by the compile cache.
+    pub structures: usize,
+    /// Banks served from an already-compiled structure.
+    pub struct_hits: usize,
+    /// Structure compiles paid by this process.
+    pub struct_compiles: usize,
+    /// Structures with a warm flatten memo.
     pub flatten_configs: usize,
     /// Cumulative per-artifact execution counters from the runtime —
     /// the ground truth the grouped-ceiling KPIs are asserted on.
@@ -100,6 +110,7 @@ impl<'t> Session<'t> {
             tech,
             rt,
             cache,
+            structs: CompileCache::new(),
             store: None,
             flatten: Mutex::new(HashMap::new()),
             window_resolution,
@@ -156,28 +167,26 @@ impl<'t> Session<'t> {
     /// paid; a sweep served from either cache tier reports clean.
     pub fn evaluate(&self, configs: &[Config]) -> crate::Result<(Vec<Evaluated>, RunHealth)> {
         self.cache.bind_resolution(self.window_resolution)?;
-        // distinct configs not yet in any tier, in first-appearance order
+        // distinct configs not yet in any tier, in first-appearance
+        // order.  Allocation-light like the dse sweep: keys move into
+        // `seen`, misses are borrowed.
         let mut seen: HashSet<ConfigKey> = HashSet::new();
-        let mut miss_cfgs: Vec<Config> = Vec::new();
+        let mut miss_cfgs: Vec<&Config> = Vec::new();
         for cfg in configs {
             let key = cfg.key();
-            if !seen.insert(key.clone()) {
+            if seen.contains(&key) {
                 continue;
             }
-            if self.cache.peek(&key).is_some() {
-                continue;
+            let warm = self.cache.peek(&key).is_some()
+                || self.store.as_ref().is_some_and(|store| {
+                    store.load(&self.store_key(&key)).map(|e| self.cache.adopt(e)).is_some()
+                });
+            seen.insert(key);
+            if !warm {
+                miss_cfgs.push(cfg);
             }
-            if let Some(store) = &self.store {
-                if let Some(e) = store.load(&self.store_key(&key)) {
-                    self.cache.adopt(e);
-                    continue;
-                }
-            }
-            miss_cfgs.push(cfg.clone());
         }
-        let banks: Vec<Bank> = par_map(&miss_cfgs, self.workers, |cfg| compile(self.tech, cfg))
-            .into_iter()
-            .collect::<crate::Result<Vec<_>>>()?;
+        let banks: Vec<Bank> = self.structs.compile_all(self.tech, &miss_cfgs, self.workers)?;
         let (perfs, health) =
             characterize::characterize_all_health(self.tech, &self.rt, &banks, self.window_resolution)?;
         for (bank, perf) in banks.iter().zip(perfs) {
@@ -252,7 +261,7 @@ impl<'t> Session<'t> {
             let (_evals, h) = self.evaluate(&compose::design_grid())?;
             pre_health = h;
         }
-        let mut c = compose::compose_cached(self.tech, &self.rt, spec, &self.cache)?;
+        let mut c = compose::compose_cached(self.tech, &self.rt, spec, &self.cache, &self.structs)?;
         pre_health.merge(std::mem::take(&mut c.health));
         c.health = pre_health;
         Ok(c)
@@ -274,26 +283,38 @@ impl<'t> Session<'t> {
             model,
             self.workers,
             self.window_resolution,
+            &self.structs,
         )
     }
 
-    /// Hierarchical DRC of one design through its warm per-config
-    /// flatten memo: the first check of a design flattens its unique
-    /// cells once, repeat checks reuse the memo.
+    /// Hierarchical DRC of one design through its warm per-structure
+    /// flatten memo: the first check of a structure flattens its
+    /// unique cells once; repeat checks — including VT-only-differing
+    /// configs, which share the structure — reuse the memo.
     pub fn drc_check(&self, cfg: &Config) -> crate::Result<crate::drc::Report> {
-        let bank = compile(self.tech, cfg)?;
+        let bank = self.structs.compile(self.tech, cfg)?;
         let mut memos = self.flatten.lock().unwrap_or_else(|p| p.into_inner());
-        let memo = memos.entry(cfg.key()).or_default();
+        let memo = memos.entry(bank.structure.key.clone()).or_default();
         crate::drc::hier::check_hier_cached(self.tech, &bank.library, "bank", memo)
+    }
+
+    /// `(hits, compiles)` counters of the session's structure cache —
+    /// cheap enough for the serve dispatcher to sample per batch.
+    pub fn struct_stats(&self) -> (usize, usize) {
+        self.structs.stats()
     }
 
     pub fn stats(&self) -> SessionStats {
         let (cache_hits, cache_misses) = self.cache.stats();
+        let (struct_hits, struct_compiles) = self.structs.stats();
         SessionStats {
             cache_entries: self.cache.len(),
             cache_hits,
             cache_misses,
             store: self.store.as_ref().map(|s| s.stats()),
+            structures: self.structs.len(),
+            struct_hits,
+            struct_compiles,
             flatten_configs: self.flatten.lock().unwrap_or_else(|p| p.into_inner()).len(),
             call_counts: self.rt.call_counts(),
             backend: self.rt.backend_name(),

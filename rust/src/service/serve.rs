@@ -30,9 +30,12 @@
 //! arrived, which makes co-batching deterministic for tests and
 //! scripted fleets; without hints, co-batching still happens whenever
 //! requests queue while an evaluation is in flight.  Every response
-//! reports `"party"` (how many requests shared the batch) and
+//! reports `"party"` (how many requests shared the batch),
 //! `"sweep_calls"` (the real per-artifact execution-counter delta of
-//! that batch) so the KPI is assertable from the protocol alone.
+//! that batch) and `"struct_compiles"` (structure compiles the batch
+//! paid — `0` once the session's compile cache holds the geometry,
+//! including for VT-only-differing repeats) so the KPIs are
+//! assertable from the protocol alone.
 //!
 //! `compose`/`drc`/`stats` run directly on the connection thread
 //! against the same session (the compose mega-sweep shares the same
@@ -87,6 +90,9 @@ struct EvalShare {
     health: RunHealth,
     /// Per-artifact execution-counter delta of the whole batch.
     calls: BTreeMap<String, u64>,
+    /// Structure compiles the whole batch paid (compile-cache counter
+    /// delta) — the cross-request geometry-sharing KPI.
+    struct_compiles: usize,
     /// How many requests shared the batch.
     party: usize,
 }
@@ -157,16 +163,20 @@ fn dispatcher(session: &Session, rx: mpsc::Receiver<EvalJob>, gather: Duration) 
             jobs.iter().flat_map(|j| j.configs.iter().cloned()).collect();
         let party = jobs.len();
         let before = session.runtime().call_counts();
+        let (_, compiles_before) = session.struct_stats();
         match session.evaluate(&union) {
             Ok((evals, health)) => {
                 let after = session.runtime().call_counts();
                 let calls = counter_delta(&before, &after);
+                let (_, compiles_after) = session.struct_stats();
+                let struct_compiles = compiles_after - compiles_before;
                 let mut evals = evals.into_iter();
                 for job in jobs {
                     let share = EvalShare {
                         evals: evals.by_ref().take(job.configs.len()).collect(),
                         health: health.clone(),
                         calls: calls.clone(),
+                        struct_compiles,
                         party,
                     };
                     let _ = job.reply.send(Ok(share));
@@ -304,6 +314,7 @@ fn handle_char(jobs: &mpsc::Sender<EvalJob>, req: &Json) -> crate::Result<Json> 
         .put("eval", eval_json(e))
         .put("party", Json::Num(share.party as f64))
         .put("sweep_calls", calls_json(&share.calls))
+        .put("struct_compiles", Json::Num(share.struct_compiles as f64))
         .put("health", health_json(&share.health))
         .build())
 }
@@ -321,6 +332,7 @@ fn handle_dse(jobs: &mpsc::Sender<EvalJob>, req: &Json) -> crate::Result<Json> {
         .put("evals", Json::Arr(share.evals.iter().map(eval_json).collect()))
         .put("party", Json::Num(share.party as f64))
         .put("sweep_calls", calls_json(&share.calls))
+        .put("struct_compiles", Json::Num(share.struct_compiles as f64))
         .put("health", health_json(&share.health))
         .build())
 }
@@ -408,6 +420,14 @@ fn stats_json(session: &Session) -> Json {
         .put("cache_hits", Json::Num(s.cache_hits as f64))
         .put("cache_misses", Json::Num(s.cache_misses as f64))
         .put("store", store)
+        .put(
+            "compile",
+            ObjBuilder::new()
+                .put("structures", Json::Num(s.structures as f64))
+                .put("hits", Json::Num(s.struct_hits as f64))
+                .put("compiles", Json::Num(s.struct_compiles as f64))
+                .build(),
+        )
         .put("flatten_configs", Json::Num(s.flatten_configs as f64))
         .put("calls", calls_json(&s.call_counts))
         .build()

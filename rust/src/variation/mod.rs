@@ -46,7 +46,7 @@
 //! variants stay bit-identical.
 
 use crate::characterize::{self, calls_for, BankPerf, CharPlan, Perturb, Quarantine};
-use crate::compiler::{compile, Bank, CellFlavor, Config, ConfigKey};
+use crate::compiler::{Bank, CellFlavor, CompileCache, Config, ConfigKey};
 use crate::dse::{self, Evaluated};
 use crate::runtime::{RunHealth, SharedRuntime};
 use crate::tech::{Corner, Tech, VariationDefaults};
@@ -377,6 +377,9 @@ fn reduce_design(bank: &Bank, span: &[Result<BankPerf, Quarantine>]) -> DesignYi
 /// Variants share a `ConfigKey` with their design, so this path does
 /// **not** use the [`dse::EvalCache`] (a cache hit would collapse
 /// distinct samples); the nominal sweep alongside remains cacheable.
+/// Structures *are* cacheable — variation perturbs the characterizer
+/// inputs, never the geometry — so distinct designs compile through
+/// `structs` and a VT-axis MC grid pays the distinct-structure census.
 pub fn yield_sweep_health(
     tech: &Tech,
     rt: &SharedRuntime,
@@ -384,17 +387,18 @@ pub fn yield_sweep_health(
     model: &VariationModel,
     workers: usize,
     window_resolution: f64,
+    structs: &CompileCache,
 ) -> crate::Result<(Vec<DesignYield>, RunHealth)> {
     let mut seen: HashSet<ConfigKey> = HashSet::new();
-    let mut distinct: Vec<Config> = Vec::new();
+    let mut distinct: Vec<&Config> = Vec::new();
     for cfg in configs {
-        if seen.insert(cfg.key()) {
-            distinct.push(cfg.clone());
+        let key = cfg.key();
+        if !seen.contains(&key) {
+            seen.insert(key);
+            distinct.push(cfg);
         }
     }
-    let banks: Vec<Bank> = crate::util::par_map(&distinct, workers, |cfg| compile(tech, cfg))
-        .into_iter()
-        .collect::<crate::Result<Vec<_>>>()?;
+    let banks: Vec<Bank> = structs.compile_all(tech, &distinct, workers)?;
     let k = model.samples;
     let mut plans: Vec<CharPlan> = Vec::with_capacity(banks.len() * (k + 1));
     let mut labels: Vec<String> = Vec::with_capacity(banks.len() * (k + 1));
@@ -438,11 +442,13 @@ pub fn plan_call_counts(
     let mut wr: HashMap<u64, usize> = HashMap::new();
     let mut rd: HashMap<(bool, u64), usize> = HashMap::new();
     let mut ret = 0usize;
+    // VT-axis siblings in the census share one compiled structure
+    let structs = CompileCache::new();
     for cfg in configs {
         if !seen.insert(cfg.key()) {
             continue;
         }
-        let bank = compile(tech, cfg)?;
+        let bank = structs.compile(tech, cfg)?;
         let mut plans = vec![CharPlan::with_resolution(tech, &bank, window_resolution)];
         for i in 0..model.samples {
             plans.push(CharPlan::with_variation(

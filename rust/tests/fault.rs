@@ -12,7 +12,7 @@
 //! Every test is `fault_`-prefixed so CI's chaos step
 //! (`cargo test --release fault`) selects the whole suite by filter.
 
-use opengcram::compiler::{CellFlavor, Config};
+use opengcram::compiler::{CellFlavor, CompileCache, Config};
 use opengcram::runtime::engines;
 use opengcram::runtime::fault::{FaultBackend, FaultPlan};
 use opengcram::runtime::{FailoverBackend, NativeBackend, SharedRuntime};
@@ -258,12 +258,15 @@ fn fault_poisoned_variant_lowers_yield_by_exactly_one_over_k() {
     let model = variation::VariationModel::zero(k, 0xFA11, t.vdd);
 
     let base_rt = SharedRuntime::native();
-    let (base, bh) = variation::yield_sweep_health(&t, &base_rt, &cfgs, &model, 2, 0.0).unwrap();
+    let (base, bh) =
+        variation::yield_sweep_health(&t, &base_rt, &cfgs, &model, 2, 0.0, &CompileCache::new())
+            .unwrap();
     assert!(bh.is_clean(), "{}", bh.summary());
     assert_eq!(base[0].stats.functional.passed, k, "baseline must be fully functional");
 
     let rt = SharedRuntime::native().with_faults(FaultPlan::new().poison_row("write", 1, 2));
-    let (dys, health) = variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, 0.0).unwrap();
+    let (dys, health) =
+        variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, 0.0, &CompileCache::new()).unwrap();
 
     // exactly one quarantined variant, named and reasoned in RunHealth
     assert_eq!(health.quarantined.len(), 1, "{}", health.summary());

@@ -320,10 +320,15 @@ fn batched_sweep_matches_per_design_sweep() {
         Config::new(16, 16, CellFlavor::GcSiSiNp),
     ];
     let cache = dse::EvalCache::new();
+    let structs = opengcram::compiler::CompileCache::new();
     let batched =
-        dse::evaluate_all_batched_cached(&t, shared(), &configs, 2, &cache, 0.0).unwrap();
+        dse::evaluate_all_batched_cached(&t, shared(), &configs, 2, &cache, &structs, 0.0).unwrap();
     assert_eq!(batched.len(), configs.len());
     assert_eq!(cache.len(), 3, "duplicate config evaluated twice");
+    // 3 distinct configs, but the 16x16 VT variant shares the 16x16
+    // structure: exactly 2 geometry compiles through the cache
+    assert_eq!(structs.stats(), (1, 2), "expected 1 struct hit + 2 struct compiles");
+    assert_eq!(structs.len(), 2);
     for (cfg, e) in configs.iter().zip(&batched) {
         assert_eq!(e.config.key(), cfg.key(), "sweep results out of order");
         let bank = compile(&t, cfg).unwrap();

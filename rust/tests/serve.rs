@@ -145,6 +145,13 @@ fn concurrent_clients_pay_grouped_ceiling_census() {
         );
         // the shared census IS the reference mega-batch census
         assert_eq!(calls_of(resp, "sweep_calls"), expected_calls, "client {i}");
+        // ...and so is the structure census: three distinct geometries
+        // in one batch, reported to every party member
+        assert_eq!(
+            resp.get("struct_compiles").and_then(Json::as_usize),
+            Some(configs.len()),
+            "client {i} struct census: {resp:?}"
+        );
         // and each client's numbers are its design's, bit-for-bit
         // (decimal JSON round-trips f64 exactly)
         let perf = resp.get("eval").and_then(|e| e.get("perf")).expect("perf");
@@ -161,11 +168,68 @@ fn concurrent_clients_pay_grouped_ceiling_census() {
         assert_eq!(resp.get("eval").and_then(|e| e.get("quarantine")), Some(&Json::Null));
     }
 
-    // session telemetry agrees: one union sweep, three pipeline misses
+    // session telemetry agrees: one union sweep, three pipeline misses,
+    // three geometry compiles (all distinct structures, zero struct hits)
     let stats = session.stats();
     assert_eq!(stats.call_counts, expected_calls);
     assert_eq!(stats.cache_misses, configs.len());
     assert_eq!(stats.cache_hits, 0);
+    assert_eq!(stats.structures, configs.len());
+    assert_eq!(stats.struct_compiles, configs.len());
+    assert_eq!(stats.struct_hits, 0);
+}
+
+/// The tentpole KPI at the socket: a VT-only sibling sweep
+/// re-characterizes (the eval cache keys on the full config) but
+/// compiles ZERO new structures, and an identical repeat request pays
+/// nothing at all — `"struct_compiles"` makes both protocol-assertable
+/// the way `"sweep_calls"` made execution counts assertable.
+#[test]
+fn repeated_and_vt_sibling_requests_pay_zero_struct_compiles() {
+    let t = sg40();
+    let session = Session::new(&t, SharedRuntime::native(), 0.0).unwrap();
+    let socket = scratch("structkpi.sock");
+    let base = [
+        Config::new(16, 16, CellFlavor::GcSiSiNp),
+        Config::new(32, 32, CellFlavor::GcSiSiNp),
+    ];
+    let sibling: Vec<Config> = base
+        .iter()
+        .map(|c| {
+            let mut s = c.clone();
+            s.write_vt = Some(0.5);
+            s
+        })
+        .collect();
+    let dse_line = |cfgs: &[Config]| {
+        let objs: Vec<String> = cfgs.iter().map(|c| serve::config_json(c).dump()).collect();
+        format!(r#"{{"cmd":"dse","configs":[{}]}}"#, objs.join(","))
+    };
+
+    let (cold, vt, repeat, stats) = with_server(&session, &socket, 10, || {
+        let cold = parse_ok(&serve::client_request(&socket, &dse_line(&base)).unwrap());
+        let vt = parse_ok(&serve::client_request(&socket, &dse_line(&sibling)).unwrap());
+        let repeat = parse_ok(&serve::client_request(&socket, &dse_line(&base)).unwrap());
+        let stats = parse_ok(&serve::client_request(&socket, r#"{"cmd":"stats"}"#).unwrap());
+        (cold, vt, repeat, stats)
+    });
+
+    // cold: both geometries compiled, sweep executed
+    assert_eq!(cold.get("struct_compiles").and_then(Json::as_usize), Some(2), "{cold:?}");
+    assert!(!calls_of(&cold, "sweep_calls").is_empty());
+    // VT siblings: the characterizer runs (new ConfigKeys, real
+    // executions) but the geometry axis is free
+    assert_eq!(vt.get("struct_compiles").and_then(Json::as_usize), Some(0), "{vt:?}");
+    assert!(!calls_of(&vt, "sweep_calls").is_empty(), "siblings must re-characterize");
+    // repeat: fully served from the eval cache — nothing runs at all
+    assert_eq!(repeat.get("struct_compiles").and_then(Json::as_usize), Some(0), "{repeat:?}");
+    assert!(calls_of(&repeat, "sweep_calls").is_empty(), "repeat must be a pure cache hit");
+    // stats surface the cache shape: 2 structures, 2 compiles, and the
+    // sibling sweep's 2 struct hits
+    let compile = stats.get("compile").expect("compile stats");
+    assert_eq!(compile.get("structures").and_then(Json::as_usize), Some(2));
+    assert_eq!(compile.get("compiles").and_then(Json::as_usize), Some(2));
+    assert_eq!(compile.get("hits").and_then(Json::as_usize), Some(2));
 }
 
 /// Bitwise pin of the refactor: `Session::evaluate` (no store) must
@@ -272,6 +336,9 @@ fn server_restart_serves_identical_sweep_from_disk() {
         "warm restart must pay zero characterization executions: {warm_stats:?}"
     );
     assert!(calls_of(&warm, "sweep_calls").is_empty(), "no executions in the warm sweep");
+    // the disk tier satisfies the eval cache before compile-time work
+    // is scheduled, so the warm sweep compiles zero structures too
+    assert_eq!(warm.get("struct_compiles").and_then(Json::as_usize), Some(0));
     assert_eq!(warm_stats.get("cache_misses").and_then(Json::as_usize), Some(0));
     let store = warm_stats.get("store").expect("store stats");
     assert_eq!(store.get("hits").and_then(Json::as_usize), Some(2));
@@ -331,6 +398,15 @@ fn session_drc_memo_is_warm_and_correct() {
     assert_eq!(r1.violations.len(), r2.violations.len());
     assert_eq!(r1.rects_checked, r2.rects_checked);
     assert_eq!(session.stats().flatten_configs, 1);
+
+    // the memo keys on the structure, so a VT-only sibling shares it
+    // (and the structure itself is a cache hit, not a recompile)
+    let mut sibling = cfg.clone();
+    sibling.write_vt = Some(0.5);
+    let r3 = session.drc_check(&sibling).unwrap();
+    assert_eq!(r3.rects_checked, r1.rects_checked);
+    assert_eq!(session.stats().flatten_configs, 1, "VT sibling must reuse the memo");
+    assert_eq!(session.stats().struct_compiles, 1, "VT sibling must not recompile");
 
     let bank = compile(&t, &cfg).unwrap();
     let fresh = opengcram::drc::hier::check_hier(&t, &bank.library, "bank").unwrap();

@@ -1,0 +1,227 @@
+//! Soundness pins for the structure-keyed compile cache
+//! ([`opengcram::compiler::CompileCache`]).
+//!
+//! The cache's entire claim is that [`Config::struct_key`] captures
+//! *exactly* the geometry-determining fields: two configs with equal
+//! struct keys may share one compiled [`BankStructure`] by `Arc`.
+//! These tests pin that claim from both sides:
+//!
+//! * **VT siblings are bitwise-identical geometry**: configs differing
+//!   only in `write_vt` compile — through the *uncached* full path —
+//!   to byte-identical GDS, identical SPICE text, and bit-identical
+//!   area/parasitics/delay-chain, across sizes, flavors, and WWLLS.
+//! * **Key discrimination**: every geometric field flip moves the
+//!   struct key; the electrical knob does not; an explicit mux factor
+//!   aliases with the `None` policy that resolves to the same value.
+//! * **Census KPI**: a size x VT sweep pays exactly one geometry
+//!   compile per distinct struct key — 5 for the 5x5 optimizer grid,
+//!   20 for the 80-config cross-flavor composition grid.
+//! * **Cache transparency**: `Evaluated` outputs with a shared
+//!   (pre-warmed) structure cache are bitwise-equal to the
+//!   throwaway-cache sweep.
+
+use opengcram::compiler::{compile, CellFlavor, CompileCache, Config};
+use opengcram::layout::gds;
+use opengcram::netlist::spice;
+use opengcram::runtime::SharedRuntime;
+use opengcram::tech::sg40;
+use opengcram::{compose, dse};
+use std::collections::HashSet;
+
+/// Bitwise comparison of everything a [`BankStructure`] derives from
+/// geometry, via the uncached compile path (each side rebuilt from
+/// scratch — no shared `Arc` to make the comparison vacuous).
+fn assert_same_structure(t: &opengcram::tech::Tech, a: &Config, b: &Config, what: &str) {
+    let ba = compile(t, a).unwrap();
+    let bb = compile(t, b).unwrap();
+    assert_eq!(a.struct_key(), b.struct_key(), "{what}: struct keys must match");
+    assert_eq!(
+        gds::write_bytes(&ba.library, t, "bank"),
+        gds::write_bytes(&bb.library, t, "bank"),
+        "{what}: GDS bytes diverged"
+    );
+    assert_eq!(
+        spice::emit(&ba.netlist),
+        spice::emit(&bb.netlist),
+        "{what}: SPICE netlist diverged"
+    );
+    assert_eq!(
+        ba.layout.total_area_um2().to_bits(),
+        bb.layout.total_area_um2().to_bits(),
+        "{what}: area diverged"
+    );
+    let pa = &ba.parasitics;
+    let pb = &bb.parasitics;
+    for (name, x, y) in [
+        ("c_sn", pa.c_sn, pb.c_sn),
+        ("c_wbl", pa.c_wbl, pb.c_wbl),
+        ("c_rbl", pa.c_rbl, pb.c_rbl),
+        ("r_wl", pa.r_wl, pb.r_wl),
+        ("c_wl", pa.c_wl, pb.c_wl),
+        ("c_wwl_sn", pa.c_wwl_sn, pb.c_wwl_sn),
+        ("c_rwl_sn", pa.c_rwl_sn, pb.c_rwl_sn),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: parasitics.{name} diverged");
+    }
+    assert_eq!(ba.delay_chain_stages, bb.delay_chain_stages, "{what}: delay chain diverged");
+}
+
+#[test]
+fn structure_vt_siblings_compile_to_bitwise_identical_geometry() {
+    // the soundness property behind Arc sharing, checked through the
+    // old full path (plain `compile` rebuilds per call): write_vt
+    // must be invisible to every geometry product
+    let t = sg40();
+    for flavor in [CellFlavor::GcSiSiNp, CellFlavor::GcSiSiNn, CellFlavor::GcOsOs] {
+        for (w, n) in [(16, 16), (32, 32), (16, 64)] {
+            for wwlls in [false, true] {
+                let mut base = Config::new(w, n, flavor);
+                base.wwlls = wwlls;
+                let mut sib = base.clone();
+                sib.write_vt = Some(0.45);
+                let what = format!("{w}x{n} {flavor:?} wwlls={wwlls}");
+                assert_same_structure(&t, &base, &sib, &what);
+            }
+        }
+    }
+    // SRAM has no write transistor to re-thread, but the key still
+    // must not see the knob
+    let base = Config::new(32, 32, CellFlavor::Sram6t);
+    let mut sib = base.clone();
+    sib.write_vt = Some(0.6);
+    assert_same_structure(&t, &base, &sib, "32x32 Sram6t");
+}
+
+#[test]
+fn structure_key_discriminates_geometry_and_ignores_electrical() {
+    let base = Config::new(32, 64, CellFlavor::GcSiSiNp);
+    let key = base.struct_key();
+
+    // every geometric field flip must move the key
+    let mut c = base.clone();
+    c.word_size = 16;
+    assert_ne!(c.struct_key(), key, "word_size is geometric");
+    let mut c = base.clone();
+    c.num_words = 128;
+    assert_ne!(c.struct_key(), key, "num_words is geometric");
+    let mut c = base.clone();
+    c.flavor = CellFlavor::GcOsOs;
+    assert_ne!(c.struct_key(), key, "flavor is geometric");
+    let mut c = base.clone();
+    c.wwlls = true;
+    assert_ne!(c.struct_key(), key, "wwlls is geometric");
+    let mut c = base.clone();
+    c.mux_factor = Some(4);
+    assert_ne!(c.struct_key(), key, "a non-policy mux factor is geometric");
+
+    // the electrical knob must not
+    let mut c = base.clone();
+    c.write_vt = Some(0.38);
+    assert_eq!(c.struct_key(), key, "write_vt is electrical");
+
+    // an explicit mux factor equal to the resolved policy value
+    // aliases to the same structure (the key stores the resolution)
+    let mut c = base.clone();
+    c.mux_factor = Some(base.mux_factor());
+    assert_eq!(c.struct_key(), key, "explicit policy mux must alias");
+    assert_eq!(key.mux_factor, base.mux_factor(), "key stores the resolved factor");
+
+    // the key's representative config resolves back to itself
+    assert_eq!(key.to_config().struct_key(), key, "to_config must round-trip");
+}
+
+#[test]
+fn structure_census_grid_sweep_pays_one_compile_per_distinct_key() {
+    // runtime-free census over the full cross-flavor composition grid:
+    // 80 configs (the SRAM slice keeps only VT-free entries), 20
+    // distinct geometries — compiles must equal the census, hits the
+    // remainder
+    let t = sg40();
+    let grid = compose::design_grid();
+    let distinct: HashSet<_> = grid.iter().map(|c| c.struct_key()).collect();
+    assert!(distinct.len() < grid.len(), "grid must exercise struct-key aliasing");
+    let refs: Vec<&Config> = grid.iter().collect();
+    let structs = CompileCache::new();
+    let banks = structs.compile_all(&t, &refs, 2).unwrap();
+    assert_eq!(banks.len(), grid.len());
+    let (hits, compiles) = structs.stats();
+    assert_eq!(compiles, distinct.len(), "compiles must equal the distinct-structure census");
+    assert_eq!(hits, grid.len() - distinct.len());
+    assert_eq!(structs.len(), distinct.len());
+    // VT siblings share the structure by pointer, not by copy
+    for (cfg, bank) in grid.iter().zip(&banks) {
+        let rep = banks[grid.iter().position(|c| c.struct_key() == cfg.struct_key()).unwrap()]
+            .structure
+            .clone();
+        assert!(std::sync::Arc::ptr_eq(&bank.structure, &rep), "siblings must share one Arc");
+    }
+    // a repeat batch is all hits, zero new compiles
+    structs.compile_all(&t, &refs, 2).unwrap();
+    assert_eq!(structs.stats(), (2 * hits + compiles, compiles), "repeat sweep recompiled");
+}
+
+#[test]
+fn structure_cache_is_transparent_to_evaluated_outputs() {
+    // full-pipeline pins on a size x VT axis: the sweep pays one
+    // geometry compile per distinct size, and every Evaluated output
+    // is bitwise-identical to the throwaway-cache sweep
+    let t = sg40();
+    let mut configs = Vec::new();
+    for (w, n) in [(16, 16), (32, 32)] {
+        for vt in [None, Some(0.38), Some(0.52)] {
+            let mut c = Config::new(w, n, CellFlavor::GcSiSiNp);
+            c.write_vt = vt;
+            configs.push(c);
+        }
+    }
+
+    let rt = SharedRuntime::native();
+    let cache = dse::EvalCache::new();
+    let structs = CompileCache::new();
+    let (evals, health) =
+        dse::evaluate_all_batched_cached_health(&t, &rt, &configs, 2, &cache, &structs, 0.0)
+            .unwrap();
+    assert!(health.is_clean(), "{}", health.summary());
+    assert_eq!(evals.len(), configs.len());
+    let (hits, compiles) = structs.stats();
+    assert_eq!(compiles, 2, "six configs span two geometries");
+    assert_eq!(hits, 4, "every VT sibling must ride a struct hit");
+
+    // reference arm: throwaway caches (the pre-tentpole behavior)
+    let ref_rt = SharedRuntime::native();
+    let reference = dse::evaluate_all_batched(&t, &ref_rt, &configs, 2, 0.0).unwrap();
+    for (a, b) in evals.iter().zip(&reference) {
+        let what = format!("{:?}", a.config);
+        assert_eq!(a.config.key(), b.config.key(), "{what}: sweep order diverged");
+        assert_eq!(a.area_um2.to_bits(), b.area_um2.to_bits(), "{what}: area diverged");
+        assert_eq!(a.quarantine, b.quarantine, "{what}: quarantine diverged");
+        for (name, x, y) in [
+            ("f_read_hz", a.perf.f_read_hz, b.perf.f_read_hz),
+            ("f_write_hz", a.perf.f_write_hz, b.perf.f_write_hz),
+            ("f_op_hz", a.perf.f_op_hz, b.perf.f_op_hz),
+            ("bandwidth_bps", a.perf.bandwidth_bps, b.perf.bandwidth_bps),
+            ("retention_s", a.perf.retention_s, b.perf.retention_s),
+            ("leakage_w", a.perf.leakage_w, b.perf.leakage_w),
+            ("e_read_j", a.perf.e_read_j, b.perf.e_read_j),
+            ("t_decoder_s", a.perf.t_decoder_s, b.perf.t_decoder_s),
+            ("t_cell_read_s", a.perf.t_cell_read_s, b.perf.t_cell_read_s),
+            ("stored_one_v", a.perf.stored_one_v, b.perf.stored_one_v),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: {name} diverged");
+        }
+        assert_eq!(a.perf.functional, b.perf.functional, "{what}: verdict diverged");
+    }
+    // the VT axis must actually bite (the retention knob works), or
+    // the sharing claim above was tested on dead inputs
+    assert_ne!(
+        evals[0].perf.retention_s.to_bits(),
+        evals[1].perf.retention_s.to_bits(),
+        "write_vt override did not change retention — electrical axis is dead"
+    );
+
+    // 5x5 optimizer grid KPI: 25 configs, 5 structures
+    let grid = dse::grid_configs(CellFlavor::GcSiSiNp);
+    let grid_keys: HashSet<_> = grid.iter().map(|c| c.struct_key()).collect();
+    assert_eq!(grid.len(), 25);
+    assert_eq!(grid_keys.len(), 5, "the VT axis must be invisible to the struct key");
+}

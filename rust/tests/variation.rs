@@ -21,7 +21,7 @@
 //!   against an independent reimplementation of the PRNG).
 
 use opengcram::characterize::{self, CharPlan};
-use opengcram::compiler::{compile, CellFlavor, Config, ConfigKey};
+use opengcram::compiler::{compile, CellFlavor, CompileCache, Config, ConfigKey};
 use opengcram::runtime::SharedRuntime;
 use opengcram::tech::sg40;
 use opengcram::variation::{self, VariationModel};
@@ -66,7 +66,8 @@ fn variation_zero_sigma_mc_is_bitwise_equal_to_nominal_sweep() {
     let nominal = dse::evaluate_all_batched(&t, &nom_rt, &cfgs, 2, 0.0).unwrap();
 
     let rt = SharedRuntime::native();
-    let (dys, health) = variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, 0.0).unwrap();
+    let (dys, health) =
+        variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, 0.0, &CompileCache::new()).unwrap();
     assert!(health.is_clean(), "{}", health.summary());
     assert_eq!(dys.len(), cfgs.len());
 
@@ -111,7 +112,8 @@ fn variation_mega_batch_matches_singleton_characterization_bitwise() {
     let model = VariationModel::from_tech(&t, 3, 0xC0FFEE);
 
     let rt = SharedRuntime::native();
-    let (dys, health) = variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, 0.0).unwrap();
+    let (dys, health) =
+        variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, 0.0, &CompileCache::new()).unwrap();
     assert!(health.is_clean(), "{}", health.summary());
 
     let single_rt = SharedRuntime::native();
@@ -151,7 +153,8 @@ fn variation_yields_reproducible_across_workers_and_batch_order() {
     let run = |configs: &[Config], workers: usize| {
         let rt = SharedRuntime::native();
         let (dys, health) =
-            variation::yield_sweep_health(&t, &rt, configs, &model, workers, 0.0).unwrap();
+            variation::yield_sweep_health(&t, &rt, configs, &model, workers, 0.0, &CompileCache::new())
+                .unwrap();
         assert!(health.is_clean(), "{}", health.summary());
         dys.into_iter().map(|dy| (dy.config.key(), dy)).collect::<HashMap<ConfigKey, _>>()
     };
@@ -206,7 +209,8 @@ fn variation_mega_batch_pays_grouped_ceiling_execution_counts() {
     let (want_w, want_r, want_t) =
         variation::plan_call_counts(&t, &cfgs, &model, res, caps.0, caps.1, caps.2).unwrap();
 
-    let (dys, health) = variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, res).unwrap();
+    let (dys, health) =
+        variation::yield_sweep_health(&t, &rt, &cfgs, &model, 2, res, &CompileCache::new()).unwrap();
     assert!(health.is_clean(), "{}", health.summary());
     assert_eq!(dys.len(), cfgs.len());
 
